@@ -1,0 +1,67 @@
+//! Strong-scaling study (our T-S1): virtual-time speedup of the hybrid
+//! sampler as processors increase on a 4× Cambridge workload, with the
+//! per-iteration breakdown (compute vs master vs comm) the paper's §5
+//! discussion is about.
+//!
+//! ```bash
+//! cargo run --release --example scaling -- [n] [iters]
+//! ```
+
+use pibp::config::{Backend, CommModel};
+use pibp::coordinator::{Coordinator, CoordinatorConfig};
+use pibp::data::cambridge::{generate, CambridgeConfig};
+use pibp::model::LinGauss;
+use pibp::samplers::SamplerOptions;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().map_or(4000, |s| s.parse().expect("n"));
+    let iters: usize = args.get(1).map_or(30, |s| s.parse().expect("iters"));
+    let (ds, _) = generate(&CambridgeConfig { n, seed: 1, ..Default::default() });
+
+    println!("=== strong scaling: hybrid on cambridge N={n}, {iters} iterations ===\n");
+    println!(
+        "{:>3} {:>12} {:>12} {:>12} {:>12} {:>10} {:>9}",
+        "P", "vtime/iter", "worker max", "master", "comm bytes", "speedup", "efficy"
+    );
+    let mut t1 = 0.0f64;
+    for p in [1usize, 2, 3, 5, 8] {
+        let cfg = CoordinatorConfig {
+            processors: p,
+            sub_iters: 5,
+            seed: 42,
+            lg: LinGauss::new(0.5, 1.0),
+            alpha: 1.0,
+            opts: SamplerOptions::default(),
+            backend: Backend::Native,
+            artifacts_dir: "artifacts".into(),
+            comm: CommModel::default(),
+        };
+        let mut coord = Coordinator::new(&ds.x, cfg)?;
+        let (mut vt, mut wb, mut mb, mut cb) = (0.0, 0.0, 0.0, 0usize);
+        for _ in 0..iters {
+            let r = coord.step()?;
+            vt += r.vtime_iter_s;
+            wb += r.max_worker_busy_s;
+            mb += r.master_busy_s;
+            cb += r.comm_bytes;
+        }
+        let per = vt / iters as f64;
+        if p == 1 {
+            t1 = per;
+        }
+        let speedup = t1 / per;
+        println!(
+            "{p:>3} {:>11.4}s {:>11.4}s {:>11.4}s {:>12} {:>9.2}x {:>8.0}%",
+            per,
+            wb / iters as f64,
+            mb / iters as f64,
+            cb / iters,
+            speedup,
+            100.0 * speedup / p as f64
+        );
+    }
+    println!("\n(speedup is sub-linear because the master's global step and the");
+    println!(" gather/broadcast are serial — the bottleneck the paper's §5 names)");
+    Ok(())
+}

@@ -1,0 +1,200 @@
+"""AOT driver: lower the L2 graphs to HLO *text* artifacts + manifest.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the image's xla_extension
+0.5.1 (behind the rust `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Shape policy (mirrored by rust/src/runtime/artifact.rs):
+  * every input/output is a rank-2 f32 array — scalars travel as (1,1),
+    vectors as (1,K) or (B,1) — so the rust literal layer stays uniform;
+  * each graph is compiled for a grid of (B rows, K features, D dims)
+    buckets; the rust runtime pads to the smallest fitting bucket;
+  * lowering uses return_tuple=True; the rust side unwraps the tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_ROWS = (256, 1024)
+DEFAULT_FEATS = (8, 16, 32)
+DEFAULT_DIMS = (36,)
+
+
+# --------------------------------------------------------------------------
+# Uniform rank-2 adapters around the L2 graphs.
+# --------------------------------------------------------------------------
+
+def _zsweep2(x, z, a, prior_logit, u, inv2s2, row_mask):
+    z_new, r_new, m = model.zsweep_step(
+        x, z, a, prior_logit[0], u, inv2s2[0, 0], row_mask[:, 0]
+    )
+    return z_new, r_new, m[None, :]
+
+
+def _suffstats2(z, x, row_mask):
+    return model.local_suffstats(z, x, row_mask[:, 0])
+
+
+def _apost2(ztz, ztx, eps, sigma_x, sigma_a, k_mask):
+    return (
+        model.apost_sample(
+            ztz, ztx, eps, sigma_x[0, 0], sigma_a[0, 0], k_mask[0]
+        ),
+    )
+
+
+def _heldout2(x, z, a, log_pi, log_1mpi, inv2s2, logdet_term, row_mask,
+              k_mask):
+    out = model.heldout_joint_loglik(
+        x, z, a, log_pi[0], log_1mpi[0], inv2s2[0, 0], logdet_term[0, 0],
+        row_mask[:, 0], k_mask[0]
+    )
+    return (out[None, None],)
+
+
+def _collapsed2(x, z, sigma_x, sigma_a, k_mask, row_mask):
+    out = model.collapsed_loglik(
+        x, z, sigma_x[0, 0], sigma_a[0, 0], k_mask[0], row_mask[:, 0]
+    )
+    return (out[None, None],)
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_signatures(b, k, d):
+    """(name, fn, [(arg_name, shape)], [(out_name, shape)]) per bucket."""
+    return [
+        (
+            "zsweep", _zsweep2,
+            [("x", (b, d)), ("z", (b, k)), ("a", (k, d)),
+             ("prior_logit", (1, k)), ("u", (b, k)), ("inv2s2", (1, 1)),
+             ("row_mask", (b, 1))],
+            [("z_new", (b, k)), ("r_new", (b, d)), ("m", (1, k))],
+        ),
+        (
+            "suffstats", _suffstats2,
+            [("z", (b, k)), ("x", (b, d)), ("row_mask", (b, 1))],
+            [("ztz", (k, k)), ("ztx", (k, d))],
+        ),
+        (
+            "heldout", _heldout2,
+            [("x", (b, d)), ("z", (b, k)), ("a", (k, d)),
+             ("log_pi", (1, k)), ("log_1mpi", (1, k)), ("inv2s2", (1, 1)),
+             ("logdet_term", (1, 1)), ("row_mask", (b, 1)),
+             ("k_mask", (1, k))],
+            [("loglik", (1, 1))],
+        ),
+        (
+            "collapsed_loglik", _collapsed2,
+            [("x", (b, d)), ("z", (b, k)), ("sigma_x", (1, 1)),
+             ("sigma_a", (1, 1)), ("k_mask", (1, k)), ("row_mask", (b, 1))],
+            [("loglik", (1, 1))],
+        ),
+    ]
+
+
+def apost_signature(k, d):
+    return (
+        "apost", _apost2,
+        [("ztz", (k, k)), ("ztx", (k, d)), ("eps", (k, d)),
+         ("sigma_x", (1, 1)), ("sigma_a", (1, 1)), ("k_mask", (1, k))],
+        [("a", (k, d))],
+    )
+
+
+# --------------------------------------------------------------------------
+# Lowering.
+# --------------------------------------------------------------------------
+
+def to_hlo_text(fn, arg_shapes):
+    """jit -> stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    specs = [_spec(*s) for s in arg_shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir, rows=DEFAULT_ROWS, feats=DEFAULT_FEATS, dims=DEFAULT_DIMS,
+          verbose=True):
+    """Lower all bucket variants into out_dir; return the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    sigs = []
+    for d in dims:
+        for k in feats:
+            sigs.append((None, k, d, apost_signature(k, d)))
+            for b in rows:
+                for sig in entry_signatures(b, k, d):
+                    sigs.append((b, k, d, sig))
+
+    for b, k, d, (name, fn, inputs, outputs) in sigs:
+        tag = f"{name}_" + (f"b{b}_" if b else "") + f"k{k}_d{d}"
+        path = f"{tag}.hlo.txt"
+        text = to_hlo_text(fn, [s for _, s in inputs])
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": name,
+            "b": b,
+            "k": k,
+            "d": d,
+            "file": path,
+            "inputs": [[n, list(s)] for n, s in inputs],
+            "outputs": [[n, list(s)] for n, s in outputs],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        })
+        if verbose:
+            print(f"  lowered {tag}  ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "dtype": "f32",
+        "rows": list(rows),
+        "feats": list(feats),
+        "dims": list(dims),
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(entries)} artifacts + manifest to {out_dir}")
+    return manifest
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--rows", default=",".join(map(str, DEFAULT_ROWS)))
+    p.add_argument("--feats", default=",".join(map(str, DEFAULT_FEATS)))
+    p.add_argument("--dims", default=",".join(map(str, DEFAULT_DIMS)))
+    a = p.parse_args()
+    build(
+        a.out,
+        rows=tuple(int(x) for x in a.rows.split(",")),
+        feats=tuple(int(x) for x in a.feats.split(",")),
+        dims=tuple(int(x) for x in a.dims.split(",")),
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Pure-jnp dense linear algebra for AOT-lowered graphs.
+
+`jnp.linalg.cholesky` / `cho_solve` lower to LAPACK custom-calls with
+API_VERSION_TYPED_FFI on CPU, which the image's xla_extension 0.5.1 (behind
+the rust `xla` crate) cannot execute. These column-loop implementations
+lower to plain HLO (while + dynamic-slice), so the compiled artifacts are
+runnable anywhere. K ≤ 64 in every bucket, so the O(K) sequential loop is
+irrelevant next to the O(K²D) solves it unlocks.
+
+pytest pins each of these against the numpy/lapack reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cholesky", "solve_lower", "solve_upper_t", "psd_solve"]
+
+
+def cholesky(a):
+    """Lower-triangular L with L Lᵀ = a (a must be SPD; masked features
+    get an identity diagonal upstream). Plain-HLO lowering."""
+    k = a.shape[0]
+    idx = jnp.arange(k)
+
+    def body(j, l):
+        row_j = jax.lax.dynamic_slice_in_dim(l, j, 1, axis=0)[0]  # (k,)
+        a_col = jax.lax.dynamic_slice_in_dim(a, j, 1, axis=1)[:, 0]  # (k,)
+        s = a_col - l @ row_j
+        dj = jnp.sqrt(jnp.take(s, j))
+        col = jnp.where(idx > j, s / dj, 0.0)
+        col = jnp.where(idx == j, dj, col)
+        return jax.lax.dynamic_update_slice(l, col[:, None], (0, j))
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros_like(a))
+
+
+def solve_lower(l, b):
+    """Solve L y = b for lower-triangular L; b is (K, D)."""
+    k = l.shape[0]
+
+    def body(i, y):
+        l_row = jax.lax.dynamic_slice_in_dim(l, i, 1, axis=0)[0]  # (k,)
+        b_row = jax.lax.dynamic_slice_in_dim(b, i, 1, axis=0)[0]  # (d,)
+        lii = jnp.take(l_row, i)
+        acc = l_row @ y  # rows ≥ i of y are still 0 ⇒ only j<i contribute
+        yi = (b_row - acc) / lii
+        return jax.lax.dynamic_update_slice(y, yi[None, :], (i, 0))
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros_like(b))
+
+
+def solve_upper_t(l, b):
+    """Solve Lᵀ x = b for lower-triangular L (i.e. upper-tri solve)."""
+    k = l.shape[0]
+
+    def body(t, x):
+        i = k - 1 - t
+        l_col = jax.lax.dynamic_slice_in_dim(l, i, 1, axis=1)[:, 0]  # (k,)
+        b_row = jax.lax.dynamic_slice_in_dim(b, i, 1, axis=0)[0]
+        lii = jnp.take(l_col, i)
+        acc = l_col @ x  # rows ≤ i of x are still 0 ⇒ only j>i contribute
+        xi = (b_row - acc) / lii
+        return jax.lax.dynamic_update_slice(x, xi[None, :], (i, 0))
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros_like(b))
+
+
+def psd_solve(a, b):
+    """Solve a x = b for SPD a via the plain-HLO Cholesky.
+
+    Returns (x, logdet(a))."""
+    l = cholesky(a)
+    y = solve_lower(l, b)
+    x = solve_upper_t(l, y)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(l)))
+    return x, logdet

@@ -1,0 +1,165 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These functions define the semantics; the Pallas kernels (`zsweep.py`,
+`suffstats.py`, `loglik.py`) must match them to float32 tolerance, and the
+rust native fallbacks (rust/src/samplers/uncollapsed.rs) implement the same
+maths in f64. pytest (python/tests/) sweeps shapes with hypothesis and
+asserts allclose against these.
+
+Model (paper Eq. 1): X = Z A + eps, eps ~ N(0, sigma_x^2 I).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "zsweep_ref",
+    "suffstats_ref",
+    "rowloglik_ref",
+    "collapsed_loglik_ref",
+    "apost_mean_chol_ref",
+]
+
+
+def zsweep_ref(x, z, a, prior_logit, u, inv2s2, row_mask):
+    """One uncollapsed Gibbs sweep of Z for a block of rows.
+
+    For each row n (independently, given A and pi) and each feature k in
+    order, resample
+
+        P(Z_nk = 1 | -) ∝ pi_k * N(x_n ; z_n A, sigma_x^2 I)
+
+    using the pre-drawn uniform u[n, k]. `prior_logit[k] = logit(pi_k)`;
+    padded (masked) features carry prior_logit = -inf so they are never
+    switched on. `row_mask[n] = 0` forces padded rows to all-zero.
+
+    Args:
+      x:            (B, D) observations.
+      z:            (B, K) current binary states (float 0/1).
+      a:            (K, D) feature loadings.
+      prior_logit:  (K,)   log(pi/(1-pi)), -1e30 for masked features.
+      u:            (B, K) uniforms in (0,1).
+      inv2s2:       ()     1 / (2 sigma_x^2).
+      row_mask:     (B,)   1.0 for live rows, 0.0 for padding.
+
+    Returns:
+      (z_new (B,K), r_new (B,D), m (K,)) where r_new = x - z_new @ a is the
+      final residual and m are the masked column sums of z_new.
+    """
+    x = jnp.asarray(x)
+    z = jnp.asarray(z)
+    a = jnp.asarray(a)
+    prior_logit = jnp.asarray(prior_logit)
+    u = jnp.asarray(u)
+    row_mask = jnp.asarray(row_mask)
+    k_feats = z.shape[1]
+    r = x - z @ a
+    rm = row_mask[:, None]
+
+    def body(k, carry):
+        z_c, r_c = carry
+        a_k = jax.lax.dynamic_slice_in_dim(a, k, 1, axis=0)  # (1, D)
+        z_k = jax.lax.dynamic_slice_in_dim(z_c, k, 1, axis=1)  # (B, 1)
+        # Residual with bit k forced to 0.
+        r0 = r_c + z_k * a_k
+        # loglik(bit=1) - loglik(bit=0) = (2 r0·a_k - a_k·a_k) * inv2s2
+        dll = (2.0 * (r0 @ a_k.T) - jnp.sum(a_k * a_k)) * inv2s2  # (B, 1)
+        logit = prior_logit[k] + dll
+        p1 = jax.nn.sigmoid(logit)
+        u_k = jax.lax.dynamic_slice_in_dim(u, k, 1, axis=1)  # (B, 1)
+        z_new = (u_k < p1).astype(x.dtype) * rm
+        r_c = r0 - z_new * a_k
+        z_c = jax.lax.dynamic_update_slice(z_c, z_new, (0, k))
+        return z_c, r_c
+
+    z_out, r_out = jax.lax.fori_loop(0, k_feats, body, (z, r))
+    m = jnp.sum(z_out * rm, axis=0)
+    return z_out, r_out, m
+
+
+def suffstats_ref(z, x, row_mask):
+    """Local sufficient statistics for the master's global step.
+
+    Returns (ZtZ (K,K), ZtX (K,D)) with padded rows excluded.
+    """
+    zm = z * row_mask[:, None]
+    return zm.T @ z, zm.T @ x
+
+
+def rowloglik_ref(x, z, a, inv2s2, logdet_term, row_mask):
+    """Per-row uncollapsed Gaussian log-likelihood.
+
+    log N(x_n; z_n A, sigma_x^2 I) = logdet_term - ||x_n - z_n A||^2 * inv2s2
+    where logdet_term = -(D/2) log(2 pi sigma_x^2). Padded rows get 0.
+
+    Returns (per_row (B,), total ()).
+    """
+    r = x - z @ a
+    ll = (logdet_term - jnp.sum(r * r, axis=1) * inv2s2) * row_mask
+    return ll, jnp.sum(ll)
+
+
+def collapsed_loglik_ref(x, z, sigma_x, sigma_a, k_mask, row_mask):
+    """Collapsed marginal log P(X | Z) with A integrated out (G&G 2005).
+
+    With M = Z^T Z + (sigma_x^2/sigma_a^2) I_K (over live features only):
+
+      log P(X|Z) = -(N D / 2) log(2 pi) - (N - K) D log sigma_x
+                   - K D log sigma_a - (D/2) log |M|
+                   - (tr(X^T X) - tr(X^T Z M^-1 Z^T X)) / (2 sigma_x^2)
+
+    Masked features are frozen to identity rows of M (contributing
+    log|M| += 0 after the ratio correction below) and zero columns of Z, so
+    padded and unpadded evaluations agree. N and K count live rows/features.
+    """
+    zm = z * row_mask[:, None] * k_mask[None, :]
+    xm = x * row_mask[:, None]
+    n = jnp.sum(row_mask)
+    k_live = jnp.sum(k_mask)
+    d = x.shape[1]
+    ratio = (sigma_x / sigma_a) ** 2
+    ztz = zm.T @ zm
+    # Masked features get a 1.0 diagonal so chol is well-posed; their
+    # log-det contribution log(1.0) = 0 and their M^-1 block is inert
+    # because the corresponding rows of ZtX are zero.
+    diag = ratio * k_mask + (1.0 - k_mask)
+    m_mat = ztz + jnp.diag(diag)
+    chol = jnp.linalg.cholesky(m_mat)
+    logdet_m = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
+    # Correct for masked diagonal entries contributing log(ratio) vs log(1):
+    # nothing to correct — masked diag is exactly 1 by construction.
+    ztx = zm.T @ xm
+    w = jax.scipy.linalg.cho_solve((chol, True), ztx)
+    tr_xx = jnp.sum(xm * xm)
+    tr_quad = jnp.sum(ztx * w)
+    return (
+        -(n * d / 2.0) * jnp.log(2.0 * jnp.pi)
+        - (n - k_live) * d * jnp.log(sigma_x)
+        - k_live * d * jnp.log(sigma_a)
+        - (d / 2.0) * logdet_m
+        - (tr_xx - tr_quad) / (2.0 * sigma_x**2)
+    )
+
+
+def apost_mean_chol_ref(ztz, ztx, sigma_x, sigma_a, k_mask):
+    """Posterior of the loadings A | X, Z  (matrix normal).
+
+      M = ZtZ + (sigma_x^2/sigma_a^2) I,   mean = M^-1 ZtX,
+      A = mean + sigma_x * L^-T  E,  E_kd ~ N(0,1),  L L^T = M.
+
+    Masked features get an identity row in M and a zero row in ZtX, so their
+    posterior mean is 0 and their noise is sigma_x * (unit scale) — callers
+    must zero masked rows of the returned sample (the model wrapper does).
+
+    Returns (mean (K,D), chol (K,K) lower).
+    """
+    ratio = (sigma_x / sigma_a) ** 2
+    k_feats = ztz.shape[0]
+    mask2 = k_mask[:, None] * k_mask[None, :]
+    diag = ratio * k_mask + (1.0 - k_mask)
+    m_mat = ztz * mask2 + jnp.diag(diag)
+    chol = jnp.linalg.cholesky(m_mat)
+    mean = jax.scipy.linalg.cho_solve((chol, True), ztx * k_mask[:, None])
+    return mean, chol

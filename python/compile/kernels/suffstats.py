@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: local sufficient statistics (ZtZ, ZtX).
+
+Each worker ships (m_k, ZtZ_p, ZtX_p) to the master at the end of every
+global iteration (paper §3, "Receive summary statistics from all other
+processors"). These are plain MXU matmuls — the kernel tiles rows into VMEM
+blocks and accumulates K x K / K x D partials across the grid, the classic
+reduction-over-rows schedule.
+
+Semantics == ref.suffstats_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["suffstats"]
+
+
+def _suffstats_kernel(z_ref, x_ref, rm_ref, ztz_ref, ztx_ref):
+    """Accumulating kernel: the output blocks map to the same (0,0) tile for
+    every grid step, so step i adds its row-block's contribution."""
+    i = pl.program_id(0)
+    z = z_ref[...]
+    x = x_ref[...]
+    rm = rm_ref[...]                  # (Bt, 1)
+    zm = z * rm
+
+    @pl.when(i == 0)
+    def _init():
+        ztz_ref[...] = jnp.zeros_like(ztz_ref)
+        ztx_ref[...] = jnp.zeros_like(ztx_ref)
+
+    ztz_ref[...] += jnp.dot(zm.T, z, preferred_element_type=jnp.float32)
+    ztx_ref[...] += jnp.dot(zm.T, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_height",))
+def suffstats(z, x, row_mask, *, block_height=None):
+    """Masked (ZtZ, ZtX) via a row-blocked Pallas reduction."""
+    b, d = x.shape
+    k = z.shape[1]
+    bt = block_height or min(b, 256)
+    if b % bt:
+        raise ValueError(f"rows {b} not divisible by block height {bt}")
+    grid = (b // bt,)
+
+    ztz, ztx = pl.pallas_call(
+        _suffstats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        z.astype(jnp.float32),
+        x.astype(jnp.float32),
+        jnp.reshape(row_mask, (b, 1)).astype(jnp.float32),
+    )
+    return ztz, ztx

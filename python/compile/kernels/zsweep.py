@@ -1,0 +1,131 @@
+"""L1 Pallas kernel: row-parallel uncollapsed Gibbs sweep over Z.
+
+This is the hot path of the hybrid sampler (paper §3): every worker, every
+sub-iteration, resamples its shard's Z restricted to the K+ instantiated
+features, conditionally on (A, pi). Rows are independent given (A, pi) —
+that is the conditional independence the paper parallelises over — so the
+kernel tiles rows into VMEM blocks (grid over row-blocks) and scans features
+sequentially inside the block, carrying the running residual R = X - Z A in
+registers/VMEM.
+
+TPU thinking (DESIGN.md §Hardware-Adaptation): the initial residual is an
+MXU matmul (Z @ A); the per-feature flip update is a rank-1 outer product
+(VPU); A (K x D, <= 64 x 36 f32 = 9 KiB) stays resident in VMEM across the
+scan; block height Bt is chosen so (X, Z, U, R) blocks fit VMEM comfortably
+(see vmem_bytes()).
+
+interpret=True everywhere on this image — CPU PJRT cannot execute Mosaic
+custom-calls; the lowering is still a single fused HLO while-loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["zsweep", "zsweep_block_height", "vmem_bytes"]
+
+
+def _zsweep_kernel(x_ref, z_ref, a_ref, pl_ref, u_ref, s_ref, rm_ref,
+                   zo_ref, ro_ref):
+    """One row-block. Shapes: x (Bt,D) z/u (Bt,K) a (K,D) pl (1,K) s (1,1)
+    rm (Bt,1); outputs zo (Bt,K) ro (Bt,D)."""
+    x = x_ref[...]
+    z = z_ref[...]
+    a = a_ref[...]
+    u = u_ref[...]
+    prior_logit = pl_ref[...]          # (1, K)
+    inv2s2 = s_ref[0, 0]
+    rm = rm_ref[...]                   # (Bt, 1)
+
+    k_feats = z.shape[1]
+    r = x - jnp.dot(z, a, preferred_element_type=jnp.float32)
+
+    def body(k, carry):
+        z_c, r_c = carry
+        a_k = jax.lax.dynamic_slice_in_dim(a, k, 1, axis=0)        # (1, D)
+        z_k = jax.lax.dynamic_slice_in_dim(z_c, k, 1, axis=1)      # (Bt, 1)
+        r0 = r_c + z_k * a_k
+        dll = (2.0 * jnp.dot(r0, a_k.T, preferred_element_type=jnp.float32)
+               - jnp.sum(a_k * a_k)) * inv2s2                      # (Bt, 1)
+        logit = jax.lax.dynamic_slice_in_dim(prior_logit, k, 1, axis=1) + dll
+        p1 = jax.nn.sigmoid(logit)
+        u_k = jax.lax.dynamic_slice_in_dim(u, k, 1, axis=1)
+        z_new = (u_k < p1).astype(jnp.float32) * rm
+        r_c = r0 - z_new * a_k
+        z_c = jax.lax.dynamic_update_slice(z_c, z_new, (0, k))
+        return z_c, r_c
+
+    z_out, r_out = jax.lax.fori_loop(0, k_feats, body, (z, r))
+    zo_ref[...] = z_out
+    ro_ref[...] = r_out
+
+
+def zsweep_block_height(b, k, d, vmem_budget=8 * 1024 * 1024):
+    """Largest power-of-two row-block height whose VMEM working set fits.
+
+    Working set per block: x (Bt,D) + r (Bt,D) + r0 (Bt,D) + z,u,zo (Bt,K)
+    + a (K,D), all f32.
+    """
+    bt = 1024
+    while bt > 8:
+        if bt <= b and vmem_bytes(bt, k, d) <= vmem_budget:
+            break
+        bt //= 2
+    return max(8, min(bt, b))
+
+
+def vmem_bytes(bt, k, d):
+    """Estimated VMEM working set of one grid step (bytes, f32)."""
+    return 4 * (3 * bt * d + 3 * bt * k + k * d + k + bt)
+
+
+@functools.partial(jax.jit, static_argnames=("block_height",))
+def zsweep(x, z, a, prior_logit, u, inv2s2, row_mask, *, block_height=None):
+    """Pallas uncollapsed Gibbs sweep. Semantics == ref.zsweep_ref.
+
+    Args match ref.zsweep_ref except inv2s2 is passed as shape (1,1) and
+    prior_logit as (K,) (reshaped internally). Returns (z_new, r_new, m).
+    """
+    b, d = x.shape
+    k = z.shape[1]
+    bt = block_height or zsweep_block_height(b, k, d)
+    if b % bt:
+        raise ValueError(f"rows {b} not divisible by block height {bt}")
+    grid = (b // bt,)
+
+    z_new, r_new = pl.pallas_call(
+        _zsweep_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),   # x
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),   # z
+            pl.BlockSpec((k, d), lambda i: (0, 0)),    # a (resident)
+            pl.BlockSpec((1, k), lambda i: (0, 0)),    # prior_logit
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),   # u
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),    # inv2s2
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),   # row_mask
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        z.astype(jnp.float32),
+        a.astype(jnp.float32),
+        jnp.reshape(prior_logit, (1, k)).astype(jnp.float32),
+        u.astype(jnp.float32),
+        jnp.reshape(inv2s2, (1, 1)).astype(jnp.float32),
+        jnp.reshape(row_mask, (b, 1)).astype(jnp.float32),
+    )
+    m = jnp.sum(z_new * jnp.reshape(row_mask, (b, 1)), axis=0)
+    return z_new, r_new, m

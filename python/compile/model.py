@@ -1,0 +1,120 @@
+"""L2: the JAX compute graph of the linear-Gaussian IBP model.
+
+Every public function here is a jittable graph that calls the L1 Pallas
+kernels and is AOT-lowered to HLO text by `aot.py`; the rust coordinator
+executes the lowered artifacts via PJRT and NEVER imports this module at
+runtime.
+
+Conventions shared with the rust side (rust/src/runtime/artifact.rs):
+  * all tensors are float32; scalars travel as (1,1) f32 where a kernel
+    needs them, plain rank-0 here at the jit boundary;
+  * K (feature columns) and B (rows) are padded to the bucket sizes listed
+    in artifacts/manifest.json; `k_mask` / `row_mask` carry liveness;
+  * uniforms / standard normals are drawn by the rust RNG and passed in, so
+    the artifacts are pure functions and chains are reproducible from the
+    rust seed alone.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linalg_jnp, ref
+from .kernels.loglik import rowloglik
+from .kernels.suffstats import suffstats
+from .kernels.zsweep import zsweep
+
+__all__ = [
+    "zsweep_step",
+    "local_suffstats",
+    "apost_sample",
+    "heldout_joint_loglik",
+    "collapsed_loglik",
+]
+
+
+def zsweep_step(x, z, a, prior_logit, u, inv2s2, row_mask):
+    """One uncollapsed Gibbs sweep over a worker shard (hot path).
+
+    Returns (z_new (B,K), r_new (B,D), m (K,)).
+    """
+    return zsweep(x, z, a, prior_logit, u, inv2s2, row_mask)
+
+
+def local_suffstats(z, x, row_mask):
+    """Worker-local (ZtZ, ZtX) shipped to the master each global step."""
+    return suffstats(z, x, row_mask)
+
+
+def apost_sample(ztz, ztx, eps, sigma_x, sigma_a, k_mask):
+    """Master step: draw A | X, Z from its matrix-normal posterior.
+
+      M = ZtZ + (sx^2/sa^2) I,  A = M^-1 ZtX + sx * solve(L^T, eps),
+      L L^T = M,  eps ~ N(0,1)^{K x D}  (drawn by the rust RNG).
+
+    Masked feature rows come back exactly zero. Uses the plain-HLO
+    Cholesky (kernels.linalg_jnp) — LAPACK custom-calls cannot run under
+    the rust PJRT client (see linalg_jnp docstring); semantics are pinned
+    against ref.apost_mean_chol_ref by pytest.
+    """
+    ratio = (sigma_x / sigma_a) ** 2
+    mask2 = k_mask[:, None] * k_mask[None, :]
+    diag = ratio * k_mask + (1.0 - k_mask)
+    m_mat = ztz * mask2 + jnp.diag(diag)
+    chol = linalg_jnp.cholesky(m_mat)
+    mean = linalg_jnp.solve_upper_t(
+        chol, linalg_jnp.solve_lower(chol, ztx * k_mask[:, None])
+    )
+    noise = linalg_jnp.solve_upper_t(chol, eps * k_mask[:, None])
+    a = mean + sigma_x * noise
+    return a * k_mask[:, None]
+
+
+def heldout_joint_loglik(x, z, a, log_pi, log_1mpi, inv2s2, logdet_term,
+                         row_mask, k_mask):
+    """The paper's Figure-1 metric: joint log P(X_test, Z_test | A, pi).
+
+      log P(X|Z,A,sx) + log P(Z|pi)
+        = sum_n [ logdet_term - ||x_n - z_n A||^2 inv2s2 ]
+        + sum_{n,k} [ z_nk log pi_k + (1 - z_nk) log(1 - pi_k) ]
+
+    Masked rows/features contribute zero.
+    """
+    _, ll_x = rowloglik(x, z, a, inv2s2, logdet_term, row_mask)
+    zm = z * row_mask[:, None]
+    n_live = jnp.sum(row_mask)
+    prior = (
+        jnp.sum(zm * (log_pi * k_mask)[None, :])
+        + jnp.sum((n_live * k_mask) * log_1mpi)
+        - jnp.sum(zm * (log_1mpi * k_mask)[None, :])
+    )
+    return ll_x + prior
+
+
+def collapsed_loglik(x, z, sigma_x, sigma_a, k_mask, row_mask):
+    """Collapsed marginal log P(X|Z) (A integrated out) — used by the
+    collapsed baseline's diagnostics and validated against the rust-native
+    implementation in integration tests. Same maths as
+    ref.collapsed_loglik_ref but with the plain-HLO Cholesky so the
+    artifact runs under the rust PJRT client."""
+    zm = z * row_mask[:, None] * k_mask[None, :]
+    xm = x * row_mask[:, None]
+    n = jnp.sum(row_mask)
+    k_live = jnp.sum(k_mask)
+    d = x.shape[1]
+    ratio = (sigma_x / sigma_a) ** 2
+    ztz = zm.T @ zm
+    diag = ratio * k_mask + (1.0 - k_mask)
+    m_mat = ztz + jnp.diag(diag)
+    ztx = zm.T @ xm
+    w, logdet_m = linalg_jnp.psd_solve(m_mat, ztx)
+    tr_xx = jnp.sum(xm * xm)
+    tr_quad = jnp.sum(ztx * w)
+    return (
+        -(n * d / 2.0) * jnp.log(2.0 * jnp.pi)
+        - (n - k_live) * d * jnp.log(sigma_x)
+        - k_live * d * jnp.log(sigma_a)
+        - (d / 2.0) * logdet_m
+        - (tr_xx - tr_quad) / (2.0 * sigma_x**2)
+    )

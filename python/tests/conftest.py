@@ -1,0 +1,47 @@
+"""Shared fixtures + deterministic hypothesis profile for kernel tests."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Tests run from python/ via `python -m pytest tests/`; make `compile`
+# importable when invoked from the repo root too.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+settings.register_profile(
+    "ci",
+    deadline=None,
+    max_examples=12,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(20170711)
+
+
+def make_problem(rng, b, k, d, masked_rows=0, masked_feats=0, sigma_x=0.5):
+    """Random (x, z, a, prior_logit, u, inv2s2, row_mask, k_mask) instance."""
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    z = (rng.random((b, k)) < 0.3).astype(np.float32)
+    a = rng.normal(size=(k, d)).astype(np.float32)
+    pi = np.clip(rng.random(k), 0.05, 0.95).astype(np.float32)
+    prior_logit = np.log(pi / (1 - pi)).astype(np.float32)
+    if masked_feats:
+        prior_logit[k - masked_feats:] = -1e30
+        z[:, k - masked_feats:] = 0.0
+    u = rng.random((b, k)).astype(np.float32)
+    row_mask = np.ones(b, np.float32)
+    if masked_rows:
+        row_mask[b - masked_rows:] = 0.0
+        z[b - masked_rows:] = 0.0
+    k_mask = np.ones(k, np.float32)
+    if masked_feats:
+        k_mask[k - masked_feats:] = 0.0
+    inv2s2 = np.float32(1.0 / (2.0 * sigma_x * sigma_x))
+    return x, z, a, prior_logit, u, inv2s2, row_mask, k_mask

@@ -1,0 +1,62 @@
+"""Pallas rowloglik kernel vs oracle + Gaussian sanity checks."""
+
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.loglik import rowloglik
+
+from .conftest import make_problem
+
+
+def _logdet_term(d, sigma_x):
+    return np.float32(-0.5 * d * np.log(2.0 * np.pi * sigma_x * sigma_x))
+
+
+@given(
+    b=st.sampled_from([16, 64, 256]),
+    k=st.sampled_from([4, 16]),
+    d=st.sampled_from([4, 36]),
+    masked_rows=st.integers(0, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref(b, k, d, masked_rows, seed):
+    rng = np.random.default_rng(seed)
+    x, z, a, _, _, inv, rm, _ = make_problem(rng, b, k, d,
+                                             masked_rows=masked_rows)
+    ld = _logdet_term(d, 0.5)
+    pr_r, tot_r = ref.rowloglik_ref(x, z, a, inv, ld, rm)
+    pr_k, tot_k = rowloglik(x, z, a, inv, ld, rm)
+    np.testing.assert_allclose(np.asarray(pr_r), np.asarray(pr_k),
+                               atol=1e-3, rtol=1e-4)
+    np.testing.assert_allclose(float(tot_r), float(tot_k), rtol=1e-4)
+
+
+def test_exact_gaussian_value(rng):
+    """Exact hand-computed density for a 1-row problem."""
+    d, sx = 3, 0.7
+    x = np.array([[1.0, -2.0, 0.5]], np.float32)
+    z = np.ones((1, 1), np.float32)
+    a = np.array([[1.0, -1.5, 0.0]], np.float32)
+    r = x - a
+    expect = (-0.5 * d * np.log(2 * np.pi * sx**2)
+              - float((r * r).sum()) / (2 * sx**2))
+    _, tot = rowloglik(x, z, a, np.float32(1 / (2 * sx**2)),
+                       _logdet_term(d, sx), np.ones(1, np.float32))
+    np.testing.assert_allclose(float(tot), expect, rtol=1e-5)
+
+
+def test_perfect_fit_maximises(rng):
+    """x == zA gives the maximum attainable per-row loglik."""
+    b, k, d = 32, 4, 8
+    z = (rng.random((b, k)) < 0.5).astype(np.float32)
+    a = rng.normal(size=(k, d)).astype(np.float32)
+    x = (z @ a).astype(np.float32)
+    ld = _logdet_term(d, 0.5)
+    inv = np.float32(1 / (2 * 0.25))
+    pr, _ = rowloglik(x, z, a, inv, ld, np.ones(b, np.float32))
+    np.testing.assert_allclose(np.asarray(pr), ld, atol=1e-4)
+    x2 = x + 1.0
+    pr2, _ = rowloglik(x2, z, a, inv, ld, np.ones(b, np.float32))
+    assert (np.asarray(pr2) < np.asarray(pr)).all()

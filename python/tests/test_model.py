@@ -1,0 +1,155 @@
+"""L2 model-graph tests: A-posterior sampling, held-out metric, collapsed
+marginal — validated against dense numpy linear algebra."""
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+from .conftest import make_problem
+
+# model.apost_sample / collapsed_loglik contain fori_loop linear algebra
+# that is only fast under jit (they are always jitted in the AOT path);
+# eager dispatch would make the sampling-heavy tests below crawl.
+_apost_jit = jax.jit(model.apost_sample)
+_collapsed_jit = jax.jit(model.collapsed_loglik)
+
+
+def naive_collapsed(x, z, sx, sa):
+    n, k = z.shape
+    d = x.shape[1]
+    m = z.T @ z + (sx / sa) ** 2 * np.eye(k)
+    _, ld = np.linalg.slogdet(m)
+    minv = np.linalg.inv(m)
+    return (
+        -(n * d / 2) * np.log(2 * np.pi)
+        - (n - k) * d * np.log(sx)
+        - k * d * np.log(sa)
+        - d / 2 * ld
+        - (np.trace(x.T @ x) - np.trace(x.T @ z @ minv @ z.T @ x))
+        / (2 * sx**2)
+    )
+
+
+@given(
+    n=st.integers(10, 60),
+    k=st.integers(1, 8),
+    d=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_collapsed_matches_naive(n, k, d, seed):
+    rng = np.random.default_rng(seed)
+    z = (rng.random((n, k)) < 0.4).astype(np.float64)
+    a = rng.normal(size=(k, d))
+    x = z @ a + 0.3 * rng.normal(size=(n, d))
+    got = _collapsed_jit(
+        jnp.asarray(x, jnp.float32), jnp.asarray(z, jnp.float32),
+        0.5, 1.2, jnp.ones(k, jnp.float32), jnp.ones(n, jnp.float32)
+    )
+    want = naive_collapsed(x, z, 0.5, 1.2)
+    assert abs(float(got) - want) < max(1e-3 * abs(want), 0.5)
+
+
+def test_collapsed_padding_invariant(rng):
+    """Padding rows/features must not change the collapsed marginal."""
+    n, k, d = 30, 5, 7
+    z = (rng.random((n, k)) < 0.4).astype(np.float32)
+    a = rng.normal(size=(k, d)).astype(np.float32)
+    x = (z @ a + 0.3 * rng.normal(size=(n, d))).astype(np.float32)
+    base = float(_collapsed_jit(
+        jnp.asarray(x), jnp.asarray(z), 0.5, 1.0,
+        jnp.ones(k, jnp.float32), jnp.ones(n, jnp.float32)))
+    np_, kp = 48, 8
+    zp = np.zeros((np_, kp), np.float32); zp[:n, :k] = z
+    xp = np.zeros((np_, d), np.float32); xp[:n] = x
+    km = np.zeros(kp, np.float32); km[:k] = 1
+    rm = np.zeros(np_, np.float32); rm[:n] = 1
+    padded = float(_collapsed_jit(
+        jnp.asarray(xp), jnp.asarray(zp), 0.5, 1.0,
+        jnp.asarray(km), jnp.asarray(rm)))
+    assert abs(base - padded) < 0.1
+
+
+def test_apost_mean_and_masking(rng):
+    n, k, d = 40, 5, 7
+    z = (rng.random((n, k)) < 0.4).astype(np.float64)
+    a = rng.normal(size=(k, d))
+    x = z @ a + 0.1 * rng.normal(size=(n, d))
+    sx, sa = 0.3, 1.0
+    ztz = (z.T @ z).astype(np.float32)
+    ztx = (z.T @ x).astype(np.float32)
+    got = _apost_jit(
+        jnp.asarray(ztz), jnp.asarray(ztx), jnp.zeros((k, d), jnp.float32),
+        sx, sa, jnp.ones(k, jnp.float32))
+    want = np.linalg.solve(z.T @ z + (sx / sa) ** 2 * np.eye(k), z.T @ x)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-3)
+    # masked rows exactly zero, even with noise
+    kp = 8
+    ztz_p = np.zeros((kp, kp), np.float32); ztz_p[:k, :k] = ztz
+    ztx_p = np.zeros((kp, d), np.float32); ztx_p[:k] = ztx
+    km = np.zeros(kp, np.float32); km[:k] = 1
+    eps = rng.normal(size=(kp, d)).astype(np.float32)
+    got_p = np.asarray(_apost_jit(
+        jnp.asarray(ztz_p), jnp.asarray(ztx_p), jnp.asarray(eps),
+        sx, sa, jnp.asarray(km)))
+    assert np.abs(got_p[k:]).max() == 0.0
+    np.testing.assert_allclose(got_p[:k] - np.asarray(got), 0, atol=2.0)
+
+
+def test_apost_sample_covariance(rng):
+    """Empirical covariance of A-draws matches sigma_x^2 M^{-1}."""
+    k, d = 3, 2
+    ztz = np.array([[9.0, 2.0, 1.0], [2.0, 7.0, 0.5], [1.0, 0.5, 5.0]],
+                   np.float32)
+    ztx = np.zeros((k, d), np.float32)
+    sx, sa = 0.8, 1.0
+    m = ztz + (sx / sa) ** 2 * np.eye(k)
+    cov_want = sx**2 * np.linalg.inv(m)
+    draws = []
+    for i in range(1500):
+        eps = rng.normal(size=(k, d)).astype(np.float32)
+        draws.append(np.asarray(_apost_jit(
+            jnp.asarray(ztz), jnp.asarray(ztx), jnp.asarray(eps),
+            sx, sa, jnp.ones(k, jnp.float32)))[:, 0])
+    cov_got = np.cov(np.array(draws).T)
+    np.testing.assert_allclose(cov_got, cov_want, atol=0.04)
+
+
+def test_heldout_joint_decomposes(rng):
+    """joint = gaussian loglik + bernoulli prior, checked by hand."""
+    b, k, d = 16, 3, 5
+    x, z, a, _, _, inv, rm, km = make_problem(rng, b, k, d)
+    pi = np.array([0.3, 0.6, 0.9], np.float32)
+    sx = 0.5
+    ld = np.float32(-0.5 * d * np.log(2 * np.pi * sx**2))
+    got = float(model.heldout_joint_loglik(
+        jnp.asarray(x), jnp.asarray(z), jnp.asarray(a),
+        jnp.log(pi), jnp.log1p(-pi), inv, ld, jnp.asarray(rm),
+        jnp.asarray(km)))
+    r = x - z @ a
+    want_x = (ld - (r * r).sum(1) * inv).sum()
+    want_z = (z * np.log(pi) + (1 - z) * np.log1p(-pi)).sum()
+    np.testing.assert_allclose(got, want_x + want_z, rtol=1e-4)
+
+
+def test_heldout_masked_rows_ignored(rng):
+    b, k, d = 32, 4, 6
+    x, z, a, _, _, inv, _, km = make_problem(rng, b, k, d)
+    pi = np.full(k, 0.4, np.float32)
+    ld = np.float32(-0.5 * d * np.log(2 * np.pi * 0.25))
+    rm_full = np.ones(b, np.float32)
+    rm_half = rm_full.copy(); rm_half[16:] = 0
+    z_half = z.copy(); z_half[16:] = 0
+    got_half = float(model.heldout_joint_loglik(
+        jnp.asarray(x), jnp.asarray(z_half), jnp.asarray(a),
+        jnp.log(pi), jnp.log1p(-pi), inv, ld, jnp.asarray(rm_half),
+        jnp.asarray(km)))
+    got_sub = float(model.heldout_joint_loglik(
+        jnp.asarray(x[:16]), jnp.asarray(z[:16]), jnp.asarray(a),
+        jnp.log(pi), jnp.log1p(-pi), inv, ld,
+        jnp.ones(16, np.float32), jnp.asarray(km)))
+    np.testing.assert_allclose(got_half, got_sub, rtol=1e-4)

@@ -1,0 +1,125 @@
+"""Pallas zsweep kernel vs the pure-jnp oracle (ref.zsweep_ref).
+
+The sweep is the hybrid sampler's hot path; the rust coordinator executes
+its AOT-lowered form on every worker every sub-iteration, so bit-exact
+agreement with the reference semantics is the core correctness signal.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.zsweep import zsweep, zsweep_block_height, vmem_bytes
+
+from .conftest import make_problem
+
+
+def run_both(x, z, a, prior_logit, u, inv2s2, row_mask, **kw):
+    zr, rr, mr = ref.zsweep_ref(x, z, a, prior_logit, u, inv2s2, row_mask)
+    zk, rk, mk = zsweep(x, z, a, prior_logit, u, inv2s2, row_mask, **kw)
+    return (np.asarray(zr), np.asarray(rr), np.asarray(mr),
+            np.asarray(zk), np.asarray(rk), np.asarray(mk))
+
+
+@given(
+    b=st.sampled_from([16, 32, 64, 128]),
+    k=st.sampled_from([4, 8, 16, 32]),
+    d=st.sampled_from([4, 12, 36]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20)
+def test_matches_ref_hypothesis(b, k, d, seed):
+    rng = np.random.default_rng(seed)
+    x, z, a, pl_, u, inv, rm, _ = make_problem(rng, b, k, d)
+    zr, rr, mr, zk, rk, mk = run_both(x, z, a, pl_, u, inv, rm)
+    np.testing.assert_array_equal(zr, zk)
+    np.testing.assert_allclose(rr, rk, atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(mr, mk)
+
+
+@given(
+    masked_rows=st.integers(0, 15),
+    masked_feats=st.integers(0, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masking(masked_rows, masked_feats, seed):
+    rng = np.random.default_rng(seed)
+    b, k, d = 64, 8, 12
+    x, z, a, pl_, u, inv, rm, _ = make_problem(
+        rng, b, k, d, masked_rows=masked_rows, masked_feats=masked_feats
+    )
+    _, _, _, zk, _, mk = run_both(x, z, a, pl_, u, inv, rm)
+    if masked_rows:
+        assert zk[b - masked_rows:].sum() == 0, "padded rows must stay zero"
+    if masked_feats:
+        assert zk[:, k - masked_feats:].sum() == 0, "masked feats stay off"
+        assert (mk[k - masked_feats:] == 0).all()
+    # column counts consistent with returned Z
+    np.testing.assert_array_equal(mk, (zk * rm[:, None]).sum(0))
+
+
+def test_residual_is_consistent(rng):
+    """r_new returned by the kernel must equal x - z_new @ a."""
+    x, z, a, pl_, u, inv, rm, _ = make_problem(rng, 64, 16, 36)
+    _, _, _, zk, rk, _ = run_both(x, z, a, pl_, u, inv, rm)
+    np.testing.assert_allclose(rk, x - zk @ a, atol=1e-3, rtol=1e-3)
+
+
+def test_block_height_invariance(rng):
+    """Different VMEM tilings must produce identical samples."""
+    x, z, a, pl_, u, inv, rm, _ = make_problem(rng, 128, 8, 12)
+    z1, r1, m1 = zsweep(x, z, a, pl_, u, inv, rm, block_height=16)
+    z2, r2, m2 = zsweep(x, z, a, pl_, u, inv, rm, block_height=128)
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_deterministic_given_uniforms(rng):
+    x, z, a, pl_, u, inv, rm, _ = make_problem(rng, 64, 8, 12)
+    z1, _, _ = zsweep(x, z, a, pl_, u, inv, rm)
+    z2, _, _ = zsweep(x, z, a, pl_, u, inv, rm)
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+
+
+def test_extreme_prior_forces_bits(rng):
+    """prior_logit = +-huge pins bits on/off regardless of likelihood."""
+    x, z, a, _, u, inv, rm, _ = make_problem(rng, 32, 4, 8)
+    on = np.full(4, 60.0, np.float32)
+    zk, _, _ = zsweep(x, z, a, on, u, inv, rm)
+    assert np.asarray(zk).min() == 1.0
+    off = np.full(4, -60.0, np.float32)
+    zk, _, _ = zsweep(x, z, a, off, u, inv, rm)
+    assert np.asarray(zk).max() == 0.0
+
+
+def test_gibbs_moves_towards_truth(rng):
+    """Starting from all-zero Z with the true A and a strong signal, one
+    sweep should recover most of the true assignment pattern."""
+    b, k, d = 128, 4, 36
+    z_true = (rng.random((b, k)) < 0.5).astype(np.float32)
+    a = (3.0 * rng.normal(size=(k, d))).astype(np.float32)
+    x = (z_true @ a + 0.1 * rng.normal(size=(b, d))).astype(np.float32)
+    pl_ = np.zeros(k, np.float32)  # pi = 0.5
+    u = rng.random((b, k)).astype(np.float32)
+    inv = np.float32(1.0 / (2.0 * 0.1**2))
+    zk, _, _ = zsweep(x, np.zeros((b, k), np.float32), a, pl_, u, inv,
+                      np.ones(b, np.float32))
+    agree = (np.asarray(zk) == z_true).mean()
+    assert agree > 0.9, f"sweep should track truth, agreement={agree}"
+
+
+def test_vmem_budget():
+    """Chosen block heights must respect the VMEM budget model."""
+    for b, k, d in [(1024, 32, 36), (256, 8, 36), (1024, 64, 36)]:
+        bt = zsweep_block_height(b, k, d)
+        assert b % bt == 0 or bt <= b
+        assert vmem_bytes(bt, k, d) <= 8 * 1024 * 1024
+
+
+def test_bad_block_height_raises(rng):
+    x, z, a, pl_, u, inv, rm, _ = make_problem(rng, 64, 8, 12)
+    with pytest.raises(ValueError):
+        zsweep(x, z, a, pl_, u, inv, rm, block_height=48)

@@ -1,0 +1,107 @@
+//! T-S3 — ablations of the design choices DESIGN.md calls out:
+//!
+//! 1. sub-iterations L ∈ {1, 5, 10} (paper uses 5): more local sweeps per
+//!    global step amortise communication but stale (π, A) longer;
+//! 2. new-feature proposal truncation kmax_new ∈ {1, 4};
+//! 3. communication model sensitivity: virtual-time per iteration under
+//!    LAN-ish vs WAN-ish latency/bandwidth (the paper's §5 overhead).
+
+use pibp::config::{Backend, CommModel, RunConfig, SamplerKind};
+use pibp::coordinator::{Coordinator, CoordinatorConfig};
+use pibp::data::cambridge::{generate, CambridgeConfig};
+use pibp::model::LinGauss;
+use pibp::runner;
+use pibp::samplers::SamplerOptions;
+
+fn main() {
+    let full = std::env::var("PIBP_BENCH_FULL").is_ok();
+    let (n, iters) = if full { (1000, 300) } else { (300, 80) };
+
+    // ---- 1. sub-iterations ----
+    println!("## T-S3a — sub-iterations L (hybrid P=3, cambridge {n}×36, {iters} iters)\n");
+    println!("| {:>3} | {:>12} | {:>12} | {:>8} |", "L", "plateau", "vtime total", "final K");
+    println!("|{}|{}|{}|{}|", "-".repeat(5), "-".repeat(14), "-".repeat(14), "-".repeat(10));
+    for l in [1usize, 5, 10] {
+        let cfg = RunConfig {
+            n,
+            iters,
+            sampler: SamplerKind::Hybrid,
+            processors: 3,
+            sub_iters: l,
+            eval_every: 5,
+            seed: 2,
+            ..Default::default()
+        };
+        let out = runner::run(&cfg, |_| {}).expect("run");
+        println!(
+            "| {l:>3} | {:>12.1} | {:>11.3}s | {:>8} |",
+            out.trace.plateau(0.25),
+            out.elapsed_s,
+            out.final_k
+        );
+    }
+
+    // ---- 2. proposal truncation ----
+    println!("\n## T-S3b — new-feature truncation kmax_new\n");
+    println!("| {:>5} | {:>12} | {:>8} |", "kmax", "plateau", "final K");
+    println!("|{}|{}|{}|", "-".repeat(7), "-".repeat(14), "-".repeat(10));
+    for kmax in [1usize, 4] {
+        let cfg = RunConfig {
+            n,
+            iters,
+            sampler: SamplerKind::Hybrid,
+            processors: 3,
+            kmax_new: kmax,
+            eval_every: 5,
+            seed: 3,
+            ..Default::default()
+        };
+        let out = runner::run(&cfg, |_| {}).expect("run");
+        println!(
+            "| {kmax:>5} | {:>12.1} | {:>8} |",
+            out.trace.plateau(0.25),
+            out.final_k
+        );
+    }
+
+    // ---- 3. comm model sensitivity ----
+    println!("\n## T-S3c — communication model sensitivity (P=5, 10 iters)\n");
+    println!("| {:<22} | {:>14} | {:>13} |", "link", "vtime/iter", "comm share");
+    println!("|{}|{}|{}|", "-".repeat(24), "-".repeat(16), "-".repeat(15));
+    let (ds, _) = generate(&CambridgeConfig { n, seed: 4, ..Default::default() });
+    for (label, lat_us, gbps) in [
+        ("datacentre 10µs/10G", 10.0, 10.0),
+        ("LAN 50µs/1G (default)", 50.0, 1.0),
+        ("WAN 5ms/100M", 5000.0, 0.1),
+    ] {
+        let comm = CommModel {
+            latency_s: lat_us * 1e-6,
+            bandwidth_bps: gbps * 1024.0 * 1024.0 * 1024.0,
+        };
+        let cfg = CoordinatorConfig {
+            processors: 5,
+            sub_iters: 5,
+            seed: 5,
+            lg: LinGauss::new(0.5, 1.0),
+            alpha: 1.0,
+            opts: SamplerOptions::default(),
+            backend: Backend::Native,
+            artifacts_dir: "artifacts".into(),
+            comm,
+        };
+        let mut coord = Coordinator::new(&ds.x, cfg).expect("coord");
+        let (mut vt, mut compute) = (0.0, 0.0);
+        for _ in 0..10 {
+            let r = coord.step().expect("step");
+            vt += r.vtime_iter_s;
+            compute += r.max_worker_busy_s + r.master_busy_s;
+        }
+        println!(
+            "| {label:<22} | {:>12.4}s | {:>12.1}% |",
+            vt / 10.0,
+            100.0 * (vt - compute) / vt
+        );
+    }
+    println!("\n(paper §5: summary-statistic traffic to/from the master is the");
+    println!(" scalability bottleneck — visible as the WAN row's comm share)");
+}

@@ -1,0 +1,77 @@
+//! FIG1 — regenerates the paper's Figure 1: held-out joint log P(X,Z)
+//! over log (virtual) time, collapsed baseline vs hybrid P ∈ {1, 3, 5}
+//! on the Cambridge 1000×36 data (1000 iterations, L = 5 in the paper).
+//!
+//! Default run uses a reduced budget so `cargo bench` finishes quickly;
+//! set `PIBP_BENCH_FULL=1` for the paper-scale 1000×36 / 1000-iteration
+//! configuration (as recorded in EXPERIMENTS.md).
+//!
+//! Reproduction target (shape, not absolute numbers): all samplers reach
+//! the same plateau; more processors reach it sooner in virtual time;
+//! hybrid P=1 beats the pure collapsed sampler on time-to-quality.
+
+use pibp::config::{RunConfig, SamplerKind};
+use pibp::metrics::Trace;
+use pibp::runner;
+
+fn main() {
+    let full = std::env::var("PIBP_BENCH_FULL").is_ok();
+    let (n, iters) = if full { (1000, 1000) } else { (400, 120) };
+    let base = RunConfig { n, iters, eval_every: 5, seed: 0, ..Default::default() };
+
+    println!("## FIG1 — held-out log P(X,Z) vs log virtual time");
+    println!("cambridge {n}×36, {iters} iterations, L=5, heldout 10%\n");
+
+    let mut traces: Vec<Trace> = Vec::new();
+    let mut cfg = base.clone();
+    cfg.sampler = SamplerKind::Collapsed;
+    eprintln!("[fig1] collapsed…");
+    traces.push(runner::run(&cfg, |_| {}).expect("collapsed run").trace);
+    for p in [1usize, 3, 5] {
+        let mut cfg = base.clone();
+        cfg.sampler = SamplerKind::Hybrid;
+        cfg.processors = p;
+        eprintln!("[fig1] hybrid P={p}…");
+        traces.push(runner::run(&cfg, |_| {}).expect("hybrid run").trace);
+    }
+
+    let collapsed_plateau = traces[0].plateau(0.25);
+    let target = collapsed_plateau - 5.0; // "within 5 nats of the plateau"
+    println!(
+        "| {:<14} | {:>12} | {:>10} | {:>16} | {:>7} |",
+        "sampler", "plateau", "final K", "t→plateau-5 (vs)", "speedup"
+    );
+    println!("|{}|{}|{}|{}|{}|", "-".repeat(16), "-".repeat(14),
+             "-".repeat(12), "-".repeat(18), "-".repeat(9));
+    let t_collapsed = traces[0].time_to(target);
+    for t in &traces {
+        let tt = t.time_to(target);
+        let speedup = match (t_collapsed, tt) {
+            (Some(c), Some(x)) if x > 0.0 => format!("{:.2}x", c / x),
+            _ => "n/a".into(),
+        };
+        println!(
+            "| {:<14} | {:>12.1} | {:>10} | {:>16} | {:>7} |",
+            t.label,
+            t.plateau(0.25),
+            t.last().map_or(0, |p| p.k),
+            tt.map_or("n/a".into(), |s| format!("{s:.3}")),
+            speedup
+        );
+    }
+
+    let refs: Vec<&Trace> = traces.iter().collect();
+    println!("\n### held-out log P(X,Z) vs log10 virtual seconds\n");
+    println!("{}", pibp::viz::plot_traces(&refs, 76, 18, true));
+
+    println!("\n### series (for plotting: heldout vs log10 vtime)\n");
+    for t in &traces {
+        println!("# {}", t.label);
+        for p in t.points.iter().step_by(if full { 10 } else { 2 }) {
+            println!("{:.4e},{:.2}", p.vtime_s.max(1e-6), p.heldout);
+        }
+        t.save_csv(std::path::Path::new("results/fig1")
+            .join(format!("{}.csv", t.label)).as_path()).ok();
+    }
+    println!("\ncsv → results/fig1/*.csv");
+}

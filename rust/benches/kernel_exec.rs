@@ -1,0 +1,84 @@
+//! T-S2b — AOT artifact execution latency: per-call time of every kernel
+//! family across its (B, K) buckets on the PJRT CPU client, plus compile
+//! (cold-start) cost. This is the L1/L2 profile feeding EXPERIMENTS.md
+//! §Perf.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use pibp::bench::{bench, header};
+use pibp::linalg::Mat;
+use pibp::model::state::FeatureState;
+use pibp::rng::Pcg64;
+use pibp::runtime::{Engine, Ops};
+
+fn main() {
+    let Ok(engine) = Engine::load(Path::new("artifacts")) else {
+        println!("## T-S2b — skipped (run `make artifacts` first)");
+        return;
+    };
+    println!("## T-S2b — AOT artifact execution latency (PJRT CPU)\n");
+
+    // cold compile cost per entry kind
+    let t0 = Instant::now();
+    let ops = Ops::new(&engine);
+    let mut rng = Pcg64::new(1);
+    let d = 36;
+    {
+        let (x, z, a, logit) = mk(256, 8, d);
+        let mut z = z;
+        ops.zsweep(&x, &mut z, &a, &logit, 2.0, &mut rng).unwrap();
+    }
+    println!("cold first zsweep (compile+run): {:.1} ms\n", t0.elapsed().as_secs_f64() * 1e3);
+
+    println!("{}", header());
+    let budget = Duration::from_millis(600);
+    for &(b, k) in &[(256usize, 8usize), (1024, 16), (1024, 32)] {
+        let (x, z0, a, logit) = mk(b, k, d);
+        let mut z = z0.clone();
+        let r = bench(&format!("zsweep          b={b} k={k}"), 1, budget, 5, || {
+            ops.zsweep(&x, &mut z, &a, &logit, 2.0, &mut rng).unwrap();
+        });
+        println!("{}", r.row());
+        let r = bench(&format!("suffstats       b={b} k={k}"), 1, budget, 5, || {
+            ops.suffstats(&z0, &x).unwrap();
+        });
+        println!("{}", r.row());
+        let pi = vec![0.5; k];
+        let r = bench(&format!("heldout         b={b} k={k}"), 1, budget, 5, || {
+            ops.heldout(&x, &z0, &a, &pi, 0.5).unwrap();
+        });
+        println!("{}", r.row());
+    }
+    for &k in &[8usize, 16, 32] {
+        let (x, z0, _, _) = mk(256, k, d);
+        let zm = z0.to_mat();
+        let ztz = zm.gram();
+        let ztx = zm.t_matmul(&x);
+        let r = bench(&format!("apost                 k={k}"), 1, budget, 5, || {
+            ops.apost(&ztz, &ztx, 0.5, 1.0, &mut rng).unwrap();
+        });
+        println!("{}", r.row());
+    }
+    println!("\ncompiled executables: {}", engine.compiled_count());
+    println!("total executions: {}", engine.exec_count.borrow());
+}
+
+fn mk(b: usize, k: usize, d: usize) -> (Mat, FeatureState, Mat, Vec<f64>) {
+    let mut rng = Pcg64::new(7);
+    let mut z = FeatureState::empty(b);
+    z.add_features(k);
+    for i in 0..b {
+        for j in 0..k {
+            if rng.bernoulli(0.3) {
+                z.set(i, j, 1);
+            }
+        }
+    }
+    let a = Mat::from_fn(k, d, |_, _| rng.normal());
+    let mut x = z.to_mat().matmul(&a);
+    for v in x.as_mut_slice().iter_mut() {
+        *v += 0.5 * rng.normal();
+    }
+    (x, z, a, vec![0.0; k])
+}

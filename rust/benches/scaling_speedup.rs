@@ -1,0 +1,68 @@
+//! T-S1 — strong-scaling table: virtual-time speedup and per-iteration
+//! breakdown (worker compute / master / communication) of the hybrid
+//! sampler for P ∈ {1, 2, 3, 5, 8} on a 4× Cambridge workload.
+//!
+//! Reproduction target (paper Fig. 1's mechanism + §5 discussion):
+//! monotone speedup in P, sub-linear because the master's global step and
+//! the star-topology gather/broadcast are serial.
+
+use pibp::config::{Backend, CommModel};
+use pibp::coordinator::{Coordinator, CoordinatorConfig};
+use pibp::data::cambridge::{generate, CambridgeConfig};
+use pibp::model::LinGauss;
+use pibp::samplers::SamplerOptions;
+
+fn main() {
+    let full = std::env::var("PIBP_BENCH_FULL").is_ok();
+    let (n, iters) = if full { (4000, 60) } else { (1200, 20) };
+    let (ds, _) = generate(&CambridgeConfig { n, seed: 1, ..Default::default() });
+
+    println!("## T-S1 — strong scaling (hybrid, cambridge {n}×36, {iters} iters, L=5)\n");
+    println!(
+        "| {:>3} | {:>12} | {:>12} | {:>12} | {:>11} | {:>8} | {:>6} |",
+        "P", "vtime/iter", "worker max", "master", "comm bytes", "speedup", "eff"
+    );
+    println!("|{}|{}|{}|{}|{}|{}|{}|", "-".repeat(5), "-".repeat(14), "-".repeat(14),
+             "-".repeat(14), "-".repeat(13), "-".repeat(10), "-".repeat(8));
+    let mut t1 = 0.0f64;
+    for p in [1usize, 2, 3, 5, 8] {
+        let cfg = CoordinatorConfig {
+            processors: p,
+            sub_iters: 5,
+            seed: 42,
+            lg: LinGauss::new(0.5, 1.0),
+            alpha: 1.0,
+            opts: SamplerOptions::default(),
+            backend: Backend::Native,
+            artifacts_dir: "artifacts".into(),
+            comm: CommModel::default(),
+        };
+        let mut coord = Coordinator::new(&ds.x, cfg).expect("coordinator");
+        // skip 3 warm-up iterations (K grows from 0)
+        for _ in 0..3 {
+            coord.step().expect("warmup");
+        }
+        let (mut vt, mut wb, mut mb, mut cb) = (0.0, 0.0, 0.0, 0usize);
+        for _ in 0..iters {
+            let r = coord.step().expect("step");
+            vt += r.vtime_iter_s;
+            wb += r.max_worker_busy_s;
+            mb += r.master_busy_s;
+            cb += r.comm_bytes;
+        }
+        let per = vt / iters as f64;
+        if p == 1 {
+            t1 = per;
+        }
+        let speedup = t1 / per;
+        println!(
+            "| {p:>3} | {:>10.4}s | {:>10.4}s | {:>10.4}s | {:>11} | {:>7.2}x | {:>5.0}% |",
+            per,
+            wb / iters as f64,
+            mb / iters as f64,
+            cb / iters,
+            speedup,
+            100.0 * speedup / p as f64
+        );
+    }
+}

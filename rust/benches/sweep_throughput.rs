@@ -1,0 +1,102 @@
+//! T-S2a — uncollapsed-sweep throughput: rows/second of the hybrid
+//! worker hot path, native f64 vs the AOT PJRT (Pallas zsweep) backend,
+//! across (B rows, K features) buckets. Also the collapsed sweep for
+//! contrast — the paper's core cost argument (collapsed is O(K²) per bit,
+//! uncollapsed O(D)).
+
+use std::path::Path;
+use std::time::Duration;
+
+use pibp::bench::{bench, header, human_time};
+use pibp::linalg::Mat;
+use pibp::model::state::FeatureState;
+use pibp::model::LinGauss;
+use pibp::rng::Pcg64;
+use pibp::runtime::{Engine, Ops};
+use pibp::samplers::collapsed::{CollapsedGibbs, Mode};
+use pibp::samplers::uncollapsed::{residuals, sweep_rows};
+use pibp::samplers::SamplerOptions;
+
+fn problem(b: usize, k: usize, d: usize) -> (Mat, FeatureState, Mat, Vec<f64>) {
+    let mut rng = Pcg64::new(1);
+    let mut z = FeatureState::empty(b);
+    z.add_features(k);
+    for i in 0..b {
+        for j in 0..k {
+            if rng.bernoulli(0.3) {
+                z.set(i, j, 1);
+            }
+        }
+    }
+    let a = Mat::from_fn(k, d, |_, _| rng.normal());
+    let mut x = z.to_mat().matmul(&a);
+    for v in x.as_mut_slice().iter_mut() {
+        *v += 0.5 * rng.normal();
+    }
+    (x, z, a, vec![0.0; k])
+}
+
+fn main() {
+    let d = 36;
+    println!("## T-S2a — Z-sweep throughput (D={d})\n");
+    println!("{}", header());
+    let budget = Duration::from_millis(800);
+    let engine = Engine::load(Path::new("artifacts")).ok();
+
+    for &(b, k) in &[(256usize, 8usize), (256, 16), (1024, 8), (1024, 16), (1024, 32)] {
+        // native
+        let (x, z0, a, logit) = problem(b, k, d);
+        let mut z = z0.clone();
+        let mut rng = Pcg64::new(2);
+        let mut resid = residuals(&x, &z, &a, 0..b);
+        let r = bench(&format!("native  sweep b={b} k={k}"), 1, budget, 5, || {
+            sweep_rows(&x, &mut z, &mut resid, &a, &logit, 2.0, 0..b, k, &mut rng);
+        });
+        println!("{}  [{} rows/s]", r.row(),
+                 fmt_rate(b as f64 / r.per_iter.mean));
+        // pjrt
+        if let Some(eng) = &engine {
+            let ops = Ops::new(eng);
+            let mut z = z0.clone();
+            let mut rng = Pcg64::new(2);
+            let r = bench(&format!("pjrt    sweep b={b} k={k}"), 1, budget, 5, || {
+                ops.zsweep(&x, &mut z, &a, &logit, 2.0, &mut rng).expect("zsweep");
+            });
+            println!("{}  [{} rows/s]", r.row(),
+                     fmt_rate(b as f64 / r.per_iter.mean));
+        }
+    }
+
+    // collapsed sweep for contrast (one full Gibbs iteration over rows)
+    println!();
+    for &(b, k) in &[(256usize, 8usize), (256, 16)] {
+        let (x, _, _, _) = problem(b, k, d);
+        let mut rng = Pcg64::new(3);
+        let mut s = CollapsedGibbs::new(
+            x, LinGauss::new(0.5, 1.0), 1.0, Mode::Exact,
+            SamplerOptions { sample_alpha: false, sample_sigmas: false, ..Default::default() },
+            &mut rng,
+        );
+        let r = bench(&format!("collapsed full-iter b={b} (K≈{k})"), 1, budget, 3, || {
+            s.step(&mut rng);
+        });
+        println!("{}  [{} rows/s]", r.row(),
+                 fmt_rate(b as f64 / r.per_iter.mean));
+    }
+    println!("\n(mean column is seconds per full sweep over the B rows)");
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r > 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r > 1e3 {
+        format!("{:.1}k", r / 1e3)
+    } else {
+        format!("{r:.0}")
+    }
+}
+
+#[allow(dead_code)]
+fn unused(_: &str) -> String {
+    human_time(0.0)
+}

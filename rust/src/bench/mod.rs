@@ -1,0 +1,111 @@
+//! Hand-rolled benchmark harness (in-tree `criterion` replacement): fixed
+//! warm-up, adaptive iteration count targeting a measurement budget,
+//! mean/median/σ rows, and a markdown-ish table printer shared by all
+//! `rust/benches/*` targets.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration.
+    pub per_iter: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "| {:<42} | {:>10} | {:>10} | {:>10} | {:>6} |",
+            self.name,
+            human_time(self.per_iter.mean),
+            human_time(self.per_iter.median),
+            human_time(self.per_iter.std),
+            self.iters
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "| {:<42} | {:>10} | {:>10} | {:>10} | {:>6} |\n|{}|{}|{}|{}|{}|",
+        "benchmark", "mean", "median", "stddev", "iters",
+        "-".repeat(44), "-".repeat(12), "-".repeat(12), "-".repeat(12), "-".repeat(8)
+    )
+}
+
+pub fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then enough timed runs to
+/// fill `budget` (at least `min_iters`).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget: Duration,
+                         min_iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    // pilot to size the loop
+    let t0 = Instant::now();
+    f();
+    let pilot = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget.as_secs_f64() / pilot) as usize)
+        .clamp(min_iters.max(1), 100_000);
+    let mut samples = Vec::with_capacity(iters + 1);
+    samples.push(pilot);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        per_iter: Summary::of(&samples),
+        iters: samples.len(),
+    }
+}
+
+/// Convenience wrapper with repo-standard settings.
+pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 2, Duration::from_millis(1500), 5, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleeps() {
+        let r = bench("sleep", 0, Duration::from_millis(30), 3, || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert!(r.per_iter.mean >= 0.0015, "mean {}", r.per_iter.mean);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(2.5), "2.500 s");
+        assert_eq!(human_time(0.0025), "2.500 ms");
+        assert_eq!(human_time(2.5e-6), "2.500 µs");
+        assert!(human_time(5e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn row_and_header_align() {
+        let r = quick("noop", || {});
+        let h = header();
+        assert_eq!(h.lines().next().unwrap().matches('|').count(),
+                   r.row().matches('|').count());
+    }
+}

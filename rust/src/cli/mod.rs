@@ -1,0 +1,238 @@
+//! Hand-rolled CLI parser (in-tree `clap` replacement): subcommands,
+//! typed flags with defaults, `--set key=value` repeated overrides, and
+//! generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declarative flag spec.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None ⇒ boolean flag; Some(default) ⇒ takes a value.
+    pub default: Option<&'static str>,
+    /// May be repeated (collects into a list), e.g. --set.
+    pub repeated: bool,
+}
+
+/// One subcommand.
+#[derive(Clone, Debug)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+/// The whole CLI.
+#[derive(Clone, Debug)]
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+/// Parse result.
+#[derive(Clone, Debug)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    lists: BTreeMap<String, Vec<String>>,
+    bools: BTreeMap<String, bool>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.values.get(name).map(|s| s.as_str()).unwrap_or("");
+        v.parse().map_err(|_| anyhow::anyhow!("--{name} wants an integer, got '{v}'"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.values.get(name).map(|s| s.as_str()).unwrap_or("");
+        v.parse().map_err(|_| anyhow::anyhow!("--{name} wants a number, got '{v}'"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_list(&self, name: &str) -> &[String] {
+        self.lists.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+impl Cli {
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} <command> [flags]\n\nCOMMANDS:\n",
+                              self.bin, self.about, self.bin);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<12} {}\n", c.name, c.about));
+        }
+        out.push_str("\nRun `");
+        out.push_str(self.bin);
+        out.push_str(" <command> --help` for that command's flags.\n");
+        out
+    }
+
+    pub fn command_help(&self, cmd: &CommandSpec) -> String {
+        let mut out = format!("{} {} — {}\n\nFLAGS:\n", self.bin, cmd.name, cmd.about);
+        for f in &cmd.flags {
+            let val = match (&f.default, f.repeated) {
+                (Some(d), false) => format!("<value> (default {d})"),
+                (Some(_), true) => "<value> (repeatable)".to_string(),
+                (None, _) => String::new(),
+            };
+            out.push_str(&format!("  --{:<22} {} {}\n", f.name, f.help, val));
+        }
+        out
+    }
+
+    /// Parse argv (excluding the binary name). `--help` anywhere returns
+    /// Err with the help text — callers print it and exit 0.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        if args.is_empty() || args[0] == "--help" || args[0] == "-h" || args[0] == "help" {
+            bail!("{}", self.help());
+        }
+        let cmd_name = &args[0];
+        let Some(cmd) = self.commands.iter().find(|c| c.name == cmd_name) else {
+            bail!("unknown command '{cmd_name}'\n\n{}", self.help());
+        };
+        let mut parsed = Parsed {
+            command: cmd.name.to_string(),
+            values: BTreeMap::new(),
+            lists: BTreeMap::new(),
+            bools: BTreeMap::new(),
+        };
+        for f in &cmd.flags {
+            if let (Some(d), false) = (&f.default, f.repeated) {
+                parsed.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                bail!("{}", self.command_help(cmd));
+            }
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument '{arg}'");
+            };
+            // --name=value form
+            let (name, inline) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            let Some(spec) = cmd.flags.iter().find(|f| f.name == name) else {
+                bail!("unknown flag --{name} for '{}'\n\n{}", cmd.name,
+                      self.command_help(cmd));
+            };
+            match (&spec.default, spec.repeated) {
+                (None, _) => {
+                    if inline.is_some() {
+                        bail!("--{name} takes no value");
+                    }
+                    parsed.bools.insert(name.to_string(), true);
+                }
+                (Some(_), repeated) => {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            if i >= args.len() {
+                                bail!("--{name} needs a value");
+                            }
+                            args[i].clone()
+                        }
+                    };
+                    if repeated {
+                        parsed.lists.entry(name.to_string()).or_default().push(value);
+                    } else {
+                        parsed.values.insert(name.to_string(), value);
+                    }
+                }
+            }
+            i += 1;
+        }
+        Ok(parsed)
+    }
+}
+
+/// Flag helpers.
+pub fn flag(name: &'static str, help: &'static str, default: &'static str) -> FlagSpec {
+    FlagSpec { name, help, default: Some(default), repeated: false }
+}
+
+pub fn switch(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, default: None, repeated: false }
+}
+
+pub fn repeated(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, default: Some(""), repeated: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "pibp",
+            about: "test",
+            commands: vec![CommandSpec {
+                name: "run",
+                about: "run it",
+                flags: vec![
+                    flag("iters", "iterations", "100"),
+                    flag("sampler", "which sampler", "hybrid"),
+                    switch("quiet", "no output"),
+                    repeated("set", "override"),
+                ],
+            }],
+        }
+    }
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = cli().parse(&argv("run --iters 50 --set a=1 --set b=2")).unwrap();
+        assert_eq!(p.command, "run");
+        assert_eq!(p.get_usize("iters").unwrap(), 50);
+        assert_eq!(p.get("sampler"), Some("hybrid"));
+        assert_eq!(p.get_list("set"), &["a=1", "b=2"]);
+        assert!(!p.get_bool("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_switch() {
+        let p = cli().parse(&argv("run --iters=7 --quiet")).unwrap();
+        assert_eq!(p.get_usize("iters").unwrap(), 7);
+        assert!(p.get_bool("quiet"));
+    }
+
+    #[test]
+    fn errors_are_helpful() {
+        let c = cli();
+        assert!(c.parse(&argv("nope")).unwrap_err().to_string().contains("unknown command"));
+        assert!(c.parse(&argv("run --bogus 1")).unwrap_err().to_string().contains("unknown flag"));
+        assert!(c.parse(&argv("run --iters")).unwrap_err().to_string().contains("needs a value"));
+        assert!(c.parse(&argv("run --quiet=1")).unwrap_err().to_string().contains("takes no value"));
+        let help = c.parse(&argv("--help")).unwrap_err().to_string();
+        assert!(help.contains("COMMANDS"));
+        let chelp = c.parse(&argv("run --help")).unwrap_err().to_string();
+        assert!(chelp.contains("--iters"));
+    }
+
+    #[test]
+    fn bad_types_reported() {
+        let p = cli().parse(&argv("run --iters abc")).unwrap();
+        assert!(p.get_usize("iters").is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! Experiment configuration: a typed schema over the in-tree JSON parser,
+//! loadable from a file and overridable from the CLI (`--set key=value`).
+
+pub mod json;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use json::Json;
+
+/// Which sampler drives the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    Hybrid,
+    Collapsed,
+    Accelerated,
+    Uncollapsed,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "hybrid" => Self::Hybrid,
+            "collapsed" => Self::Collapsed,
+            "accelerated" => Self::Accelerated,
+            "uncollapsed" => Self::Uncollapsed,
+            _ => bail!("unknown sampler '{s}' (hybrid|collapsed|accelerated|uncollapsed)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Hybrid => "hybrid",
+            Self::Collapsed => "collapsed",
+            Self::Accelerated => "accelerated",
+            Self::Uncollapsed => "uncollapsed",
+        }
+    }
+}
+
+/// Numeric backend for the hybrid workers' hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust f64 sweep (always available; the cross-check oracle).
+    Native,
+    /// AOT-compiled JAX/Pallas executables via PJRT (`artifacts/`).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "native" => Self::Native,
+            "pjrt" => Self::Pjrt,
+            _ => bail!("unknown backend '{s}' (native|pjrt)"),
+        })
+    }
+}
+
+/// The communication model used by virtual-time accounting
+/// (DESIGN.md §Substitutions: stands in for the paper's MPI cluster).
+#[derive(Clone, Copy, Debug)]
+pub struct CommModel {
+    /// Per-message latency, seconds.
+    pub latency_s: f64,
+    /// Link bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl Default for CommModel {
+    fn default() -> Self {
+        // commodity-Ethernet-ish: 50 µs latency, 1 GiB/s
+        Self { latency_s: 50e-6, bandwidth_bps: 1024.0 * 1024.0 * 1024.0 }
+    }
+}
+
+impl CommModel {
+    /// Modelled transfer time for one message of `bytes`.
+    pub fn cost(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// Everything a run needs. Defaults reproduce the paper's Figure-1 setup.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub n: usize,
+    pub k_true: usize,
+    pub dim: usize,
+    pub data_sigma_x: f64,
+    pub sampler: SamplerKind,
+    pub backend: Backend,
+    pub processors: usize,
+    pub sub_iters: usize,
+    pub iters: usize,
+    pub seed: u64,
+    pub alpha: f64,
+    pub sigma_x: f64,
+    pub sigma_a: f64,
+    pub sample_hypers: bool,
+    pub heldout_frac: f64,
+    pub eval_every: usize,
+    pub eval_sweeps: usize,
+    pub kmax_new: usize,
+    pub k_cap: usize,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    pub comm: CommModel,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "cambridge".into(),
+            n: 1000,
+            k_true: 4,
+            dim: 36,
+            data_sigma_x: 0.5,
+            sampler: SamplerKind::Hybrid,
+            backend: Backend::Native,
+            processors: 1,
+            sub_iters: 5,
+            iters: 1000,
+            seed: 0,
+            alpha: 1.0,
+            sigma_x: 0.5,
+            sigma_a: 1.0,
+            sample_hypers: true,
+            heldout_frac: 0.1,
+            eval_every: 5,
+            eval_sweeps: 3,
+            kmax_new: 4,
+            k_cap: 64,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "results".into(),
+            comm: CommModel::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file (all keys optional; unknown keys rejected).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text)?;
+        let mut cfg = Self::default();
+        let Json::Obj(map) = &v else { bail!("config root must be an object") };
+        for (key, val) in map {
+            let raw = match val {
+                Json::Str(s) => s.clone(),
+                other => other.to_string(),
+            };
+            cfg.apply(key, &raw)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one `key=value` override (CLI `--set`).
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
+        let uint = || -> Result<usize> {
+            value.parse().with_context(|| format!("{key}={value} (want uint)"))
+        };
+        let float = || -> Result<f64> {
+            value.parse().with_context(|| format!("{key}={value} (want float)"))
+        };
+        let boolean = || -> Result<bool> {
+            value.parse().with_context(|| format!("{key}={value} (want bool)"))
+        };
+        match key {
+            "dataset" => self.dataset = value.into(),
+            "n" => self.n = uint()?,
+            "k_true" => self.k_true = uint()?,
+            "dim" => self.dim = uint()?,
+            "data_sigma_x" => self.data_sigma_x = float()?,
+            "sampler" => self.sampler = SamplerKind::parse(value)?,
+            "backend" => self.backend = Backend::parse(value)?,
+            "processors" => self.processors = uint()?,
+            "sub_iters" => self.sub_iters = uint()?,
+            "iters" => self.iters = uint()?,
+            "seed" => self.seed = value.parse()?,
+            "alpha" => self.alpha = float()?,
+            "sigma_x" => self.sigma_x = float()?,
+            "sigma_a" => self.sigma_a = float()?,
+            "sample_hypers" => self.sample_hypers = boolean()?,
+            "heldout_frac" => self.heldout_frac = float()?,
+            "eval_every" => self.eval_every = uint()?,
+            "eval_sweeps" => self.eval_sweeps = uint()?,
+            "kmax_new" => self.kmax_new = uint()?,
+            "k_cap" => self.k_cap = uint()?,
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            "out_dir" => self.out_dir = value.into(),
+            "comm_latency_us" => self.comm.latency_s = float()? * 1e-6,
+            "comm_bandwidth_gbps" => {
+                self.comm.bandwidth_bps = float()? * 1024.0 * 1024.0 * 1024.0
+            }
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.processors == 0 {
+            bail!("processors must be ≥ 1");
+        }
+        if self.n < self.processors {
+            bail!("need at least one row per processor");
+        }
+        if !(0.0..1.0).contains(&self.heldout_frac) {
+            bail!("heldout_frac must be in [0, 1)");
+        }
+        if self.sigma_x <= 0.0 || self.sigma_a <= 0.0 || self.alpha <= 0.0 {
+            bail!("sigma_x, sigma_a, alpha must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_setup() {
+        let c = RunConfig::default();
+        assert_eq!(c.n, 1000);
+        assert_eq!(c.dim, 36);
+        assert_eq!(c.sub_iters, 5);
+        assert_eq!(c.iters, 1000);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = RunConfig::default();
+        c.apply("processors", "5").unwrap();
+        c.apply("sampler", "collapsed").unwrap();
+        c.apply("sigma_x", "0.25").unwrap();
+        c.apply("sample_hypers", "false").unwrap();
+        assert_eq!(c.processors, 5);
+        assert_eq!(c.sampler, SamplerKind::Collapsed);
+        assert!(!c.sample_hypers);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let mut c = RunConfig::default();
+        assert!(c.apply("procesors", "5").is_err());
+        assert!(c.apply("processors", "five").is_err());
+        assert!(c.apply("sampler", "gibbs").is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_configs() {
+        let mut c = RunConfig::default();
+        c.processors = 0;
+        assert!(c.validate().is_err());
+        c.processors = 2000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_file_roundtrip() {
+        let dir = std::env::temp_dir().join("pibp_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, r#"{"processors": 3, "sampler": "hybrid", "iters": 10}"#).unwrap();
+        let c = RunConfig::from_file(&p).unwrap();
+        assert_eq!(c.processors, 3);
+        assert_eq!(c.iters, 10);
+        assert_eq!(c.sampler, SamplerKind::Hybrid);
+    }
+
+    #[test]
+    fn comm_cost_model() {
+        let m = CommModel::default();
+        let t = m.cost(1024 * 1024);
+        assert!(t > 50e-6 && t < 2e-3, "t={t}");
+    }
+}

@@ -1,0 +1,466 @@
+//! The master process and the public [`Coordinator`] driving P workers.
+//!
+//! Master per iteration (paper §3):
+//! 1. broadcast the current global parameters (+ the structural keep /
+//!    promote instruction from the previous global step);
+//! 2. gather per-shard summaries (m_k, ZᵀZ_p, ZᵀX_p, tail bits from p′);
+//! 3. merge; promote the K* tail features into K⁺; drop globally-empty
+//!    features; sample A, σ_X, σ_A, π, α; pick the next p′.
+//!
+//! All cross-thread traffic is byte-encoded (`messages.rs`) and charged to
+//! the virtual clock (`vtime.rs`).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Backend, CommModel};
+use crate::linalg::Mat;
+use crate::model::state::FeatureState;
+use crate::model::{ibp, GlobalParams, LinGauss};
+use crate::rng::Pcg64;
+use crate::runtime::{Engine, Ops};
+use crate::samplers::hybrid::make_shards;
+use crate::samplers::SamplerOptions;
+
+use super::messages::{Broadcast, Summary, ToWorker, ZReport};
+use super::vtime::{IterTiming, VClock};
+use super::worker::{run_worker, WorkerConfig};
+
+/// Coordinator configuration (a cut of `config::RunConfig`).
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub processors: usize,
+    pub sub_iters: usize,
+    pub seed: u64,
+    pub lg: LinGauss,
+    pub alpha: f64,
+    pub opts: SamplerOptions,
+    pub backend: Backend,
+    pub artifacts_dir: PathBuf,
+    pub comm: CommModel,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            processors: 1,
+            sub_iters: 5,
+            seed: 0,
+            lg: LinGauss::new(0.5, 1.0),
+            alpha: 1.0,
+            opts: SamplerOptions::default(),
+            backend: Backend::Native,
+            artifacts_dir: PathBuf::from("artifacts"),
+            comm: CommModel::default(),
+        }
+    }
+}
+
+/// Per-iteration record (trace row).
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    pub k: usize,
+    pub alpha: f64,
+    pub sigma_x: f64,
+    pub sigma_a: f64,
+    /// Virtual iteration duration / cumulative virtual time (seconds).
+    pub vtime_iter_s: f64,
+    pub vtime_total_s: f64,
+    /// Wall-clock iteration duration (seconds).
+    pub wall_iter_s: f64,
+    pub comm_bytes: usize,
+    pub max_worker_busy_s: f64,
+    pub master_busy_s: f64,
+}
+
+pub struct Coordinator {
+    to_workers: Vec<Sender<Vec<u8>>>,
+    from_workers: Receiver<(usize, Vec<u8>)>,
+    handles: Vec<JoinHandle<()>>,
+    engine: Option<Engine>,
+    rng: Pcg64,
+    params: GlobalParams,
+    /// Structural instruction pending for the next broadcast.
+    next_keep: Vec<u32>,
+    next_k_star: u32,
+    next_tail_owner: u32,
+    next_demote: Vec<u32>,
+    /// Copy of the promoted tail bits (from the owner's summary), kept so
+    /// `gather_z` can materialise the full matrix without a structural
+    /// round-trip.
+    pending_tail_bits: Option<FeatureState>,
+    p_prime: u32,
+    /// Global column counts for the *current* K⁺ (post-merge).
+    m_global: Vec<usize>,
+    n: usize,
+    d: usize,
+    iter: usize,
+    cfg: CoordinatorConfig,
+    pub clock: VClock,
+    shard_sizes: Vec<usize>,
+}
+
+impl Coordinator {
+    /// Split `x` into P row shards and spawn the workers.
+    pub fn new(x: &Mat, cfg: CoordinatorConfig) -> Result<Self> {
+        if cfg.processors == 0 || x.rows() < cfg.processors {
+            bail!("need 1 ≤ P ≤ N");
+        }
+        let n = x.rows();
+        let d = x.cols();
+        let shards = make_shards(n, cfg.processors);
+        let (tx_master, from_workers) = channel::<(usize, Vec<u8>)>();
+        let mut to_workers = Vec::with_capacity(cfg.processors);
+        let mut handles = Vec::with_capacity(cfg.processors);
+        for (id, shard) in shards.iter().enumerate() {
+            let (tx, rx) = channel::<Vec<u8>>();
+            let wcfg = WorkerConfig {
+                id,
+                n_global: n,
+                sub_iters: cfg.sub_iters,
+                kmax_new: cfg.opts.kmax_new,
+                k_cap: cfg.opts.k_cap,
+                seed: cfg.seed,
+                backend: cfg.backend,
+                artifacts_dir: cfg.artifacts_dir.clone(),
+            };
+            let x_shard =
+                Mat::from_fn(shard.len(), d, |i, j| x[(shard.start + i, j)]);
+            let tx_m = tx_master.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pibp-worker-{id}"))
+                    .spawn(move || run_worker(wcfg, x_shard, rx, tx_m))
+                    .context("spawning worker")?,
+            );
+            to_workers.push(tx);
+        }
+        let engine = match cfg.backend {
+            Backend::Pjrt => Some(
+                Engine::load(&cfg.artifacts_dir)
+                    .context("master: loading artifacts")?,
+            ),
+            Backend::Native => None,
+        };
+        let mut rng = Pcg64::new(cfg.seed).split(1);
+        let p_prime = rng.below(cfg.processors as u64) as u32;
+        Ok(Self {
+            to_workers,
+            from_workers,
+            handles,
+            engine,
+            rng,
+            params: GlobalParams {
+                a: Mat::zeros(0, d),
+                pi: vec![],
+                lg: cfg.lg,
+                alpha: cfg.alpha,
+            },
+            next_keep: vec![],
+            next_k_star: 0,
+            next_tail_owner: 0,
+            next_demote: vec![],
+            pending_tail_bits: None,
+            p_prime,
+            m_global: vec![],
+            n,
+            d,
+            iter: 0,
+            cfg,
+            clock: VClock::new(),
+            shard_sizes: shards.iter().map(|s| s.len()).collect(),
+        })
+    }
+
+    pub fn params(&self) -> &GlobalParams {
+        &self.params
+    }
+
+    pub fn k(&self) -> usize {
+        self.params.k()
+    }
+
+    pub fn m_global(&self) -> &[usize] {
+        &self.m_global
+    }
+
+    /// One global iteration.
+    pub fn step(&mut self) -> Result<IterRecord> {
+        let wall_start = Instant::now();
+        let mut timing = IterTiming {
+            worker_busy_s: vec![0.0; self.cfg.processors],
+            master_busy_s: 0.0,
+            bcast_bytes: Vec::with_capacity(self.cfg.processors),
+            gather_bytes: Vec::with_capacity(self.cfg.processors),
+        };
+        // ---- broadcast ----
+        let bcast = Broadcast {
+            iter: self.iter as u32,
+            a: self.params.a.clone(),
+            pi: self.params.pi.clone(),
+            sigma_x: self.params.lg.sigma_x,
+            sigma_a: self.params.lg.sigma_a,
+            alpha: self.params.alpha,
+            p_prime: self.p_prime,
+            keep: std::mem::take(&mut self.next_keep),
+            k_star: self.next_k_star,
+            tail_owner: self.next_tail_owner,
+            demote: std::mem::take(&mut self.next_demote),
+        };
+        let msg = ToWorker::Run(bcast).encode();
+        for tx in &self.to_workers {
+            timing.bcast_bytes.push(msg.len());
+            tx.send(msg.clone()).context("worker channel closed")?;
+        }
+        // ---- gather ----
+        let mut summaries: Vec<Option<Summary>> =
+            (0..self.cfg.processors).map(|_| None).collect();
+        for _ in 0..self.cfg.processors {
+            let (id, buf) = self
+                .from_workers
+                .recv()
+                .context("worker died mid-iteration")?;
+            timing.gather_bytes.push(buf.len());
+            let s = Summary::decode(&buf)?;
+            timing.worker_busy_s[id] = s.busy_s;
+            summaries[id] = Some(s);
+        }
+        let summaries: Vec<Summary> =
+            summaries.into_iter().map(Option::unwrap).collect();
+
+        // ---- master global step ----
+        let mstart = Instant::now();
+        self.global_step(&summaries)?;
+        timing.master_busy_s = mstart.elapsed().as_secs_f64();
+
+        self.iter += 1;
+        let vtime_iter_s = self.clock.advance(&timing, &self.cfg.comm);
+        Ok(IterRecord {
+            iter: self.iter,
+            k: self.params.k(),
+            alpha: self.params.alpha,
+            sigma_x: self.params.lg.sigma_x,
+            sigma_a: self.params.lg.sigma_a,
+            vtime_iter_s,
+            vtime_total_s: self.clock.elapsed_s(),
+            wall_iter_s: wall_start.elapsed().as_secs_f64(),
+            comm_bytes: timing.total_bytes(),
+            max_worker_busy_s: timing
+                .worker_busy_s
+                .iter()
+                .fold(0.0f64, |a, &b| a.max(b)),
+            master_busy_s: timing.master_busy_s,
+        })
+    }
+
+    /// Merge summaries, promote, compact, resample globals, pick p′.
+    fn global_step(&mut self, summaries: &[Summary]) -> Result<()> {
+        let k_plus = self.params.k();
+        let p_prime = self.p_prime as usize;
+        let tail = summaries[p_prime].tail.as_ref();
+        let k_star = tail.map_or(0, |t| t.k());
+        let k_ext = k_plus + k_star;
+
+        // ---- merge suff stats into the extended column space ----
+        let mut ztz = Mat::zeros(k_ext, k_ext);
+        let mut ztx = Mat::zeros(k_ext, self.d);
+        let mut tr_xx = 0.0;
+        let mut m_ext = vec![0usize; k_ext];
+        for (p, s) in summaries.iter().enumerate() {
+            tr_xx += s.tr_xx;
+            if s.m_local.len() != k_plus {
+                bail!("worker {p} summary has {} counts, want {k_plus}",
+                      s.m_local.len());
+            }
+            for (k, &m) in s.m_local.iter().enumerate() {
+                m_ext[k] += m as usize;
+            }
+            // s.ztz is (k_plus [+ k_star on p′]) square
+            let sk = s.ztz.rows();
+            let expect = if p == p_prime { k_ext } else { k_plus };
+            if sk != expect {
+                bail!("worker {p} ztz is {sk}, want {expect}");
+            }
+            for i in 0..sk {
+                for j in 0..sk {
+                    ztz[(i, j)] += s.ztz[(i, j)];
+                }
+                let src = s.ztx.row(i);
+                let dst = ztx.row_mut(i);
+                for (t, &v) in dst.iter_mut().zip(src) {
+                    *t += v;
+                }
+            }
+        }
+        if let Some(t) = tail {
+            for j in 0..k_star {
+                m_ext[k_plus + j] = t.m()[j];
+            }
+        }
+
+        // ---- choose the NEXT p′ first: demotion needs to know it ----
+        let p_next = self.rng.below(self.cfg.processors as u64) as u32;
+
+        // ---- demotion: small features living entirely inside p_next's
+        //      shard go back to the collapsed tail (DESIGN.md §Demotion).
+        //      Never demote on top of a fresh promotion to the same owner
+        //      beyond the k-cap budget; cheap junk (m ≤ demote_below) only.
+        let demote: Vec<u32> = if self.cfg.opts.demote_below > 0 {
+            (0..k_plus)
+                .filter(|&k| {
+                    let m = m_ext[k];
+                    m > 0
+                        && m <= self.cfg.opts.demote_below
+                        && summaries[p_next as usize].m_local[k] as usize == m
+                })
+                .map(|k| k as u32)
+                .collect()
+        } else {
+            vec![]
+        };
+        let demoted = |k: usize| demote.binary_search(&(k as u32)).is_ok();
+
+        // ---- global compaction decision ----
+        let keep_old: Vec<u32> = (0..k_plus)
+            .filter(|&k| m_ext[k] > 0 && !demoted(k))
+            .map(|k| k as u32)
+            .collect();
+        let keep_ext: Vec<usize> = keep_old
+            .iter()
+            .map(|&k| k as usize)
+            .chain(k_plus..k_ext)
+            .collect();
+        let k_new = keep_ext.len();
+        let sel = |m: &Mat| -> Mat {
+            Mat::from_fn(k_new, m.cols(), |i, j| m[(keep_ext[i], j)])
+        };
+        let ztx_c = sel(&ztx);
+        let ztz_c = Mat::from_fn(k_new, k_new, |i, j| {
+            ztz[(keep_ext[i], keep_ext[j])]
+        });
+        let m_c: Vec<usize> = keep_ext.iter().map(|&k| m_ext[k]).collect();
+
+        // ---- sample globals ----
+        if k_new > 0 {
+            self.params.a = match &self.engine {
+                Some(eng) => Ops::new(eng).apost(
+                    &ztz_c, &ztx_c,
+                    self.params.lg.sigma_x, self.params.lg.sigma_a,
+                    &mut self.rng,
+                )?,
+                None => self.params.lg.apost_sample(&ztz_c, &ztx_c, &mut self.rng),
+            };
+            self.params.pi = ibp::sample_pi(&m_c, self.n, &mut self.rng);
+        } else {
+            self.params.a = Mat::zeros(0, self.d);
+            self.params.pi.clear();
+        }
+        if self.cfg.opts.sample_sigmas {
+            // RSS from the merged stats and the freshly sampled A:
+            // ‖X−ZA‖² = tr(XᵀX) − 2·tr(AᵀZᵀX) + tr(Aᵀ ZᵀZ A)
+            let rss = if k_new > 0 {
+                let a = &self.params.a;
+                let za = ztz_c.matmul(a);
+                (tr_xx - 2.0 * a.dot(&ztx_c) + a.dot(&za)).max(1e-12)
+            } else {
+                tr_xx
+            };
+            self.params.lg.sigma_x = ibp::sample_sigma_x(
+                rss, self.n, self.d,
+                self.cfg.opts.sigma_a0, self.cfg.opts.sigma_b0,
+                &mut self.rng,
+            );
+            if k_new > 0 {
+                self.params.lg.sigma_a = ibp::sample_sigma_a(
+                    self.params.a.frob2(), k_new, self.d,
+                    self.cfg.opts.sigma_a0, self.cfg.opts.sigma_b0,
+                    &mut self.rng,
+                );
+            }
+        }
+        if self.cfg.opts.sample_alpha {
+            self.params.alpha = ibp::sample_alpha(k_new, self.n, &mut self.rng);
+        }
+        self.m_global = m_c;
+
+        // ---- structural instruction for the next broadcast ----
+        self.next_keep = keep_old;
+        self.next_k_star = k_star as u32;
+        self.next_tail_owner = self.p_prime;
+        self.next_demote = demote;
+        self.pending_tail_bits = tail.cloned();
+        self.p_prime = p_next;
+        Ok(())
+    }
+
+    /// Gather the full N × K⁺ feature matrix (matching `params()`'s
+    /// column space) from all workers.
+    ///
+    /// Worker Z states lag one broadcast behind `params()` — the pending
+    /// keep/promote instruction is applied at the next Run — so the master
+    /// applies that same instruction here, using its stored copy of the
+    /// promoted tail bits for the new columns.
+    pub fn gather_z(&mut self) -> Result<FeatureState> {
+        let msg = ToWorker::SendZ.encode();
+        for tx in &self.to_workers {
+            tx.send(msg.clone()).context("worker channel closed")?;
+        }
+        let mut reports: Vec<Option<ZReport>> =
+            (0..self.cfg.processors).map(|_| None).collect();
+        for _ in 0..self.cfg.processors {
+            let (id, buf) = self.from_workers.recv().context("worker died")?;
+            reports[id] = Some(ZReport::decode(&buf)?);
+        }
+        let k_star = self.next_k_star as usize;
+        let base = self.next_keep.len();
+        let mut global = FeatureState::empty(self.n);
+        global.add_features(base + k_star);
+        let mut row0 = 0usize;
+        for (p, rep) in reports.iter().enumerate() {
+            let z = &rep.as_ref().unwrap().z;
+            for (new_j, &old_j) in self.next_keep.iter().enumerate() {
+                for i in 0..z.n() {
+                    if z.get(i, old_j as usize) == 1 {
+                        global.set(row0 + i, new_j, 1);
+                    }
+                }
+            }
+            if p == self.next_tail_owner as usize && k_star > 0 {
+                let tail = self
+                    .pending_tail_bits
+                    .as_ref()
+                    .expect("tail bits stored at promotion");
+                for i in 0..tail.n() {
+                    for j in 0..k_star {
+                        if tail.get(i, j) == 1 {
+                            global.set(row0 + i, base + j, 1);
+                        }
+                    }
+                }
+            }
+            row0 += self.shard_sizes[p];
+        }
+        Ok(global)
+    }
+
+    pub fn shutdown(&mut self) {
+        let msg = ToWorker::Shutdown.encode();
+        for tx in &self.to_workers {
+            let _ = tx.send(msg.clone());
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

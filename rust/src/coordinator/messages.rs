@@ -1,0 +1,464 @@
+//! Typed messages + explicit binary wire format.
+//!
+//! The paper distributes X and Z across processors over MPI and ships
+//! "summary statistics" to a master each global iteration (§3, §5). This
+//! repo's substitution (DESIGN.md §Substitutions) keeps the exact message
+//! discipline but carries it over in-process channels; every message is
+//! *actually encoded to bytes and decoded on receipt*, so per-message
+//! sizes are real and feed the virtual-time communication model — the
+//! overhead the paper's §5 worries about stays measurable.
+//!
+//! Wire format: little-endian, `u32` tags/lengths, `f64` payloads. No
+//! versioning — both ends are the same binary.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Mat;
+use crate::model::state::FeatureState;
+
+/// Master → worker.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToWorker {
+    /// Run one global iteration (L sub-iterations) with these params.
+    Run(Broadcast),
+    /// Send back the shard's current Z bits (final gathering / Fig 2).
+    SendZ,
+    Shutdown,
+}
+
+/// Worker → master, end of each iteration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub worker: u32,
+    pub iter: u32,
+    /// Column counts over the shard for the K⁺ instantiated features.
+    pub m_local: Vec<u64>,
+    /// Shard-local ZᵀZ over [K⁺ | K*_local] columns (tail block only
+    /// non-zero on p′).
+    pub ztz: Mat,
+    /// Shard-local ZᵀX, same column space.
+    pub ztx: Mat,
+    /// ‖X_p‖² (constant per shard; resent each iter — 8 bytes).
+    pub tr_xx: f64,
+    /// Tail assignments discovered this iteration (p′ only; rows = shard).
+    pub tail: Option<FeatureState>,
+    /// Seconds of compute this iteration (virtual-time input).
+    pub busy_s: f64,
+}
+
+/// Worker → master, response to `SendZ`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ZReport {
+    pub worker: u32,
+    pub z: FeatureState,
+}
+
+/// The master's global-step output (paper: "Broadcast new parameters").
+#[derive(Clone, Debug, PartialEq)]
+pub struct Broadcast {
+    pub iter: u32,
+    /// Loadings for the K⁺ features *after* promotion+compaction (K⁺ × D).
+    pub a: Mat,
+    pub pi: Vec<f64>,
+    pub sigma_x: f64,
+    pub sigma_a: f64,
+    pub alpha: f64,
+    /// Which worker hosts the collapsed tail this iteration.
+    pub p_prime: u32,
+    /// Columns of the *previous* K⁺ set each worker must retain, in order
+    /// (global compaction decision).
+    pub keep: Vec<u32>,
+    /// Number of freshly promoted tail features appended after `keep`
+    /// (bits live only on `tail_owner` = previous p′).
+    pub k_star: u32,
+    pub tail_owner: u32,
+    /// Columns of the previous K⁺ set DEMOTED into this iteration's p′
+    /// tail: their entire global support lies inside p′'s shard and their
+    /// count is small, so the master hands them back to the collapsed
+    /// block where death moves are cheap (see DESIGN.md §Demotion).
+    /// Non-p′ workers drop these columns (all-zero there by construction);
+    /// p′ seeds its tail state with their bits.
+    pub demote: Vec<u32>,
+}
+
+// ---------------------------------------------------------------------
+// encoding primitives
+// ---------------------------------------------------------------------
+
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self { buf: Vec::with_capacity(256) }
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn mat(&mut self, m: &Mat) {
+        self.u32(m.rows() as u32);
+        self.u32(m.cols() as u32);
+        for &v in m.as_slice() {
+            self.f64(v);
+        }
+    }
+
+    /// Bit-packed binary matrix (8 bits/byte) — Z shards are large but
+    /// binary, so this is the wire-efficiency the paper's §5 would want.
+    pub fn bits(&mut self, st: &FeatureState) {
+        self.u32(st.n() as u32);
+        self.u32(st.k() as u32);
+        let total = st.n() * st.k();
+        let mut byte = 0u8;
+        for idx in 0..total {
+            let (i, j) = (idx / st.k().max(1), idx % st.k().max(1));
+            if st.get(i, j) == 1 {
+                byte |= 1 << (idx % 8);
+            }
+            if idx % 8 == 7 {
+                self.buf.push(byte);
+                byte = 0;
+            }
+        }
+        if total % 8 != 0 {
+            self.buf.push(byte);
+        }
+    }
+}
+
+impl Default for Writer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("wire underrun at {} (+{n} of {})", self.pos, self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn mat(&mut self) -> Result<Mat> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(self.f64()?);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    pub fn bits(&mut self) -> Result<FeatureState> {
+        let n = self.u32()? as usize;
+        let k = self.u32()? as usize;
+        let total = n * k;
+        let bytes = self.take(total.div_ceil(8))?;
+        let mut st = FeatureState::empty(n);
+        st.add_features(k);
+        for idx in 0..total {
+            if bytes[idx / 8] & (1 << (idx % 8)) != 0 {
+                st.set(idx / k, idx % k, 1);
+            }
+        }
+        Ok(st)
+    }
+
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// message codecs
+// ---------------------------------------------------------------------
+
+const TAG_RUN: u32 = 1;
+const TAG_SENDZ: u32 = 2;
+const TAG_SHUTDOWN: u32 = 3;
+
+impl ToWorker {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            ToWorker::Run(b) => {
+                w.u32(TAG_RUN);
+                w.u32(b.iter);
+                w.mat(&b.a);
+                w.u32(b.pi.len() as u32);
+                for &p in &b.pi {
+                    w.f64(p);
+                }
+                w.f64(b.sigma_x);
+                w.f64(b.sigma_a);
+                w.f64(b.alpha);
+                w.u32(b.p_prime);
+                w.u32(b.keep.len() as u32);
+                for &k in &b.keep {
+                    w.u32(k);
+                }
+                w.u32(b.k_star);
+                w.u32(b.tail_owner);
+                w.u32(b.demote.len() as u32);
+                for &k in &b.demote {
+                    w.u32(k);
+                }
+            }
+            ToWorker::SendZ => w.u32(TAG_SENDZ),
+            ToWorker::Shutdown => w.u32(TAG_SHUTDOWN),
+        }
+        w.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let tag = r.u32()?;
+        let msg = match tag {
+            TAG_RUN => {
+                let iter = r.u32()?;
+                let a = r.mat()?;
+                let np = r.u32()? as usize;
+                let mut pi = Vec::with_capacity(np);
+                for _ in 0..np {
+                    pi.push(r.f64()?);
+                }
+                let sigma_x = r.f64()?;
+                let sigma_a = r.f64()?;
+                let alpha = r.f64()?;
+                let p_prime = r.u32()?;
+                let nk = r.u32()? as usize;
+                let mut keep = Vec::with_capacity(nk);
+                for _ in 0..nk {
+                    keep.push(r.u32()?);
+                }
+                let k_star = r.u32()?;
+                let tail_owner = r.u32()?;
+                let nd = r.u32()? as usize;
+                let mut demote = Vec::with_capacity(nd);
+                for _ in 0..nd {
+                    demote.push(r.u32()?);
+                }
+                ToWorker::Run(Broadcast {
+                    iter, a, pi, sigma_x, sigma_a, alpha,
+                    p_prime, keep, k_star, tail_owner, demote,
+                })
+            }
+            TAG_SENDZ => ToWorker::SendZ,
+            TAG_SHUTDOWN => ToWorker::Shutdown,
+            t => bail!("bad ToWorker tag {t}"),
+        };
+        if !(r.done()) {
+            bail!("trailing bytes in ToWorker");
+        }
+        Ok(msg)
+    }
+}
+
+impl Summary {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(self.worker);
+        w.u32(self.iter);
+        w.u32(self.m_local.len() as u32);
+        for &m in &self.m_local {
+            w.u64(m);
+        }
+        w.mat(&self.ztz);
+        w.mat(&self.ztx);
+        w.f64(self.tr_xx);
+        match &self.tail {
+            Some(t) => {
+                w.u32(1);
+                w.bits(t);
+            }
+            None => w.u32(0),
+        }
+        w.f64(self.busy_s);
+        w.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let worker = r.u32()?;
+        let iter = r.u32()?;
+        let nm = r.u32()? as usize;
+        let mut m_local = Vec::with_capacity(nm);
+        for _ in 0..nm {
+            m_local.push(r.u64()?);
+        }
+        let ztz = r.mat()?;
+        let ztx = r.mat()?;
+        let tr_xx = r.f64()?;
+        let tail = if r.u32()? == 1 { Some(r.bits()?) } else { None };
+        let busy_s = r.f64()?;
+        if !r.done() {
+            bail!("trailing bytes in Summary");
+        }
+        Ok(Self { worker, iter, m_local, ztz, ztx, tr_xx, tail, busy_s })
+    }
+}
+
+impl ZReport {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(self.worker);
+        w.bits(&self.z);
+        w.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let worker = r.u32()?;
+        let z = r.bits()?;
+        if !r.done() {
+            bail!("trailing bytes in ZReport");
+        }
+        Ok(Self { worker, z })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(n: usize, k: usize, seed: u64) -> FeatureState {
+        let mut rng = crate::rng::Pcg64::new(seed);
+        let mut st = FeatureState::empty(n);
+        st.add_features(k);
+        for i in 0..n {
+            for j in 0..k {
+                if rng.bernoulli(0.3) {
+                    st.set(i, j, 1);
+                }
+            }
+        }
+        st
+    }
+
+    #[test]
+    fn broadcast_roundtrip() {
+        let msg = ToWorker::Run(Broadcast {
+            iter: 7,
+            a: Mat::from_fn(3, 4, |i, j| i as f64 - j as f64 * 0.5),
+            pi: vec![0.1, 0.5, 0.9],
+            sigma_x: 0.5,
+            sigma_a: 1.25,
+            alpha: 2.0,
+            p_prime: 2,
+            keep: vec![0, 2, 3],
+            k_star: 2,
+            tail_owner: 1,
+            demote: vec![1, 4],
+        });
+        let back = ToWorker::decode(&msg.encode()).unwrap();
+        assert_eq!(msg, back);
+    }
+
+    #[test]
+    fn control_roundtrip() {
+        for msg in [ToWorker::SendZ, ToWorker::Shutdown] {
+            assert_eq!(ToWorker::decode(&msg.encode()).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn summary_roundtrip_with_and_without_tail() {
+        for tail in [None, Some(state(13, 5, 1))] {
+            let msg = Summary {
+                worker: 3,
+                iter: 11,
+                m_local: vec![5, 0, 9],
+                ztz: Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64),
+                ztx: Mat::from_fn(3, 6, |i, j| (i + j) as f64 * 0.25),
+                tr_xx: 123.456,
+                tail: tail.clone(),
+                busy_s: 0.0125,
+            };
+            let back = Summary::decode(&msg.encode()).unwrap();
+            assert_eq!(msg, back);
+        }
+    }
+
+    #[test]
+    fn zreport_roundtrip() {
+        let msg = ZReport { worker: 0, z: state(37, 9, 2) };
+        let back = ZReport::decode(&msg.encode()).unwrap();
+        assert_eq!(msg, back);
+    }
+
+    #[test]
+    fn bits_are_packed() {
+        let st = state(100, 16, 3);
+        let mut w = Writer::new();
+        w.bits(&st);
+        // 8 header bytes + ceil(1600/8) = 200 payload
+        assert_eq!(w.buf.len(), 8 + 200);
+    }
+
+    #[test]
+    fn truncated_messages_rejected() {
+        let msg = Summary {
+            worker: 1,
+            iter: 2,
+            m_local: vec![1],
+            ztz: Mat::eye(1),
+            ztx: Mat::zeros(1, 2),
+            tr_xx: 1.0,
+            tail: None,
+            busy_s: 0.0,
+        };
+        let enc = msg.encode();
+        for cut in [0, 3, 10, enc.len() - 1] {
+            assert!(Summary::decode(&enc[..cut]).is_err(), "cut={cut}");
+        }
+        let mut extended = enc.clone();
+        extended.push(0);
+        assert!(Summary::decode(&extended).is_err());
+    }
+
+    #[test]
+    fn empty_featurestate_roundtrip() {
+        let st = FeatureState::empty(5);
+        let mut w = Writer::new();
+        w.bits(&st);
+        let mut r = Reader::new(&w.buf);
+        let back = r.bits().unwrap();
+        assert_eq!(back.n(), 5);
+        assert_eq!(back.k(), 0);
+    }
+}

@@ -1,0 +1,22 @@
+//! The parallel hybrid MCMC coordinator — the paper's system contribution.
+//!
+//! A star topology of P worker threads and one master, communicating via
+//! byte-encoded messages over channels (standing in for the paper's MPI,
+//! with per-message sizes feeding a virtual-time model — see DESIGN.md
+//! §Substitutions):
+//!
+//! * [`worker`] — shard-local uncollapsed sweeps over K⁺ (native or PJRT
+//!   zsweep artifact) + the collapsed tail when elected p′;
+//! * [`master`] — merge / promote / compact / resample / broadcast;
+//! * [`messages`] — the wire format; [`vtime`] — the virtual clock.
+//!
+//! The serial semantics oracle lives in `samplers::hybrid`; integration
+//! tests pin this parallel implementation against it.
+
+pub mod master;
+pub mod messages;
+pub mod vtime;
+pub mod worker;
+
+pub use master::{Coordinator, CoordinatorConfig, IterRecord};
+pub use vtime::{IterTiming, VClock};

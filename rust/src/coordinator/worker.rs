@@ -1,0 +1,370 @@
+//! Worker thread: owns an observation shard, runs the uncollapsed sweep
+//! over the instantiated features every sub-iteration (natively or via the
+//! PJRT zsweep artifact), hosts the collapsed tail when elected p′, and
+//! ships summary statistics to the master.
+//!
+//! A worker is a pure function of (its shard, its RNG stream, the
+//! broadcast sequence) — no shared state, so chains are reproducible
+//! regardless of thread scheduling.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::Backend;
+use crate::linalg::Mat;
+use crate::model::state::FeatureState;
+use crate::model::LinGauss;
+use crate::rng::Pcg64;
+use crate::runtime::{Engine, Ops};
+use crate::samplers::tail::TailProposer;
+use crate::samplers::uncollapsed::{residuals, sweep_rows};
+
+use super::messages::{Broadcast, Summary, ToWorker, ZReport};
+
+/// Static per-worker configuration (fixed at spawn).
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    pub id: usize,
+    pub n_global: usize,
+    pub sub_iters: usize,
+    pub kmax_new: usize,
+    pub k_cap: usize,
+    pub seed: u64,
+    pub backend: Backend,
+    pub artifacts_dir: PathBuf,
+}
+
+/// Thread body. `rx` carries encoded `ToWorker`s; every outbound message
+/// is sent as (worker id, encoded bytes).
+pub fn run_worker(
+    cfg: WorkerConfig,
+    x: Mat,
+    rx: Receiver<Vec<u8>>,
+    tx: Sender<(usize, Vec<u8>)>,
+) {
+    if let Err(e) = worker_loop(&cfg, x, rx, tx) {
+        // A worker failing is fatal for the run; surface loudly.
+        eprintln!("[pibp worker {}] fatal: {e:#}", cfg.id);
+    }
+}
+
+fn worker_loop(
+    cfg: &WorkerConfig,
+    x: Mat,
+    rx: Receiver<Vec<u8>>,
+    tx: Sender<(usize, Vec<u8>)>,
+) -> Result<()> {
+    let b_rows = x.rows();
+    let mut rng = Pcg64::new(cfg.seed).split(1000 + cfg.id as u64);
+    let mut z = FeatureState::empty(b_rows);
+    // tail bits discovered last iteration, kept until the master's
+    // promotion instruction arrives in the next broadcast
+    let mut last_tail: Option<FeatureState> = None;
+    let engine = match cfg.backend {
+        Backend::Pjrt => Some(
+            Engine::load(&cfg.artifacts_dir)
+                .context("worker: loading artifacts for PJRT backend")?,
+        ),
+        Backend::Native => None,
+    };
+    let tr_xx = x.frob2();
+
+    while let Ok(buf) = rx.recv() {
+        match ToWorker::decode(&buf)? {
+            ToWorker::Shutdown => break,
+            ToWorker::SendZ => {
+                let msg = ZReport { worker: cfg.id as u32, z: z.clone() };
+                tx.send((cfg.id, msg.encode())).ok();
+            }
+            ToWorker::Run(b) => {
+                let summary =
+                    run_iteration(cfg, &x, &mut z, &mut last_tail, &b, tr_xx,
+                                  engine.as_ref(), &mut rng)?;
+                tx.send((cfg.id, summary.encode())).ok();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Apply the broadcast's structural update, run L sub-iterations, build
+/// the summary.
+#[allow(clippy::too_many_arguments)]
+fn run_iteration(
+    cfg: &WorkerConfig,
+    x: &Mat,
+    z: &mut FeatureState,
+    last_tail: &mut Option<FeatureState>,
+    b: &Broadcast,
+    tr_xx: f64,
+    engine: Option<&Engine>,
+    rng: &mut Pcg64,
+) -> Result<Summary> {
+    let me = cfg.id as u32;
+    // ---- structural update: global compaction + tail promotion +
+    //      demotion of shard-local junk back into p′'s tail ----
+    let tail_init = apply_structure(z, b, me, last_tail.take());
+
+    let start = Instant::now();
+    let k_plus = z.k();
+    debug_assert_eq!(k_plus, b.pi.len());
+    let lg = LinGauss::new(b.sigma_x, b.sigma_a);
+    let inv2s2 = 1.0 / (2.0 * b.sigma_x * b.sigma_x);
+    let prior_logit: Vec<f64> = b
+        .pi
+        .iter()
+        .map(|&p| {
+            let p = p.clamp(1e-12, 1.0 - 1e-12);
+            (p / (1.0 - p)).ln()
+        })
+        .collect();
+
+    let i_am_p_prime = b.p_prime == me;
+    let mut tail_carry = tail_init;
+    // native path keeps the residual incrementally; PJRT recomputes it
+    // inside the kernel (one MXU matmul per sweep)
+    let mut resid = if engine.is_none() && k_plus > 0 {
+        residuals(x, z, &b.a, 0..x.rows())
+    } else {
+        x.clone()
+    };
+
+    for _l in 0..cfg.sub_iters {
+        if k_plus > 0 {
+            match engine {
+                Some(eng) => {
+                    let ops = Ops::new(eng);
+                    resid = ops.zsweep(x, z, &b.a, &prior_logit, inv2s2, rng)?;
+                }
+                None => {
+                    sweep_rows(
+                        x, z, &mut resid, &b.a, &prior_logit, inv2s2,
+                        0..x.rows(), k_plus, rng,
+                    );
+                }
+            }
+        }
+        if i_am_p_prime {
+            let r = if k_plus > 0 { resid.clone() } else { x.clone() };
+            let mut tp = TailProposer::new(r, tail_carry, lg);
+            tp.sweep(
+                b.alpha,
+                cfg.n_global,
+                cfg.kmax_new,
+                cfg.k_cap.saturating_sub(k_plus),
+                rng,
+            );
+            tail_carry = tp.take_tail();
+        }
+    }
+
+    // ---- summary statistics over [K⁺ | K*_local] ----
+    let k_star = if i_am_p_prime { tail_carry.k() } else { 0 };
+    let combined = combine(z, if i_am_p_prime { Some(&tail_carry) } else { None });
+    let (ztz, ztx) = match engine {
+        Some(eng) => Ops::new(eng).suffstats(&combined, x)?,
+        None => {
+            let zm = combined.to_mat();
+            (zm.gram(), zm.t_matmul(x))
+        }
+    };
+    let m_local: Vec<u64> = z.m().iter().map(|&m| m as u64).collect();
+    let busy_s = start.elapsed().as_secs_f64();
+    let tail = if i_am_p_prime && k_star > 0 {
+        *last_tail = Some(tail_carry.clone());
+        Some(tail_carry)
+    } else {
+        *last_tail = None;
+        None
+    };
+    Ok(Summary {
+        worker: me,
+        iter: b.iter,
+        m_local,
+        ztz,
+        ztx,
+        tr_xx,
+        tail,
+        busy_s,
+    })
+}
+
+/// Retain `keep` columns, then append `k_star` promoted columns (bits only
+/// on the previous p′). Demoted columns are dropped from Z; on this
+/// iteration's p′ their bits seed the returned tail state.
+fn apply_structure(
+    z: &mut FeatureState,
+    b: &Broadcast,
+    me: u32,
+    last_tail: Option<FeatureState>,
+) -> FeatureState {
+    // column selection in the previous local space
+    let rows = z.n();
+    let old = std::mem::replace(z, FeatureState::empty(rows));
+    let mut next = FeatureState::empty(rows);
+    next.add_features(b.keep.len() + b.k_star as usize);
+    for (new_j, &old_j) in b.keep.iter().enumerate() {
+        for i in 0..rows {
+            if old.get(i, old_j as usize) == 1 {
+                next.set(i, new_j, 1);
+            }
+        }
+    }
+    if b.k_star > 0 && b.tail_owner == me {
+        let tail = last_tail.expect("tail owner must have tail bits");
+        assert_eq!(tail.k(), b.k_star as usize, "tail/k_star mismatch");
+        let base = b.keep.len();
+        for i in 0..rows {
+            for j in 0..tail.k() {
+                if tail.get(i, j) == 1 {
+                    next.set(i, base + j, 1);
+                }
+            }
+        }
+    }
+    // demotion: this iteration's p′ harvests the demoted columns' bits
+    // into its initial tail; everyone else just dropped them (their local
+    // counts are zero — the master only demotes shard-local features).
+    let mut tail_init = FeatureState::empty(rows);
+    if b.p_prime == me && !b.demote.is_empty() {
+        tail_init.add_features(b.demote.len());
+        for (tj, &old_j) in b.demote.iter().enumerate() {
+            for i in 0..rows {
+                if old.get(i, old_j as usize) == 1 {
+                    tail_init.set(i, tj, 1);
+                }
+            }
+        }
+        // columns that are empty on this shard (shouldn't happen) are
+        // dropped by the tail sweep's compaction
+    } else if !b.demote.is_empty() {
+        debug_assert!(
+            b.demote.iter().all(|&j| {
+                (0..rows).all(|i| old.get(i, j as usize) == 0)
+            }),
+            "demoted feature has bits outside p′"
+        );
+    }
+    *z = next;
+    tail_init
+}
+
+/// `[Z⁺ | Z*]` as one FeatureState (for suff-stats).
+fn combine(z: &FeatureState, tail: Option<&FeatureState>) -> FeatureState {
+    let mut c = z.clone();
+    if let Some(t) = tail {
+        let base = c.add_features(t.k());
+        for i in 0..c.n() {
+            for j in 0..t.k() {
+                if t.get(i, j) == 1 {
+                    c.set(i, base + j, 1);
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(n: usize, pattern: &[(usize, usize)]) -> FeatureState {
+        let k = pattern.iter().map(|&(_, j)| j + 1).max().unwrap_or(0);
+        let mut st = FeatureState::empty(n);
+        st.add_features(k);
+        for &(i, j) in pattern {
+            st.set(i, j, 1);
+        }
+        st
+    }
+
+    fn bcast(keep: Vec<u32>, k_star: u32, tail_owner: u32) -> Broadcast {
+        Broadcast {
+            iter: 0,
+            a: Mat::zeros(0, 1),
+            pi: vec![],
+            sigma_x: 0.5,
+            sigma_a: 1.0,
+            alpha: 1.0,
+            p_prime: 0,
+            keep,
+            k_star,
+            tail_owner,
+            demote: vec![],
+        }
+    }
+
+    #[test]
+    fn apply_structure_demotes_into_tail_on_p_prime() {
+        // p_prime = 0 in bcast(); demote column 1 of a 3-col state
+        let mut z = bits(4, &[(0, 0), (1, 1), (2, 2), (3, 1)]);
+        let mut b = bcast(vec![0, 2], 0, 9);
+        b.demote = vec![1];
+        let tail = apply_structure(&mut z, &b, 0, None);
+        assert_eq!(z.k(), 2);
+        assert_eq!(z.get(0, 0), 1);
+        assert_eq!(z.get(2, 1), 1);
+        assert_eq!(tail.k(), 1);
+        assert_eq!(tail.get(1, 0), 1);
+        assert_eq!(tail.get(3, 0), 1);
+        assert_eq!(tail.m(), &[2]);
+    }
+
+    #[test]
+    fn apply_structure_demote_dropped_on_others() {
+        // worker 5 is not p_prime: demoted column must just vanish
+        let mut z = bits(3, &[(0, 0)]);
+        let mut b = bcast(vec![0], 0, 9);
+        b.demote = vec![1];
+        b.p_prime = 2;
+        let tail = apply_structure(&mut z, &b, 5, None);
+        assert_eq!(z.k(), 1);
+        assert_eq!(tail.k(), 0);
+    }
+
+    #[test]
+    fn apply_structure_keeps_and_reorders() {
+        let mut z = bits(3, &[(0, 0), (1, 1), (2, 2)]);
+        apply_structure(&mut z, &bcast(vec![2, 0], 0, 9), 5, None);
+        assert_eq!(z.k(), 2);
+        assert_eq!(z.get(2, 0), 1); // old col 2 → new col 0
+        assert_eq!(z.get(0, 1), 1); // old col 0 → new col 1
+        assert_eq!(z.m(), &[1, 1]);
+        assert!(z.check_invariants());
+    }
+
+    #[test]
+    fn apply_structure_promotes_tail_on_owner() {
+        let mut z = bits(3, &[(0, 0)]);
+        let tail = bits(3, &[(1, 0), (2, 1)]);
+        apply_structure(&mut z, &bcast(vec![0], 2, 7), 7, Some(tail));
+        assert_eq!(z.k(), 3);
+        assert_eq!(z.get(1, 1), 1);
+        assert_eq!(z.get(2, 2), 1);
+        assert!(z.check_invariants());
+    }
+
+    #[test]
+    fn apply_structure_zero_columns_on_non_owner() {
+        let mut z = bits(3, &[(0, 0)]);
+        apply_structure(&mut z, &bcast(vec![0], 2, 7), 3, None);
+        assert_eq!(z.k(), 3);
+        assert_eq!(z.m(), &[1, 0, 0]);
+    }
+
+    #[test]
+    fn combine_appends_tail_block() {
+        let z = bits(4, &[(0, 0), (3, 1)]);
+        let t = bits(4, &[(2, 0)]);
+        let c = combine(&z, Some(&t));
+        assert_eq!(c.k(), 3);
+        assert_eq!(c.get(2, 2), 1);
+        assert_eq!(c.get(0, 0), 1);
+        let c2 = combine(&z, None);
+        assert_eq!(c2, z);
+    }
+}

@@ -1,0 +1,205 @@
+//! The "Cambridge" synthetic image data set (Griffiths & Ghahramani).
+//!
+//! The paper evaluates on "the 1000 × 36 dimension canonical 'Cambridge'
+//! synthetic data set seen in [6]" (G&G 2011): each observation is a 6×6
+//! image built as a random superposition of a small set of fixed binary
+//! 6×6 feature glyphs plus isotropic Gaussian noise,
+//!
+//! ```text
+//! x_n = Σ_k z_nk · glyph_k + ε,   z_nk ~ Bernoulli(q),  ε ~ N(0, σ²I).
+//! ```
+//!
+//! The canonical set has four glyphs (G&G 2005 Fig. 7 style shapes); we
+//! also ship four extras so experiments can scale K. The paper's exact
+//! data file is not public — DESIGN.md §Substitutions records that this
+//! generator is the standard public reconstruction.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+pub const GLYPH_SIDE: usize = 6;
+pub const DIM: usize = GLYPH_SIDE * GLYPH_SIDE;
+
+/// The four canonical 6×6 glyphs (row-major, 0/1), drawn to match the
+/// G&G latent-image style: box outline, plus, diagonal, corner hook.
+const GLYPHS: [[u8; DIM]; 8] = [
+    // 0: box outline in the top-left 4x4
+    [
+        1, 1, 1, 1, 0, 0,
+        1, 0, 0, 1, 0, 0,
+        1, 0, 0, 1, 0, 0,
+        1, 1, 1, 1, 0, 0,
+        0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0,
+    ],
+    // 1: plus sign, centred
+    [
+        0, 0, 1, 0, 0, 0,
+        0, 0, 1, 0, 0, 0,
+        1, 1, 1, 1, 1, 0,
+        0, 0, 1, 0, 0, 0,
+        0, 0, 1, 0, 0, 0,
+        0, 0, 0, 0, 0, 0,
+    ],
+    // 2: main diagonal
+    [
+        1, 0, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0,
+        0, 0, 1, 0, 0, 0,
+        0, 0, 0, 1, 0, 0,
+        0, 0, 0, 0, 1, 0,
+        0, 0, 0, 0, 0, 1,
+    ],
+    // 3: bottom-right corner hook
+    [
+        0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 1,
+        0, 0, 0, 0, 0, 1,
+        0, 0, 0, 1, 1, 1,
+    ],
+    // 4: vertical bar (extra)
+    [
+        0, 1, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0,
+        0, 1, 0, 0, 0, 0,
+    ],
+    // 5: bottom edge (extra)
+    [
+        0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0,
+        1, 1, 1, 1, 1, 1,
+    ],
+    // 6: anti-diagonal (extra)
+    [
+        0, 0, 0, 0, 0, 1,
+        0, 0, 0, 0, 1, 0,
+        0, 0, 0, 1, 0, 0,
+        0, 0, 1, 0, 0, 0,
+        0, 1, 0, 0, 0, 0,
+        1, 0, 0, 0, 0, 0,
+    ],
+    // 7: 2x2 block top-right (extra)
+    [
+        0, 0, 0, 0, 1, 1,
+        0, 0, 0, 0, 1, 1,
+        0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0,
+        0, 0, 0, 0, 0, 0,
+    ],
+];
+
+/// Configuration for the generator.
+#[derive(Clone, Debug)]
+pub struct CambridgeConfig {
+    /// Number of observations (paper: 1000).
+    pub n: usize,
+    /// Number of latent glyphs used (canonical: 4; max 8).
+    pub k_true: usize,
+    /// Per-feature activation probability.
+    pub activation: f64,
+    /// Observation noise stddev (paper-era convention: 0.5).
+    pub sigma_x: f64,
+    pub seed: u64,
+}
+
+impl Default for CambridgeConfig {
+    fn default() -> Self {
+        Self { n: 1000, k_true: 4, activation: 0.5, sigma_x: 0.5, seed: 0 }
+    }
+}
+
+/// The true glyph matrix (k_true × 36).
+pub fn true_features(k_true: usize) -> Mat {
+    assert!(k_true >= 1 && k_true <= GLYPHS.len(), "1..=8 glyphs available");
+    Mat::from_fn(k_true, DIM, |k, d| GLYPHS[k][d] as f64)
+}
+
+/// Generate the data set; returns (dataset, true Z (n × k_true)).
+pub fn generate(cfg: &CambridgeConfig) -> (Dataset, Mat) {
+    let mut rng = Pcg64::new(cfg.seed).split(0xCA4B);
+    let a = true_features(cfg.k_true);
+    let mut z = Mat::zeros(cfg.n, cfg.k_true);
+    for i in 0..cfg.n {
+        // guarantee at least the possibility of empty rows, like the
+        // Bernoulli superposition model — no resampling.
+        for k in 0..cfg.k_true {
+            if rng.bernoulli(cfg.activation) {
+                z[(i, k)] = 1.0;
+            }
+        }
+    }
+    let mut x = z.matmul(&a);
+    for v in x.as_mut_slice().iter_mut() {
+        *v += cfg.sigma_x * rng.normal();
+    }
+    (
+        Dataset { x, name: format!("cambridge-n{}-k{}", cfg.n, cfg.k_true) },
+        z,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_shape() {
+        let (ds, z) = generate(&CambridgeConfig::default());
+        assert_eq!(ds.x.rows(), 1000);
+        assert_eq!(ds.x.cols(), 36);
+        assert_eq!(z.rows(), 1000);
+        assert_eq!(z.cols(), 4);
+    }
+
+    #[test]
+    fn glyphs_are_distinct_and_binary() {
+        let a = true_features(8);
+        for k in 0..8 {
+            assert!(a.row(k).iter().all(|&v| v == 0.0 || v == 1.0));
+            assert!(a.row(k).iter().sum::<f64>() >= 3.0, "glyph {k} too sparse");
+            for j in 0..k {
+                let diff: f64 = a
+                    .row(k)
+                    .iter()
+                    .zip(a.row(j))
+                    .map(|(x, y)| (x - y).abs())
+                    .sum();
+                assert!(diff >= 2.0, "glyphs {j} and {k} too similar");
+            }
+        }
+    }
+
+    #[test]
+    fn activation_rate_matches() {
+        let (_, z) = generate(&CambridgeConfig { n: 5000, seed: 3, ..Default::default() });
+        let rate = z.as_slice().iter().sum::<f64>() / (5000.0 * 4.0);
+        assert!((rate - 0.5).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn noise_level_matches() {
+        let cfg = CambridgeConfig { n: 2000, sigma_x: 0.5, seed: 7, ..Default::default() };
+        let (ds, z) = generate(&cfg);
+        let a = true_features(cfg.k_true);
+        let resid = ds.x.sub(&z.matmul(&a));
+        let var = resid.frob2() / (resid.rows() * resid.cols()) as f64;
+        assert!((var.sqrt() - 0.5).abs() < 0.02, "sd={}", var.sqrt());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a1, _) = generate(&CambridgeConfig::default());
+        let (a2, _) = generate(&CambridgeConfig::default());
+        assert!(a1.x.max_abs_diff(&a2.x) == 0.0);
+    }
+}

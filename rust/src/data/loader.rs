@@ -1,0 +1,88 @@
+//! Matrix CSV I/O — lets experiment outputs round-trip to disk and makes
+//! the examples runnable on user-provided data.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Mat;
+
+/// Write a matrix as plain CSV (no header).
+pub fn write_csv(path: &Path, m: &Mat) -> Result<()> {
+    let mut out = String::with_capacity(m.rows() * m.cols() * 8);
+    for i in 0..m.rows() {
+        let row = m.row(i);
+        for (j, v) in row.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{v}"));
+        }
+        out.push('\n');
+    }
+    let mut f = fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(out.as_bytes())?;
+    Ok(())
+}
+
+/// Read a numeric CSV (no header) into a matrix.
+pub fn read_csv(path: &Path) -> Result<Mat> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let vals: Result<Vec<f64>, _> =
+            line.split(',').map(|s| s.trim().parse::<f64>()).collect();
+        let vals = vals.with_context(|| format!("line {}", lineno + 1))?;
+        if let Some(first) = rows.first() {
+            if vals.len() != first.len() {
+                bail!("ragged CSV at line {}: {} vs {} columns",
+                      lineno + 1, vals.len(), first.len());
+            }
+        }
+        rows.push(vals);
+    }
+    if rows.is_empty() {
+        bail!("empty CSV {}", path.display());
+    }
+    let (r, c) = (rows.len(), rows[0].len());
+    Ok(Mat::from_vec(r, c, rows.into_iter().flatten().collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("pibp_loader_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.csv");
+        let m = Mat::from_fn(5, 3, |i, j| i as f64 * 0.5 - j as f64 * 1.25);
+        write_csv(&path, &m).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert!(m.max_abs_diff(&back) < 1e-12);
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        let dir = std::env::temp_dir().join("pibp_loader_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ragged.csv");
+        fs::write(&path, "1,2,3\n4,5\n").unwrap();
+        assert!(read_csv(&path).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_error_with_context() {
+        let err = read_csv(Path::new("/nonexistent/x.csv")).unwrap_err();
+        assert!(format!("{err:#}").contains("/nonexistent/x.csv"));
+    }
+}

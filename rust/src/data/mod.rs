@@ -1,0 +1,77 @@
+//! Data sets: the paper's "Cambridge" synthetic images, general
+//! IBP-sampled synthetic data, and CSV I/O.
+
+pub mod cambridge;
+pub mod loader;
+pub mod synth;
+
+use crate::linalg::Mat;
+
+/// An observation matrix with a display name.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Mat,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Split into (train, heldout) by taking every `1/frac`-th row as
+    /// held-out (deterministic, stratified across the file).
+    pub fn split_heldout(&self, frac: f64) -> (Dataset, Dataset) {
+        assert!(frac > 0.0 && frac < 1.0);
+        let period = (1.0 / frac).round().max(2.0) as usize;
+        let mut train_rows = Vec::new();
+        let mut test_rows = Vec::new();
+        for i in 0..self.n() {
+            if i % period == period - 1 {
+                test_rows.push(i);
+            } else {
+                train_rows.push(i);
+            }
+        }
+        let take = |idx: &[usize]| {
+            Mat::from_fn(idx.len(), self.dim(), |i, j| self.x[(idx[i], j)])
+        };
+        (
+            Dataset { x: take(&train_rows), name: format!("{}-train", self.name) },
+            Dataset { x: take(&test_rows), name: format!("{}-test", self.name) },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_sizes() {
+        let ds = Dataset { x: Mat::zeros(100, 4), name: "t".into() };
+        let (tr, te) = ds.split_heldout(0.1);
+        assert_eq!(te.n(), 10);
+        assert_eq!(tr.n(), 90);
+        assert_eq!(tr.dim(), 4);
+    }
+
+    #[test]
+    fn split_preserves_rows() {
+        let ds = Dataset {
+            x: Mat::from_fn(20, 2, |i, j| (i * 2 + j) as f64),
+            name: "t".into(),
+        };
+        let (tr, te) = ds.split_heldout(0.25);
+        assert_eq!(tr.n() + te.n(), 20);
+        // every original row appears exactly once across the splits
+        let mut seen: Vec<f64> = tr.x.col(0).into_iter().chain(te.x.col(0)).collect();
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let want: Vec<f64> = (0..20).map(|i| (i * 2) as f64).collect();
+        assert_eq!(seen, want);
+    }
+}

@@ -1,0 +1,144 @@
+//! General IBP-generated synthetic data (for scaling and ablation runs).
+//!
+//! Samples Z from the Indian Buffet Process restaurant construction
+//! (paper §2), loadings A ~ N(0, σ_A² I) and X = Z A + ε — i.e. data drawn
+//! exactly from the model the samplers target, so posterior checks
+//! (recovered K⁺, noise level) have known ground truth.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub n: usize,
+    pub dim: usize,
+    pub alpha: f64,
+    pub sigma_a: f64,
+    pub sigma_x: f64,
+    pub seed: u64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        Self { n: 200, dim: 16, alpha: 2.0, sigma_a: 1.0, sigma_x: 0.3, seed: 0 }
+    }
+}
+
+/// Sample a binary matrix from the IBP restaurant process.
+/// Returns (Z, dish counts m).
+pub fn sample_ibp(n: usize, alpha: f64, rng: &mut Pcg64) -> (Vec<Vec<u8>>, Vec<usize>) {
+    let mut dishes: Vec<usize> = Vec::new(); // m_k
+    let mut rows: Vec<Vec<u8>> = Vec::with_capacity(n);
+    for cust in 0..n {
+        let mut row = vec![0u8; dishes.len()];
+        // previously sampled dishes with prob m_k / (cust+1)
+        for (k, m) in dishes.iter_mut().enumerate() {
+            if rng.bernoulli(*m as f64 / (cust as f64 + 1.0)) {
+                row[k] = 1;
+                *m += 1;
+            }
+        }
+        // new dishes ~ Poisson(alpha / (cust+1))
+        let new = rng.poisson(alpha / (cust as f64 + 1.0)) as usize;
+        for _ in 0..new {
+            row.push(1);
+            dishes.push(1);
+        }
+        // back-fill older rows
+        rows.push(row);
+    }
+    let k = dishes.len();
+    for row in rows.iter_mut() {
+        row.resize(k, 0);
+    }
+    (rows, dishes)
+}
+
+/// Generate (dataset, Z_true, A_true).
+pub fn generate(cfg: &SynthConfig) -> (Dataset, Mat, Mat) {
+    let mut rng = Pcg64::new(cfg.seed).split(0x5D17);
+    let (zrows, _) = sample_ibp(cfg.n, cfg.alpha, &mut rng);
+    let k = zrows.first().map_or(0, |r| r.len()).max(1);
+    let z = Mat::from_fn(cfg.n, k, |i, j| {
+        zrows[i].get(j).copied().unwrap_or(0) as f64
+    });
+    let a = Mat::from_fn(k, cfg.dim, |_, _| cfg.sigma_a * rng.normal());
+    let mut x = z.matmul(&a);
+    for v in x.as_mut_slice().iter_mut() {
+        *v += cfg.sigma_x * rng.normal();
+    }
+    (
+        Dataset { x, name: format!("synth-n{}-d{}-a{}", cfg.n, cfg.dim, cfg.alpha) },
+        z,
+        a,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ibp_expected_total_dishes() {
+        // E[K] = alpha * H_N
+        let n = 500;
+        let alpha = 3.0;
+        let h: f64 = (1..=n).map(|i| 1.0 / i as f64).sum();
+        let mut rng = Pcg64::new(42);
+        let mut total = 0.0;
+        let reps = 200;
+        for _ in 0..reps {
+            let (_, m) = sample_ibp(n, alpha, &mut rng);
+            total += m.len() as f64;
+        }
+        let mean_k = total / reps as f64;
+        assert!((mean_k - alpha * h).abs() < 1.5, "mean_k={mean_k}, want≈{}", alpha * h);
+    }
+
+    #[test]
+    fn ibp_first_customer_poisson_alpha() {
+        let mut rng = Pcg64::new(1);
+        let mut total = 0usize;
+        let reps = 2000;
+        for _ in 0..reps {
+            let (rows, _) = sample_ibp(1, 2.5, &mut rng);
+            total += rows[0].iter().filter(|&&b| b == 1).count();
+        }
+        let mean = total as f64 / reps as f64;
+        assert!((mean - 2.5).abs() < 0.15, "mean={mean}");
+    }
+
+    #[test]
+    fn counts_match_matrix() {
+        let mut rng = Pcg64::new(2);
+        let (rows, m) = sample_ibp(100, 2.0, &mut rng);
+        for (k, want) in m.iter().enumerate() {
+            let got = rows.iter().filter(|r| r[k] == 1).count();
+            assert_eq!(got, *want);
+        }
+    }
+
+    #[test]
+    fn generate_shapes_and_noise() {
+        let cfg = SynthConfig { n: 300, dim: 8, seed: 5, ..Default::default() };
+        let (ds, z, a) = generate(&cfg);
+        assert_eq!(ds.x.rows(), 300);
+        assert_eq!(ds.x.cols(), 8);
+        assert_eq!(z.rows(), 300);
+        assert_eq!(z.cols(), a.rows());
+        let resid = ds.x.sub(&z.matmul(&a));
+        let sd = (resid.frob2() / (300.0 * 8.0)).sqrt();
+        assert!((sd - cfg.sigma_x).abs() < 0.03, "sd={sd}");
+    }
+
+    #[test]
+    fn lof_ordering_heads_are_older() {
+        // restaurant construction: earlier columns must have their first 1
+        // no later than later columns (left-ordered-ish by construction).
+        let mut rng = Pcg64::new(3);
+        let (rows, m) = sample_ibp(50, 1.5, &mut rng);
+        assert!(!m.is_empty());
+        assert!(rows.iter().all(|r| r.len() == m.len()));
+    }
+}

@@ -1,0 +1,36 @@
+//! # pibp — Parallel MCMC for the Indian Buffet Process
+//!
+//! A rust + JAX/Pallas reproduction of *"Parallel Markov Chain Monte Carlo
+//! for the Indian Buffet Process"* (Zhang, Dubey & Williamson, 2017).
+//!
+//! The paper's hybrid sampler splits the IBP feature matrix into the
+//! finitely many instantiated features (sampled **uncollapsed**, in
+//! parallel across observation shards, given the weights `π` and loadings
+//! `A`) and the infinite uninstantiated tail (sampled **collapsed** on one
+//! rotating processor `p′` which proposes new features). A master process
+//! merges sufficient statistics, samples global parameters and broadcasts.
+//!
+//! Architecture (see DESIGN.md):
+//! * [`coordinator`] — the parallel runtime (master/worker threads +
+//!   metered channels standing in for MPI).
+//! * [`samplers`] — collapsed / uncollapsed / accelerated baselines and the
+//!   serial hybrid reference.
+//! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas kernels
+//!   (`artifacts/*.hlo.txt`); python never runs at inference time.
+//! * substrates: [`rng`], [`linalg`], [`data`], [`model`], [`metrics`],
+//!   [`viz`], [`cli`], [`config`], [`propcheck`], [`bench`].
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod propcheck;
+pub mod rng;
+pub mod runtime;
+pub mod runner;
+pub mod samplers;
+pub mod viz;

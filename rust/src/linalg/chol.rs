@@ -1,0 +1,196 @@
+//! Cholesky factorisation and PSD solves.
+//!
+//! The collapsed IBP likelihood needs `log|M|` and `M⁻¹ ZᵀX` for
+//! `M = ZᵀZ + (σ_X²/σ_A²) I` (always symmetric positive definite); the
+//! A-posterior needs `L⁻ᵀ E` draws. Everything here is textbook
+//! Cholesky–crout with forward/backward substitution.
+
+use super::matrix::Mat;
+
+/// Lower-triangular Cholesky factor L with L Lᵀ = A.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factorise a symmetric positive-definite matrix. Returns `None` if a
+    /// non-positive pivot shows up (matrix not PD to working precision).
+    pub fn new(a: &Mat) -> Option<Self> {
+        let n = a.rows();
+        assert_eq!(n, a.cols(), "cholesky needs square input");
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return None;
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Some(Self { l })
+    }
+
+    pub fn factor(&self) -> &Mat {
+        &self.l
+    }
+
+    /// log |A| = 2 Σ log L_ii.
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve A x = b.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let mut y = self.forward(b);
+        self.backward_in_place(&mut y);
+        y
+    }
+
+    /// Solve A X = B column-wise.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = Mat::zeros(n, b.cols());
+        // work column by column to reuse the vector solver
+        for j in 0..b.cols() {
+            let col: Vec<f64> = (0..n).map(|i| b[(i, j)]).collect();
+            let x = self.solve_vec(&col);
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+
+    /// A⁻¹ (via n solves) — only used on K×K matrices.
+    pub fn inverse(&self) -> Mat {
+        let n = self.l.rows();
+        self.solve_mat(&Mat::eye(n))
+    }
+
+    /// Forward substitution: solve L y = b.
+    pub fn forward(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[(i, k)] * y[k];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+        y
+    }
+
+    /// Backward substitution in place: solve Lᵀ x = y.
+    pub fn backward_in_place(&self, y: &mut [f64]) {
+        let n = self.l.rows();
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.l[(k, i)] * y[k];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+    }
+
+    /// Solve Lᵀ X = B (used for matrix-normal draws A = mean + σ L⁻ᵀ E).
+    pub fn lt_solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = b.clone();
+        for j in 0..b.cols() {
+            for i in (0..n).rev() {
+                let mut s = out[(i, j)];
+                for k in i + 1..n {
+                    s -= self.l[(k, i)] * out[(k, j)];
+                }
+                out[(i, j)] = s / self.l[(i, i)];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let b = Mat::from_fn(n + 3, n, |_, _| rng.normal());
+        let mut a = b.gram();
+        a.add_diag(0.5);
+        a
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let a = random_spd(6, 1);
+        let ch = Cholesky::new(&a).unwrap();
+        let l = ch.factor();
+        let recon = l.matmul(&l.transpose());
+        assert!(recon.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn logdet_matches_2x2_formula() {
+        let a = Mat::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.logdet() - 11f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_recovers_known_solution() {
+        let a = random_spd(5, 2);
+        let x_true = vec![1.0, -2.0, 0.5, 3.0, -1.0];
+        let b = a.matvec(&x_true);
+        let x = Cholesky::new(&a).unwrap().solve_vec(&b);
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let a = random_spd(7, 3);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        assert!(a.matmul(&inv).max_abs_diff(&Mat::eye(7)) < 1e-9);
+    }
+
+    #[test]
+    fn solve_mat_matches_columnwise() {
+        let a = random_spd(4, 4);
+        let b = Mat::from_fn(4, 3, |i, j| (i + j) as f64 - 1.5);
+        let ch = Cholesky::new(&a).unwrap();
+        let x = ch.solve_mat(&b);
+        assert!(a.matmul(&x).max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn lt_solve_matches_definition() {
+        let a = random_spd(5, 5);
+        let ch = Cholesky::new(&a).unwrap();
+        let e = Mat::from_fn(5, 2, |i, j| (i as f64 - j as f64) * 0.3);
+        let x = ch.lt_solve_mat(&e);
+        let lt = ch.factor().transpose();
+        assert!(lt.matmul(&x).max_abs_diff(&e) < 1e-10);
+    }
+
+    #[test]
+    fn non_pd_returns_none() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // indefinite
+        assert!(Cholesky::new(&a).is_none());
+    }
+}

@@ -1,0 +1,336 @@
+//! Dense row-major f64 matrix — the in-tree replacement for `nalgebra`.
+//!
+//! Deliberately small: exactly the operations the IBP samplers need, each
+//! written for clarity first and the hot ones (matmul, syrk) with cache-
+//! friendly loop orders. K here is the number of instantiated features
+//! (≤ ~64 in every experiment), so K×K work is trivially cheap; the N×D
+//! paths matter and are kept allocation-free where possible.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// self * other, ikj loop order (streams `other` rows).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul inner dim");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue; // Z is sparse 0/1 — skip whole rows of other
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// selfᵀ * other without materialising the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul outer dim");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        for r in 0..self.rows {
+            let srow = self.row(r);
+            let orow = other.row(r);
+            for (k, &a) in srow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = out.row_mut(k);
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// selfᵀ * self (Gram matrix), exploiting symmetry.
+    pub fn gram(&self) -> Mat {
+        let k = self.cols;
+        let mut out = Mat::zeros(k, k);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..k {
+                let a = row[i];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in i..k {
+                    out[(i, j)] += a * row[j];
+                }
+            }
+        }
+        for i in 0..k {
+            for j in 0..i {
+                out[(i, j)] = out[(j, i)];
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Add s to the diagonal.
+    pub fn add_diag(&mut self, s: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += s;
+        }
+    }
+
+    /// Sum of squares of all entries.
+    pub fn frob2(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    /// tr(selfᵀ * other) = elementwise dot.
+    pub fn dot(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Copy `src` into the top-left corner (used by bucket padding).
+    pub fn paste(&mut self, src: &Mat) {
+        assert!(src.rows <= self.rows && src.cols <= self.cols);
+        for i in 0..src.rows {
+            let dst = &mut self.row_mut(i)[..src.cols];
+            dst.copy_from_slice(src.row(i));
+        }
+    }
+
+    /// Extract the top-left (r × c) block.
+    pub fn crop(&self, r: usize, c: usize) -> Mat {
+        assert!(r <= self.rows && c <= self.cols);
+        Mat::from_fn(r, c, |i, j| self[(i, j)])
+    }
+
+    /// Convert to the f32 row-major buffer format the PJRT runtime uses.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(10) {
+                write!(f, "{:9.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 10 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_hand_case() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Mat::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let a = Mat::from_fn(5, 3, |i, j| (i * 3 + j) as f64 * 0.5 - 2.0);
+        let b = Mat::from_fn(5, 4, |i, j| (i + j) as f64);
+        let got = a.t_matmul(&b);
+        let want = a.transpose().matmul(&b);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn gram_matches_t_matmul_self() {
+        let a = Mat::from_fn(7, 4, |i, j| ((i * 7 + j * 3) % 5) as f64 - 2.0);
+        assert!(a.gram().max_abs_diff(&a.t_matmul(&a)) < 1e-12);
+    }
+
+    #[test]
+    fn eye_is_identity_for_matmul() {
+        let a = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        assert!(a.matmul(&Mat::eye(4)).max_abs_diff(&a) < 1e-15);
+        assert!(Mat::eye(4).matmul(&a).max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn paste_crop_roundtrip() {
+        let src = Mat::from_fn(3, 2, |i, j| (i + 10 * j) as f64);
+        let mut pad = Mat::zeros(5, 4);
+        pad.paste(&src);
+        assert!(pad.crop(3, 2).max_abs_diff(&src) < 1e-15);
+        assert_eq!(pad[(4, 3)], 0.0);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let a = Mat::from_fn(3, 3, |i, j| (i as f64 - j as f64) * 0.25);
+        let b = Mat::from_f32(3, 3, &a.to_f32());
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn matvec_and_dot() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        assert_eq!(a.dot(&a), 1.0 + 4.0 + 9.0 + 16.0);
+        assert_eq!(a.frob2(), 30.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dim")]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

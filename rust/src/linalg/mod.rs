@@ -1,0 +1,14 @@
+//! Dense linear algebra substrate (in-tree `nalgebra` replacement).
+//!
+//! * [`Mat`] — row-major f64 matrix with the ops the samplers need.
+//! * [`Cholesky`] — SPD factorisation, solves, log-determinant.
+//! * [`sm_update`] / [`det_lemma_delta`] — Sherman–Morrison rank-1 updates
+//!   that make the collapsed Gibbs sweep O(K²) per bit flip.
+
+mod chol;
+mod matrix;
+mod sherman;
+
+pub use chol::Cholesky;
+pub use matrix::Mat;
+pub use sherman::{det_lemma_delta, sm_update, symmetrize};

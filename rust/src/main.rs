@@ -1,0 +1,227 @@
+//! `pibp` — the launcher.
+//!
+//! ```text
+//! pibp run    [--config c.json] [--set key=value]...   one experiment
+//! pibp fig1   [--iters N] [--n N] [--out dir]          paper Figure 1
+//! pibp fig2   [--iters N] [--n N] [--out dir]          paper Figure 2
+//! pibp info   [--artifacts dir]                        artifact manifest
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use pibp::cli::{flag, repeated, Cli, CommandSpec, Parsed};
+use pibp::config::{RunConfig, SamplerKind};
+use pibp::data::cambridge;
+use pibp::metrics::Trace;
+use pibp::runner;
+use pibp::runtime::Manifest;
+use pibp::viz;
+
+fn spec() -> Cli {
+    Cli {
+        bin: "pibp",
+        about: "Parallel MCMC for the Indian Buffet Process (Zhang, Dubey & Williamson 2017)",
+        commands: vec![
+            CommandSpec {
+                name: "run",
+                about: "run one experiment from a config (+ overrides)",
+                flags: vec![
+                    flag("config", "JSON config file ('' = defaults)", ""),
+                    repeated("set", "override, e.g. --set processors=5"),
+                ],
+            },
+            CommandSpec {
+                name: "fig1",
+                about: "reproduce Figure 1: held-out log P(X,Z) vs log time",
+                flags: vec![
+                    flag("iters", "iterations per sampler", "200"),
+                    flag("n", "observations", "1000"),
+                    flag("seed", "root seed", "0"),
+                    flag("backend", "native|pjrt", "native"),
+                    flag("out", "output directory", "results/fig1"),
+                ],
+            },
+            CommandSpec {
+                name: "fig2",
+                about: "reproduce Figure 2: true vs posterior features",
+                flags: vec![
+                    flag("iters", "iterations per sampler", "150"),
+                    flag("n", "observations", "1000"),
+                    flag("seed", "root seed", "0"),
+                    flag("out", "output directory", "results/fig2"),
+                ],
+            },
+            CommandSpec {
+                name: "info",
+                about: "show the AOT artifact manifest",
+                flags: vec![flag("artifacts", "artifacts directory", "artifacts")],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = spec();
+    let parsed = match cli.parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            println!("{e}");
+            std::process::exit(if args.iter().any(|a| a.contains("help")) { 0 } else { 2 });
+        }
+    };
+    if let Err(e) = dispatch(&parsed) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(p: &Parsed) -> Result<()> {
+    match p.command.as_str() {
+        "run" => cmd_run(p),
+        "fig1" => cmd_fig1(p),
+        "fig2" => cmd_fig2(p),
+        "info" => cmd_info(p),
+        _ => unreachable!(),
+    }
+}
+
+fn cmd_run(p: &Parsed) -> Result<()> {
+    let mut cfg = match p.get("config") {
+        Some("") | None => RunConfig::default(),
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+    };
+    for kv in p.get_list("set") {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set wants key=value, got '{kv}'"))?;
+        cfg.apply(k, v)?;
+    }
+    println!(
+        "pibp run: {} sampler={} P={} iters={} backend={:?} seed={}",
+        cfg.dataset, cfg.sampler.name(), cfg.processors, cfg.iters,
+        cfg.backend, cfg.seed
+    );
+    let every = (cfg.iters / 20).max(1);
+    let out = runner::run(&cfg, |i| {
+        if i % every == 0 {
+            print!(".");
+            use std::io::Write;
+            std::io::stdout().flush().ok();
+        }
+    })?;
+    println!();
+    report(&out.trace);
+    let dir = Path::new(&cfg.out_dir);
+    let csv = dir.join(format!("{}.csv", out.trace.label));
+    out.trace.save_csv(&csv)?;
+    println!("trace → {}", csv.display());
+    if out.final_k > 0 {
+        println!("\nposterior features (K={}):\n{}", out.final_k,
+                 viz::render_features_ascii(&out.features));
+    }
+    Ok(())
+}
+
+fn fig_cfg(p: &Parsed) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    cfg.iters = p.get_usize("iters")?;
+    cfg.n = p.get_usize("n")?;
+    cfg.seed = p.get("seed").unwrap_or("0").parse()?;
+    if let Some(b) = p.get("backend") {
+        cfg.apply("backend", b)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_fig1(p: &Parsed) -> Result<()> {
+    let base = fig_cfg(p)?;
+    let out_dir = p.get("out").unwrap_or("results/fig1").to_string();
+    println!("Figure 1: held-out log P(X,Z) over log (virtual) time");
+    println!("  dataset cambridge {}×36, {} iterations, L=5\n", base.n, base.iters);
+    let mut traces: Vec<Trace> = Vec::new();
+    // collapsed baseline
+    {
+        let mut cfg = base.clone();
+        cfg.sampler = SamplerKind::Collapsed;
+        println!("running collapsed…");
+        traces.push(runner::run(&cfg, |_| {})?.trace);
+    }
+    for p_count in [1usize, 3, 5] {
+        let mut cfg = base.clone();
+        cfg.sampler = SamplerKind::Hybrid;
+        cfg.processors = p_count;
+        println!("running hybrid P={p_count}…");
+        traces.push(runner::run(&cfg, |_| {})?.trace);
+    }
+    let dir = Path::new(&out_dir);
+    for t in &traces {
+        t.save_csv(&dir.join(format!("{}.csv", t.label)))?;
+        report(t);
+    }
+    let refs: Vec<&Trace> = traces.iter().collect();
+    println!("\n{}", viz::plot_traces(&refs, 76, 18, true));
+    println!("traces → {out_dir}/*.csv  (plot: heldout vs log10(vtime_s))");
+    Ok(())
+}
+
+fn cmd_fig2(p: &Parsed) -> Result<()> {
+    let base = fig_cfg(p)?;
+    let out_dir = p.get("out").unwrap_or("results/fig2").to_string();
+    let dir = Path::new(&out_dir);
+    // true features (top row of the paper's Figure 2)
+    let truth = cambridge::true_features(base.k_true);
+    viz::save_feature_grid(&dir.join("true_features.pgm"), &truth, 8)?;
+    println!("true features:\n{}", viz::render_features_ascii(&truth));
+    // collapsed posterior (middle row)
+    let mut cfg = base.clone();
+    cfg.sampler = SamplerKind::Collapsed;
+    println!("running collapsed…");
+    let out = runner::run(&cfg, |_| {})?;
+    viz::save_feature_grid(&dir.join("collapsed_features.pgm"), &out.features, 8)?;
+    println!("collapsed posterior (K={}):\n{}", out.final_k,
+             viz::render_features_ascii(&out.features));
+    // hybrid P=5 posterior (bottom row)
+    let mut cfg = base.clone();
+    cfg.sampler = SamplerKind::Hybrid;
+    cfg.processors = 5;
+    println!("running hybrid P=5…");
+    let out = runner::run(&cfg, |_| {})?;
+    viz::save_feature_grid(&dir.join("hybrid_p5_features.pgm"), &out.features, 8)?;
+    println!("hybrid P=5 posterior (K={}):\n{}", out.final_k,
+             viz::render_features_ascii(&out.features));
+    println!("images → {out_dir}/*.pgm");
+    Ok(())
+}
+
+fn cmd_info(p: &Parsed) -> Result<()> {
+    let dir = p.get("artifacts").unwrap_or("artifacts");
+    let m = Manifest::load(Path::new(dir))?;
+    println!("artifacts in {dir}: {} entries", m.entries.len());
+    println!("row buckets {:?}, feature buckets {:?}, dims {:?}", m.rows, m.feats, m.dims);
+    for e in &m.entries {
+        println!(
+            "  {:<18} b={:<6} k={:<4} d={:<4} {}",
+            e.name,
+            e.b.map_or("-".into(), |b| b.to_string()),
+            e.k, e.d, e.file
+        );
+    }
+    Ok(())
+}
+
+fn report(t: &Trace) {
+    let last = t.last().expect("trace non-empty");
+    println!(
+        "  {:<14} plateau={:.1}  final: heldout={:.1} K={} σx={:.3} α={:.2}  t={:.2}s(virtual)",
+        t.label,
+        t.plateau(0.25),
+        last.heldout,
+        last.k,
+        last.sigma_x,
+        last.alpha,
+        last.vtime_s
+    );
+}

@@ -1,0 +1,88 @@
+//! Autocorrelation and effective sample size — the mixing diagnostics
+//! behind the "collapsed mixes better than uncollapsed" comparisons
+//! (paper §2) and our T-S3 ablation tables.
+
+/// Normalised autocorrelation function up to `max_lag` (biased estimator,
+/// standard for ESS).
+pub fn autocorrelation(xs: &[f64], max_lag: usize) -> Vec<f64> {
+    let n = xs.len();
+    assert!(n >= 2, "need at least 2 samples");
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    if var == 0.0 {
+        return vec![1.0; max_lag.min(n - 1) + 1];
+    }
+    (0..=max_lag.min(n - 1))
+        .map(|lag| {
+            let mut acc = 0.0;
+            for i in 0..n - lag {
+                acc += (xs[i] - mean) * (xs[i + lag] - mean);
+            }
+            acc / (n as f64 * var)
+        })
+        .collect()
+}
+
+/// Effective sample size via Geyer's initial positive sequence: sum
+/// consecutive autocorrelation pairs until a pair goes non-positive.
+pub fn ess(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 4 {
+        return n as f64;
+    }
+    let rho = autocorrelation(xs, n - 2);
+    let mut tau = 1.0; // integrated autocorrelation time ×2 accumulator
+    let mut lag = 1;
+    while lag + 1 < rho.len() {
+        let pair = rho[lag] + rho[lag + 1];
+        if pair <= 0.0 {
+            break;
+        }
+        tau += 2.0 * pair;
+        lag += 2;
+    }
+    (n as f64 / tau).clamp(1.0, n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn iid_has_full_ess() {
+        let mut rng = Pcg64::new(1);
+        let xs: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        let e = ess(&xs);
+        assert!(e > 2500.0, "iid ESS {e} should be near n");
+    }
+
+    #[test]
+    fn ar1_reduces_ess() {
+        // AR(1) with phi = 0.9 → ESS ≈ n (1-phi)/(1+phi) ≈ n/19
+        let mut rng = Pcg64::new(2);
+        let n = 8000;
+        let mut xs = vec![0.0; n];
+        for i in 1..n {
+            xs[i] = 0.9 * xs[i - 1] + rng.normal();
+        }
+        let e = ess(&xs);
+        let want = n as f64 / 19.0;
+        assert!(e > want * 0.4 && e < want * 2.5, "ESS {e}, want ≈{want}");
+    }
+
+    #[test]
+    fn acf_lag0_is_one() {
+        let mut rng = Pcg64::new(3);
+        let xs: Vec<f64> = (0..500).map(|_| rng.normal()).collect();
+        let rho = autocorrelation(&xs, 10);
+        assert!((rho[0] - 1.0).abs() < 1e-12);
+        assert!(rho.len() == 11);
+    }
+
+    #[test]
+    fn constant_series_degenerate() {
+        let xs = vec![2.0; 100];
+        assert_eq!(ess(&xs), 1.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Run metrics: convergence traces (the Figure-1 series), summary
+//! statistics, autocorrelation / effective sample size, and CSV/JSON
+//! export for the bench harness.
+
+pub mod ess;
+pub mod rhat;
+pub mod stats;
+pub mod trace;
+
+pub use ess::{autocorrelation, ess};
+pub use rhat::split_rhat;
+pub use stats::Summary;
+pub use trace::{Trace, TracePoint};

@@ -1,0 +1,93 @@
+//! Gelman–Rubin potential scale reduction factor (R̂) — the multi-chain
+//! convergence diagnostic exposed by `pibp diagnose` / the diagnostics
+//! example. Split-R̂ per BDA3: each chain is halved, so within-chain
+//! non-stationarity also inflates the statistic.
+
+/// Split-R̂ over ≥ 2 chains of equal length (≥ 4 samples each).
+/// Returns NaN for degenerate input.
+pub fn split_rhat(chains: &[Vec<f64>]) -> f64 {
+    if chains.len() < 2 {
+        return f64::NAN;
+    }
+    let len = chains.iter().map(Vec::len).min().unwrap_or(0);
+    if len < 4 {
+        return f64::NAN;
+    }
+    let half = len / 2;
+    // split every chain into two halves of length `half`
+    let mut splits: Vec<&[f64]> = Vec::with_capacity(chains.len() * 2);
+    for c in chains {
+        splits.push(&c[..half]);
+        splits.push(&c[len - half..]);
+    }
+    let m = splits.len() as f64;
+    let n = half as f64;
+    let means: Vec<f64> = splits.iter().map(|s| mean(s)).collect();
+    let grand = mean(&means);
+    // between-chain variance
+    let b = n / (m - 1.0)
+        * means.iter().map(|mu| (mu - grand) * (mu - grand)).sum::<f64>();
+    // within-chain variance
+    let w = splits
+        .iter()
+        .zip(&means)
+        .map(|(s, mu)| {
+            s.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / (n - 1.0)
+        })
+        .sum::<f64>()
+        / m;
+    if w <= 0.0 {
+        return if b <= 0.0 { 1.0 } else { f64::INFINITY };
+    }
+    let var_plus = (n - 1.0) / n * w + b / n;
+    (var_plus / w).sqrt()
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn identical_distributions_give_rhat_near_one() {
+        let mut rng = Pcg64::new(1);
+        let chains: Vec<Vec<f64>> = (0..4)
+            .map(|_| (0..2000).map(|_| rng.normal()).collect())
+            .collect();
+        let r = split_rhat(&chains);
+        assert!((r - 1.0).abs() < 0.02, "R̂={r}");
+    }
+
+    #[test]
+    fn shifted_chains_give_large_rhat() {
+        let mut rng = Pcg64::new(2);
+        let chains: Vec<Vec<f64>> = (0..4)
+            .map(|c| (0..500).map(|_| rng.normal() + 3.0 * c as f64).collect())
+            .collect();
+        let r = split_rhat(&chains);
+        assert!(r > 2.0, "R̂={r} should flag disagreement");
+    }
+
+    #[test]
+    fn trending_chain_flagged_by_split() {
+        // both chains trend identically — plain R̂ would miss it, split-R̂
+        // must flag it
+        let chains: Vec<Vec<f64>> = (0..2)
+            .map(|_| (0..1000).map(|i| i as f64 * 0.01).collect())
+            .collect();
+        let r = split_rhat(&chains);
+        assert!(r > 1.5, "R̂={r} should flag trends");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(split_rhat(&[vec![1.0, 2.0, 3.0, 4.0]]).is_nan());
+        assert!(split_rhat(&[vec![1.0], vec![2.0]]).is_nan());
+        let r = split_rhat(&[vec![5.0; 100], vec![5.0; 100]]);
+        assert_eq!(r, 1.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Convergence traces: (time, metric) series — what the paper's Figure 1
+//! plots (held-out joint log P(X,Z) over log time).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    pub iter: usize,
+    /// Virtual-time seconds since the run started (Figure-1 x-axis).
+    pub vtime_s: f64,
+    /// Wall-clock seconds since the run started.
+    pub wall_s: f64,
+    /// Held-out joint log P(X, Z) (Figure-1 y-axis).
+    pub heldout: f64,
+    pub k: usize,
+    pub sigma_x: f64,
+    pub alpha: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub label: String,
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn last(&self) -> Option<&TracePoint> {
+        self.points.last()
+    }
+
+    /// Mean of the final `frac` fraction of held-out values (plateau).
+    pub fn plateau(&self, frac: f64) -> f64 {
+        if self.points.is_empty() {
+            return f64::NAN;
+        }
+        let start = ((1.0 - frac) * self.points.len() as f64) as usize;
+        let tail = &self.points[start.min(self.points.len() - 1)..];
+        tail.iter().map(|p| p.heldout).sum::<f64>() / tail.len() as f64
+    }
+
+    /// First virtual time at which the trace reaches `threshold`
+    /// (time-to-quality, the Figure-1 comparison statistic).
+    pub fn time_to(&self, threshold: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.heldout >= threshold)
+            .map(|p| p.vtime_s)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("iter,vtime_s,wall_s,heldout,k,sigma_x,alpha\n");
+        for p in &self.points {
+            let _ = writeln!(
+                out,
+                "{},{:.6},{:.6},{:.4},{},{:.5},{:.4}",
+                p.iter, p.vtime_s, p.wall_s, p.heldout, p.k, p.sigma_x, p.alpha
+            );
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, self.to_csv())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("iter", Json::Arr(self.points.iter().map(|p| Json::Num(p.iter as f64)).collect())),
+            ("vtime_s", Json::arr_f64(&self.points.iter().map(|p| p.vtime_s).collect::<Vec<_>>())),
+            ("heldout", Json::arr_f64(&self.points.iter().map(|p| p.heldout).collect::<Vec<_>>())),
+            ("k", Json::Arr(self.points.iter().map(|p| Json::Num(p.k as f64)).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize) -> Trace {
+        let mut t = Trace::new("test");
+        for i in 0..n {
+            t.push(TracePoint {
+                iter: i,
+                vtime_s: i as f64 * 0.5,
+                wall_s: i as f64,
+                heldout: -100.0 + i as f64,
+                k: 4,
+                sigma_x: 0.5,
+                alpha: 1.0,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn plateau_uses_tail() {
+        let t = mk(10);
+        // last 20% = points 8, 9 → heldout −92, −91
+        assert!((t.plateau(0.2) - (-91.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_to_threshold() {
+        let t = mk(10);
+        assert_eq!(t.time_to(-95.0), Some(2.5));
+        assert_eq!(t.time_to(0.0), None);
+    }
+
+    #[test]
+    fn csv_roundtrippable_shape() {
+        let t = mk(3);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("iter,"));
+    }
+
+    #[test]
+    fn json_contains_series() {
+        let t = mk(2);
+        let j = t.to_json();
+        assert_eq!(j.get("heldout").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

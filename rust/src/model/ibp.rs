@@ -1,0 +1,211 @@
+//! Indian Buffet Process prior mathematics and the conjugate hyper-
+//! parameter conditionals sampled by the master each global iteration
+//! (paper §3: "Sample posterior values for parameters A, σ_X², σ_A², π_k
+//! and hyperparameter α").
+
+use crate::model::state::FeatureState;
+use crate::rng::distributions::{ln_factorial, ln_gamma};
+use crate::rng::Pcg64;
+
+/// H_N = Σ_{i=1}^{N} 1/i.
+pub fn harmonic(n: usize) -> f64 {
+    (1..=n).map(|i| 1.0 / i as f64).sum()
+}
+
+/// Log IBP prior of a feature matrix in left-ordered-form equivalence
+/// class (G&G 2005 Eq. 14):
+///
+///   P([Z]) = α^{K⁺} / (Π_h K_h!) · exp(−α H_N)
+///            · Π_k (N − m_k)! (m_k − 1)! / N!
+pub fn log_prior(state: &FeatureState, alpha: f64) -> f64 {
+    let n = state.n();
+    let k = state.k();
+    let mut lp = k as f64 * alpha.ln() - alpha * harmonic(n);
+    for &kh in &state.column_histogram() {
+        lp -= ln_factorial(kh as u64);
+    }
+    for &mk in state.m() {
+        assert!(mk > 0, "log_prior expects compacted Z (no empty columns)");
+        lp += ln_factorial((n - mk) as u64) + ln_factorial(mk as u64 - 1)
+            - ln_factorial(n as u64);
+    }
+    lp
+}
+
+/// α | K⁺ ~ Gamma(a₀ + K⁺, rate b₀ + H_N), with the paper-standard
+/// Gamma(1, 1) hyperprior.
+pub fn sample_alpha(k_plus: usize, n: usize, rng: &mut Pcg64) -> f64 {
+    sample_alpha_prior(k_plus, n, 1.0, 1.0, rng)
+}
+
+pub fn sample_alpha_prior(
+    k_plus: usize,
+    n: usize,
+    a0: f64,
+    b0: f64,
+    rng: &mut Pcg64,
+) -> f64 {
+    let shape = a0 + k_plus as f64;
+    let rate = b0 + harmonic(n);
+    rng.gamma(shape, 1.0 / rate)
+}
+
+/// π_k | Z ~ Beta(m_k, 1 + N − m_k) for every instantiated feature
+/// (the K → ∞ limit of Beta(α/K + m_k, 1 + N − m_k)).
+pub fn sample_pi(m: &[usize], n: usize, rng: &mut Pcg64) -> Vec<f64> {
+    m.iter()
+        .map(|&mk| {
+            debug_assert!(mk > 0 && mk <= n);
+            rng.beta(mk as f64, 1.0 + (n - mk) as f64)
+        })
+        .collect()
+}
+
+/// σ_X² | X, Z, A ~ InvGamma(a₀ + ND/2, b₀ + RSS/2).
+pub fn sample_sigma_x(
+    rss: f64,
+    n: usize,
+    d: usize,
+    a0: f64,
+    b0: f64,
+    rng: &mut Pcg64,
+) -> f64 {
+    let shape = a0 + (n * d) as f64 / 2.0;
+    let scale = b0 + rss / 2.0;
+    rng.inv_gamma(shape, scale).sqrt()
+}
+
+/// σ_A² | A ~ InvGamma(a₀ + KD/2, b₀ + ‖A‖²/2).
+pub fn sample_sigma_a(
+    a_frob2: f64,
+    k: usize,
+    d: usize,
+    a0: f64,
+    b0: f64,
+    rng: &mut Pcg64,
+) -> f64 {
+    let shape = a0 + (k * d) as f64 / 2.0;
+    let scale = b0 + a_frob2 / 2.0;
+    rng.inv_gamma(shape, scale).sqrt()
+}
+
+/// log Poisson(k; λ) pmf.
+pub fn log_poisson_pmf(k: usize, lambda: f64) -> f64 {
+    if lambda <= 0.0 {
+        return if k == 0 { 0.0 } else { f64::NEG_INFINITY };
+    }
+    k as f64 * lambda.ln() - lambda - ln_factorial(k as u64)
+}
+
+/// log Gamma pdf (shape-rate) — used by diagnostics.
+pub fn log_gamma_pdf(x: f64, shape: f64, rate: f64) -> f64 {
+    if x <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    shape * rate.ln() - ln_gamma(shape) + (shape - 1.0) * x.ln() - rate * x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::sample_ibp;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn harmonic_values() {
+        assert!((harmonic(1) - 1.0).abs() < 1e-12);
+        assert!((harmonic(4) - (1.0 + 0.5 + 1.0 / 3.0 + 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_prior_single_feature_single_row() {
+        // N=1, one feature: P = α e^{-α} (Poisson(1;α) for the first
+        // customer taking exactly one dish).
+        let z = Mat::from_vec(1, 1, vec![1.0]);
+        let st = FeatureState::from_mat(&z);
+        let alpha = 1.7f64;
+        let want = alpha.ln() - alpha; // (N-m)!(m-1)!/N! = 0!0!/1! = 1
+        assert!((log_prior(&st, alpha) - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn log_prior_matches_restaurant_frequencies() {
+        // Empirical check: among IBP samples with N=2, compare relative
+        // frequency of two specific configurations against the prior ratio.
+        let mut rng = Pcg64::new(1);
+        let alpha = 1.0;
+        let mut count_a = 0usize; // Z = [[1],[1]] (one shared dish)
+        let mut count_b = 0usize; // Z = [[1],[0]] (first-only dish)
+        let reps = 60_000;
+        for _ in 0..reps {
+            let (rows, m) = sample_ibp(2, alpha, &mut rng);
+            if m.len() == 1 && rows[0] == vec![1] {
+                if rows[1] == vec![1] {
+                    count_a += 1;
+                } else {
+                    count_b += 1;
+                }
+            }
+        }
+        let za = FeatureState::from_mat(&Mat::from_vec(2, 1, vec![1.0, 1.0]));
+        let zb = FeatureState::from_mat(&Mat::from_vec(2, 1, vec![1.0, 0.0]));
+        let want_ratio = (log_prior(&za, alpha) - log_prior(&zb, alpha)).exp();
+        let got_ratio = count_a as f64 / count_b as f64;
+        assert!(
+            (got_ratio - want_ratio).abs() < 0.15 * want_ratio,
+            "got {got_ratio}, want {want_ratio}"
+        );
+    }
+
+    #[test]
+    fn alpha_posterior_moments() {
+        let mut rng = Pcg64::new(2);
+        let (k_plus, n) = (6, 100);
+        let shape = 1.0 + k_plus as f64;
+        let rate = 1.0 + harmonic(n);
+        let want_mean = shape / rate;
+        let mean: f64 = (0..50_000)
+            .map(|_| sample_alpha(k_plus, n, &mut rng))
+            .sum::<f64>()
+            / 50_000.0;
+        assert!((mean - want_mean).abs() < 0.02, "mean={mean} want={want_mean}");
+    }
+
+    #[test]
+    fn pi_posterior_mean() {
+        let mut rng = Pcg64::new(3);
+        let n = 50;
+        let m = vec![10usize, 40];
+        let mut acc = [0.0f64; 2];
+        let reps = 30_000;
+        for _ in 0..reps {
+            let pi = sample_pi(&m, n, &mut rng);
+            acc[0] += pi[0];
+            acc[1] += pi[1];
+        }
+        // E Beta(m, 1+N-m) = m / (m + 1 + N - m) = m / (N+1)
+        assert!((acc[0] / reps as f64 - 10.0 / 51.0).abs() < 0.005);
+        assert!((acc[1] / reps as f64 - 40.0 / 51.0).abs() < 0.005);
+    }
+
+    #[test]
+    fn sigma_posteriors_concentrate_on_truth() {
+        let mut rng = Pcg64::new(4);
+        // huge "data" ⇒ posterior ≈ sqrt(rss / (n d))
+        let (n, d) = (5000, 20);
+        let true_sx = 0.4;
+        let rss = true_sx * true_sx * (n * d) as f64;
+        let mut acc = 0.0;
+        for _ in 0..2000 {
+            acc += sample_sigma_x(rss, n, d, 1.0, 1.0, &mut rng);
+        }
+        assert!((acc / 2000.0 - true_sx).abs() < 0.01);
+    }
+
+    #[test]
+    fn poisson_pmf_normalises() {
+        let lambda = 2.3;
+        let total: f64 = (0..60).map(|k| log_poisson_pmf(k, lambda).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-10);
+    }
+}

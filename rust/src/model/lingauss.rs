@@ -1,0 +1,727 @@
+//! Linear-Gaussian IBP likelihood machinery (paper Eq. 1).
+//!
+//! Two representations:
+//! * **uncollapsed** — `P(X | Z, A, σ_X)`, a plain Gaussian; used by the
+//!   parallel workers on the instantiated features.
+//! * **collapsed** — `P(X | Z, σ_X, σ_A)` with A marginalised (G&G 2005);
+//!   used by the collapsed baseline and the p′ tail sampler. The
+//!   [`CollapsedCache`] maintains `M⁻¹`, `log|M|`, `E = ZᵀX` and
+//!   `G = E Eᵀ` under rank-1 row removal / insertion so each Gibbs bit
+//!   flip costs O(K² + KD) instead of a refactorisation.
+
+use crate::linalg::{det_lemma_delta, sm_update, symmetrize, Cholesky, Mat};
+use crate::rng::Pcg64;
+
+pub const LN_2PI: f64 = 1.837_877_066_409_345_5;
+
+/// Model hyper-state: the two scale parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LinGauss {
+    pub sigma_x: f64,
+    pub sigma_a: f64,
+}
+
+impl LinGauss {
+    pub fn new(sigma_x: f64, sigma_a: f64) -> Self {
+        assert!(sigma_x > 0.0 && sigma_a > 0.0);
+        Self { sigma_x, sigma_a }
+    }
+
+    /// (σ_X / σ_A)² — the ridge added to ZᵀZ.
+    #[inline]
+    pub fn ratio(&self) -> f64 {
+        (self.sigma_x / self.sigma_a).powi(2)
+    }
+
+    /// log N(x_row ; z_row A, σ_X² I).
+    pub fn row_loglik(&self, x_row: &[f64], z_row: &[f64], a: &Mat) -> f64 {
+        let d = x_row.len();
+        debug_assert_eq!(z_row.len(), a.rows());
+        debug_assert_eq!(d, a.cols());
+        let mut rss = 0.0;
+        for j in 0..d {
+            let mut mean = 0.0;
+            for (k, &zk) in z_row.iter().enumerate() {
+                if zk != 0.0 {
+                    mean += a[(k, j)];
+                }
+            }
+            let r = x_row[j] - mean;
+            rss += r * r;
+        }
+        -0.5 * d as f64 * (LN_2PI + 2.0 * self.sigma_x.ln())
+            - rss / (2.0 * self.sigma_x * self.sigma_x)
+    }
+
+    /// Full uncollapsed log P(X | Z, A).
+    pub fn loglik(&self, x: &Mat, z: &Mat, a: &Mat) -> f64 {
+        let resid = x.sub(&z.matmul(a));
+        let (n, d) = (x.rows() as f64, x.cols() as f64);
+        -0.5 * n * d * (LN_2PI + 2.0 * self.sigma_x.ln())
+            - resid.frob2() / (2.0 * self.sigma_x * self.sigma_x)
+    }
+
+    /// Collapsed log P(X | Z) from scratch (oracle path; O(K³ + K²D + NKD)).
+    pub fn collapsed_loglik(&self, x: &Mat, z: &Mat) -> f64 {
+        let (n, d, k) = (x.rows(), x.cols(), z.cols());
+        let mut m = z.gram();
+        m.add_diag(self.ratio());
+        let ch = Cholesky::new(&m).expect("M = ZᵀZ + rI is PD");
+        let e = z.t_matmul(x);
+        let w = ch.solve_mat(&e);
+        let tr_quad = e.dot(&w);
+        collapsed_loglik_terms(
+            n, d, k, self.sigma_x, self.sigma_a, ch.logdet(), x.frob2(), tr_quad,
+        )
+    }
+
+    /// Posterior mean of A | X, Z: M⁻¹ ZᵀX.
+    pub fn apost_mean(&self, ztz: &Mat, ztx: &Mat) -> Mat {
+        let mut m = ztz.clone();
+        m.add_diag(self.ratio());
+        Cholesky::new(&m).expect("PD").solve_mat(ztx)
+    }
+
+    /// Draw A | X, Z ~ MN(M⁻¹ZᵀX, σ_X² M⁻¹, I_D).
+    pub fn apost_sample(&self, ztz: &Mat, ztx: &Mat, rng: &mut Pcg64) -> Mat {
+        let k = ztz.rows();
+        let d = ztx.cols();
+        let mut m = ztz.clone();
+        m.add_diag(self.ratio());
+        let ch = Cholesky::new(&m).expect("PD");
+        let mean = ch.solve_mat(ztx);
+        let eps = Mat::from_fn(k, d, |_, _| rng.normal());
+        let mut noise = ch.lt_solve_mat(&eps);
+        noise.scale(self.sigma_x);
+        let mut a = mean;
+        a.add_assign(&noise);
+        a
+    }
+
+    /// Residual sum of squares ‖X − Z A‖².
+    pub fn rss(&self, x: &Mat, z: &Mat, a: &Mat) -> f64 {
+        x.sub(&z.matmul(a)).frob2()
+    }
+}
+
+/// Assemble the collapsed log-likelihood from its sufficient scalars.
+#[allow(clippy::too_many_arguments)]
+pub fn collapsed_loglik_terms(
+    n: usize,
+    d: usize,
+    k: usize,
+    sigma_x: f64,
+    sigma_a: f64,
+    logdet_m: f64,
+    tr_xx: f64,
+    tr_quad: f64,
+) -> f64 {
+    let (nf, df, kf) = (n as f64, d as f64, k as f64);
+    -0.5 * nf * df * LN_2PI
+        - (nf - kf) * df * sigma_x.ln()
+        - kf * df * sigma_a.ln()
+        - 0.5 * df * logdet_m
+        - (tr_xx - tr_quad) / (2.0 * sigma_x * sigma_x)
+}
+
+/// Incremental collapsed-likelihood cache over (Z, X).
+///
+/// Maintains, for the *current* Z:
+///   `ztz = ZᵀZ`, `minv = (ZᵀZ + ratio·I)⁻¹`, `logdet = log|M|`,
+///   `e = ZᵀX`, `g = E Eᵀ`, `tr_xx = ‖X‖²`, `tr_quad = tr(M⁻¹ G)`.
+///
+/// The Gibbs sweep uses `remove_row` / `candidate_loglik` / `insert_row`;
+/// drift from long SM chains is bounded by periodic `refresh`.
+#[derive(Clone, Debug)]
+pub struct CollapsedCache {
+    pub ztz: Mat,
+    pub minv: Mat,
+    pub logdet: f64,
+    pub e: Mat,
+    pub g: Mat,
+    pub tr_xx: f64,
+    n: usize,
+    d: usize,
+    ratio: f64,
+    updates: usize,
+}
+
+impl CollapsedCache {
+    pub fn new(x: &Mat, z: &Mat, ratio: f64) -> Self {
+        let ztz = z.gram();
+        let mut m = ztz.clone();
+        m.add_diag(ratio);
+        let ch = Cholesky::new(&m).expect("M PD");
+        let e = z.t_matmul(x);
+        let g = e.matmul(&e.transpose());
+        Self {
+            ztz,
+            minv: ch.inverse(),
+            logdet: ch.logdet(),
+            e,
+            g,
+            tr_xx: x.frob2(),
+            n: x.rows(),
+            d: x.cols(),
+            ratio,
+            updates: 0,
+        }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.minv.rows()
+    }
+
+    /// Current collapsed log P(X | Z).
+    pub fn loglik(&self, lg: &LinGauss) -> f64 {
+        let tr_quad = self.minv.dot(&self.g);
+        collapsed_loglik_terms(
+            self.n, self.d, self.k(), lg.sigma_x, lg.sigma_a,
+            self.logdet, self.tr_xx, tr_quad,
+        )
+    }
+
+    /// Remove observation row (z_row, x_row) from all statistics.
+    /// Returns false if the downdate is singular (caller should refresh).
+    pub fn remove_row(&mut self, z_row: &[f64], x_row: &[f64]) -> bool {
+        let delta = det_lemma_delta(&self.minv, z_row, -1.0);
+        if !delta.is_finite() {
+            return false;
+        }
+        if sm_update(&mut self.minv, z_row, -1.0).is_none() {
+            return false;
+        }
+        self.logdet += delta;
+        self.rank1_gram(z_row, -1.0);
+        self.rank1_e(z_row, x_row, -1.0);
+        self.maybe_symmetrize();
+        true
+    }
+
+    /// Insert observation row (z_row, x_row) into all statistics.
+    pub fn insert_row(&mut self, z_row: &[f64], x_row: &[f64]) {
+        let delta = det_lemma_delta(&self.minv, z_row, 1.0);
+        sm_update(&mut self.minv, z_row, 1.0).expect("insert never singular");
+        self.logdet += delta;
+        self.rank1_gram(z_row, 1.0);
+        self.rank1_e(z_row, x_row, 1.0);
+        self.maybe_symmetrize();
+    }
+
+    /// Collapsed log P(X | Z′) where Z′ = current Z (with some row already
+    /// removed) plus candidate row `z_row` holding observation `x_row`.
+    /// O(K² + KD); does not mutate the cache.
+    pub fn candidate_loglik(&self, z_row: &[f64], x_row: &[f64], lg: &LinGauss) -> f64 {
+        let k = self.k();
+        // w = M⁻¹ z′
+        let w = self.minv.matvec(z_row);
+        let ztw: f64 = z_row.iter().zip(&w).map(|(a, b)| a * b).sum();
+        let denom = 1.0 + ztw;
+        let logdet_new = self.logdet + denom.ln();
+        // c = E x′ᵀ  (K), s = x′·x′
+        let mut c = vec![0.0; k];
+        for i in 0..k {
+            let erow = self.e.row(i);
+            c[i] = erow.iter().zip(x_row).map(|(a, b)| a * b).sum();
+        }
+        let s: f64 = x_row.iter().map(|v| v * v).sum();
+        // tr(M′⁻¹ G′) where M′ = M + z′z′ᵀ, G′ = G + z′cᵀ + cz′ᵀ + s z′z′ᵀ
+        let tr_mg = self.minv.dot(&self.g);
+        let wc: f64 = w.iter().zip(&c).map(|(a, b)| a * b).sum();
+        let wz: f64 = ztw;
+        let tr_mgp = tr_mg + 2.0 * wc + s * wz;
+        // wᵀG′w
+        let gw = self.g.matvec(&w);
+        let wgw: f64 = w.iter().zip(&gw).map(|(a, b)| a * b).sum();
+        let wgpw = wgw + 2.0 * wz * wc + s * wz * wz;
+        let tr_quad = tr_mgp - wgpw / denom;
+        collapsed_loglik_terms(
+            self.n, self.d, k, lg.sigma_x, lg.sigma_a,
+            logdet_new, self.tr_xx, tr_quad,
+        )
+    }
+
+    /// Collapsed log P(X | Z″) where Z″ = (current Z with some row removed)
+    /// + candidate row `z_row` + `j_new` brand-new singleton columns active
+    /// only in that row. This is the weight of proposing `j_new` features
+    /// for one observation (G&G new-dish step / the paper's Poisson(α/N)
+    /// proposal). O((K+j)³ + (K+j)²·D) — no N factor thanks to the cache.
+    pub fn candidate_loglik_aug(
+        &self,
+        z_row: &[f64],
+        x_row: &[f64],
+        j_new: usize,
+        lg: &LinGauss,
+    ) -> f64 {
+        if j_new == 0 {
+            return self.candidate_loglik(z_row, x_row, lg);
+        }
+        let k = self.k();
+        if k == 0 {
+            // Closed form (perf fast path — §Perf L3-1). With no existing
+            // features, M″ = 1_j 1_jᵀ + r·I_j has eigenvalues (j + r) and
+            // r (multiplicity j−1), and E″ rows all equal x′, so
+            //   log|M″|  = ln(j + r) + (j−1)·ln r
+            //   tr(M″⁻¹G″) = (x′·x′)·Σ_ij M″⁻¹_ij = (x′·x′)·j/(j + r).
+            // This is the overwhelmingly common case on p′ (K* = 0) and
+            // turns the per-row K_new weights into O(D).
+            let j = j_new as f64;
+            let r = self.ratio;
+            let xx: f64 = x_row.iter().map(|v| v * v).sum();
+            let logdet = (j + r).ln() + (j - 1.0) * r.ln();
+            let tr_quad = xx * j / (j + r);
+            return collapsed_loglik_terms(
+                self.n, self.d, j_new, lg.sigma_x, lg.sigma_a,
+                logdet, self.tr_xx, tr_quad,
+            );
+        }
+        let kj = k + j_new;
+        // M″ = [[ZᵀZ + z′z′ᵀ + rI ,  z′ᵀ 1ᵀ ],
+        //       [ 1 z′            ,  1_{j×j} + r I_j ]]
+        let mut m = Mat::zeros(kj, kj);
+        for i in 0..k {
+            for j in 0..k {
+                m[(i, j)] = self.ztz[(i, j)] + z_row[i] * z_row[j];
+            }
+        }
+        for i in 0..k {
+            for j in k..kj {
+                m[(i, j)] = z_row[i];
+                m[(j, i)] = z_row[i];
+            }
+        }
+        for i in k..kj {
+            for j in k..kj {
+                m[(i, j)] = 1.0;
+            }
+        }
+        m.add_diag(self.ratio);
+        let ch = Cholesky::new(&m).expect("augmented M PD");
+        // E″ = [E + z′ᵀ x′ ; rows of x′]
+        let mut e = Mat::zeros(kj, self.d);
+        for i in 0..k {
+            let src = self.e.row(i);
+            let dst = e.row_mut(i);
+            for (t, (&ev, &xv)) in dst.iter_mut().zip(src.iter().zip(x_row)) {
+                *t = ev + z_row[i] * xv;
+            }
+        }
+        for i in k..kj {
+            e.row_mut(i).copy_from_slice(x_row);
+        }
+        let w = ch.solve_mat(&e);
+        let tr_quad = e.dot(&w);
+        collapsed_loglik_terms(
+            self.n, self.d, kj, lg.sigma_x, lg.sigma_a,
+            ch.logdet(), self.tr_xx, tr_quad,
+        )
+    }
+
+    /// All augmented candidates j = 0..=jmax in ONE pass (perf fast path,
+    /// §Perf L3-3). Equivalent to calling [`Self::candidate_loglik_aug`]
+    /// for each j (pinned by tests) but via the Schur complement of the
+    /// arrow-structured M″, sharing the O(K² + KD) work across j:
+    ///
+    /// with w = M⁻¹z′, δ = 1 + z′ᵀw, u = w/δ, E₁ = E + z′ᵀx′, v = E₁ᵀu:
+    ///   log|M″|   = log|M| + ln δ + (j−1)·ln r + ln(r + j/δ)
+    ///   tr(M″⁻¹G″) = T₁ + c_j·‖v − x′‖²,   c_j = j/(r + j/δ)
+    /// where T₁ is the j = 0 quadratic (the candidate_loglik value).
+    pub fn candidate_loglik_aug_batch(
+        &self,
+        z_row: &[f64],
+        x_row: &[f64],
+        jmax: usize,
+        lg: &LinGauss,
+    ) -> Vec<f64> {
+        let k = self.k();
+        let r = self.ratio;
+        // --- shared O(K² + KD) prefix (j = 0 candidate quantities) ---
+        let w = self.minv.matvec(z_row);
+        let ztw: f64 = z_row.iter().zip(&w).map(|(a, b)| a * b).sum();
+        let denom = 1.0 + ztw;
+        let logdet1 = self.logdet + denom.ln();
+        // c = E x′ᵀ, s = x′·x′  (as in candidate_loglik)
+        let mut c = vec![0.0; k];
+        for i in 0..k {
+            let erow = self.e.row(i);
+            c[i] = erow.iter().zip(x_row).map(|(a, b)| a * b).sum();
+        }
+        let xx: f64 = x_row.iter().map(|v| v * v).sum();
+        let tr_mg = self.minv.dot(&self.g);
+        let wc: f64 = w.iter().zip(&c).map(|(a, b)| a * b).sum();
+        let tr_mgp = tr_mg + 2.0 * wc + xx * ztw;
+        let gw = self.g.matvec(&w);
+        let wgw: f64 = w.iter().zip(&gw).map(|(a, b)| a * b).sum();
+        let wgpw = wgw + 2.0 * ztw * wc + xx * ztw * ztw;
+        let t1 = tr_mgp - wgpw / denom;
+        // v = E₁ᵀ u = (Eᵀw + (z′ᵀw)·x′)/δ; we only need ‖v − x′‖².
+        let mut v_minus_x2 = 0.0;
+        for (jdim, &xj) in x_row.iter().enumerate() {
+            let mut etw = 0.0;
+            for (i, &wi) in w.iter().enumerate() {
+                if wi != 0.0 {
+                    etw += self.e[(i, jdim)] * wi;
+                }
+            }
+            let vj = (etw + ztw * xj) / denom;
+            v_minus_x2 += (vj - xj) * (vj - xj);
+        }
+        // --- per-j O(1) tail ---
+        (0..=jmax)
+            .map(|j_new| {
+                let j = j_new as f64;
+                let (logdet, tr_quad) = if j_new == 0 {
+                    (logdet1, t1)
+                } else {
+                    let cj = j / (r + j / denom);
+                    (
+                        logdet1 + (j - 1.0) * r.ln() + (r + j / denom).ln(),
+                        t1 + cj * v_minus_x2,
+                    )
+                };
+                collapsed_loglik_terms(
+                    self.n, self.d, k + j_new, lg.sigma_x, lg.sigma_a,
+                    logdet, self.tr_xx, tr_quad,
+                )
+            })
+            .collect()
+    }
+
+    /// Predictive log P(x_row | z_row, X₋, Z₋) with A marginalised against
+    /// the *current* cache state (which must already exclude the row):
+    /// x ~ N(z w E, σ_X²(1 + zᵀM⁻¹z) I_D). This is the Doshi-Velez
+    /// "accelerated" form of the same conditional — O(K² + KD), no G.
+    pub fn predictive_loglik(&self, z_row: &[f64], x_row: &[f64], lg: &LinGauss) -> f64 {
+        let w = self.minv.matvec(z_row);
+        let ztw: f64 = z_row.iter().zip(&w).map(|(a, b)| a * b).sum();
+        let var = lg.sigma_x * lg.sigma_x * (1.0 + ztw);
+        let d = self.d;
+        let mut rss = 0.0;
+        for j in 0..d {
+            let mut mean = 0.0;
+            for (i, &wi) in w.iter().enumerate() {
+                if wi != 0.0 {
+                    mean += wi * self.e[(i, j)];
+                }
+            }
+            let r = x_row[j] - mean;
+            rss += r * r;
+        }
+        -0.5 * d as f64 * (LN_2PI + var.ln()) - rss / (2.0 * var)
+    }
+
+    /// Full rebuild (drift control / after structural changes / after a
+    /// σ update changed the ridge). Callers MUST pass the current
+    /// `lg.ratio()` — the cache's M = ZᵀZ + ratio·I is only consistent
+    /// with likelihood evaluations whose `LinGauss` has the same ratio.
+    pub fn refresh(&mut self, x: &Mat, z: &Mat, ratio: f64) {
+        *self = Self::new(x, z, ratio);
+    }
+
+    #[inline]
+    pub fn ratio(&self) -> f64 {
+        self.ratio
+    }
+
+    fn rank1_gram(&mut self, v: &[f64], s: f64) {
+        let k = self.k();
+        for i in 0..k {
+            if v[i] == 0.0 {
+                continue;
+            }
+            let vi = s * v[i];
+            let row = self.ztz.row_mut(i);
+            for (j, &vj) in v.iter().enumerate() {
+                row[j] += vi * vj;
+            }
+        }
+    }
+
+    /// E ← E + s·vᵀ x_row, and G updated consistently.
+    fn rank1_e(&mut self, v: &[f64], x_row: &[f64], s: f64) {
+        let k = self.k();
+        // G update needs old E: G′ = G + s(vᵀ(xEᵀ) + (Exᵀ)v) + s²(x·x) vvᵀ
+        let mut c = vec![0.0; k];
+        for i in 0..k {
+            let erow = self.e.row(i);
+            c[i] = erow.iter().zip(x_row).map(|(a, b)| a * b).sum();
+        }
+        let xx: f64 = x_row.iter().map(|t| t * t).sum();
+        for i in 0..k {
+            let gi = self.g.row_mut(i);
+            for j in 0..k {
+                gi[j] += s * (v[i] * c[j] + c[i] * v[j]) + s * s * xx * v[i] * v[j];
+            }
+        }
+        for (i, &vi) in v.iter().enumerate() {
+            if vi == 0.0 {
+                continue;
+            }
+            let erow = self.e.row_mut(i);
+            for (t, &xv) in erow.iter_mut().zip(x_row) {
+                *t += s * vi * xv;
+            }
+        }
+    }
+
+    fn maybe_symmetrize(&mut self) {
+        self.updates += 1;
+        if self.updates % 512 == 0 {
+            symmetrize(&mut self.minv);
+            symmetrize(&mut self.g);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn problem(n: usize, k: usize, d: usize, seed: u64) -> (Mat, Mat, LinGauss) {
+        let mut rng = Pcg64::new(seed);
+        let z = Mat::from_fn(n, k, |_, _| if rng.bernoulli(0.4) { 1.0 } else { 0.0 });
+        let a = Mat::from_fn(k, d, |_, _| rng.normal());
+        let mut x = z.matmul(&a);
+        for v in x.as_mut_slice().iter_mut() {
+            *v += 0.3 * rng.normal();
+        }
+        (x, z, LinGauss::new(0.5, 1.1))
+    }
+
+    #[test]
+    fn row_loglik_matches_full() {
+        let (x, z, lg) = problem(20, 4, 6, 1);
+        let mut rng = Pcg64::new(2);
+        let a = Mat::from_fn(4, 6, |_, _| rng.normal());
+        let total: f64 = (0..20)
+            .map(|i| lg.row_loglik(x.row(i), &z.row(i).to_vec(), &a))
+            .sum();
+        assert!((total - lg.loglik(&x, &z, &a)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn cache_loglik_matches_fresh() {
+        let (x, z, lg) = problem(30, 5, 7, 3);
+        let cache = CollapsedCache::new(&x, &z, lg.ratio());
+        assert!((cache.loglik(&lg) - lg.collapsed_loglik(&x, &z)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn remove_insert_roundtrip() {
+        let (x, z, lg) = problem(25, 4, 5, 4);
+        let mut cache = CollapsedCache::new(&x, &z, lg.ratio());
+        let before = cache.loglik(&lg);
+        let zr = z.row(7).to_vec();
+        let xr = x.row(7).to_vec();
+        assert!(cache.remove_row(&zr, &xr));
+        cache.insert_row(&zr, &xr);
+        assert!((cache.loglik(&lg) - before).abs() < 1e-7);
+    }
+
+    #[test]
+    fn candidate_matches_fresh_rebuild() {
+        let (x, z, lg) = problem(25, 4, 5, 5);
+        let mut cache = CollapsedCache::new(&x, &z, lg.ratio());
+        let row = 11;
+        let zr = z.row(row).to_vec();
+        let xr = x.row(row).to_vec();
+        assert!(cache.remove_row(&zr, &xr));
+        // candidate: flip bit 2 of the row
+        let mut zc = zr.clone();
+        zc[2] = 1.0 - zc[2];
+        let got = cache.candidate_loglik(&zc, &xr, &lg);
+        let mut z2 = z.clone();
+        z2[(row, 2)] = zc[2];
+        let want = lg.collapsed_loglik(&x, &z2);
+        assert!((got - want).abs() < 1e-6, "got={got} want={want}");
+    }
+
+    #[test]
+    fn candidate_with_unchanged_row_matches_current() {
+        let (x, z, lg) = problem(20, 3, 4, 6);
+        let mut cache = CollapsedCache::new(&x, &z, lg.ratio());
+        let zr = z.row(0).to_vec();
+        let xr = x.row(0).to_vec();
+        let before = cache.loglik(&lg);
+        assert!(cache.remove_row(&zr, &xr));
+        let got = cache.candidate_loglik(&zr, &xr, &lg);
+        assert!((got - before).abs() < 1e-7);
+    }
+
+    #[test]
+    fn long_sweep_stays_consistent() {
+        let (x, z, lg) = problem(40, 6, 8, 7);
+        let mut zdyn = z.clone();
+        let mut cache = CollapsedCache::new(&x, &zdyn, lg.ratio());
+        let mut rng = Pcg64::new(8);
+        for step in 0..300 {
+            let i = step % 40;
+            let zr = zdyn.row(i).to_vec();
+            let xr = x.row(i).to_vec();
+            if !cache.remove_row(&zr, &xr) {
+                cache.refresh(&x, &zdyn, lg.ratio());
+                continue;
+            }
+            let mut znew = zr.clone();
+            let kflip = (step * 5) % 6;
+            if rng.bernoulli(0.5) {
+                znew[kflip] = 1.0 - znew[kflip];
+            }
+            cache.insert_row(&znew, &xr);
+            for (j, &v) in znew.iter().enumerate() {
+                zdyn[(i, j)] = v;
+            }
+        }
+        let fresh = lg.collapsed_loglik(&x, &zdyn);
+        assert!((cache.loglik(&lg) - fresh).abs() < 1e-5,
+                "drift: {} vs {}", cache.loglik(&lg), fresh);
+    }
+
+    #[test]
+    fn aug_closed_form_matches_general_path_at_k0() {
+        // the K*=0 fast path must agree with a fresh dense rebuild
+        let mut rng = Pcg64::new(30);
+        let n = 15;
+        let d = 6;
+        let x = Mat::from_fn(n, d, |_, _| rng.normal());
+        let lg = LinGauss::new(0.4, 1.3);
+        let z_empty = Mat::zeros(n, 0);
+        let mut cache = CollapsedCache::new(&x, &z_empty, lg.ratio());
+        let row = 3;
+        let xr = x.row(row).to_vec();
+        assert!(cache.remove_row(&[], &xr));
+        for j in 1..=4usize {
+            let got = cache.candidate_loglik_aug(&[], &xr, j, &lg);
+            let mut z2 = Mat::zeros(n, j);
+            for c in 0..j {
+                z2[(row, c)] = 1.0;
+            }
+            let want = lg.collapsed_loglik(&x, &z2);
+            assert!((got - want).abs() < 1e-7, "j={j}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn aug_batch_matches_per_j_general_path() {
+        for (n, k, d, seed) in [(20, 3, 5, 40), (15, 1, 8, 41), (25, 5, 4, 42)] {
+            let (x, z, lg) = problem(n, k, d, seed);
+            let mut cache = CollapsedCache::new(&x, &z, lg.ratio());
+            let row = 2;
+            let mut zr = z.row(row).to_vec();
+            let xr = x.row(row).to_vec();
+            assert!(cache.remove_row(&zr, &xr));
+            zr[0] = 1.0 - zr[0]; // arbitrary candidate row
+            let batch = cache.candidate_loglik_aug_batch(&zr, &xr, 4, &lg);
+            for (j, &got) in batch.iter().enumerate() {
+                let want = cache.candidate_loglik_aug(&zr, &xr, j, &lg);
+                assert!(
+                    (got - want).abs() < 1e-7 * want.abs().max(1.0),
+                    "n={n} k={k} j={j}: batch {got} vs dense {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn aug_batch_matches_at_k0() {
+        let mut rng = Pcg64::new(43);
+        let x = Mat::from_fn(12, 6, |_, _| rng.normal());
+        let lg = LinGauss::new(0.4, 1.3);
+        let mut cache = CollapsedCache::new(&x, &Mat::zeros(12, 0), lg.ratio());
+        let xr = x.row(5).to_vec();
+        assert!(cache.remove_row(&[], &xr));
+        let batch = cache.candidate_loglik_aug_batch(&[], &xr, 3, &lg);
+        for (j, &got) in batch.iter().enumerate() {
+            let want = cache.candidate_loglik_aug(&[], &xr, j, &lg);
+            assert!((got - want).abs() < 1e-8, "j={j}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn aug_candidate_matches_fresh_rebuild() {
+        let (x, z, lg) = problem(20, 3, 5, 20);
+        let mut cache = CollapsedCache::new(&x, &z, lg.ratio());
+        let row = 4;
+        let zr = z.row(row).to_vec();
+        let xr = x.row(row).to_vec();
+        assert!(cache.remove_row(&zr, &xr));
+        for j_new in 0..4usize {
+            let got = cache.candidate_loglik_aug(&zr, &xr, j_new, &lg);
+            // fresh: Z with j_new extra singleton columns active in `row`
+            let mut z2 = Mat::zeros(20, 3 + j_new);
+            for i in 0..20 {
+                for j in 0..3 {
+                    z2[(i, j)] = z[(i, j)];
+                }
+            }
+            for j in 0..j_new {
+                z2[(row, 3 + j)] = 1.0;
+            }
+            let want = lg.collapsed_loglik(&x, &z2);
+            assert!((got - want).abs() < 1e-6, "j={j_new}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn predictive_equals_marginal_ratio() {
+        // P(x_n | z_n, rest) = P(X | Z) / P(X_-n | Z_-n): the predictive
+        // form and the joint-ratio form must agree.
+        let (x, z, lg) = problem(15, 3, 4, 21);
+        let mut cache = CollapsedCache::new(&x, &z, lg.ratio());
+        let row = 9;
+        let zr = z.row(row).to_vec();
+        let xr = x.row(row).to_vec();
+        assert!(cache.remove_row(&zr, &xr));
+        // joint with row present at candidate zc, minus joint without row
+        let mut zc = zr.clone();
+        zc[1] = 1.0 - zc[1];
+        let with = cache.candidate_loglik(&zc, &xr, &lg);
+        // marginal of X without row n: build from scratch on the submatrix
+        let idx: Vec<usize> = (0..15).filter(|&i| i != row).collect();
+        let xs = Mat::from_fn(14, 4, |i, j| x[(idx[i], j)]);
+        let zs = Mat::from_fn(14, 3, |i, j| z[(idx[i], j)]);
+        let without = lg.collapsed_loglik(&xs, &zs);
+        let want = with - without;
+        let got = cache.predictive_loglik(&zc, &xr, &lg);
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn apost_mean_solves_normal_equations() {
+        let (x, z, lg) = problem(40, 5, 6, 9);
+        let ztz = z.gram();
+        let ztx = z.t_matmul(&x);
+        let mean = lg.apost_mean(&ztz, &ztx);
+        // M mean = ZtX
+        let mut m = ztz.clone();
+        m.add_diag(lg.ratio());
+        assert!(m.matmul(&mean).max_abs_diff(&ztx) < 1e-9);
+    }
+
+    #[test]
+    fn apost_sample_mean_converges() {
+        let (x, z, lg) = problem(60, 3, 2, 10);
+        let ztz = z.gram();
+        let ztx = z.t_matmul(&x);
+        let want = lg.apost_mean(&ztz, &ztx);
+        let mut rng = Pcg64::new(11);
+        let mut acc = Mat::zeros(3, 2);
+        let reps = 3000;
+        for _ in 0..reps {
+            acc.add_assign(&lg.apost_sample(&ztz, &ztx, &mut rng));
+        }
+        acc.scale(1.0 / reps as f64);
+        assert!(acc.max_abs_diff(&want) < 0.05);
+    }
+
+    #[test]
+    fn collapsed_prefers_true_structure() {
+        // collapsed marginal should rank the generating Z above a shuffled Z
+        let (x, z, lg) = problem(50, 4, 10, 12);
+        let mut rng = Pcg64::new(13);
+        let zbad = Mat::from_fn(50, 4, |_, _| if rng.bernoulli(0.4) { 1.0 } else { 0.0 });
+        assert!(lg.collapsed_loglik(&x, &z) > lg.collapsed_loglik(&x, &zbad));
+    }
+}

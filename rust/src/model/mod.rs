@@ -1,0 +1,66 @@
+//! The linear-Gaussian IBP latent feature model (paper §2).
+//!
+//! * [`state::FeatureState`] — the dynamic binary matrix Z with maintained
+//!   column counts.
+//! * [`lingauss`] — uncollapsed and collapsed likelihoods, the incremental
+//!   [`lingauss::CollapsedCache`], and the A-posterior.
+//! * [`ibp`] — the IBP prior and the conjugate hyper-parameter
+//!   conditionals (α, π, σ_X, σ_A).
+
+pub mod ibp;
+pub mod lingauss;
+pub mod missing;
+pub mod state;
+
+pub use lingauss::{CollapsedCache, LinGauss};
+pub use state::FeatureState;
+
+/// Full global model state shared between samplers and the coordinator:
+/// everything the master broadcasts after a global step.
+#[derive(Clone, Debug)]
+pub struct GlobalParams {
+    /// Loadings for the instantiated features (K⁺ × D).
+    pub a: crate::linalg::Mat,
+    /// Feature weights π_k (len K⁺).
+    pub pi: Vec<f64>,
+    pub lg: LinGauss,
+    pub alpha: f64,
+}
+
+impl GlobalParams {
+    pub fn k(&self) -> usize {
+        self.pi.len()
+    }
+
+    /// logit(π_k) vector in the f32 layout the AOT kernels consume;
+    /// entries past K⁺ (padding) get −1e30 ⇒ never activated.
+    pub fn prior_logit_padded(&self, k_pad: usize) -> Vec<f32> {
+        let mut out = vec![-1e30f32; k_pad];
+        for (k, &p) in self.pi.iter().enumerate() {
+            let p = p.clamp(1e-12, 1.0 - 1e-12);
+            out[k] = (p.ln() - (-p).ln_1p()) as f32;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn prior_logit_padding() {
+        let gp = GlobalParams {
+            a: Mat::zeros(2, 3),
+            pi: vec![0.5, 0.9],
+            lg: LinGauss::new(0.5, 1.0),
+            alpha: 1.0,
+        };
+        let v = gp.prior_logit_padded(4);
+        assert_eq!(v.len(), 4);
+        assert!((v[0] - 0.0).abs() < 1e-6);
+        assert!((v[1] - (0.9f64 / 0.1).ln() as f32).abs() < 1e-4);
+        assert!(v[2] < -1e29 && v[3] < -1e29);
+    }
+}

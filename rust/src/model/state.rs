@@ -1,0 +1,253 @@
+//! Dynamic feature-assignment state: the binary matrix Z with a growing /
+//! shrinking set of instantiated columns, plus maintained column counts.
+//!
+//! Every sampler and the coordinator share this representation. Invariant
+//! (property-tested): `m[k] == Σ_n z[n][k]` at all times, and no column
+//! with `m[k] == 0` survives `compact()`.
+
+use crate::linalg::Mat;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureState {
+    n: usize,
+    /// Row-major bits: z[n * k_cap + k] — stored flat.
+    z: Vec<u8>,
+    /// Active column count.
+    k: usize,
+    /// Column sums m_k.
+    m: Vec<usize>,
+}
+
+impl FeatureState {
+    pub fn empty(n: usize) -> Self {
+        Self { n, z: vec![], k: 0, m: vec![] }
+    }
+
+    /// Build from a dense 0/1 matrix.
+    pub fn from_mat(z: &Mat) -> Self {
+        let (n, k) = (z.rows(), z.cols());
+        let mut bits = vec![0u8; n * k];
+        let mut m = vec![0usize; k];
+        for i in 0..n {
+            for j in 0..k {
+                let v = z[(i, j)];
+                debug_assert!(v == 0.0 || v == 1.0, "Z must be binary");
+                if v == 1.0 {
+                    bits[i * k + j] = 1;
+                    m[j] += 1;
+                }
+            }
+        }
+        Self { n, z: bits, k, m }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> u8 {
+        debug_assert!(row < self.n && col < self.k);
+        self.z[row * self.k + col]
+    }
+
+    /// Set a bit, keeping `m` consistent.
+    pub fn set(&mut self, row: usize, col: usize, v: u8) {
+        debug_assert!(v <= 1);
+        let idx = row * self.k + col;
+        let old = self.z[idx];
+        if old == v {
+            return;
+        }
+        self.z[idx] = v;
+        if v == 1 {
+            self.m[col] += 1;
+        } else {
+            self.m[col] -= 1;
+        }
+    }
+
+    #[inline]
+    pub fn m(&self) -> &[usize] {
+        &self.m
+    }
+
+    /// Row view as f64 (for linalg interop).
+    pub fn row_f64(&self, row: usize) -> Vec<f64> {
+        (0..self.k).map(|j| self.get(row, j) as f64).collect()
+    }
+
+    pub fn row_bits(&self, row: usize) -> &[u8] {
+        &self.z[row * self.k..(row + 1) * self.k]
+    }
+
+    /// Append `count` new all-zero columns; returns the first new index.
+    pub fn add_features(&mut self, count: usize) -> usize {
+        if count == 0 {
+            return self.k;
+        }
+        let new_k = self.k + count;
+        let mut z = vec![0u8; self.n * new_k];
+        for i in 0..self.n {
+            z[i * new_k..i * new_k + self.k]
+                .copy_from_slice(&self.z[i * self.k..(i + 1) * self.k]);
+        }
+        self.z = z;
+        let first = self.k;
+        self.k = new_k;
+        self.m.resize(new_k, 0);
+        first
+    }
+
+    /// Drop all empty columns. Returns the retained original indices in
+    /// order (so callers can permute A / π the same way).
+    pub fn compact(&mut self) -> Vec<usize> {
+        let keep: Vec<usize> = (0..self.k).filter(|&j| self.m[j] > 0).collect();
+        if keep.len() == self.k {
+            return keep;
+        }
+        let new_k = keep.len();
+        let mut z = vec![0u8; self.n * new_k];
+        for i in 0..self.n {
+            for (jj, &j) in keep.iter().enumerate() {
+                z[i * new_k + jj] = self.z[i * self.k + j];
+            }
+        }
+        self.m = keep.iter().map(|&j| self.m[j]).collect();
+        self.z = z;
+        self.k = new_k;
+        keep
+    }
+
+    /// Dense f64 copy (N × K).
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_fn(self.n, self.k, |i, j| self.get(i, j) as f64)
+    }
+
+    /// Dense f64 copy padded to (rows × cols) with zeros.
+    pub fn to_mat_padded(&self, rows: usize, cols: usize) -> Mat {
+        assert!(rows >= self.n && cols >= self.k);
+        Mat::from_fn(rows, cols, |i, j| {
+            if i < self.n && j < self.k {
+                self.get(i, j) as f64
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// Recompute `m` from scratch (test/debug helper).
+    pub fn recount(&self) -> Vec<usize> {
+        let mut m = vec![0usize; self.k];
+        for i in 0..self.n {
+            for j in 0..self.k {
+                m[j] += self.z[i * self.k + j] as usize;
+            }
+        }
+        m
+    }
+
+    /// Check the m-consistency invariant.
+    pub fn check_invariants(&self) -> bool {
+        self.m == self.recount() && self.z.len() == self.n * self.k
+    }
+
+    /// Histogram of identical columns (for the lof-prior K_h! term),
+    /// keyed by the column bit-pattern.
+    pub fn column_histogram(&self) -> Vec<usize> {
+        use std::collections::HashMap;
+        let mut counts: HashMap<Vec<u8>, usize> = HashMap::new();
+        for j in 0..self.k {
+            let col: Vec<u8> = (0..self.n).map(|i| self.get(i, j)).collect();
+            *counts.entry(col).or_insert(0) += 1;
+        }
+        counts.into_values().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_maintains_counts() {
+        let mut st = FeatureState::empty(4);
+        st.add_features(3);
+        st.set(0, 0, 1);
+        st.set(1, 0, 1);
+        st.set(2, 2, 1);
+        assert_eq!(st.m(), &[2, 0, 1]);
+        st.set(0, 0, 0);
+        assert_eq!(st.m(), &[1, 0, 1]);
+        st.set(0, 0, 0); // idempotent
+        assert_eq!(st.m(), &[1, 0, 1]);
+        assert!(st.check_invariants());
+    }
+
+    #[test]
+    fn compact_drops_empty_and_returns_mapping() {
+        let mut st = FeatureState::empty(3);
+        st.add_features(4);
+        st.set(0, 1, 1);
+        st.set(2, 3, 1);
+        let keep = st.compact();
+        assert_eq!(keep, vec![1, 3]);
+        assert_eq!(st.k(), 2);
+        assert_eq!(st.m(), &[1, 1]);
+        assert_eq!(st.get(0, 0), 1);
+        assert_eq!(st.get(2, 1), 1);
+        assert!(st.check_invariants());
+    }
+
+    #[test]
+    fn from_mat_roundtrip() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 0.0, 1.0, 0.0, 1.0, 1.0]);
+        let st = FeatureState::from_mat(&m);
+        assert_eq!(st.m(), &[1, 1, 2]);
+        assert!(st.to_mat().max_abs_diff(&m) == 0.0);
+        assert!(st.check_invariants());
+    }
+
+    #[test]
+    fn add_features_preserves_old_bits() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let mut st = FeatureState::from_mat(&m);
+        let first = st.add_features(2);
+        assert_eq!(first, 2);
+        assert_eq!(st.k(), 4);
+        assert_eq!(st.get(0, 0), 1);
+        assert_eq!(st.get(1, 1), 1);
+        assert_eq!(st.get(0, 2), 0);
+        assert!(st.check_invariants());
+    }
+
+    #[test]
+    fn padded_matrix() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let st = FeatureState::from_mat(&m);
+        let p = st.to_mat_padded(4, 5);
+        assert_eq!(p.rows(), 4);
+        assert_eq!(p.cols(), 5);
+        assert_eq!(p[(0, 0)], 1.0);
+        assert_eq!(p[(3, 4)], 0.0);
+    }
+
+    #[test]
+    fn column_histogram_groups_identical() {
+        let m = Mat::from_vec(3, 3, vec![
+            1.0, 1.0, 0.0,
+            0.0, 0.0, 1.0,
+            1.0, 1.0, 0.0,
+        ]);
+        let st = FeatureState::from_mat(&m);
+        let mut h = st.column_histogram();
+        h.sort_unstable();
+        assert_eq!(h, vec![1, 2]);
+    }
+}

@@ -1,0 +1,347 @@
+//! Non-uniform samplers on top of [`Pcg64`].
+//!
+//! Algorithms (all classic, all implemented from the papers since no
+//! `rand_distr` is available offline):
+//! * normal — Marsaglia polar method with spare caching;
+//! * gamma  — Marsaglia & Tsang (2000) squeeze, with the Johnk-style
+//!   `alpha < 1` boost `G(a) = G(a+1) * U^{1/a}` done in log-space;
+//! * beta   — ratio of gammas;
+//! * Poisson — Knuth product-of-uniforms for small mean, PTRS
+//!   (Hörmann 1993) transformed rejection for large mean;
+//! * inverse-gamma — 1/gamma, used for the sigma^2 conditionals;
+//! * categorical — linear scan over normalised weights, plus a log-space
+//!   Gumbel-max variant used by the collapsed new-feature step.
+
+use super::Pcg64;
+
+impl Pcg64 {
+    /// Standard normal via the polar (Marsaglia) method.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare_normal = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Normal with mean/stddev.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Gamma(shape, scale) — Marsaglia & Tsang.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0, "gamma(shape>0, scale>0)");
+        if shape < 1.0 {
+            // boost: G(a) = G(a+1) * U^{1/a}; do the power in log-space to
+            // avoid underflow at tiny shape.
+            let g = self.gamma(shape + 1.0, 1.0);
+            let u = self.uniform();
+            return scale * g * (u.ln() / shape).exp();
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform();
+            let x2 = x * x;
+            if u < 1.0 - 0.0331 * x2 * x2 {
+                return scale * d * v3;
+            }
+            if u.ln() < 0.5 * x2 + d * (1.0 - v3 + v3.ln()) {
+                return scale * d * v3;
+            }
+        }
+    }
+
+    /// Beta(a, b) via the gamma ratio.
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a, 1.0);
+        let y = self.gamma(b, 1.0);
+        let v = x / (x + y);
+        // guard against total underflow at extreme parameters
+        v.clamp(f64::MIN_POSITIVE, 1.0 - f64::EPSILON)
+    }
+
+    /// Inverse-gamma(shape, scale): X = scale / Gamma(shape, 1).
+    pub fn inv_gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        scale / self.gamma(shape, 1.0)
+    }
+
+    /// Poisson(lambda).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        assert!(lambda >= 0.0);
+        if lambda == 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            // Knuth: product of uniforms.
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        }
+        // PTRS transformed rejection (Hörmann 1993).
+        let b = 0.931 + 2.53 * lambda.sqrt();
+        let a = -0.059 + 0.024_83 * b;
+        let inv_alpha = 1.123_9 + 1.132_8 / (b - 3.4);
+        let v_r = 0.9277 - 3.6224 / (b - 2.0);
+        loop {
+            let u = self.uniform() - 0.5;
+            let v = self.uniform();
+            let us = 0.5 - u.abs();
+            let k = ((2.0 * a / us + b) * u + lambda + 0.434_98).floor();
+            if us >= 0.07 && v <= v_r {
+                return k as u64;
+            }
+            if k < 0.0 || (us < 0.013 && v > us) {
+                continue;
+            }
+            let log_accept = k * lambda.ln() - lambda - ln_factorial(k as u64);
+            if (v * inv_alpha / (a / (us * us) + b)).ln() <= log_accept {
+                return k as u64;
+            }
+        }
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Sample an index from unnormalised log-weights (Gumbel-max — exact and
+    /// overflow-safe; used by the collapsed k_new step).
+    pub fn categorical_log(&mut self, logw: &[f64]) -> usize {
+        debug_assert!(!logw.is_empty());
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for (i, &lw) in logw.iter().enumerate() {
+            if lw == f64::NEG_INFINITY {
+                continue;
+            }
+            let g = -(-self.uniform().ln()).ln(); // Gumbel(0,1)
+            let v = lw + g;
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Discrete distribution with precomputed normalised weights; linear-scan
+/// sampling (the support here is always tiny: k_new truncation, p' choice).
+#[derive(Clone, Debug)]
+pub struct Categorical {
+    cdf: Vec<f64>,
+}
+
+impl Categorical {
+    /// Build from unnormalised non-negative weights.
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty());
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical needs positive mass");
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            assert!(w >= 0.0);
+            acc += w / total;
+            cdf.push(acc);
+        }
+        *cdf.last_mut().unwrap() = 1.0;
+        Self { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.uniform();
+        self.cdf.iter().position(|&c| u <= c).unwrap_or(self.cdf.len() - 1)
+    }
+}
+
+/// ln(k!) via Stirling/lgamma — needed by PTRS and the IBP prior.
+pub fn ln_factorial(k: u64) -> f64 {
+    ln_gamma(k as f64 + 1.0)
+}
+
+/// Lanczos log-gamma (g = 7, n = 9 coefficients; |rel err| < 1e-13).
+pub fn ln_gamma(x: f64) -> f64 {
+    assert!(x > 0.0, "ln_gamma domain");
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    let t = x + G + 0.5;
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Pcg64;
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n;
+        (m, v)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(1);
+        let xs: Vec<f64> = (0..200_000).map(|_| rng.normal()).collect();
+        let (m, v) = moments(&xs);
+        assert!(m.abs() < 0.01, "mean={m}");
+        assert!((v - 1.0).abs() < 0.02, "var={v}");
+        // tail sanity: ~2.3% beyond 2 sigma each side
+        let frac = xs.iter().filter(|x| x.abs() > 2.0).count() as f64 / xs.len() as f64;
+        assert!((frac - 0.0455).abs() < 0.005, "frac={frac}");
+    }
+
+    #[test]
+    fn gamma_moments_large_and_small_shape() {
+        let mut rng = Pcg64::new(2);
+        for &(shape, scale) in &[(4.5, 2.0), (0.3, 1.5), (1.0, 1.0), (50.0, 0.1)] {
+            let xs: Vec<f64> = (0..100_000).map(|_| rng.gamma(shape, scale)).collect();
+            let (m, v) = moments(&xs);
+            let want_m = shape * scale;
+            let want_v = shape * scale * scale;
+            assert!((m - want_m).abs() < 0.05 * want_m.max(0.2), "shape={shape} m={m} want {want_m}");
+            assert!((v - want_v).abs() < 0.15 * want_v.max(0.2), "shape={shape} v={v} want {want_v}");
+            assert!(xs.iter().all(|x| *x > 0.0));
+        }
+    }
+
+    #[test]
+    fn beta_moments() {
+        let mut rng = Pcg64::new(3);
+        for &(a, b) in &[(2.0, 3.0), (0.5, 0.5), (10.0, 1.0)] {
+            let xs: Vec<f64> = (0..100_000).map(|_| rng.beta(a, b)).collect();
+            let (m, _) = moments(&xs);
+            let want = a / (a + b);
+            assert!((m - want).abs() < 0.01, "a={a} b={b} m={m}");
+            assert!(xs.iter().all(|x| *x > 0.0 && *x < 1.0));
+        }
+    }
+
+    #[test]
+    fn poisson_moments_small_and_large() {
+        let mut rng = Pcg64::new(4);
+        for &lam in &[0.01, 0.7, 5.0, 29.9, 60.0, 400.0] {
+            let n = 60_000;
+            let xs: Vec<f64> = (0..n).map(|_| rng.poisson(lam) as f64).collect();
+            let (m, v) = moments(&xs);
+            let tol = 4.0 * (lam / n as f64).sqrt() + 0.02;
+            assert!((m - lam).abs() < tol.max(0.02 * lam), "lam={lam} m={m}");
+            assert!((v - lam).abs() < 0.1 * lam.max(1.0), "lam={lam} v={v}");
+        }
+    }
+
+    #[test]
+    fn poisson_zero() {
+        let mut rng = Pcg64::new(5);
+        assert_eq!(rng.poisson(0.0), 0);
+    }
+
+    #[test]
+    fn inv_gamma_mean() {
+        let mut rng = Pcg64::new(6);
+        // mean = scale / (shape - 1) for shape > 1
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.inv_gamma(5.0, 8.0)).collect();
+        let (m, _) = moments(&xs);
+        assert!((m - 2.0).abs() < 0.05, "m={m}");
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut rng = Pcg64::new(7);
+        let dist = Categorical::new(&[1.0, 2.0, 7.0]);
+        let mut counts = [0usize; 3];
+        for _ in 0..100_000 {
+            counts[dist.sample(&mut rng)] += 1;
+        }
+        assert!((counts[0] as f64 / 1e5 - 0.1).abs() < 0.01);
+        assert!((counts[1] as f64 / 1e5 - 0.2).abs() < 0.01);
+        assert!((counts[2] as f64 / 1e5 - 0.7).abs() < 0.01);
+    }
+
+    #[test]
+    fn categorical_log_matches_linear() {
+        let mut rng = Pcg64::new(8);
+        let w = [0.2f64, 0.5, 0.3];
+        let logw: Vec<f64> = w.iter().map(|x| x.ln()).collect();
+        let mut counts = [0usize; 3];
+        for _ in 0..100_000 {
+            counts[rng.categorical_log(&logw)] += 1;
+        }
+        for i in 0..3 {
+            assert!((counts[i] as f64 / 1e5 - w[i]).abs() < 0.012, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn categorical_log_ignores_neg_inf() {
+        let mut rng = Pcg64::new(9);
+        let logw = [f64::NEG_INFINITY, 0.0, f64::NEG_INFINITY];
+        for _ in 0..100 {
+            assert_eq!(rng.categorical_log(&logw), 1);
+        }
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-9);
+        assert!((ln_factorial(10) - 3_628_800f64.ln()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn bernoulli_frequency() {
+        let mut rng = Pcg64::new(10);
+        let hits = (0..100_000).filter(|_| rng.bernoulli(0.3)).count();
+        assert!((hits as f64 / 1e5 - 0.3).abs() < 0.01);
+    }
+}

@@ -1,0 +1,238 @@
+//! Deterministic, splittable random-number generation.
+//!
+//! The offline image ships no `rand` crate, so this module implements the
+//! full stack from scratch:
+//!
+//! * [`Pcg64`] — PCG XSL-RR 128/64 (O'Neill 2014), the main engine. 128-bit
+//!   LCG state with xor-shift-rotate output; passes BigCrush, tiny state,
+//!   trivially seedable.
+//! * [`SplitMix64`] — used only to expand user seeds into full PCG state.
+//! * `distributions` — uniform / normal / gamma / beta / Poisson /
+//!   Bernoulli / categorical samplers built on the engine.
+//!
+//! Reproducibility contract: every sampler / worker derives its own stream
+//! via [`Pcg64::split`] (distinct odd increment ⇒ independent sequence), so
+//! a run is a pure function of the root seed regardless of thread
+//! interleaving. The same streams feed the AOT kernels (uniforms are drawn
+//! here and shipped into the HLO executables as inputs).
+
+pub mod distributions;
+
+pub use distributions::Categorical;
+
+const PCG_MUL: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// SplitMix64 — seed expander (Steele, Lea & Flood 2014).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG XSL-RR 128/64: the repo-wide PRNG engine.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // must be odd
+    /// Cached second normal from the polar method.
+    spare_normal: Option<f64>,
+}
+
+impl Pcg64 {
+    /// Seed from a single u64 (expanded through SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let inc = (((sm.next_u64() as u128) << 64) | sm.next_u64() as u128) | 1;
+        let mut rng = Self { state, inc, spare_normal: None };
+        rng.next_u64(); // burn in: mix the seed into the state
+        rng
+    }
+
+    /// Derive an independent stream (distinct increment ⇒ disjoint
+    /// sequence). `tag` makes the derivation deterministic and collision-
+    /// free per call site: worker p uses `root.split(p as u64)`.
+    pub fn split(&self, tag: u64) -> Self {
+        let mut sm = SplitMix64::new(
+            (self.state as u64) ^ (self.state >> 64) as u64 ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        );
+        let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let inc = (((sm.next_u64() as u128) << 64) | sm.next_u64() as u128) | 1;
+        let mut rng = Self { state, inc, spare_normal: None };
+        rng.next_u64();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MUL).wrapping_add(self.inc);
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in the open interval (0, 1) — never exactly 0 or 1, so it is
+    /// always safe inside log() / logit().
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits, then nudge off zero.
+        let u = (self.next_u64() >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0);
+        if u <= 0.0 {
+            f64::MIN_POSITIVE
+        } else {
+            u
+        }
+    }
+
+    /// Uniform f32 in (0,1) — what the AOT kernels consume.
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        let u = (self.next_u64() >> 40) as f32 * (1.0 / 16_777_216.0);
+        u.max(f32::MIN_POSITIVE)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift with rejection for exact uniformity.
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fill a buffer with uniforms in (0,1) as f32 (kernel input format).
+    pub fn fill_uniform_f32(&mut self, buf: &mut [f32]) {
+        for v in buf.iter_mut() {
+            *v = self.uniform_f32();
+        }
+    }
+
+    /// Fill a buffer with standard normals as f32 (kernel input format).
+    pub fn fill_normal_f32(&mut self, buf: &mut [f32]) {
+        for v in buf.iter_mut() {
+            *v = self.normal() as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_deterministic() {
+        let root = Pcg64::new(7);
+        let mut s1 = root.split(0);
+        let mut s2 = root.split(1);
+        let mut s1b = root.split(0);
+        for _ in 0..50 {
+            assert_eq!(s1.next_u64(), s1b.next_u64());
+        }
+        let mut s2_vals = vec![];
+        for _ in 0..50 {
+            s2_vals.push(s2.next_u64());
+        }
+        let mut s1c = root.split(0);
+        let matches = s2_vals.iter().filter(|v| **v == s1c.next_u64()).count();
+        assert!(matches <= 1);
+    }
+
+    #[test]
+    fn uniform_in_open_interval() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!(u > 0.0 && u < 1.0);
+            let uf = rng.uniform_f32();
+            assert!(uf > 0.0 && uf < 1.0);
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut rng = Pcg64::new(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let u = rng.uniform();
+            s += u;
+            s2 += u * u;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn below_is_unbiased() {
+        let mut rng = Pcg64::new(5);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Pcg64::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,275 @@
+//! Experiment runner: the glue that `main`, the examples and the bench
+//! harness share. Builds the dataset from a [`RunConfig`], drives the
+//! selected sampler, evaluates the held-out joint log-likelihood on a
+//! schedule, and returns the Figure-1 [`Trace`].
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{RunConfig, SamplerKind};
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::data::cambridge::{self, CambridgeConfig};
+use crate::data::{loader, synth, Dataset};
+use crate::linalg::Mat;
+use crate::metrics::{Trace, TracePoint};
+use crate::model::{GlobalParams, LinGauss};
+use crate::rng::Pcg64;
+use crate::samplers::collapsed::{CollapsedGibbs, Mode};
+use crate::samplers::eval::HeldoutEval;
+use crate::samplers::uncollapsed::UncollapsedGibbs;
+use crate::samplers::SamplerOptions;
+
+/// Build the dataset named by the config.
+pub fn build_dataset(cfg: &RunConfig) -> Result<Dataset> {
+    match cfg.dataset.as_str() {
+        "cambridge" => Ok(cambridge::generate(&CambridgeConfig {
+            n: cfg.n,
+            k_true: cfg.k_true,
+            activation: 0.5,
+            sigma_x: cfg.data_sigma_x,
+            seed: cfg.seed,
+        })
+        .0),
+        "synth" => Ok(synth::generate(&synth::SynthConfig {
+            n: cfg.n,
+            dim: cfg.dim,
+            alpha: cfg.alpha,
+            sigma_a: cfg.sigma_a,
+            sigma_x: cfg.data_sigma_x,
+            seed: cfg.seed,
+        })
+        .0),
+        path if path.ends_with(".csv") => {
+            let x = loader::read_csv(Path::new(path))?;
+            Ok(Dataset { x, name: path.to_string() })
+        }
+        other => bail!("unknown dataset '{other}' (cambridge|synth|<file>.csv)"),
+    }
+}
+
+fn sampler_options(cfg: &RunConfig) -> SamplerOptions {
+    SamplerOptions {
+        kmax_new: cfg.kmax_new,
+        sample_alpha: cfg.sample_hypers,
+        sample_sigmas: cfg.sample_hypers,
+        k_cap: cfg.k_cap,
+        ..Default::default()
+    }
+}
+
+/// The outcome of a run: the convergence trace plus final state views.
+pub struct RunOutcome {
+    pub trace: Trace,
+    pub final_k: usize,
+    pub final_params: GlobalParams,
+    /// Posterior feature loadings at the end (K × D) — Figure-2 input.
+    pub features: Mat,
+    /// Total virtual seconds (hybrid) or wall seconds (serial samplers).
+    pub elapsed_s: f64,
+}
+
+/// Run the configured sampler for `cfg.iters` iterations.
+///
+/// Progress callback fires after every iteration with (iter, trace-point
+/// just recorded if any).
+pub fn run(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOutcome> {
+    cfg.validate()?;
+    let ds = build_dataset(cfg)?;
+    let (train, test) = if cfg.heldout_frac > 0.0 {
+        ds.split_heldout(cfg.heldout_frac)
+    } else {
+        (ds.clone(), ds)
+    };
+    let lg = LinGauss::new(cfg.sigma_x, cfg.sigma_a);
+    let mut eval_rng = Pcg64::new(cfg.seed).split(7777);
+    let mut evaluator = HeldoutEval::new(test.x.clone(), cfg.eval_sweeps);
+    let label = format!("{}-p{}", cfg.sampler.name(), cfg.processors);
+    let mut trace = Trace::new(label);
+
+    match cfg.sampler {
+        SamplerKind::Hybrid => {
+            let ccfg = CoordinatorConfig {
+                processors: cfg.processors,
+                sub_iters: cfg.sub_iters,
+                seed: cfg.seed,
+                lg,
+                alpha: cfg.alpha,
+                opts: sampler_options(cfg),
+                backend: cfg.backend,
+                artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
+                comm: cfg.comm,
+            };
+            let mut coord =
+                Coordinator::new(&train.x, ccfg).context("starting coordinator")?;
+            let wall0 = Instant::now();
+            for i in 0..cfg.iters {
+                let rec = coord.step()?;
+                if i % cfg.eval_every == 0 || i + 1 == cfg.iters {
+                    let h = evaluator.evaluate(coord.params(), &mut eval_rng);
+                    trace.push(TracePoint {
+                        iter: rec.iter,
+                        vtime_s: rec.vtime_total_s,
+                        wall_s: wall0.elapsed().as_secs_f64(),
+                        heldout: h,
+                        k: rec.k,
+                        sigma_x: rec.sigma_x,
+                        alpha: rec.alpha,
+                    });
+                }
+                progress(i);
+            }
+            let params = coord.params().clone();
+            Ok(RunOutcome {
+                final_k: params.k(),
+                features: params.a.clone(),
+                elapsed_s: coord.clock.elapsed_s(),
+                final_params: params,
+                trace,
+            })
+        }
+        SamplerKind::Collapsed | SamplerKind::Accelerated => {
+            let mode = if cfg.sampler == SamplerKind::Collapsed {
+                Mode::Exact
+            } else {
+                Mode::Predictive
+            };
+            let mut rng = Pcg64::new(cfg.seed).split(2);
+            let mut s = CollapsedGibbs::new(
+                train.x.clone(), lg, cfg.alpha, mode, sampler_options(cfg), &mut rng,
+            );
+            let wall0 = Instant::now();
+            for i in 0..cfg.iters {
+                let rec = s.step(&mut rng);
+                if i % cfg.eval_every == 0 || i + 1 == cfg.iters {
+                    // draw (A, π) from their conditionals so the held-out
+                    // metric is the same joint as the hybrid's
+                    let params = collapsed_params(&s, &mut rng);
+                    let h = evaluator.evaluate(&params, &mut eval_rng);
+                    trace.push(TracePoint {
+                        iter: rec.iter,
+                        vtime_s: wall0.elapsed().as_secs_f64(),
+                        wall_s: wall0.elapsed().as_secs_f64(),
+                        heldout: h,
+                        k: rec.k,
+                        sigma_x: rec.sigma_x,
+                        alpha: rec.alpha,
+                    });
+                }
+                progress(i);
+            }
+            let params = collapsed_params(&s, &mut rng);
+            Ok(RunOutcome {
+                final_k: params.k(),
+                features: params.a.clone(),
+                elapsed_s: wall0.elapsed().as_secs_f64(),
+                final_params: params,
+                trace,
+            })
+        }
+        SamplerKind::Uncollapsed => {
+            let mut rng = Pcg64::new(cfg.seed).split(3);
+            let k_fixed = cfg.k_cap.min(16);
+            let mut s = UncollapsedGibbs::new(
+                train.x.clone(), k_fixed, lg, cfg.alpha, sampler_options(cfg), &mut rng,
+            );
+            let wall0 = Instant::now();
+            for i in 0..cfg.iters {
+                let rec = s.step(&mut rng);
+                if i % cfg.eval_every == 0 || i + 1 == cfg.iters {
+                    let h = evaluator.evaluate(&s.params, &mut eval_rng);
+                    trace.push(TracePoint {
+                        iter: rec.iter,
+                        vtime_s: wall0.elapsed().as_secs_f64(),
+                        wall_s: wall0.elapsed().as_secs_f64(),
+                        heldout: h,
+                        k: rec.k,
+                        sigma_x: rec.sigma_x,
+                        alpha: rec.alpha,
+                    });
+                }
+                progress(i);
+            }
+            Ok(RunOutcome {
+                final_k: s.params.k(),
+                features: s.params.a.clone(),
+                elapsed_s: wall0.elapsed().as_secs_f64(),
+                final_params: s.params.clone(),
+                trace,
+            })
+        }
+    }
+}
+
+/// Draw (A, π) from their conditionals given a collapsed sampler's state,
+/// making its held-out metric comparable with the hybrid's.
+pub fn collapsed_params(s: &CollapsedGibbs, rng: &mut Pcg64) -> GlobalParams {
+    let zm = s.z.to_mat();
+    let n = s.x.rows();
+    let k = s.z.k();
+    if k == 0 {
+        return GlobalParams {
+            a: Mat::zeros(0, s.x.cols()),
+            pi: vec![],
+            lg: s.lg,
+            alpha: s.alpha,
+        };
+    }
+    let ztz = zm.gram();
+    let ztx = zm.t_matmul(&s.x);
+    GlobalParams {
+        a: s.lg.apost_sample(&ztz, &ztx, rng),
+        pi: crate::model::ibp::sample_pi(s.z.m(), n, rng),
+        lg: s.lg,
+        alpha: s.alpha,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(sampler: SamplerKind) -> RunConfig {
+        RunConfig {
+            n: 60,
+            iters: 8,
+            eval_every: 2,
+            sampler,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn runs_every_sampler_kind() {
+        for kind in [
+            SamplerKind::Hybrid,
+            SamplerKind::Collapsed,
+            SamplerKind::Accelerated,
+            SamplerKind::Uncollapsed,
+        ] {
+            let out = run(&tiny(kind), |_| {}).unwrap();
+            assert!(!out.trace.points.is_empty(), "{kind:?}");
+            assert!(out.trace.last().unwrap().heldout.is_finite(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn dataset_selection() {
+        let mut cfg = tiny(SamplerKind::Hybrid);
+        assert_eq!(build_dataset(&cfg).unwrap().dim(), 36);
+        cfg.dataset = "synth".into();
+        cfg.dim = 12;
+        assert_eq!(build_dataset(&cfg).unwrap().dim(), 12);
+        cfg.dataset = "nope".into();
+        assert!(build_dataset(&cfg).is_err());
+    }
+
+    #[test]
+    fn hybrid_multi_processor_runs() {
+        let mut cfg = tiny(SamplerKind::Hybrid);
+        cfg.processors = 3;
+        let out = run(&cfg, |_| {}).unwrap();
+        assert!(out.elapsed_s > 0.0);
+    }
+}

@@ -1,0 +1,205 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime.
+//!
+//! Every AOT-lowered executable is described by an [`Entry`]: graph name,
+//! static bucket sizes (B rows, K features, D dims) and the exact rank-2
+//! f32 input/output shapes. The runtime pads live data up to the smallest
+//! fitting bucket (masked rows/features are inert by construction — see
+//! the kernel docstrings).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: (usize, usize),
+}
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    /// Row bucket (None for row-independent graphs like `apost`).
+    pub b: Option<usize>,
+    pub k: usize,
+    pub d: usize,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub rows: Vec<usize>,
+    pub feats: Vec<usize>,
+    pub dims: Vec<usize>,
+    pub entries: Vec<Entry>,
+}
+
+fn specs(v: &Json, what: &str) -> Result<Vec<TensorSpec>> {
+    let arr = v.as_arr().with_context(|| format!("{what} must be an array"))?;
+    arr.iter()
+        .map(|pair| {
+            let p = pair.as_arr().context("tensor spec must be [name, shape]")?;
+            let name = p[0].as_str().context("tensor name")?.to_string();
+            let s = p[1].as_arr().context("tensor shape")?;
+            if s.len() != 2 {
+                bail!("tensor '{name}' is not rank-2");
+            }
+            Ok(TensorSpec {
+                name,
+                shape: (
+                    s[0].as_usize().context("dim 0")?,
+                    s[1].as_usize().context("dim 1")?,
+                ),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = Json::parse(&text)?;
+        let version = v.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let list = |key: &str| -> Vec<usize> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default()
+        };
+        let mut entries = Vec::new();
+        for e in v.get("entries").and_then(Json::as_arr).context("entries")? {
+            entries.push(Entry {
+                name: e.get("name").and_then(Json::as_str).context("name")?.into(),
+                b: e.get("b").and_then(Json::as_usize),
+                k: e.get("k").and_then(Json::as_usize).context("k")?,
+                d: e.get("d").and_then(Json::as_usize).context("d")?,
+                file: e.get("file").and_then(Json::as_str).context("file")?.into(),
+                inputs: specs(e.get("inputs").context("inputs")?, "inputs")?,
+                outputs: specs(e.get("outputs").context("outputs")?, "outputs")?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            rows: list("rows"),
+            feats: list("feats"),
+            dims: list("dims"),
+            entries,
+        })
+    }
+
+    /// Smallest bucket entry `name` that fits (b_need rows, k_need feats,
+    /// exactly d dims). For row-free graphs pass `b_need = 0`.
+    pub fn pick(&self, name: &str, b_need: usize, k_need: usize, d: usize) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.name == name
+                    && e.d == d
+                    && e.k >= k_need
+                    && e.b.map_or(b_need == 0, |b| b >= b_need)
+            })
+            .min_by_key(|e| (e.k, e.b.unwrap_or(0)))
+            .with_context(|| {
+                format!(
+                    "no artifact for {name} with b≥{b_need}, k≥{k_need}, d={d} \
+                     (available feats {:?}, rows {:?}; re-run aot.py with bigger buckets)",
+                    self.feats, self.rows
+                )
+            })
+    }
+
+    /// Largest row bucket available for `name` (used for chunking).
+    pub fn max_rows(&self, name: &str, d: usize) -> Option<usize> {
+        self.entries
+            .iter()
+            .filter(|e| e.name == name && e.d == d)
+            .filter_map(|e| e.b)
+            .max()
+    }
+
+    pub fn path_of(&self, e: &Entry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_repo_manifest() {
+        let Some(m) = repo_artifacts() else { return };
+        assert!(m.entries.len() >= 20);
+        assert!(m.feats.contains(&8));
+        for e in &m.entries {
+            assert!(m.path_of(e).exists(), "{} missing", e.file);
+        }
+    }
+
+    #[test]
+    fn pick_selects_smallest_fitting_bucket() {
+        let Some(m) = repo_artifacts() else { return };
+        let e = m.pick("zsweep", 100, 5, 36).unwrap();
+        assert_eq!(e.b, Some(256));
+        assert_eq!(e.k, 8);
+        let e = m.pick("zsweep", 300, 9, 36).unwrap();
+        assert_eq!(e.b, Some(1024));
+        assert_eq!(e.k, 16);
+        let e = m.pick("apost", 0, 20, 36).unwrap();
+        assert_eq!(e.k, 32);
+        assert!(m.pick("zsweep", 5000, 5, 36).is_err());
+        assert!(m.pick("zsweep", 100, 5, 17).is_err());
+        assert!(m.pick("nope", 1, 1, 36).is_err());
+    }
+
+    #[test]
+    fn entry_shapes_consistent() {
+        let Some(m) = repo_artifacts() else { return };
+        for e in &m.entries {
+            if e.name == "zsweep" {
+                let b = e.b.unwrap();
+                let byname: std::collections::HashMap<_, _> =
+                    e.inputs.iter().map(|t| (t.name.as_str(), t.shape)).collect();
+                assert_eq!(byname["x"], (b, e.d));
+                assert_eq!(byname["z"], (b, e.k));
+                assert_eq!(byname["a"], (e.k, e.d));
+                assert_eq!(byname["u"], (b, e.k));
+                assert_eq!(byname["inv2s2"], (1, 1));
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let dir = std::env::temp_dir().join("pibp_bad_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 9}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 1, "entries": []}"#)
+            .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,306 @@
+//! Typed executors: the bridge between the samplers' f64/dynamic-K world
+//! and the static-bucket f32 artifacts.
+//!
+//! Each op pads live data into the smallest fitting (B, K) bucket —
+//! masked rows/features are inert by kernel construction — runs the AOT
+//! executable, and crops the results back. Shards larger than the biggest
+//! row bucket are chunked (valid for every op here except
+//! `collapsed_loglik`, whose marginal does not decompose over rows).
+
+use anyhow::{bail, Result};
+
+use super::pjrt::{Engine, F32Mat};
+use crate::linalg::Mat;
+use crate::model::state::FeatureState;
+use crate::rng::Pcg64;
+
+pub struct Ops<'e> {
+    pub engine: &'e Engine,
+}
+
+impl<'e> Ops<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        Self { engine }
+    }
+
+    /// One uncollapsed Gibbs sweep over all rows of a shard (the hybrid
+    /// worker hot path). Updates `z` in place; returns the new residual
+    /// matrix X − Z A for the shard.
+    ///
+    /// Uniforms are drawn from `rng` for the *live* (row, k) lattice only,
+    /// row-major — the same consumption order as the native sweep.
+    pub fn zsweep(
+        &self,
+        x: &Mat,
+        z: &mut FeatureState,
+        a: &Mat,
+        prior_logit: &[f64],
+        inv2s2: f64,
+        rng: &mut Pcg64,
+    ) -> Result<Mat> {
+        let b_total = x.rows();
+        let d = x.cols();
+        let k = a.rows();
+        assert_eq!(z.k(), k, "feature-state K must match A");
+        assert_eq!(prior_logit.len(), k);
+        let mut resid = Mat::zeros(b_total, d);
+        let max_b = self
+            .engine
+            .manifest
+            .max_rows("zsweep", d)
+            .unwrap_or(b_total.max(1));
+        let mut start = 0;
+        while start < b_total {
+            let chunk = (b_total - start).min(max_b);
+            self.zsweep_chunk(
+                x, z, a, prior_logit, inv2s2, start, chunk, &mut resid, rng,
+            )?;
+            start += chunk;
+        }
+        Ok(resid)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn zsweep_chunk(
+        &self,
+        x: &Mat,
+        z: &mut FeatureState,
+        a: &Mat,
+        prior_logit: &[f64],
+        inv2s2: f64,
+        row0: usize,
+        rows: usize,
+        resid: &mut Mat,
+        rng: &mut Pcg64,
+    ) -> Result<()> {
+        let d = x.cols();
+        let k = a.rows();
+        let entry = self.engine.manifest.pick("zsweep", rows, k.max(1), d)?;
+        let (bp, kp) = (entry.b.unwrap(), entry.k);
+
+        let mut xb = F32Mat::zeros(bp, d);
+        let mut zb = F32Mat::zeros(bp, kp);
+        let mut ab = F32Mat::zeros(kp, d);
+        let mut plb = F32Mat::from_vec(1, kp, vec![-1e30; kp]);
+        let mut ub = F32Mat::zeros(bp, kp);
+        let mut rm = F32Mat::zeros(bp, 1);
+        for i in 0..rows {
+            let src = x.row(row0 + i);
+            for j in 0..d {
+                xb.set(i, j, src[j] as f32);
+            }
+            for kk in 0..k {
+                zb.set(i, kk, z.get(row0 + i, kk) as f32);
+                ub.set(i, kk, rng.uniform_f32());
+            }
+            rm.set(i, 0, 1.0);
+        }
+        ab.paste_f64(a);
+        for kk in 0..k {
+            plb.set(0, kk, prior_logit[kk] as f32);
+        }
+        let out = self.engine.run(
+            entry,
+            &[xb, zb, ab, plb, ub, F32Mat::scalar(inv2s2 as f32), rm],
+        )?;
+        let z_new = &out[0];
+        let r_new = &out[1];
+        for i in 0..rows {
+            for kk in 0..k {
+                z.set(row0 + i, kk, z_new.get(i, kk) as u8);
+            }
+            let dst = resid.row_mut(row0 + i);
+            for j in 0..d {
+                dst[j] = r_new.get(i, j) as f64;
+            }
+        }
+        Ok(())
+    }
+
+    /// Local sufficient statistics (ZᵀZ, ZᵀX) for a shard, chunked.
+    pub fn suffstats(&self, z: &FeatureState, x: &Mat) -> Result<(Mat, Mat)> {
+        let b_total = x.rows();
+        let d = x.cols();
+        let k = z.k();
+        if k == 0 {
+            return Ok((Mat::zeros(0, 0), Mat::zeros(0, d)));
+        }
+        let max_b = self
+            .engine
+            .manifest
+            .max_rows("suffstats", d)
+            .unwrap_or(b_total.max(1));
+        let mut ztz = Mat::zeros(k, k);
+        let mut ztx = Mat::zeros(k, d);
+        let mut start = 0;
+        while start < b_total {
+            let rows = (b_total - start).min(max_b);
+            let entry = self.engine.manifest.pick("suffstats", rows, k, d)?;
+            let (bp, kp) = (entry.b.unwrap(), entry.k);
+            let mut zb = F32Mat::zeros(bp, kp);
+            let mut xb = F32Mat::zeros(bp, d);
+            let mut rm = F32Mat::zeros(bp, 1);
+            for i in 0..rows {
+                for kk in 0..k {
+                    zb.set(i, kk, z.get(start + i, kk) as f32);
+                }
+                let src = x.row(start + i);
+                for j in 0..d {
+                    xb.set(i, j, src[j] as f32);
+                }
+                rm.set(i, 0, 1.0);
+            }
+            let out = self.engine.run(entry, &[zb, xb, rm])?;
+            ztz.add_assign(&out[0].crop_f64(k, k));
+            ztx.add_assign(&out[1].crop_f64(k, d));
+            start += rows;
+        }
+        Ok((ztz, ztx))
+    }
+
+    /// Master step: draw A | suff-stats from its matrix-normal posterior
+    /// on-device. Standard normals come from `rng` (reproducibility).
+    pub fn apost(
+        &self,
+        ztz: &Mat,
+        ztx: &Mat,
+        sigma_x: f64,
+        sigma_a: f64,
+        rng: &mut Pcg64,
+    ) -> Result<Mat> {
+        let k = ztz.rows();
+        let d = ztx.cols();
+        if k == 0 {
+            return Ok(Mat::zeros(0, d));
+        }
+        let entry = self.engine.manifest.pick("apost", 0, k, d)?;
+        let kp = entry.k;
+        let mut ztzb = F32Mat::zeros(kp, kp);
+        let mut ztxb = F32Mat::zeros(kp, d);
+        let mut eps = F32Mat::zeros(kp, d);
+        let mut km = F32Mat::zeros(1, kp);
+        ztzb.paste_f64(ztz);
+        ztxb.paste_f64(ztx);
+        // draw normals only for live rows (same count as the native path)
+        for i in 0..k {
+            for j in 0..d {
+                eps.set(i, j, rng.normal() as f32);
+            }
+            km.set(0, i, 1.0);
+        }
+        let out = self.engine.run(
+            entry,
+            &[ztzb, ztxb, eps, F32Mat::scalar(sigma_x as f32),
+              F32Mat::scalar(sigma_a as f32), km],
+        )?;
+        Ok(out[0].crop_f64(k, d))
+    }
+
+    /// Held-out joint log P(X, Z | A, π) (Figure-1 metric), chunked.
+    pub fn heldout(
+        &self,
+        x: &Mat,
+        z: &FeatureState,
+        a: &Mat,
+        pi: &[f64],
+        sigma_x: f64,
+    ) -> Result<f64> {
+        let b_total = x.rows();
+        let d = x.cols();
+        let k = a.rows();
+        if k == 0 {
+            let lg = crate::model::LinGauss::new(sigma_x, 1.0);
+            return Ok(lg.loglik(x, &Mat::zeros(b_total, 0), &Mat::zeros(0, d)));
+        }
+        let inv2s2 = 1.0 / (2.0 * sigma_x * sigma_x);
+        let logdet_term =
+            -0.5 * d as f64 * (crate::model::lingauss::LN_2PI + 2.0 * sigma_x.ln());
+        let max_b = self
+            .engine
+            .manifest
+            .max_rows("heldout", d)
+            .unwrap_or(b_total.max(1));
+        let mut total = 0.0;
+        let mut start = 0;
+        while start < b_total {
+            let rows = (b_total - start).min(max_b);
+            let entry = self.engine.manifest.pick("heldout", rows, k, d)?;
+            let (bp, kp) = (entry.b.unwrap(), entry.k);
+            let mut xb = F32Mat::zeros(bp, d);
+            let mut zb = F32Mat::zeros(bp, kp);
+            let mut ab = F32Mat::zeros(kp, d);
+            let mut lp = F32Mat::zeros(1, kp);
+            let mut l1p = F32Mat::zeros(1, kp);
+            let mut rm = F32Mat::zeros(bp, 1);
+            let mut km = F32Mat::zeros(1, kp);
+            for i in 0..rows {
+                let src = x.row(start + i);
+                for j in 0..d {
+                    xb.set(i, j, src[j] as f32);
+                }
+                for kk in 0..k {
+                    zb.set(i, kk, z.get(start + i, kk) as f32);
+                }
+                rm.set(i, 0, 1.0);
+            }
+            ab.paste_f64(a);
+            for kk in 0..k {
+                let p = pi[kk].clamp(1e-12, 1.0 - 1e-12);
+                lp.set(0, kk, p.ln() as f32);
+                l1p.set(0, kk, (1.0 - p).ln() as f32);
+                km.set(0, kk, 1.0);
+            }
+            let out = self.engine.run(
+                entry,
+                &[xb, zb, ab, lp, l1p, F32Mat::scalar(inv2s2 as f32),
+                  F32Mat::scalar(logdet_term as f32), rm, km],
+            )?;
+            total += out[0].get(0, 0) as f64;
+            start += rows;
+        }
+        Ok(total)
+    }
+
+    /// Collapsed marginal log P(X | Z) on-device (validation path; no
+    /// chunking — the marginal does not decompose over rows).
+    pub fn collapsed_loglik(
+        &self,
+        x: &Mat,
+        z: &FeatureState,
+        sigma_x: f64,
+        sigma_a: f64,
+    ) -> Result<f64> {
+        let b = x.rows();
+        let d = x.cols();
+        let k = z.k();
+        let max_b = self.engine.manifest.max_rows("collapsed_loglik", d).unwrap_or(0);
+        if b > max_b {
+            bail!("collapsed_loglik artifact caps at {max_b} rows, got {b}");
+        }
+        let entry = self.engine.manifest.pick("collapsed_loglik", b, k.max(1), d)?;
+        let (bp, kp) = (entry.b.unwrap(), entry.k);
+        let mut xb = F32Mat::zeros(bp, d);
+        let mut zb = F32Mat::zeros(bp, kp);
+        let mut km = F32Mat::zeros(1, kp);
+        let mut rm = F32Mat::zeros(bp, 1);
+        for i in 0..b {
+            let src = x.row(i);
+            for j in 0..d {
+                xb.set(i, j, src[j] as f32);
+            }
+            for kk in 0..k {
+                zb.set(i, kk, z.get(i, kk) as f32);
+            }
+            rm.set(i, 0, 1.0);
+        }
+        for kk in 0..k {
+            km.set(0, kk, 1.0);
+        }
+        let out = self.engine.run(
+            entry,
+            &[xb, zb, F32Mat::scalar(sigma_x as f32),
+              F32Mat::scalar(sigma_a as f32), km, rm],
+        )?;
+        Ok(out[0].get(0, 0) as f64)
+    }
+}

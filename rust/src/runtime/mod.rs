@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them from the rust hot path. Python never runs at inference time.
+//!
+//! * [`artifact::Manifest`] — the shape/bucket contract with `aot.py`.
+//! * [`pjrt::Engine`] — CPU PJRT client + compile cache.
+//! * [`exec::Ops`] — typed, padding-aware ops (zsweep / suffstats /
+//!   apost / heldout / collapsed_loglik); every op has a native-rust twin
+//!   in `samplers`/`model` that integration tests pin it against.
+
+pub mod artifact;
+pub mod exec;
+pub mod pjrt;
+
+pub use artifact::Manifest;
+pub use exec::Ops;
+pub use pjrt::{Engine, F32Mat};

@@ -1,0 +1,187 @@
+//! PJRT execution engine: loads AOT-lowered HLO text, compiles it once on
+//! the CPU PJRT client, memoises the executable, and runs it on f32
+//! buffers. Adapted from the smoke-verified /opt/xla-example/load_hlo
+//! pattern (HLO *text* interchange — see DESIGN.md).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{Entry, Manifest};
+
+/// A rank-2 f32 host buffer — the only tensor type that crosses the
+/// rust ⇄ PJRT boundary (manifest contract).
+#[derive(Clone, Debug, PartialEq)]
+pub struct F32Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl F32Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { rows: 1, cols: 1, data: vec![v] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Copy an f64 matrix into the top-left corner.
+    pub fn paste_f64(&mut self, src: &crate::linalg::Mat) {
+        assert!(src.rows() <= self.rows && src.cols() <= self.cols);
+        for i in 0..src.rows() {
+            let base = i * self.cols;
+            for j in 0..src.cols() {
+                self.data[base + j] = src[(i, j)] as f32;
+            }
+        }
+    }
+
+    /// Extract the top-left block into an f64 matrix.
+    pub fn crop_f64(&self, rows: usize, cols: usize) -> crate::linalg::Mat {
+        assert!(rows <= self.rows && cols <= self.cols);
+        crate::linalg::Mat::from_fn(rows, cols, |i, j| self.get(i, j) as f64)
+    }
+}
+
+/// Compiles + memoises executables for one manifest on one PJRT client.
+///
+/// Not `Send`: PJRT wrapper types hold raw pointers. Each coordinator
+/// worker thread owns its own `Engine` (CPU client construction is cheap
+/// relative to the per-run compile cache it amortises).
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Executions performed (metrics).
+    pub exec_count: RefCell<usize>,
+}
+
+impl Engine {
+    /// Load the manifest and create a CPU PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    /// Compile (or fetch memoised) the executable for an entry.
+    fn executable(&self, entry: &Entry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&entry.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf-8")?,
+        )
+        .map_err(to_anyhow)
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(to_anyhow)
+            .with_context(|| format!("compiling {}", entry.file))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(entry.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry on host buffers; validates shapes both ways.
+    pub fn run(&self, entry: &Entry, inputs: &[F32Mat]) -> Result<Vec<F32Mat>> {
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{}: {} inputs given, {} expected",
+                entry.name, inputs.len(), entry.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&entry.inputs) {
+            if (buf.rows, buf.cols) != spec.shape {
+                bail!(
+                    "{}: input '{}' is {}x{}, manifest says {}x{}",
+                    entry.name, spec.name, buf.rows, buf.cols,
+                    spec.shape.0, spec.shape.1
+                );
+            }
+            let lit = xla::Literal::vec1(&buf.data)
+                .reshape(&[buf.rows as i64, buf.cols as i64])
+                .map_err(to_anyhow)?;
+            literals.push(lit);
+        }
+        let exe = self.executable(entry)?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(to_anyhow)?;
+        *self.exec_count.borrow_mut() += 1;
+        let tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        let parts = tuple.to_tuple().map_err(to_anyhow)?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "{}: {} outputs returned, {} expected",
+                entry.name, parts.len(), entry.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&entry.outputs) {
+            let data: Vec<f32> = lit.to_vec().map_err(to_anyhow)?;
+            if data.len() != spec.shape.0 * spec.shape.1 {
+                bail!(
+                    "{}: output '{}' has {} elems, want {}x{}",
+                    entry.name, spec.name, data.len(), spec.shape.0, spec.shape.1
+                );
+            }
+            out.push(F32Mat::from_vec(spec.shape.0, spec.shape.1, data));
+        }
+        Ok(out)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32mat_paste_crop() {
+        let m = crate::linalg::Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        let mut buf = F32Mat::zeros(4, 5);
+        buf.paste_f64(&m);
+        assert_eq!(buf.get(1, 2), 5.0);
+        assert_eq!(buf.get(3, 4), 0.0);
+        let back = buf.crop_f64(2, 3);
+        assert!(back.max_abs_diff(&m) < 1e-6);
+    }
+
+    // engine execution is covered by rust/tests/integration_runtime.rs
+    // (needs artifacts/ built).
+}

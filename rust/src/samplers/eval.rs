@@ -1,0 +1,157 @@
+//! Held-out evaluation — the metric plotted in the paper's Figure 1:
+//! joint `log P(X_test, Z_test)` on a held-out set, monitored over time.
+//!
+//! Protocol (DESIGN.md §Held-out metric): freeze the sampler's current
+//! global state `(A, π, σ_X)`, run `g_sweeps` uncollapsed Gibbs sweeps on
+//! the held-out rows' Z (warm-started between evaluations, never fed back
+//! into the chain), and report
+//! `log P(X_test | Z_test, A, σ_X) + log P(Z_test | π)`.
+//! The same evaluator serves every sampler, so Figure-1 curves are
+//! directly comparable.
+
+use crate::linalg::Mat;
+use crate::model::state::FeatureState;
+use crate::model::GlobalParams;
+use crate::rng::Pcg64;
+use crate::samplers::uncollapsed::{residuals, sweep_rows};
+
+pub struct HeldoutEval {
+    pub x_test: Mat,
+    z_test: FeatureState,
+    g_sweeps: usize,
+}
+
+impl HeldoutEval {
+    pub fn new(x_test: Mat, g_sweeps: usize) -> Self {
+        let n = x_test.rows();
+        Self { x_test, z_test: FeatureState::empty(n), g_sweeps }
+    }
+
+    /// Evaluate the joint held-out log-likelihood under `params`.
+    pub fn evaluate(&mut self, params: &GlobalParams, rng: &mut Pcg64) -> f64 {
+        let n = self.x_test.rows();
+        let k = params.k();
+        if k == 0 {
+            // no features: Z empty, P(Z|π) = 1
+            return params.lg.loglik(
+                &self.x_test,
+                &Mat::zeros(n, 0),
+                &Mat::zeros(0, self.x_test.cols()),
+            );
+        }
+        // resize the warm-started Z to the current K (new features start
+        // off; removed features are dropped by rebuilding when K shrank)
+        if self.z_test.k() < k {
+            self.z_test.add_features(k - self.z_test.k());
+        } else if self.z_test.k() > k {
+            self.z_test = FeatureState::empty(n);
+            self.z_test.add_features(k);
+        }
+        let prior_logit: Vec<f64> = params
+            .pi
+            .iter()
+            .map(|&p| {
+                let p = p.clamp(1e-12, 1.0 - 1e-12);
+                (p / (1.0 - p)).ln()
+            })
+            .collect();
+        let inv2s2 = 1.0 / (2.0 * params.lg.sigma_x * params.lg.sigma_x);
+        let mut resid = residuals(&self.x_test, &self.z_test, &params.a, 0..n);
+        for _ in 0..self.g_sweeps {
+            sweep_rows(
+                &self.x_test, &mut self.z_test, &mut resid, &params.a,
+                &prior_logit, inv2s2, 0..n, k, rng,
+            );
+        }
+        self.joint(params)
+    }
+
+    /// log P(X_test | Z_test, A) + log P(Z_test | π) at the current Z_test.
+    fn joint(&self, params: &GlobalParams) -> f64 {
+        let n = self.x_test.rows() as f64;
+        let zm = self.z_test.to_mat();
+        let ll = params.lg.loglik(&self.x_test, &zm, &params.a);
+        let mut prior = 0.0;
+        for (kk, &p) in params.pi.iter().enumerate() {
+            let p = p.clamp(1e-12, 1.0 - 1e-12);
+            let mk = self.z_test.m()[kk] as f64;
+            prior += mk * p.ln() + (n - mk) * (1.0 - p).ln();
+        }
+        ll + prior
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LinGauss;
+
+    fn planted_params(k: usize, d: usize, seed: u64) -> (GlobalParams, Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let a = Mat::from_fn(k, d, |_, _| 2.0 * rng.normal());
+        let z = Mat::from_fn(50, k, |_, _| if rng.bernoulli(0.5) { 1.0 } else { 0.0 });
+        let mut x = z.matmul(&a);
+        for v in x.as_mut_slice().iter_mut() {
+            *v += 0.2 * rng.normal();
+        }
+        let params = GlobalParams {
+            a,
+            pi: vec![0.5; k],
+            lg: LinGauss::new(0.2, 1.0),
+            alpha: 1.0,
+        };
+        (params, x, z)
+    }
+
+    #[test]
+    fn true_params_beat_wrong_params() {
+        let (params, x, _) = planted_params(3, 12, 1);
+        let mut rng = Pcg64::new(2);
+        let mut ev = HeldoutEval::new(x.clone(), 3);
+        let good = ev.evaluate(&params, &mut rng);
+        // wrong loadings
+        let mut bad = params.clone();
+        let mut rng2 = Pcg64::new(3);
+        bad.a = Mat::from_fn(3, 12, |_, _| 2.0 * rng2.normal());
+        let mut ev2 = HeldoutEval::new(x, 3);
+        let badv = ev2.evaluate(&bad, &mut rng);
+        assert!(good > badv + 50.0, "good={good} bad={badv}");
+    }
+
+    #[test]
+    fn warm_start_improves_or_holds() {
+        let (params, x, _) = planted_params(4, 16, 4);
+        let mut rng = Pcg64::new(5);
+        let mut ev = HeldoutEval::new(x, 2);
+        let first = ev.evaluate(&params, &mut rng);
+        let second = ev.evaluate(&params, &mut rng);
+        assert!(second >= first - 25.0, "warm start regressed: {first} → {second}");
+    }
+
+    #[test]
+    fn handles_feature_count_changes() {
+        let (params3, x, _) = planted_params(3, 8, 6);
+        let (params5, _, _) = planted_params(5, 8, 7);
+        let (params2, _, _) = planted_params(2, 8, 8);
+        let mut rng = Pcg64::new(9);
+        let mut ev = HeldoutEval::new(x, 2);
+        let a = ev.evaluate(&params3, &mut rng);
+        let b = ev.evaluate(&params5, &mut rng);
+        let c = ev.evaluate(&params2, &mut rng);
+        assert!(a.is_finite() && b.is_finite() && c.is_finite());
+    }
+
+    #[test]
+    fn empty_params_ok() {
+        let x = Mat::from_fn(10, 4, |i, j| (i + j) as f64 * 0.1);
+        let params = GlobalParams {
+            a: Mat::zeros(0, 4),
+            pi: vec![],
+            lg: LinGauss::new(0.5, 1.0),
+            alpha: 1.0,
+        };
+        let mut rng = Pcg64::new(10);
+        let mut ev = HeldoutEval::new(x, 3);
+        assert!(ev.evaluate(&params, &mut rng).is_finite());
+    }
+}

@@ -1,0 +1,72 @@
+//! MCMC samplers for the linear-Gaussian IBP model.
+//!
+//! | module | algorithm | role |
+//! |---|---|---|
+//! | [`collapsed`] | G&G (2005) collapsed Gibbs, A marginalised | Fig. 1/2 baseline |
+//! | [`uncollapsed`] | finite-K uncollapsed Gibbs (paper Eq. 2) | motivation baseline + the shared sweep routine |
+//! | [`accelerated`] | Doshi-Velez & Ghahramani (2009) predictive form | cited comparison [2] |
+//! | [`hybrid`] | the paper's §3 hybrid, serial reference | exactness oracle for the parallel coordinator |
+//! | [`tail`] | collapsed sampling of the uninstantiated tail on residuals | shared by hybrid + coordinator p′ |
+//! | [`eval`] | held-out joint log P(X,Z) evaluator (Fig. 1 metric) | all samplers |
+
+pub mod accelerated;
+pub mod collapsed;
+pub mod eval;
+pub mod hybrid;
+pub mod tail;
+pub mod uncollapsed;
+
+/// Knobs shared by every sampler.
+#[derive(Clone, Debug)]
+pub struct SamplerOptions {
+    /// Truncation level for the new-feature proposal (evaluate
+    /// k_new ∈ 0..=kmax_new exactly and normalise).
+    pub kmax_new: usize,
+    /// Resample α each iteration (Gamma(1,1) hyperprior).
+    pub sample_alpha: bool,
+    /// Resample σ_X, σ_A each iteration.
+    pub sample_sigmas: bool,
+    /// InvGamma(a0, b0) prior for both σ² conditionals.
+    pub sigma_a0: f64,
+    pub sigma_b0: f64,
+    /// Hard cap on instantiated features (memory guard; far above
+    /// anything the posterior visits in the experiments).
+    pub k_cap: usize,
+    /// Coordinator only: features with global count ≤ this whose entire
+    /// support lies inside the next p′ shard are DEMOTED back into that
+    /// worker's collapsed tail, where death moves are exact and cheap
+    /// (fights the uncollapsed slow-death of junk singletons; see
+    /// DESIGN.md §Demotion). 0 disables.
+    pub demote_below: usize,
+    /// Refresh the collapsed cache from scratch every this-many row
+    /// updates (numerical drift control).
+    pub refresh_every: usize,
+}
+
+impl Default for SamplerOptions {
+    fn default() -> Self {
+        Self {
+            kmax_new: 4,
+            sample_alpha: true,
+            sample_sigmas: true,
+            sigma_a0: 1.0,
+            sigma_b0: 1.0,
+            k_cap: 64,
+            demote_below: 3,
+            refresh_every: 2048,
+        }
+    }
+}
+
+/// What every sampler exposes after each iteration (for traces/benches).
+#[derive(Clone, Debug)]
+pub struct IterStats {
+    pub iter: usize,
+    /// Instantiated feature count K⁺.
+    pub k: usize,
+    pub alpha: f64,
+    pub sigma_x: f64,
+    pub sigma_a: f64,
+    /// Joint train log P(X, Z) under the sampler's own representation.
+    pub train_joint: f64,
+}

@@ -1,0 +1,67 @@
+//! ASCII rendering of feature tiles — Figure 2 in a terminal.
+
+use crate::linalg::Mat;
+
+const RAMP: &[u8] = b" .:-=+*#%@";
+
+/// Render K features (rows of a K × D matrix, D a perfect square) as
+/// side-by-side ASCII tiles.
+pub fn render_features_ascii(features: &Mat) -> String {
+    let k = features.rows();
+    let d = features.cols();
+    let side = (d as f64).sqrt().round() as usize;
+    assert_eq!(side * side, d, "D must be a perfect square");
+    if k == 0 {
+        return String::from("(no features)\n");
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in features.as_slice() {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-9);
+    let mut out = String::new();
+    for row in 0..side {
+        for kk in 0..k {
+            for col in 0..side {
+                let v = features[(kk, row * side + col)];
+                let idx = (((v - lo) / span) * (RAMP.len() - 1) as f64).round() as usize;
+                let c = RAMP[idx.min(RAMP.len() - 1)] as char;
+                // double width so tiles look square in a terminal
+                out.push(c);
+                out.push(c);
+            }
+            out.push_str("  ");
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_expected_shape() {
+        let feats = Mat::from_fn(2, 9, |k, d| if (k + d) % 2 == 0 { 1.0 } else { 0.0 });
+        let s = render_features_ascii(&feats);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        // 2 tiles × (3 cells × 2 chars) + 2 gutters of 2 spaces
+        assert!(lines[0].len() >= 2 * 6 + 2);
+        assert!(s.contains('@') && s.contains(' '));
+    }
+
+    #[test]
+    fn constant_features_do_not_panic() {
+        let feats = Mat::zeros(1, 4);
+        let s = render_features_ascii(&feats);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert!(render_features_ascii(&Mat::zeros(0, 9)).contains("no features"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Feature visualisation — reproduces the paper's Figure 2 (true features
+//! vs posterior features as 6×6 images) as PGM files and ASCII art.
+
+pub mod ascii;
+pub mod pgm;
+pub mod plot;
+
+pub use ascii::render_features_ascii;
+pub use plot::plot_traces;
+pub use pgm::{save_feature_grid, write_pgm};

@@ -1,0 +1,99 @@
+//! Binary PGM (P5) output — dependency-free grayscale images.
+//!
+//! `save_feature_grid` lays a set of D-dimensional feature vectors out as
+//! side-by-side √D×√D tiles with separators and upscaling — the exact
+//! presentation of the paper's Figure 2 rows.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Mat;
+
+/// Write a grayscale image (row-major, values clamped to [0,255]).
+pub fn write_pgm(path: &Path, width: usize, height: usize, pixels: &[u8]) -> Result<()> {
+    if pixels.len() != width * height {
+        bail!("pixel buffer {} != {width}x{height}", pixels.len());
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    write!(f, "P5\n{width} {height}\n255\n")?;
+    f.write_all(pixels)?;
+    Ok(())
+}
+
+/// Render each row of `features` (K × D, D a perfect square) as a tile,
+/// normalised to the matrix's global [min, max], upscaled by `scale`,
+/// separated by 1-pixel white gutters; write as one PGM strip.
+pub fn save_feature_grid(path: &Path, features: &Mat, scale: usize) -> Result<()> {
+    let k = features.rows();
+    let d = features.cols();
+    let side = (d as f64).sqrt().round() as usize;
+    if side * side != d {
+        bail!("D={d} is not a perfect square");
+    }
+    if k == 0 {
+        bail!("no features to render");
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in features.as_slice() {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-9);
+    let tile = side * scale;
+    let width = k * tile + (k - 1);
+    let height = tile;
+    let mut pixels = vec![255u8; width * height];
+    for kk in 0..k {
+        let x0 = kk * (tile + 1);
+        for py in 0..tile {
+            for px in 0..tile {
+                let v = features[(kk, (py / scale) * side + px / scale)];
+                // dark = high intensity (feature "on"), like the paper
+                let g = 255.0 - 255.0 * (v - lo) / span;
+                pixels[py * width + x0 + px] = g.clamp(0.0, 255.0) as u8;
+            }
+        }
+    }
+    write_pgm(path, width, height, &pixels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_valid_pgm() {
+        let dir = std::env::temp_dir().join("pibp_pgm");
+        let p = dir.join("t.pgm");
+        write_pgm(&p, 4, 2, &[0, 64, 128, 255, 1, 2, 3, 4]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P5\n4 2\n255\n"));
+        assert_eq!(bytes.len(), 11 + 8);
+    }
+
+    #[test]
+    fn grid_layout_dimensions() {
+        let feats = Mat::from_fn(3, 36, |k, d| ((k + d) % 2) as f64);
+        let dir = std::env::temp_dir().join("pibp_pgm");
+        let p = dir.join("grid.pgm");
+        save_feature_grid(&p, &feats, 4).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // width = 3*24 + 2 = 74, height = 24
+        let header = format!("P5\n{} {}\n255\n", 74, 24);
+        assert!(bytes.starts_with(header.as_bytes()));
+        assert_eq!(bytes.len(), header.len() + 74 * 24);
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let feats = Mat::zeros(2, 10);
+        let p = std::env::temp_dir().join("pibp_pgm/bad.pgm");
+        assert!(save_feature_grid(&p, &feats, 2).is_err());
+    }
+}

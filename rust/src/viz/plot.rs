@@ -1,0 +1,111 @@
+//! ASCII line plots — Figure 1 in a terminal. Supports multiple series
+//! with per-series glyphs and an optional log-scaled x axis (the paper
+//! plots log time).
+
+use crate::metrics::Trace;
+
+const GLYPHS: &[char] = &['o', '+', 'x', '*', '#', '@'];
+
+/// Render traces as an ASCII chart of heldout vs (log10) virtual time.
+pub fn plot_traces(traces: &[&Trace], width: usize, height: usize, log_x: bool) -> String {
+    let mut pts: Vec<(usize, f64, f64)> = Vec::new(); // (series, x, y)
+    for (s, t) in traces.iter().enumerate() {
+        for p in &t.points {
+            let x = if log_x { p.vtime_s.max(1e-9).log10() } else { p.vtime_s };
+            if x.is_finite() && p.heldout.is_finite() {
+                pts.push((s, x, p.heldout));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(_, x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 - x0 < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if y1 - y0 < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for &(s, x, y) in &pts {
+        let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+        let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+        let row = height - 1 - cy;
+        grid[row][cx] = GLYPHS[s % GLYPHS.len()];
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{:>12.1} ┐\n", y1));
+    for row in grid {
+        out.push_str("             │");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>12.1} └{}\n", y0, "─".repeat(width)));
+    out.push_str(&format!(
+        "             {}{:<12.3}{}{:>12.3}\n",
+        if log_x { "log10(s) " } else { "seconds " },
+        x0,
+        " ".repeat(width.saturating_sub(30)),
+        x1
+    ));
+    for (s, t) in traces.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", GLYPHS[s % GLYPHS.len()], t.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::TracePoint;
+
+    fn trace(label: &str, n: usize, offset: f64) -> Trace {
+        let mut t = Trace::new(label);
+        for i in 0..n {
+            t.push(TracePoint {
+                iter: i,
+                vtime_s: 0.1 * (i + 1) as f64,
+                wall_s: 0.0,
+                heldout: offset + i as f64,
+                k: 1,
+                sigma_x: 0.5,
+                alpha: 1.0,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn renders_all_series() {
+        let a = trace("alpha", 20, -100.0);
+        let b = trace("beta", 20, -90.0);
+        let s = plot_traces(&[&a, &b], 60, 12, true);
+        assert!(s.contains('o') && s.contains('+'));
+        assert!(s.contains("alpha") && s.contains("beta"));
+        assert!(s.lines().count() >= 14);
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert!(plot_traces(&[], 40, 10, false).contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let mut t = Trace::new("const");
+        t.push(TracePoint {
+            iter: 0, vtime_s: 1.0, wall_s: 0.0, heldout: -5.0,
+            k: 1, sigma_x: 0.5, alpha: 1.0,
+        });
+        let s = plot_traces(&[&t], 40, 8, true);
+        assert!(s.contains('o'));
+    }
+}

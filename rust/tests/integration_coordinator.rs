@@ -1,0 +1,207 @@
+//! End-to-end integration of the parallel coordinator: convergence on
+//! Cambridge data, agreement with the serial hybrid oracle, PJRT-backend
+//! equivalence, and bookkeeping invariants under promotion/compaction.
+
+use std::path::Path;
+
+use pibp::config::{Backend, CommModel};
+use pibp::coordinator::{Coordinator, CoordinatorConfig};
+use pibp::data::cambridge::{generate, CambridgeConfig};
+use pibp::model::LinGauss;
+use pibp::rng::Pcg64;
+use pibp::samplers::eval::HeldoutEval;
+use pibp::samplers::hybrid::{HybridConfig, HybridSampler};
+use pibp::samplers::SamplerOptions;
+
+fn cambridge(n: usize, seed: u64) -> pibp::linalg::Mat {
+    generate(&CambridgeConfig { n, seed, ..Default::default() }).0.x
+}
+
+fn cfg(p: usize, seed: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        processors: p,
+        sub_iters: 5,
+        seed,
+        lg: LinGauss::new(0.5, 1.0),
+        alpha: 1.0,
+        opts: SamplerOptions::default(),
+        backend: Backend::Native,
+        artifacts_dir: Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        comm: CommModel::default(),
+    }
+}
+
+#[test]
+fn parallel_converges_on_cambridge() {
+    let x = cambridge(200, 1);
+    let mut coord = Coordinator::new(&x, cfg(3, 2)).unwrap();
+    let mut ks = vec![];
+    for _ in 0..40 {
+        let rec = coord.step().unwrap();
+        ks.push(rec.k);
+        assert!(rec.sigma_x > 0.0 && rec.sigma_x < 3.0);
+        assert!(rec.vtime_iter_s > 0.0);
+        assert!(rec.comm_bytes > 0);
+    }
+    let tail = &ks[25..];
+    let mean_k = tail.iter().sum::<usize>() as f64 / tail.len() as f64;
+    assert!((3.0..=13.0).contains(&mean_k), "K trace {ks:?}");
+}
+
+#[test]
+fn parallel_matches_serial_oracle_distributionally() {
+    // same posterior target: compare long-run held-out loglik plateaus
+    let (ds, _) = generate(&CambridgeConfig { n: 240, seed: 3, ..Default::default() });
+    let (train, test) = ds.split_heldout(0.1);
+
+    // serial oracle (samplers::hybrid), P=2 equivalent workload
+    let mut rng = Pcg64::new(4);
+    let mut serial = HybridSampler::new(
+        train.x.clone(),
+        LinGauss::new(0.5, 1.0),
+        1.0,
+        HybridConfig { processors: 2, sub_iters: 5, opts: SamplerOptions::default() },
+        &mut rng,
+    );
+    let mut ev1 = HeldoutEval::new(test.x.clone(), 3);
+    let mut serial_scores = vec![];
+    for i in 0..45 {
+        serial.step(&mut rng);
+        if i >= 30 {
+            serial_scores.push(ev1.evaluate(&serial.params, &mut rng));
+        }
+    }
+
+    // parallel coordinator
+    let mut coord = Coordinator::new(&train.x, cfg(2, 5)).unwrap();
+    let mut ev2 = HeldoutEval::new(test.x.clone(), 3);
+    let mut rng2 = Pcg64::new(6);
+    let mut par_scores = vec![];
+    for i in 0..45 {
+        coord.step().unwrap();
+        if i >= 30 {
+            par_scores.push(ev2.evaluate(coord.params(), &mut rng2));
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (ms, mp) = (mean(&serial_scores), mean(&par_scores));
+    // plateaus must agree to within a few per-row log-lik units
+    let tol = 0.15 * ms.abs().max(50.0);
+    assert!(
+        (ms - mp).abs() < tol,
+        "serial plateau {ms:.1} vs parallel {mp:.1} (tol {tol:.1})"
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let x = cambridge(120, 7);
+    let run = |seed: u64| {
+        let mut coord = Coordinator::new(&x, cfg(3, seed)).unwrap();
+        (0..10)
+            .map(|_| {
+                let r = coord.step().unwrap();
+                (r.k, r.sigma_x.to_bits(), r.alpha.to_bits())
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(11), run(11), "same seed must give identical chains");
+    assert_ne!(run(11), run(12));
+}
+
+#[test]
+fn gather_z_matches_global_counts() {
+    let x = cambridge(150, 8);
+    let mut coord = Coordinator::new(&x, cfg(4, 9)).unwrap();
+    for _ in 0..12 {
+        coord.step().unwrap();
+    }
+    let z = coord.gather_z().unwrap();
+    assert_eq!(z.n(), 150);
+    assert_eq!(z.k(), coord.k(), "gathered K must match params");
+    assert!(z.check_invariants());
+    // column sums must equal the master's merged counts
+    assert_eq!(z.m(), coord.m_global(), "m mismatch");
+    // every feature the master kept is non-empty
+    assert!(z.m().iter().all(|&m| m > 0));
+}
+
+#[test]
+fn more_processors_same_quality() {
+    let (ds, _) = generate(&CambridgeConfig { n: 200, seed: 10, ..Default::default() });
+    let (train, test) = ds.split_heldout(0.1);
+    let mut plateaus = vec![];
+    for p in [1usize, 3, 5] {
+        let mut coord = Coordinator::new(&train.x, cfg(p, 20 + p as u64)).unwrap();
+        let mut ev = HeldoutEval::new(test.x.clone(), 3);
+        let mut rng = Pcg64::new(30 + p as u64);
+        let mut scores = vec![];
+        for i in 0..40 {
+            coord.step().unwrap();
+            if i >= 28 {
+                scores.push(ev.evaluate(coord.params(), &mut rng));
+            }
+        }
+        plateaus.push(scores.iter().sum::<f64>() / scores.len() as f64);
+    }
+    let spread = plateaus
+        .iter()
+        .fold(f64::NEG_INFINITY, |a, &b| a.max(b))
+        - plateaus.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+    assert!(
+        spread < 0.2 * plateaus[0].abs().max(50.0),
+        "quality differs across P: {plateaus:?}"
+    );
+}
+
+#[test]
+fn pjrt_backend_converges_like_native() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return; // artifacts not built
+    }
+    let (ds, _) = generate(&CambridgeConfig { n: 120, seed: 11, ..Default::default() });
+    let (train, test) = ds.split_heldout(0.1);
+    let mut plateaus = vec![];
+    for backend in [Backend::Native, Backend::Pjrt] {
+        let mut c = cfg(2, 40);
+        c.backend = backend;
+        let mut coord = Coordinator::new(&train.x, c).unwrap();
+        let mut ev = HeldoutEval::new(test.x.clone(), 3);
+        let mut rng = Pcg64::new(41);
+        let mut scores = vec![];
+        for i in 0..35 {
+            coord.step().unwrap();
+            if i >= 25 {
+                scores.push(ev.evaluate(coord.params(), &mut rng));
+            }
+        }
+        plateaus.push(scores.iter().sum::<f64>() / scores.len() as f64);
+    }
+    assert!(
+        (plateaus[0] - plateaus[1]).abs() < 0.2 * plateaus[0].abs().max(50.0),
+        "native {} vs pjrt {}", plateaus[0], plateaus[1]
+    );
+}
+
+#[test]
+fn vtime_speedup_shape() {
+    // more processors ⇒ smaller max-worker-busy per iteration on the same
+    // data (the Figure-1 mechanism)
+    let x = cambridge(400, 12);
+    let mut busy = vec![];
+    for p in [1usize, 4] {
+        let mut coord = Coordinator::new(&x, cfg(p, 50)).unwrap();
+        let mut acc = 0.0;
+        for _ in 0..8 {
+            let rec = coord.step().unwrap();
+            acc += rec.max_worker_busy_s;
+        }
+        busy.push(acc);
+    }
+    assert!(
+        busy[1] < 0.6 * busy[0],
+        "P=4 max-worker busy {:.4}s not < 0.6× P=1 {:.4}s",
+        busy[1], busy[0]
+    );
+}

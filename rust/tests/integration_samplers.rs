@@ -1,0 +1,119 @@
+//! Cross-sampler integration: all four samplers on the same data must
+//! agree on the quantities the posterior determines (held-out plateau,
+//! noise estimate), and the runner must produce comparable traces.
+
+use pibp::config::{RunConfig, SamplerKind};
+use pibp::data::cambridge::{generate, CambridgeConfig};
+use pibp::metrics::ess;
+use pibp::model::LinGauss;
+use pibp::rng::Pcg64;
+use pibp::runner;
+use pibp::samplers::collapsed::{CollapsedGibbs, Mode};
+use pibp::samplers::eval::HeldoutEval;
+use pibp::samplers::SamplerOptions;
+
+fn cfg(sampler: SamplerKind, iters: usize) -> RunConfig {
+    RunConfig {
+        n: 150,
+        iters,
+        eval_every: 3,
+        seed: 13,
+        sampler,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_samplers_reach_comparable_plateaus() {
+    // the three exact samplers (collapsed, accelerated, hybrid) target the
+    // same posterior; their held-out plateaus must agree.
+    let mut plateaus = vec![];
+    for kind in [SamplerKind::Collapsed, SamplerKind::Accelerated, SamplerKind::Hybrid] {
+        let out = runner::run(&cfg(kind, 40), |_| {}).unwrap();
+        plateaus.push((kind, out.trace.plateau(0.3)));
+    }
+    let vals: Vec<f64> = plateaus.iter().map(|p| p.1).collect();
+    let lo = vals.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+    let hi = vals.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+    assert!(
+        hi - lo < 0.2 * hi.abs().max(50.0),
+        "plateaus diverge: {plateaus:?}"
+    );
+}
+
+#[test]
+fn sigma_x_recovered_by_every_sampler() {
+    for kind in [SamplerKind::Collapsed, SamplerKind::Hybrid] {
+        let out = runner::run(&cfg(kind, 40), |_| {}).unwrap();
+        let sx = out.trace.last().unwrap().sigma_x;
+        assert!(
+            (sx - 0.5).abs() < 0.15,
+            "{kind:?} sigma_x={sx}, truth 0.5"
+        );
+    }
+}
+
+#[test]
+fn uncollapsed_baseline_underperforms_on_heldout() {
+    // paper §2 motivation: the finite uncollapsed sampler mixes poorly —
+    // its plateau should not beat the hybrid's.
+    let hybrid = runner::run(&cfg(SamplerKind::Hybrid, 40), |_| {}).unwrap();
+    let uncoll = runner::run(&cfg(SamplerKind::Uncollapsed, 40), |_| {}).unwrap();
+    assert!(
+        uncoll.trace.plateau(0.3) <= hybrid.trace.plateau(0.3) + 20.0,
+        "uncollapsed {} vs hybrid {}",
+        uncoll.trace.plateau(0.3),
+        hybrid.trace.plateau(0.3)
+    );
+}
+
+#[test]
+fn collapsed_chain_ess_is_finite() {
+    let (ds, _) = generate(&CambridgeConfig { n: 100, seed: 5, ..Default::default() });
+    let mut rng = Pcg64::new(6);
+    let mut s = CollapsedGibbs::new(
+        ds.x.clone(),
+        LinGauss::new(0.5, 1.0),
+        1.0,
+        Mode::Exact,
+        SamplerOptions { sample_sigmas: false, ..Default::default() },
+        &mut rng,
+    );
+    let joints: Vec<f64> = (0..60).map(|_| s.step(&mut rng).train_joint).collect();
+    let e = ess(&joints[20..]);
+    assert!(e.is_finite() && e >= 1.0);
+}
+
+#[test]
+fn heldout_metric_is_comparable_across_representations() {
+    // evaluating the SAME params twice with different evaluator instances
+    // must agree (warm-start independence at plateau).
+    let out = runner::run(&cfg(SamplerKind::Hybrid, 30), |_| {}).unwrap();
+    let (ds, _) = generate(&CambridgeConfig { n: 150, seed: 13, ..Default::default() });
+    let (_, test) = ds.split_heldout(0.1);
+    let mut rng1 = Pcg64::new(1);
+    let mut rng2 = Pcg64::new(2);
+    let mut ev1 = HeldoutEval::new(test.x.clone(), 5);
+    let mut ev2 = HeldoutEval::new(test.x.clone(), 5);
+    // let both warm up
+    for _ in 0..3 {
+        ev1.evaluate(&out.final_params, &mut rng1);
+        ev2.evaluate(&out.final_params, &mut rng2);
+    }
+    let a = ev1.evaluate(&out.final_params, &mut rng1);
+    let b = ev2.evaluate(&out.final_params, &mut rng2);
+    assert!(
+        (a - b).abs() < 0.1 * a.abs().max(20.0),
+        "evaluator not reproducible: {a} vs {b}"
+    );
+}
+
+#[test]
+fn traces_are_monotone_in_time() {
+    let out = runner::run(&cfg(SamplerKind::Hybrid, 20), |_| {}).unwrap();
+    let mut prev = -1.0;
+    for p in &out.trace.points {
+        assert!(p.vtime_s > prev, "vtime must be strictly increasing");
+        prev = p.vtime_s;
+    }
+}

@@ -1,0 +1,267 @@
+//! Property-based tests (in-tree `propcheck` framework) for the
+//! bookkeeping invariants the parallel algorithm's exactness rests on.
+
+use pibp::coordinator::messages::{Broadcast, Summary, ToWorker, ZReport};
+use pibp::linalg::{Cholesky, Mat};
+use pibp::model::state::FeatureState;
+use pibp::model::{CollapsedCache, LinGauss};
+use pibp::propcheck::{self, Gen};
+use pibp::rng::Pcg64;
+use pibp::samplers::hybrid::make_shards;
+
+fn random_state(g: &mut Gen, n: usize, k: usize) -> FeatureState {
+    let mut st = FeatureState::empty(n);
+    st.add_features(k);
+    for i in 0..n {
+        for j in 0..k {
+            if g.bool(0.3) {
+                st.set(i, j, 1);
+            }
+        }
+    }
+    st
+}
+
+#[test]
+fn prop_feature_counts_always_consistent() {
+    propcheck::run("m == column sums after arbitrary edits", 150, |g| {
+        let n = g.usize_in(1, 40);
+        let k = g.usize_in(1, 12);
+        let mut st = random_state(g, n, k);
+        for _ in 0..g.usize_in(0, 100) {
+            match *g.choose(&[0, 1, 2, 3]) {
+                0 => {
+                    let i = g.usize_in(0, n - 1);
+                    if st.k() > 0 {
+                        let j = g.usize_in(0, st.k() - 1);
+                        st.set(i, j, u8::from(g.bool(0.5)));
+                    }
+                }
+                1 => {
+                    st.add_features(g.usize_in(1, 3));
+                }
+                2 => {
+                    st.compact();
+                }
+                _ => {}
+            }
+        }
+        if st.check_invariants() {
+            Ok(())
+        } else {
+            Err(format!("m={:?} recount={:?}", st.m(), st.recount()))
+        }
+    });
+}
+
+#[test]
+fn prop_compact_preserves_nonempty_columns_and_bits() {
+    propcheck::run("compact keeps exactly the non-empty columns", 100, |g| {
+        let n = g.usize_in(1, 30);
+        let k = g.usize_in(1, 10);
+        let st0 = random_state(g, n, k);
+        let mut st = st0.clone();
+        let keep = st.compact();
+        let want: Vec<usize> = (0..k).filter(|&j| st0.m()[j] > 0).collect();
+        if keep != want {
+            return Err(format!("keep {keep:?} != non-empty {want:?}"));
+        }
+        for (new_j, &old_j) in keep.iter().enumerate() {
+            for i in 0..n {
+                if st.get(i, new_j) != st0.get(i, old_j) {
+                    return Err(format!("bit ({i},{old_j}) lost"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shards_partition_rows() {
+    propcheck::run("make_shards partitions 0..n", 200, |g| {
+        let p = g.usize_in(1, 16);
+        let n = g.usize_in(p.max(1), 500);
+        let shards = make_shards(n, p);
+        if shards.len() != p {
+            return Err("wrong shard count".into());
+        }
+        let mut covered = 0usize;
+        let mut prev_end = 0usize;
+        for s in &shards {
+            if s.start != prev_end {
+                return Err(format!("gap at {}", s.start));
+            }
+            covered += s.len();
+            prev_end = s.end;
+        }
+        if covered != n || prev_end != n {
+            return Err(format!("covered {covered} of {n}"));
+        }
+        let max = shards.iter().map(|s| s.len()).max().unwrap();
+        let min = shards.iter().map(|s| s.len()).min().unwrap();
+        if max - min > 1 {
+            return Err("unbalanced".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_message_roundtrip() {
+    propcheck::run("wire encode∘decode = id", 100, |g| {
+        let k = g.usize_in(0, 8);
+        let d = g.usize_in(1, 10);
+        let n = g.usize_in(1, 25);
+        let mut rng = Pcg64::new(g.seed ^ 0xABCD);
+        let b = Broadcast {
+            iter: g.usize_in(0, 1000) as u32,
+            a: Mat::from_fn(k, d, |_, _| rng.normal()),
+            pi: (0..k).map(|_| rng.uniform()).collect(),
+            sigma_x: rng.uniform() + 0.1,
+            sigma_a: rng.uniform() + 0.1,
+            alpha: rng.uniform() * 3.0,
+            p_prime: g.usize_in(0, 7) as u32,
+            keep: (0..g.usize_in(0, k)).map(|i| i as u32).collect(),
+            k_star: g.usize_in(0, 3) as u32,
+            tail_owner: g.usize_in(0, 7) as u32,
+            demote: (0..g.usize_in(0, 3)).map(|i| i as u32).collect(),
+        };
+        let msg = ToWorker::Run(b);
+        if ToWorker::decode(&msg.encode()).map_err(|e| e.to_string())? != msg {
+            return Err("broadcast roundtrip".into());
+        }
+        let tail_k = g.usize_in(0, 4);
+        let s = Summary {
+            worker: 1,
+            iter: 2,
+            m_local: (0..k).map(|_| rng.below(100)).collect(),
+            ztz: Mat::from_fn(k, k, |_, _| rng.normal()),
+            ztx: Mat::from_fn(k, d, |_, _| rng.normal()),
+            tr_xx: rng.uniform() * 100.0,
+            tail: if g.bool(0.5) { Some(random_state(g, n, tail_k)) } else { None },
+            busy_s: rng.uniform(),
+        };
+        if Summary::decode(&s.encode()).map_err(|e| e.to_string())? != s {
+            return Err("summary roundtrip".into());
+        }
+        let z = ZReport { worker: 0, z: random_state(g, n, k) };
+        if ZReport::decode(&z.encode()).map_err(|e| e.to_string())? != z {
+            return Err("zreport roundtrip".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_collapsed_cache_tracks_fresh_rebuild() {
+    propcheck::run("cache == fresh after random row edits", 60, |g| {
+        let n = g.usize_in(5, 30);
+        let k = g.usize_in(1, 6);
+        let d = g.usize_in(2, 8);
+        let mut rng = Pcg64::new(g.seed ^ 0x77);
+        let mut z = random_state(g, n, k);
+        let x = Mat::from_fn(n, d, |_, _| rng.normal());
+        let lg = LinGauss::new(0.5, 1.2);
+        let mut cache = CollapsedCache::new(&x, &z.to_mat(), lg.ratio());
+        for _ in 0..g.usize_in(1, 60) {
+            let row = g.usize_in(0, n - 1);
+            let zr = z.row_f64(row);
+            let xr: Vec<f64> = x.row(row).to_vec();
+            if !cache.remove_row(&zr, &xr) {
+                cache.refresh(&x, &z.to_mat(), lg.ratio());
+                continue;
+            }
+            let j = g.usize_in(0, k - 1);
+            if g.bool(0.6) {
+                z.set(row, j, 1 - z.get(row, j));
+            }
+            cache.insert_row(&z.row_f64(row), &xr);
+        }
+        let got = cache.loglik(&lg);
+        let want = lg.collapsed_loglik(&x, &z.to_mat());
+        if (got - want).abs() < 1e-4 * want.abs().max(1.0) {
+            Ok(())
+        } else {
+            Err(format!("cache {got} vs fresh {want}"))
+        }
+    });
+}
+
+#[test]
+fn prop_cholesky_solves_random_spd() {
+    propcheck::run("chol solve satisfies Ax=b", 120, |g| {
+        let n = g.usize_in(1, 12);
+        let mut rng = Pcg64::new(g.seed ^ 0x11);
+        let b_mat = Mat::from_fn(n + 2, n, |_, _| rng.normal());
+        let mut a = b_mat.gram();
+        a.add_diag(g.f64_in(0.1, 2.0));
+        let ch = Cholesky::new(&a).ok_or("not PD".to_string())?;
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let x = ch.solve_vec(&b);
+        let ax = a.matvec(&x);
+        let err: f64 = ax.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+        if err < 1e-7 {
+            Ok(())
+        } else {
+            Err(format!("residual {err}"))
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use pibp::config::json::Json;
+    propcheck::run("json display∘parse = id", 120, |g| {
+        fn gen_value(g: &mut Gen, depth: usize) -> Json {
+            match (*g.choose(&[0, 1, 2, 3, 4, 5]), depth) {
+                (0, _) => Json::Null,
+                (1, _) => Json::Bool(g.bool(0.5)),
+                (2, _) => Json::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+                (3, _) => Json::Str(format!("s{}-\"q\"\n", g.usize_in(0, 99))),
+                (4, d) if d < 3 => {
+                    let n = g.usize_in(0, 4);
+                    Json::Arr((0..n).map(|_| gen_value(g, d + 1)).collect())
+                }
+                (_, d) if d < 3 => {
+                    let n = g.usize_in(0, 4);
+                    Json::Obj(
+                        (0..n)
+                            .map(|i| (format!("k{i}"), gen_value(g, d + 1)))
+                            .collect(),
+                    )
+                }
+                _ => Json::Num(1.0),
+            }
+        }
+        let v = gen_value(g, 0);
+        let back = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        if back == v {
+            Ok(())
+        } else {
+            Err(format!("{v} != {back}"))
+        }
+    });
+}
+
+#[test]
+fn prop_rng_split_streams_disjoint() {
+    propcheck::run("split streams do not collide", 50, |g| {
+        let root = Pcg64::new(g.seed);
+        let t1 = g.usize_in(0, 1000) as u64;
+        let t2 = t1 + 1 + g.usize_in(0, 1000) as u64;
+        let mut a = root.split(t1);
+        let mut b = root.split(t2);
+        let mut same = 0;
+        for _ in 0..200 {
+            if a.next_u64() == b.next_u64() {
+                same += 1;
+            }
+        }
+        if same == 0 {
+            Ok(())
+        } else {
+            Err(format!("{same} collisions"))
+        }
+    });
+}
