@@ -60,6 +60,23 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// The merged-and-compacted sufficient statistics of the most recent
+/// global step, in the column space of [`Coordinator::params`]: the
+/// quantities the master samples (A, π, σ) from. Exposed so tests can pin
+/// the merge pipeline against a serial recomputation from the gathered Z
+/// (see `rust/tests/parallel_equivalence.rs`).
+#[derive(Clone, Debug)]
+pub struct MergedStats {
+    /// Merged ZᵀZ (K⁺ × K⁺). Integer-valued, so exact under any merge order.
+    pub ztz: Mat,
+    /// Merged ZᵀX (K⁺ × D), accumulated in worker order.
+    pub ztx: Mat,
+    /// Merged global column counts m_k.
+    pub m: Vec<usize>,
+    /// Merged tr XᵀX = Σ_p ‖X_p‖², accumulated in worker order.
+    pub tr_xx: f64,
+}
+
 /// Per-iteration record (trace row).
 #[derive(Clone, Debug)]
 pub struct IterRecord {
@@ -97,6 +114,8 @@ pub struct Coordinator {
     p_prime: u32,
     /// Global column counts for the *current* K⁺ (post-merge).
     m_global: Vec<usize>,
+    /// Merged suff stats of the last global step (test/diagnostic hook).
+    last_merged: Option<MergedStats>,
     n: usize,
     d: usize,
     iter: usize,
@@ -168,6 +187,7 @@ impl Coordinator {
             pending_tail_bits: None,
             p_prime,
             m_global: vec![],
+            last_merged: None,
             n,
             d,
             iter: 0,
@@ -187,6 +207,12 @@ impl Coordinator {
 
     pub fn m_global(&self) -> &[usize] {
         &self.m_global
+    }
+
+    /// Merged sufficient statistics of the most recent [`Self::step`],
+    /// compacted to the current K⁺ column space (None before any step).
+    pub fn last_merged(&self) -> Option<&MergedStats> {
+        self.last_merged.as_ref()
     }
 
     /// One global iteration.
@@ -344,6 +370,12 @@ impl Coordinator {
             ztz[(keep_ext[i], keep_ext[j])]
         });
         let m_c: Vec<usize> = keep_ext.iter().map(|&k| m_ext[k]).collect();
+        self.last_merged = Some(MergedStats {
+            ztz: ztz_c.clone(),
+            ztx: ztx_c.clone(),
+            m: m_c.clone(),
+            tr_xx,
+        });
 
         // ---- sample globals ----
         if k_new > 0 {

@@ -18,5 +18,5 @@ pub mod messages;
 pub mod vtime;
 pub mod worker;
 
-pub use master::{Coordinator, CoordinatorConfig, IterRecord};
+pub use master::{Coordinator, CoordinatorConfig, IterRecord, MergedStats};
 pub use vtime::{IterTiming, VClock};

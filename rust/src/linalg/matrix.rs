@@ -9,6 +9,25 @@
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
+/// Dense row-major f64 matrix.
+///
+/// # Examples
+///
+/// ```
+/// use pibp::linalg::Mat;
+///
+/// let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0,
+///                                  4.0, 5.0, 6.0]);
+/// assert_eq!(a[(1, 2)], 6.0);
+/// assert_eq!(a.row(0), &[1.0, 2.0, 3.0]);
+///
+/// // matmul against the identity is the identity map
+/// let same = a.matmul(&Mat::eye(3));
+/// assert!(same.max_abs_diff(&a) == 0.0);
+///
+/// // Gram matrix AᵀA equals the explicit product
+/// assert!(a.gram().max_abs_diff(&a.transpose().matmul(&a)) < 1e-12);
+/// ```
 #[derive(Clone, PartialEq)]
 pub struct Mat {
     rows: usize,

@@ -85,4 +85,27 @@ mod tests {
         let xs = vec![2.0; 100];
         assert_eq!(ess(&xs), 1.0);
     }
+
+    #[test]
+    fn acf_matches_hand_computed_values() {
+        // xs = [1,2,3,4]: mean 2.5, biased var 1.25.
+        //   rho(1) = (0.75 - 0.25 + 0.75) / (4 · 1.25) = 0.25
+        //   rho(2) = (-0.75 - 0.75)       / (4 · 1.25) = -0.3
+        let rho = autocorrelation(&[1.0, 2.0, 3.0, 4.0], 2);
+        assert!((rho[0] - 1.0).abs() < 1e-12);
+        assert!((rho[1] - 0.25).abs() < 1e-12, "rho1={}", rho[1]);
+        assert!((rho[2] - (-0.3)).abs() < 1e-12, "rho2={}", rho[2]);
+    }
+
+    #[test]
+    fn ess_matches_hand_computed_values() {
+        // [1,2,3,4]: first Geyer pair rho(1)+rho(2) = 0.25 - 0.3 < 0, so
+        // tau = 1 and ESS = n = 4.
+        assert!((ess(&[1.0, 2.0, 3.0, 4.0]) - 4.0).abs() < 1e-12);
+        // [1,1,2,2,3,3]: mean 2, biased var 2/3,
+        //   rho(1) = 2/4 = 0.5, rho(2) = 0, pair = 0.5 > 0 → tau = 2,
+        //   rho(3) = -0.25, rho(4) = -0.5, pair < 0 → stop.
+        // ESS = 6 / 2 = 3.
+        assert!((ess(&[1.0, 1.0, 2.0, 2.0, 3.0, 3.0]) - 3.0).abs() < 1e-12);
+    }
 }

@@ -90,4 +90,20 @@ mod tests {
         let r = split_rhat(&[vec![5.0; 100], vec![5.0; 100]]);
         assert_eq!(r, 1.0);
     }
+
+    #[test]
+    fn matches_hand_computed_value() {
+        // chains [[1,2,1,2], [3,4,3,4]], len 4 → halves of length 2:
+        //   splits [1,2],[1,2],[3,4],[3,4]; means 1.5,1.5,3.5,3.5; grand 2.5
+        //   B = n/(m−1)·Σ(μ−ḡ)² = 2/3·(1+1+1+1) = 8/3
+        //   W = mean of within-vars = 0.5
+        //   var⁺ = (n−1)/n·W + B/n = 0.25 + 4/3 = 19/12
+        //   R̂ = sqrt(var⁺/W) = sqrt(19/6)
+        let r = split_rhat(&[vec![1.0, 2.0, 1.0, 2.0], vec![3.0, 4.0, 3.0, 4.0]]);
+        assert!(
+            (r - (19.0f64 / 6.0).sqrt()).abs() < 1e-12,
+            "R̂={r}, want sqrt(19/6)={}",
+            (19.0f64 / 6.0).sqrt()
+        );
+    }
 }

@@ -15,8 +15,10 @@ pub fn harmonic(n: usize) -> f64 {
 /// Log IBP prior of a feature matrix in left-ordered-form equivalence
 /// class (G&G 2005 Eq. 14):
 ///
-///   P([Z]) = α^{K⁺} / (Π_h K_h!) · exp(−α H_N)
-///            · Π_k (N − m_k)! (m_k − 1)! / N!
+/// ```text
+/// P([Z]) = α^{K⁺} / (Π_h K_h!) · exp(−α H_N)
+///          · Π_k (N − m_k)! (m_k − 1)! / N!
+/// ```
 pub fn log_prior(state: &FeatureState, alpha: f64) -> f64 {
     let n = state.n();
     let k = state.k();

@@ -43,7 +43,7 @@ impl Mask {
     }
 }
 
-/// log N(x_row[obs] ; (z_row A)[obs], σ² I) over observed dims only.
+/// `log N(x_row[obs] ; (z_row A)[obs], σ² I)` over observed dims only.
 pub fn masked_row_loglik(
     x_row: &[f64],
     mask_row: &[f64],
@@ -130,7 +130,7 @@ pub fn masked_sweep(
 }
 
 /// Posterior-mean reconstruction: observed entries pass through, missing
-/// entries are filled with (Z A)[i,j].
+/// entries are filled with `(Z A)[i,j]`.
 pub fn reconstruct(x: &Mat, mask: &Mask, z: &FeatureState, a: &Mat) -> Mat {
     let pred = z.to_mat().matmul(a);
     Mat::from_fn(x.rows(), x.cols(), |i, j| {

@@ -2,18 +2,29 @@
 //! the CPU PJRT client, memoises the executable, and runs it on f32
 //! buffers. Adapted from the smoke-verified /opt/xla-example/load_hlo
 //! pattern (HLO *text* interchange — see DESIGN.md).
-
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
-use std::rc::Rc;
-
-use anyhow::{bail, Context, Result};
-
-use super::artifact::{Entry, Manifest};
+//!
+//! Two builds of [`Engine`] exist:
+//!
+//! * **default** — a stub with the identical API whose [`Engine::load`]
+//!   always returns an error. The out-of-tree `xla` PJRT bindings are not
+//!   vendored in this repository, so default builds cannot execute HLO;
+//!   every caller (coordinator workers, benches, integration tests)
+//!   already treats a failed `Engine::load` as "fall back to the native
+//!   f64 path / skip".
+//! * **`--features pjrt`** — the real engine. Enabling the feature
+//!   requires adding the `xla` bindings as a dependency by hand; see
+//!   rust/Cargo.toml.
 
 /// A rank-2 f32 host buffer — the only tensor type that crosses the
 /// rust ⇄ PJRT boundary (manifest contract).
+///
+/// ```
+/// use pibp::runtime::F32Mat;
+/// let mut buf = F32Mat::zeros(2, 3);
+/// buf.set(1, 2, 4.5);
+/// assert_eq!(buf.get(1, 2), 4.5);
+/// assert_eq!(buf.data.len(), 6);
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct F32Mat {
     pub rows: usize,
@@ -63,109 +74,170 @@ impl F32Mat {
     }
 }
 
-/// Compiles + memoises executables for one manifest on one PJRT client.
-///
-/// Not `Send`: PJRT wrapper types hold raw pointers. Each coordinator
-/// worker thread owns its own `Engine` (CPU client construction is cheap
-/// relative to the per-run compile cache it amortises).
-pub struct Engine {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    /// Executions performed (metrics).
-    pub exec_count: RefCell<usize>,
-}
+#[cfg(feature = "pjrt")]
+mod engine_impl {
+    //! The real PJRT engine (requires the `xla` bindings dependency).
 
-impl Engine {
-    /// Load the manifest and create a CPU PJRT client.
-    pub fn load(artifacts_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
-        Ok(Self {
-            client,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            exec_count: RefCell::new(0),
-        })
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::rc::Rc;
+
+    use anyhow::{bail, Context, Result};
+
+    use super::super::artifact::{Entry, Manifest};
+    use super::F32Mat;
+
+    /// Compiles + memoises executables for one manifest on one PJRT client.
+    ///
+    /// Not `Send`: PJRT wrapper types hold raw pointers. Each coordinator
+    /// worker thread owns its own `Engine` (CPU client construction is cheap
+    /// relative to the per-run compile cache it amortises).
+    pub struct Engine {
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+        /// Executions performed (metrics).
+        pub exec_count: RefCell<usize>,
     }
 
-    /// Compile (or fetch memoised) the executable for an entry.
-    fn executable(&self, entry: &Entry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(&entry.file) {
-            return Ok(exe.clone());
+    impl Engine {
+        /// Load the manifest and create a CPU PJRT client.
+        pub fn load(artifacts_dir: &Path) -> Result<Self> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+            Ok(Self {
+                client,
+                manifest,
+                cache: RefCell::new(HashMap::new()),
+                exec_count: RefCell::new(0),
+            })
         }
-        let path = self.manifest.path_of(entry);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path utf-8")?,
-        )
-        .map_err(to_anyhow)
-        .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
+
+        /// Compile (or fetch memoised) the executable for an entry.
+        fn executable(&self, entry: &Entry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.cache.borrow().get(&entry.file) {
+                return Ok(exe.clone());
+            }
+            let path = self.manifest.path_of(entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path utf-8")?,
+            )
             .map_err(to_anyhow)
-            .with_context(|| format!("compiling {}", entry.file))?;
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(entry.file.clone(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Execute an entry on host buffers; validates shapes both ways.
-    pub fn run(&self, entry: &Entry, inputs: &[F32Mat]) -> Result<Vec<F32Mat>> {
-        if inputs.len() != entry.inputs.len() {
-            bail!(
-                "{}: {} inputs given, {} expected",
-                entry.name, inputs.len(), entry.inputs.len()
-            );
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(to_anyhow)
+                .with_context(|| format!("compiling {}", entry.file))?;
+            let exe = Rc::new(exe);
+            self.cache.borrow_mut().insert(entry.file.clone(), exe.clone());
+            Ok(exe)
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (buf, spec) in inputs.iter().zip(&entry.inputs) {
-            if (buf.rows, buf.cols) != spec.shape {
+
+        /// Execute an entry on host buffers; validates shapes both ways.
+        pub fn run(&self, entry: &Entry, inputs: &[F32Mat]) -> Result<Vec<F32Mat>> {
+            if inputs.len() != entry.inputs.len() {
                 bail!(
-                    "{}: input '{}' is {}x{}, manifest says {}x{}",
-                    entry.name, spec.name, buf.rows, buf.cols,
-                    spec.shape.0, spec.shape.1
+                    "{}: {} inputs given, {} expected",
+                    entry.name, inputs.len(), entry.inputs.len()
                 );
             }
-            let lit = xla::Literal::vec1(&buf.data)
-                .reshape(&[buf.rows as i64, buf.cols as i64])
-                .map_err(to_anyhow)?;
-            literals.push(lit);
-        }
-        let exe = self.executable(entry)?;
-        let result = exe.execute::<xla::Literal>(&literals).map_err(to_anyhow)?;
-        *self.exec_count.borrow_mut() += 1;
-        let tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;
-        let parts = tuple.to_tuple().map_err(to_anyhow)?;
-        if parts.len() != entry.outputs.len() {
-            bail!(
-                "{}: {} outputs returned, {} expected",
-                entry.name, parts.len(), entry.outputs.len()
-            );
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, spec) in parts.into_iter().zip(&entry.outputs) {
-            let data: Vec<f32> = lit.to_vec().map_err(to_anyhow)?;
-            if data.len() != spec.shape.0 * spec.shape.1 {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (buf, spec) in inputs.iter().zip(&entry.inputs) {
+                if (buf.rows, buf.cols) != spec.shape {
+                    bail!(
+                        "{}: input '{}' is {}x{}, manifest says {}x{}",
+                        entry.name, spec.name, buf.rows, buf.cols,
+                        spec.shape.0, spec.shape.1
+                    );
+                }
+                let lit = xla::Literal::vec1(&buf.data)
+                    .reshape(&[buf.rows as i64, buf.cols as i64])
+                    .map_err(to_anyhow)?;
+                literals.push(lit);
+            }
+            let exe = self.executable(entry)?;
+            let result = exe.execute::<xla::Literal>(&literals).map_err(to_anyhow)?;
+            *self.exec_count.borrow_mut() += 1;
+            let tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+            let parts = tuple.to_tuple().map_err(to_anyhow)?;
+            if parts.len() != entry.outputs.len() {
                 bail!(
-                    "{}: output '{}' has {} elems, want {}x{}",
-                    entry.name, spec.name, data.len(), spec.shape.0, spec.shape.1
+                    "{}: {} outputs returned, {} expected",
+                    entry.name, parts.len(), entry.outputs.len()
                 );
             }
-            out.push(F32Mat::from_vec(spec.shape.0, spec.shape.1, data));
+            let mut out = Vec::with_capacity(parts.len());
+            for (lit, spec) in parts.into_iter().zip(&entry.outputs) {
+                let data: Vec<f32> = lit.to_vec().map_err(to_anyhow)?;
+                if data.len() != spec.shape.0 * spec.shape.1 {
+                    bail!(
+                        "{}: output '{}' has {} elems, want {}x{}",
+                        entry.name, spec.name, data.len(), spec.shape.0, spec.shape.1
+                    );
+                }
+                out.push(F32Mat::from_vec(spec.shape.0, spec.shape.1, data));
+            }
+            Ok(out)
         }
-        Ok(out)
+
+        pub fn compiled_count(&self) -> usize {
+            self.cache.borrow().len()
+        }
     }
 
-    pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+    fn to_anyhow(e: xla::Error) -> anyhow::Error {
+        anyhow::anyhow!("{e}")
     }
 }
 
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("{e}")
+#[cfg(not(feature = "pjrt"))]
+mod engine_impl {
+    //! API-identical stub used by default builds (no `xla` bindings).
+
+    use std::cell::RefCell;
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::super::artifact::{Entry, Manifest};
+    use super::F32Mat;
+
+    /// Stub for the PJRT engine. Exists so the `Backend::Pjrt` code paths
+    /// type-check in default builds; [`Engine::load`] always errors, and
+    /// every caller treats that as "PJRT unavailable" (native fallback in
+    /// the runner, skipped tests/benches).
+    pub struct Engine {
+        pub manifest: Manifest,
+        /// Executions performed (always 0 for the stub; kept for API parity).
+        pub exec_count: RefCell<usize>,
+    }
+
+    impl Engine {
+        /// Always errors: default builds ship without the PJRT bindings.
+        pub fn load(artifacts_dir: &Path) -> Result<Self> {
+            let _ = Manifest::load(artifacts_dir)?;
+            bail!(
+                "PJRT backend unavailable: pibp was built without the `pjrt` \
+                 feature (the XLA PJRT bindings are not vendored in this \
+                 tree); use backend=native"
+            )
+        }
+
+        /// Unreachable in practice ([`Engine::load`] never succeeds).
+        pub fn run(&self, _entry: &Entry, _inputs: &[F32Mat]) -> Result<Vec<F32Mat>> {
+            bail!("PJRT backend unavailable (built without the `pjrt` feature)")
+        }
+
+        pub fn compiled_count(&self) -> usize {
+            0
+        }
+    }
 }
+
+pub use engine_impl::Engine;
 
 #[cfg(test)]
 mod tests {
@@ -182,6 +254,20 @@ mod tests {
         assert!(back.max_abs_diff(&m) < 1e-6);
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_load_errors() {
+        // Regardless of whether artifacts exist, the default build must
+        // refuse to construct a PJRT engine (and say why).
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let err = Engine::load(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("pjrt") || msg.contains("manifest.json"),
+            "unhelpful stub error: {msg}"
+        );
+    }
+
     // engine execution is covered by rust/tests/integration_runtime.rs
-    // (needs artifacts/ built).
+    // (needs artifacts/ built AND the `pjrt` feature).
 }

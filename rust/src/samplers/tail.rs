@@ -31,6 +31,37 @@ pub enum Proposal {
     MetropolisHastings,
 }
 
+/// Collapsed sampler for the uninstantiated tail on one shard's residuals
+/// (the p′ step of the hybrid algorithm).
+///
+/// # Examples
+///
+/// Residuals with a strong repeated pattern make the tail sampler
+/// instantiate a feature for it:
+///
+/// ```
+/// use pibp::linalg::Mat;
+/// use pibp::model::state::FeatureState;
+/// use pibp::model::LinGauss;
+/// use pibp::rng::Pcg64;
+/// use pibp::samplers::tail::TailProposer;
+///
+/// let mut rng = Pcg64::new(7);
+/// // every 3rd row carries a large rank-1 pattern, the rest is tiny noise
+/// let resid = Mat::from_fn(30, 8, |i, j| {
+///     let signal = if i % 3 == 0 { 3.0 } else { 0.0 };
+///     signal + 0.05 * (((i * 8 + j) % 7) as f64 - 3.0)
+/// });
+/// let mut tp = TailProposer::new(resid, FeatureState::empty(30), LinGauss::new(0.3, 1.0));
+/// for _ in 0..5 {
+///     // alpha = 1, global N = 30, propose up to 4 features, budget 8
+///     tp.sweep(1.0, 30, 4, 8, &mut rng);
+/// }
+/// assert!(tp.k_star() >= 1, "structured residuals must instantiate a tail feature");
+/// let tail = tp.take_tail();        // hand the bits to the master…
+/// assert_eq!(tp.k_star(), 0);       // …which resets the proposer
+/// assert!(tail.check_invariants());
+/// ```
 pub struct TailProposer {
     /// Residuals for the shard's rows (B × D), data for the tail model.
     resid: Mat,

@@ -61,12 +61,12 @@ fn parallel_matches_serial_oracle_distributionally() {
         LinGauss::new(0.5, 1.0),
         1.0,
         HybridConfig { processors: 2, sub_iters: 5, opts: SamplerOptions::default() },
-        &mut rng,
+        4,
     );
     let mut ev1 = HeldoutEval::new(test.x.clone(), 3);
     let mut serial_scores = vec![];
     for i in 0..45 {
-        serial.step(&mut rng);
+        serial.step();
         if i >= 30 {
             serial_scores.push(ev1.evaluate(&serial.params, &mut rng));
         }

@@ -1,0 +1,197 @@
+//! Minimal, dependency-free stand-in for the `anyhow` error-handling crate.
+//!
+//! The build environment for this repository is fully offline (no crate
+//! registry), so this vendored shim provides the small subset of the
+//! `anyhow` 1.x API the workspace actually uses:
+//!
+//! * [`Error`] — an opaque error value carrying a chain of context
+//!   messages (outermost first);
+//! * [`Result`] — `std::result::Result<T, Error>` with an overridable
+//!   error parameter, exactly like `anyhow::Result`;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`] and [`bail!`] macros.
+//!
+//! Formatting matches `anyhow` where observable in this workspace: `{}`
+//! prints the outermost message, `{:#}` prints the whole
+//! `outer: inner: …` chain on one line, and `{:?}` prints the message
+//! followed by a `Caused by:` list.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An error with a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like `anyhow::Error`, this type deliberately does NOT implement
+// `std::error::Error`: the blanket conversion below relies on that.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`] but can be
+/// instantiated with any error type (`Result<T, ParseIntError>` etc.).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values (`Result` and `Option`).
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+// Does not overlap with the impl above because `Error` (a local type)
+// does not implement `std::error::Error` — the same coherence argument
+// the real `anyhow` rests on.
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading /tmp/x")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading /tmp/x");
+        assert_eq!(format!("{e:#}"), "reading /tmp/x: missing thing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:") && dbg.contains("missing thing"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("no value").unwrap_err();
+        assert_eq!(e.to_string(), "no value");
+        let n = 3;
+        let e = anyhow!("bad value {n} ({})", n + 1);
+        assert_eq!(format!("{e}"), "bad value 3 (4)");
+        fn fails() -> Result<()> {
+            bail!("nope {}", 7)
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "nope 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<f64> {
+            Ok(s.parse::<f64>()?)
+        }
+        assert!(parse("1.5").is_ok());
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn with_context_is_lazy_and_chains() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| format!("step {}", 2))
+            .unwrap_err();
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["step 2", "missing thing"]);
+    }
+}
