@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = CoordinatorConfig {
             processors: p,
             sub_iters: 5,
+            threads_per_worker: 1,
             seed: 42,
             lg: LinGauss::new(0.5, 1.0),
             alpha: 1.0,

@@ -81,6 +81,7 @@ fn main() {
         let cfg = CoordinatorConfig {
             processors: 5,
             sub_iters: 5,
+            threads_per_worker: 1,
             seed: 5,
             lg: LinGauss::new(0.5, 1.0),
             alpha: 1.0,

@@ -11,6 +11,7 @@ use pibp::bench::{bench, header, human_time};
 use pibp::linalg::Mat;
 use pibp::model::state::FeatureState;
 use pibp::model::LinGauss;
+use pibp::parallel::{par_sweep_rows, ExecConfig, DEFAULT_BLOCK_ROWS};
 use pibp::rng::Pcg64;
 use pibp::runtime::{Engine, Ops};
 use pibp::samplers::collapsed::{CollapsedGibbs, Mode};
@@ -65,6 +66,44 @@ fn main() {
             println!("{}  [{} rows/s]", r.row(),
                      fmt_rate(b as f64 / r.per_iter.mean));
         }
+    }
+
+    // ---- intra-worker thread scaling: the same sweep through the
+    //      deterministic executor, T ∈ {1, 2, 4, 8} (identical chains —
+    //      only wall-clock moves; rates flatten past the physical cores) ----
+    println!();
+    let (tb, tk) = (1024usize, 16usize);
+    let mut t_results: Vec<(usize, f64)> = Vec::new();
+    for &t in &[1usize, 2, 4, 8] {
+        let (x, z0, a, logit) = problem(tb, tk, d);
+        let mut z = z0.clone();
+        let mut rng = Pcg64::new(4).split(1000);
+        let mut resid = residuals(&x, &z, &a, 0..tb);
+        let exec = ExecConfig::with_threads(t);
+        let r = bench(&format!("par     sweep b={tb} k={tk} T={t}"), 1, budget, 5, || {
+            par_sweep_rows(&mut z, &mut resid, &a, &logit, 2.0, 0..tb, tk,
+                           &exec, &mut rng);
+        });
+        let rate = tb as f64 / r.per_iter.mean;
+        println!("{}  [{} rows/s]", r.row(), fmt_rate(rate));
+        t_results.push((t, rate));
+    }
+    // machine-readable trajectory point (rows/sec per T) for the perf log
+    let entries: Vec<String> = t_results
+        .iter()
+        .map(|(t, rate)| {
+            format!("    {{\"threads\": {t}, \"rows_per_s\": {rate:.1}}}")
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"sweep_throughput\",\n  \"b\": {tb},\n  \
+         \"k\": {tk},\n  \"d\": {d},\n  \"block_rows\": {DEFAULT_BLOCK_ROWS},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    match std::fs::write("BENCH_sweep.json", &json) {
+        Ok(()) => println!("\nthread-scaling results → BENCH_sweep.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_sweep.json: {e}"),
     }
 
     // collapsed sweep for contrast (one full Gibbs iteration over rows)

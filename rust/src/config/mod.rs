@@ -93,6 +93,9 @@ pub struct RunConfig {
     pub sampler: SamplerKind,
     pub backend: Backend,
     pub processors: usize,
+    /// Intra-worker sweep threads T (deterministic fork-join; identical
+    /// chains for every value — see `crate::parallel`).
+    pub threads_per_worker: usize,
     pub sub_iters: usize,
     pub iters: usize,
     pub seed: u64,
@@ -121,6 +124,7 @@ impl Default for RunConfig {
             sampler: SamplerKind::Hybrid,
             backend: Backend::Native,
             processors: 1,
+            threads_per_worker: 1,
             sub_iters: 5,
             iters: 1000,
             seed: 0,
@@ -178,6 +182,7 @@ impl RunConfig {
             "sampler" => self.sampler = SamplerKind::parse(value)?,
             "backend" => self.backend = Backend::parse(value)?,
             "processors" => self.processors = uint()?,
+            "threads_per_worker" => self.threads_per_worker = uint()?,
             "sub_iters" => self.sub_iters = uint()?,
             "iters" => self.iters = uint()?,
             "seed" => self.seed = value.parse()?,
@@ -204,6 +209,9 @@ impl RunConfig {
     pub fn validate(&self) -> Result<()> {
         if self.processors == 0 {
             bail!("processors must be ≥ 1");
+        }
+        if self.threads_per_worker == 0 {
+            bail!("threads_per_worker must be ≥ 1");
         }
         if self.n < self.processors {
             bail!("need at least one row per processor");
@@ -236,10 +244,12 @@ mod tests {
     fn apply_overrides() {
         let mut c = RunConfig::default();
         c.apply("processors", "5").unwrap();
+        c.apply("threads_per_worker", "4").unwrap();
         c.apply("sampler", "collapsed").unwrap();
         c.apply("sigma_x", "0.25").unwrap();
         c.apply("sample_hypers", "false").unwrap();
         assert_eq!(c.processors, 5);
+        assert_eq!(c.threads_per_worker, 4);
         assert_eq!(c.sampler, SamplerKind::Collapsed);
         assert!(!c.sample_hypers);
     }
@@ -258,6 +268,9 @@ mod tests {
         c.processors = 0;
         assert!(c.validate().is_err());
         c.processors = 2000;
+        assert!(c.validate().is_err());
+        c = RunConfig::default();
+        c.threads_per_worker = 0;
         assert!(c.validate().is_err());
     }
 

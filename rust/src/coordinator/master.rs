@@ -35,6 +35,9 @@ use super::worker::{run_worker, WorkerConfig};
 pub struct CoordinatorConfig {
     pub processors: usize,
     pub sub_iters: usize,
+    /// Intra-worker sweep threads T (native backend; see
+    /// [`crate::parallel`]). Changes wall-clock only, never the chain.
+    pub threads_per_worker: usize,
     pub seed: u64,
     pub lg: LinGauss,
     pub alpha: f64,
@@ -49,6 +52,7 @@ impl Default for CoordinatorConfig {
         Self {
             processors: 1,
             sub_iters: 5,
+            threads_per_worker: 1,
             seed: 0,
             lg: LinGauss::new(0.5, 1.0),
             alpha: 1.0,
@@ -142,6 +146,7 @@ impl Coordinator {
                 id,
                 n_global: n,
                 sub_iters: cfg.sub_iters,
+                threads: cfg.threads_per_worker.max(1),
                 kmax_new: cfg.opts.kmax_new,
                 k_cap: cfg.opts.k_cap,
                 seed: cfg.seed,

@@ -17,10 +17,11 @@ use crate::config::Backend;
 use crate::linalg::Mat;
 use crate::model::state::FeatureState;
 use crate::model::LinGauss;
+use crate::parallel::{par_sweep_rows, ExecConfig};
 use crate::rng::Pcg64;
 use crate::runtime::{Engine, Ops};
 use crate::samplers::tail::TailProposer;
-use crate::samplers::uncollapsed::{residuals, sweep_rows};
+use crate::samplers::uncollapsed::residuals;
 
 use super::messages::{Broadcast, Summary, ToWorker, ZReport};
 
@@ -30,6 +31,9 @@ pub struct WorkerConfig {
     pub id: usize,
     pub n_global: usize,
     pub sub_iters: usize,
+    /// Intra-worker sweep threads T (native backend). Results are
+    /// bit-identical for every value — see [`crate::parallel`].
+    pub threads: usize,
     pub kmax_new: usize,
     pub k_cap: usize,
     pub seed: u64,
@@ -123,7 +127,10 @@ fn run_iteration(
         .collect();
 
     let i_am_p_prime = b.p_prime == me;
-    let mut tail_carry = tail_init;
+    // construction is cheap (no cache until a sweep) — the proposer just
+    // carries the tail bits across the L sub-iterations
+    let mut tp = TailProposer::new(tail_init, lg);
+    let exec = ExecConfig::with_threads(cfg.threads);
     // native path keeps the residual incrementally; PJRT recomputes it
     // inside the kernel (one MXU matmul per sweep)
     let mut resid = if engine.is_none() && k_plus > 0 {
@@ -140,26 +147,27 @@ fn run_iteration(
                     resid = ops.zsweep(x, z, &b.a, &prior_logit, inv2s2, rng)?;
                 }
                 None => {
-                    sweep_rows(
-                        x, z, &mut resid, &b.a, &prior_logit, inv2s2,
-                        0..x.rows(), k_plus, rng,
+                    par_sweep_rows(
+                        z, &mut resid, &b.a, &prior_logit, inv2s2,
+                        0..x.rows(), k_plus, &exec, rng,
                     );
                 }
             }
         }
         if i_am_p_prime {
-            let r = if k_plus > 0 { resid.clone() } else { x.clone() };
-            let mut tp = TailProposer::new(r, tail_carry, lg);
+            // the tail borrows the residual (== X when K⁺ = 0): nothing
+            // is cloned in this hot loop any more
             tp.sweep(
+                &resid,
                 b.alpha,
                 cfg.n_global,
                 cfg.kmax_new,
                 cfg.k_cap.saturating_sub(k_plus),
                 rng,
             );
-            tail_carry = tp.take_tail();
         }
     }
+    let tail_carry = tp.take_tail();
 
     // ---- summary statistics over [K⁺ | K*_local] ----
     let k_star = if i_am_p_prime { tail_carry.k() } else { 0 };

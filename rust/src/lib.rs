@@ -13,6 +13,9 @@
 //! Architecture (see DESIGN.md):
 //! * [`coordinator`] — the parallel runtime (master/worker threads +
 //!   metered channels standing in for MPI).
+//! * [`parallel`] — deterministic intra-worker fork-join executor: each
+//!   worker's row sweep runs as fixed-size blocks on T threads with one
+//!   RNG substream per block, bit-identical for every T.
 //! * [`samplers`] — collapsed / uncollapsed / accelerated baselines and the
 //!   serial hybrid reference.
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas kernels
@@ -28,6 +31,7 @@ pub mod data;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod parallel;
 pub mod propcheck;
 pub mod rng;
 pub mod runtime;

@@ -29,6 +29,7 @@ fn spec() -> Cli {
                 about: "run one experiment from a config (+ overrides)",
                 flags: vec![
                     flag("config", "JSON config file ('' = defaults)", ""),
+                    flag("threads", "intra-worker sweep threads T ('' = config value)", ""),
                     repeated("set", "override, e.g. --set processors=5"),
                 ],
             },
@@ -40,6 +41,7 @@ fn spec() -> Cli {
                     flag("n", "observations", "1000"),
                     flag("seed", "root seed", "0"),
                     flag("backend", "native|pjrt", "native"),
+                    flag("threads", "intra-worker sweep threads T", "1"),
                     flag("out", "output directory", "results/fig1"),
                 ],
             },
@@ -93,6 +95,11 @@ fn cmd_run(p: &Parsed) -> Result<()> {
         Some("") | None => RunConfig::default(),
         Some(path) => RunConfig::from_file(Path::new(path))?,
     };
+    // --threads beats the config file; an explicit --set still beats both
+    match p.get("threads") {
+        Some("") | None => {}
+        Some(t) => cfg.apply("threads_per_worker", t)?,
+    }
     for kv in p.get_list("set") {
         let (k, v) = kv
             .split_once('=')
@@ -100,9 +107,9 @@ fn cmd_run(p: &Parsed) -> Result<()> {
         cfg.apply(k, v)?;
     }
     println!(
-        "pibp run: {} sampler={} P={} iters={} backend={:?} seed={}",
-        cfg.dataset, cfg.sampler.name(), cfg.processors, cfg.iters,
-        cfg.backend, cfg.seed
+        "pibp run: {} sampler={} P={} T={} iters={} backend={:?} seed={}",
+        cfg.dataset, cfg.sampler.name(), cfg.processors,
+        cfg.threads_per_worker, cfg.iters, cfg.backend, cfg.seed
     );
     let every = (cfg.iters / 20).max(1);
     let out = runner::run(&cfg, |i| {
@@ -132,6 +139,10 @@ fn fig_cfg(p: &Parsed) -> Result<RunConfig> {
     cfg.seed = p.get("seed").unwrap_or("0").parse()?;
     if let Some(b) = p.get("backend") {
         cfg.apply("backend", b)?;
+    }
+    // fig2 has no --threads flag; fig1 defaults it to 1
+    if let Some(t) = p.get("threads") {
+        cfg.apply("threads_per_worker", t)?;
     }
     Ok(cfg)
 }

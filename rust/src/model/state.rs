@@ -87,6 +87,31 @@ impl FeatureState {
         &self.z[row * self.k..(row + 1) * self.k]
     }
 
+    /// Raw mutable bit access for a contiguous row range (row-major with
+    /// stride [`Self::k`]) — the parallel executor's entry point for
+    /// carving disjoint per-block views. The column counts `m` are **not**
+    /// maintained through this view: after mutating, the caller must
+    /// restore the invariant with [`Self::apply_m_delta`].
+    pub fn rows_bits_mut(&mut self, rows: std::ops::Range<usize>) -> &mut [u8] {
+        debug_assert!(rows.start <= rows.end && rows.end <= self.n);
+        &mut self.z[rows.start * self.k..rows.end * self.k]
+    }
+
+    /// Fold per-column count changes from raw-bit mutation (see
+    /// [`Self::rows_bits_mut`]) back into `m`: `m[k] += delta[k]`.
+    /// `delta` may be shorter than K (columns past its end are untouched).
+    pub fn apply_m_delta(&mut self, delta: &[i64]) {
+        debug_assert!(delta.len() <= self.k);
+        for (k, &d) in delta.iter().enumerate() {
+            let m = self.m[k] as i64 + d;
+            debug_assert!(
+                (0..=self.n as i64).contains(&m),
+                "m[{k}] out of range after delta {d}"
+            );
+            self.m[k] = m as usize;
+        }
+    }
+
     /// Append `count` new all-zero columns; returns the first new index.
     pub fn add_features(&mut self, count: usize) -> usize {
         if count == 0 {
@@ -236,6 +261,34 @@ mod tests {
         assert_eq!(p.cols(), 5);
         assert_eq!(p[(0, 0)], 1.0);
         assert_eq!(p[(3, 4)], 0.0);
+    }
+
+    #[test]
+    fn raw_bits_roundtrip_with_m_delta() {
+        let mut st = FeatureState::empty(5);
+        st.add_features(3);
+        st.set(0, 0, 1);
+        st.set(4, 2, 1);
+        // flip bits through the raw view for rows 1..4 and track deltas
+        let mut delta = [0i64; 3];
+        {
+            let bits = st.rows_bits_mut(1..4);
+            assert_eq!(bits.len(), 9);
+            bits[0] = 1; // (1, 0)
+            delta[0] += 1;
+            bits[2 * 3 + 1] = 1; // (3, 1)
+            delta[1] += 1;
+        }
+        st.apply_m_delta(&delta);
+        assert_eq!(st.m(), &[2, 1, 1]);
+        assert!(st.check_invariants());
+        // a negative delta after clearing a bit
+        let mut delta = [0i64; 2];
+        st.rows_bits_mut(0..1)[0] = 0;
+        delta[0] -= 1;
+        st.apply_m_delta(&delta);
+        assert_eq!(st.m(), &[1, 1, 1]);
+        assert!(st.check_invariants());
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Deterministic intra-worker parallel execution.
+//!
+//! The paper's argument for the P-worker coordinator — rows of Z are
+//! conditionally independent given the instantiated features (π, A) —
+//! applies equally *inside* one worker's uncollapsed sweep. This module
+//! exploits it with zero approximation: a fork-join executor over
+//! [`std::thread::scope`] (the offline image has no rayon) that
+//!
+//! 1. partitions the row range into fixed-size blocks
+//!    ([`BlockPlan`], [`DEFAULT_BLOCK_ROWS`] rows each — the layout
+//!    depends only on the range, never on the thread count);
+//! 2. derives one RNG substream per block with the repo's split
+//!    discipline (`worker_rng.split(BLOCK_TAG_BASE + b)`, mirroring the
+//!    coordinator's `root.split(1000 + p)` worker layout);
+//! 3. runs [`sweep_block`] kernels on T threads against disjoint
+//!    `&mut` row slices of Z and the residual matrix;
+//! 4. merges per-block scratch (flip counts, column-count deltas) in
+//!    block order.
+//!
+//! Because every block's writes and draws are self-contained, the output
+//! is **bit-identical for every T, including T = 1** — which is what lets
+//! the serial hybrid oracle (always T = 1) pin multi-threaded coordinator
+//! runs chain-for-chain (`rust/tests/thread_equivalence.rs`).
+//!
+//! ## Parent-stream contract
+//!
+//! Each [`par_sweep_rows`] call consumes **exactly one `u64`** from the
+//! parent stream — no more, regardless of block count or thread count —
+//! and then derives block substreams from the advanced state. Advancing
+//! the parent makes consecutive sweeps (the L sub-iterations) draw
+//! distinct substreams for the same block indices; consuming a fixed
+//! amount keeps everything after the sweep (e.g. the p′ tail proposal on
+//! the same worker stream) aligned across thread counts.
+
+mod blocks;
+
+pub use blocks::{BlockPlan, BLOCK_TAG_BASE, DEFAULT_BLOCK_ROWS};
+
+use std::ops::Range;
+
+use crate::linalg::Mat;
+use crate::model::state::FeatureState;
+use crate::rng::Pcg64;
+use crate::samplers::uncollapsed::sweep_block;
+
+/// Executor knobs. `threads` is a *scheduling* choice only — it never
+/// affects results; `block_rows` is part of the RNG draw-order contract
+/// (changing it changes the chain, like changing the seed would).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// Worker threads T for the fork-join (1 = run inline, no spawns).
+    pub threads: usize,
+    /// Rows per block (fixed; the last block of a range may be ragged).
+    pub block_rows: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        Self { threads: 1, block_rows: DEFAULT_BLOCK_ROWS }
+    }
+}
+
+impl ExecConfig {
+    /// Production config: T threads over [`DEFAULT_BLOCK_ROWS`]-row blocks.
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads: threads.max(1), ..Self::default() }
+    }
+}
+
+/// One block's work packet: disjoint views plus private scratch.
+struct BlockTask<'a> {
+    zbits: &'a mut [u8],
+    resid: &'a mut [f64],
+    rng: Pcg64,
+    m_delta: Vec<i64>,
+    flips: usize,
+}
+
+impl BlockTask<'_> {
+    fn run(&mut self, stride: usize, d: usize, a: &Mat, prior_logit: &[f64],
+           inv2s2: f64, k_limit: usize) {
+        self.flips = sweep_block(
+            self.zbits, stride, self.resid, d, a, prior_logit, inv2s2,
+            k_limit, &mut self.rng, &mut self.m_delta,
+        );
+    }
+}
+
+/// One uncollapsed Gibbs sweep of `z[rows]` over columns `0..k_limit`,
+/// executed as fixed-size row blocks on up to `exec.threads` threads.
+/// `resid` must hold X − Z A on entry for the swept rows and is kept
+/// consistent. Returns the total number of flips.
+///
+/// Semantics match [`crate::samplers::uncollapsed::sweep_rows`] except
+/// for the RNG discipline: draws come from per-block substreams
+/// (`rng.split(BLOCK_TAG_BASE + b)` after advancing `rng` once) instead
+/// of the caller's stream directly, so the result is a pure function of
+/// the inputs — independent of `exec.threads`.
+#[allow(clippy::too_many_arguments)]
+pub fn par_sweep_rows(
+    z: &mut FeatureState,
+    resid: &mut Mat,
+    a: &Mat,
+    prior_logit: &[f64],
+    inv2s2: f64,
+    rows: Range<usize>,
+    k_limit: usize,
+    exec: &ExecConfig,
+    rng: &mut Pcg64,
+) -> usize {
+    // Parent-stream contract (module docs): exactly one draw per call,
+    // before any early return, so consumption never depends on the data.
+    rng.next_u64();
+    let stride = z.k();
+    let d = resid.cols();
+    debug_assert!(k_limit <= stride && k_limit <= a.rows());
+    debug_assert!(rows.end <= z.n() && rows.end <= resid.rows());
+    let plan = BlockPlan::new(rows.clone(), exec.block_rows.max(1));
+    if plan.is_empty() || k_limit == 0 || d == 0 {
+        return 0;
+    }
+
+    let mut m_total = vec![0i64; k_limit];
+    let mut flips = 0usize;
+    {
+        // carve the swept range into disjoint per-block views; blocks are
+        // fixed-size (ragged tail), so chunks_mut reproduces the plan's
+        // boundaries exactly
+        let block_rows = exec.block_rows.max(1);
+        let zchunks = z.rows_bits_mut(rows.clone()).chunks_mut(block_rows * stride);
+        let rchunks = resid.as_mut_slice()[rows.start * d..rows.end * d]
+            .chunks_mut(block_rows * d);
+        let mut tasks: Vec<BlockTask> = Vec::with_capacity(plan.len());
+        for (b, (zb, rb)) in zchunks.zip(rchunks).enumerate() {
+            debug_assert_eq!(zb.len() / stride, plan.block(b).len());
+            tasks.push(BlockTask {
+                zbits: zb,
+                resid: rb,
+                rng: rng.split(BlockPlan::tag(b)),
+                m_delta: vec![0i64; k_limit],
+                flips: 0,
+            });
+        }
+        debug_assert_eq!(tasks.len(), plan.len());
+
+        let t = exec.threads.max(1).min(tasks.len());
+        if t <= 1 {
+            for task in &mut tasks {
+                task.run(stride, d, a, prior_logit, inv2s2, k_limit);
+            }
+        } else {
+            // contiguous chunks of blocks per thread: which thread runs a
+            // block is irrelevant to the output (disjoint writes, private
+            // RNG), so plain chunking is as good as stealing and cheaper.
+            let per = tasks.len().div_ceil(t);
+            std::thread::scope(|s| {
+                for group in tasks.chunks_mut(per) {
+                    s.spawn(move || {
+                        for task in group {
+                            task.run(stride, d, a, prior_logit, inv2s2, k_limit);
+                        }
+                    });
+                }
+            });
+        }
+
+        // merge per-block scratch in block order
+        for task in &tasks {
+            flips += task.flips;
+            for (acc, &dm) in m_total.iter_mut().zip(&task.m_delta) {
+                *acc += dm;
+            }
+        }
+    }
+    z.apply_m_delta(&m_total);
+    flips
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::samplers::uncollapsed::residuals;
+
+    /// Planted problem: X = Z_true A + noise, Z warm-started at random.
+    fn problem(n: usize, k: usize, d: usize, seed: u64)
+               -> (Mat, FeatureState, Mat, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let mut z = FeatureState::empty(n);
+        z.add_features(k);
+        for i in 0..n {
+            for j in 0..k {
+                if rng.bernoulli(0.4) {
+                    z.set(i, j, 1);
+                }
+            }
+        }
+        // weak loadings + noise keep the per-bit logits small, so sweeps
+        // keep flipping bits — the determinism assertions stay meaningful
+        let a = Mat::from_fn(k, d, |_, _| 0.5 * rng.normal());
+        let mut x = z.to_mat().matmul(&a);
+        for v in x.as_mut_slice().iter_mut() {
+            *v += 0.4 * rng.normal();
+        }
+        let logit: Vec<f64> = (0..k).map(|j| 0.2 * (j as f64) - 0.4).collect();
+        (x, z, a, logit)
+    }
+
+    fn run_once(threads: usize, block_rows: usize, rows: Range<usize>,
+                k_limit: usize, seed: u64)
+                -> (FeatureState, Mat, usize, u64) {
+        let (x, mut z, a, logit) = problem(101, 5, 7, seed);
+        let mut resid = residuals(&x, &z, &a, 0..x.rows());
+        let mut rng = Pcg64::new(99).split(1000);
+        let exec = ExecConfig { threads, block_rows };
+        let flips = par_sweep_rows(
+            &mut z, &mut resid, &a, &logit, 1.7, rows, k_limit, &exec, &mut rng,
+        );
+        // the parent stream's post-state is part of the contract
+        (z, resid, flips, rng.next_u64())
+    }
+
+    #[test]
+    fn identical_output_for_every_thread_count() {
+        // ragged: 101 rows, block 16 ⇒ 7 blocks, last of 5 rows
+        let base = run_once(1, 16, 0..101, 5, 3);
+        for t in [2usize, 3, 7] {
+            let got = run_once(t, 16, 0..101, 5, 3);
+            assert_eq!(got.0, base.0, "Z diverged at T={t}");
+            assert!(got.1.max_abs_diff(&base.1) == 0.0, "resid diverged at T={t}");
+            assert_eq!(got.2, base.2, "flip count diverged at T={t}");
+            assert_eq!(got.3, base.3, "parent RNG state diverged at T={t}");
+        }
+        // and the sweep did something, so the equalities are meaningful
+        assert!(base.2 > 0, "sweep never flipped a bit");
+        assert!(base.0.check_invariants());
+    }
+
+    #[test]
+    fn sub_ranges_only_touch_their_rows() {
+        let full = run_once(3, 8, 20..60, 5, 4);
+        let (x, z0, a, _) = problem(101, 5, 7, 4);
+        let resid0 = residuals(&x, &z0, &a, 0..x.rows());
+        for i in (0..20).chain(60..101) {
+            assert_eq!(full.0.row_bits(i), z0.row_bits(i), "row {i} touched");
+            assert_eq!(full.1.row(i), resid0.row(i), "resid row {i} touched");
+        }
+        assert!(full.0.check_invariants());
+    }
+
+    #[test]
+    fn residuals_stay_consistent_under_threads() {
+        let (x, mut z, a, logit) = problem(67, 4, 9, 8);
+        let mut resid = residuals(&x, &z, &a, 0..67);
+        let mut rng = Pcg64::new(5).split(1002);
+        let exec = ExecConfig { threads: 4, block_rows: 8 };
+        for _ in 0..3 {
+            par_sweep_rows(&mut z, &mut resid, &a, &logit, 2.0, 0..67, 4,
+                           &exec, &mut rng);
+        }
+        let want = residuals(&x, &z, &a, 0..67);
+        assert!(resid.max_abs_diff(&want) < 1e-10);
+        assert!(z.check_invariants());
+    }
+
+    #[test]
+    fn k_limit_restricts_columns() {
+        let got = run_once(2, 16, 0..101, 3, 6);
+        let (_, z0, _, _) = problem(101, 5, 7, 6);
+        for i in 0..101 {
+            for k in 3..5 {
+                assert_eq!(got.0.get(i, k), z0.get(i, k), "col {k} touched");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_range_is_a_noop_but_advances_parent_once() {
+        let (_, mut z, a, logit) = problem(20, 3, 4, 7);
+        let z0 = z.clone();
+        let mut resid = Mat::zeros(20, 4);
+        let mut rng = Pcg64::new(11).split(1000);
+        let mut twin = rng.clone();
+        let flips = par_sweep_rows(&mut z, &mut resid, &a, &logit, 1.0,
+                                   5..5, 3, &ExecConfig::default(), &mut rng);
+        assert_eq!(flips, 0);
+        assert_eq!(z, z0);
+        twin.next_u64(); // the contract: exactly one parent draw
+        assert_eq!(rng.next_u64(), twin.next_u64());
+    }
+
+    #[test]
+    fn single_row_range_works() {
+        for t in [1usize, 4] {
+            let got = run_once(t, 16, 50..51, 5, 9);
+            let base = run_once(1, 16, 50..51, 5, 9);
+            assert_eq!(got.0, base.0);
+            assert!(got.0.check_invariants());
+        }
+    }
+
+    #[test]
+    fn k_plus_zero_is_a_noop_with_fixed_parent_consumption() {
+        // K⁺ = 0: no columns to sweep — but the parent stream still moves
+        // by exactly one draw, for every T.
+        let mut z = FeatureState::empty(30);
+        let mut resid = Mat::from_fn(30, 6, |i, j| (i + j) as f64);
+        let resid0 = resid.clone();
+        let a = Mat::zeros(0, 6);
+        let mut states = vec![];
+        for t in [1usize, 3] {
+            let mut rng = Pcg64::new(13).split(1001);
+            let flips = par_sweep_rows(&mut z, &mut resid, &a, &[], 1.0,
+                                       0..30, 0,
+                                       &ExecConfig::with_threads(t), &mut rng);
+            assert_eq!(flips, 0);
+            states.push(rng.next_u64());
+        }
+        assert_eq!(states[0], states[1]);
+        assert_eq!(z.k(), 0);
+        assert!(resid.max_abs_diff(&resid0) == 0.0);
+    }
+
+    #[test]
+    fn block_size_is_part_of_the_draw_contract() {
+        // different block_rows ⇒ a different (equally valid) chain — this
+        // is why DEFAULT_BLOCK_ROWS is fixed repo-wide, like the seed
+        let a16 = run_once(1, 16, 0..101, 5, 15);
+        let a32 = run_once(1, 32, 0..101, 5, 15);
+        assert_ne!(a16.0, a32.0);
+    }
+}

@@ -84,7 +84,8 @@ pub fn run(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOutcom
     };
     let lg = LinGauss::new(cfg.sigma_x, cfg.sigma_a);
     let mut eval_rng = Pcg64::new(cfg.seed).split(7777);
-    let mut evaluator = HeldoutEval::new(test.x.clone(), cfg.eval_sweeps);
+    let mut evaluator = HeldoutEval::new(test.x.clone(), cfg.eval_sweeps)
+        .with_threads(cfg.threads_per_worker);
     let label = format!("{}-p{}", cfg.sampler.name(), cfg.processors);
     let mut trace = Trace::new(label);
 
@@ -93,6 +94,7 @@ pub fn run(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOutcom
             let ccfg = CoordinatorConfig {
                 processors: cfg.processors,
                 sub_iters: cfg.sub_iters,
+                threads_per_worker: cfg.threads_per_worker,
                 seed: cfg.seed,
                 lg,
                 alpha: cfg.alpha,

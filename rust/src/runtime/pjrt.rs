@@ -11,9 +11,11 @@
 //!   every caller (coordinator workers, benches, integration tests)
 //!   already treats a failed `Engine::load` as "fall back to the native
 //!   f64 path / skip".
-//! * **`--features pjrt`** — the real engine. Enabling the feature
-//!   requires adding the `xla` bindings as a dependency by hand; see
-//!   rust/Cargo.toml.
+//! * **`--features pjrt`** — the real engine, compiled against the `xla`
+//!   dependency. Offline checkouts resolve that to the vendored API stub
+//!   (`vendor/xla`, every call errors at runtime — CI uses this build to
+//!   keep the engine path type-checked); point the dependency at the
+//!   real bindings to execute HLO (see rust/Cargo.toml).
 
 /// A rank-2 f32 host buffer — the only tensor type that crosses the
 /// rust ⇄ PJRT boundary (manifest contract).

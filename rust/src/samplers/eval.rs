@@ -12,19 +12,36 @@
 use crate::linalg::Mat;
 use crate::model::state::FeatureState;
 use crate::model::GlobalParams;
+use crate::parallel::{par_sweep_rows, ExecConfig};
 use crate::rng::Pcg64;
-use crate::samplers::uncollapsed::{residuals, sweep_rows};
+use crate::samplers::uncollapsed::residuals;
 
 pub struct HeldoutEval {
     pub x_test: Mat,
     z_test: FeatureState,
     g_sweeps: usize,
+    /// Executor config for the test-set sweeps. Like every
+    /// [`crate::parallel`] sweep, the evaluation is bit-identical for any
+    /// thread count.
+    exec: ExecConfig,
 }
 
 impl HeldoutEval {
     pub fn new(x_test: Mat, g_sweeps: usize) -> Self {
         let n = x_test.rows();
-        Self { x_test, z_test: FeatureState::empty(n), g_sweeps }
+        Self {
+            x_test,
+            z_test: FeatureState::empty(n),
+            g_sweeps,
+            exec: ExecConfig::default(),
+        }
+    }
+
+    /// Run the held-out sweeps on `threads` threads (same results, less
+    /// wall-clock).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.exec.threads = threads.max(1);
+        self
     }
 
     /// Evaluate the joint held-out log-likelihood under `params`.
@@ -58,9 +75,9 @@ impl HeldoutEval {
         let inv2s2 = 1.0 / (2.0 * params.lg.sigma_x * params.lg.sigma_x);
         let mut resid = residuals(&self.x_test, &self.z_test, &params.a, 0..n);
         for _ in 0..self.g_sweeps {
-            sweep_rows(
-                &self.x_test, &mut self.z_test, &mut resid, &params.a,
-                &prior_logit, inv2s2, 0..n, k, rng,
+            par_sweep_rows(
+                &mut self.z_test, &mut resid, &params.a, &prior_logit,
+                inv2s2, 0..n, k, &self.exec, rng,
             );
         }
         self.joint(params)

@@ -22,20 +22,27 @@
 //! * **RNG streams** — from a root `seed`, the master draws from
 //!   `Pcg64::new(seed).split(1)` and simulated worker `p` draws from
 //!   `Pcg64::new(seed).split(1000 + p)`, the same derivation used by
-//!   `coordinator::master` / `coordinator::worker`;
+//!   `coordinator::master` / `coordinator::worker`; each uncollapsed
+//!   sweep follows the [`crate::parallel`] per-row-block discipline (one
+//!   parent draw, then `split(2000 + b)` per block), so the chain is also
+//!   identical to a coordinator running any `threads_per_worker`;
 //! * **draw order** — the master step picks the *next* p′ before sampling
 //!   globals (the coordinator needs p′ early for its demotion decision),
 //!   and samples A, π, σ_X, σ_A, α in that order;
-//! * **arithmetic** — the RSS entering the σ_X conditional is assembled
-//!   from the merged sufficient statistics
-//!   (`‖X−ZA‖² = tr XᵀX − 2 tr AᵀZᵀX + tr Aᵀ(ZᵀZ)A`), the same formula
-//!   the master uses, so the two implementations agree bit-for-bit.
+//! * **arithmetic** — the sufficient statistics (ZᵀZ, ZᵀX, tr XᵀX) are
+//!   accumulated shard-by-shard in worker order (FP addition is not
+//!   associative, so a global computation would round differently at
+//!   P > 1), and the RSS entering the σ_X conditional is assembled from
+//!   them (`‖X−ZA‖² = tr XᵀX − 2 tr AᵀZᵀX + tr Aᵀ(ZᵀZ)A`), the same
+//!   formula the master uses, so the two implementations agree
+//!   bit-for-bit at every P.
 //!
 //! With demotion disabled (`SamplerOptions { demote_below: 0, .. }` — the
 //! serial oracle does not implement the coordinator's demotion
-//! optimisation), a P = 1 coordinator reproduces this sampler's chain
-//! exactly for any number of iterations; see
-//! `rust/tests/parallel_equivalence.rs`. It is also the P = 1
+//! optimisation), a coordinator at any P — and any `threads_per_worker` —
+//! reproduces this sampler's chain exactly for any number of iterations;
+//! see `rust/tests/parallel_equivalence.rs` and
+//! `rust/tests/thread_equivalence.rs`. It is also the P = 1
 //! configuration measured in Figure 1.
 
 use std::ops::Range;
@@ -43,9 +50,10 @@ use std::ops::Range;
 use crate::linalg::Mat;
 use crate::model::state::FeatureState;
 use crate::model::{ibp, GlobalParams, LinGauss};
+use crate::parallel::{par_sweep_rows, ExecConfig};
 use crate::rng::Pcg64;
 use crate::samplers::tail::TailProposer;
-use crate::samplers::uncollapsed::{residuals, sweep_rows};
+use crate::samplers::uncollapsed::residuals;
 use crate::samplers::{IterStats, SamplerOptions};
 
 #[derive(Clone, Debug)]
@@ -54,12 +62,22 @@ pub struct HybridConfig {
     pub processors: usize,
     /// Sub-iterations L between global steps (paper uses 5).
     pub sub_iters: usize,
+    /// Intra-worker sweep threads T. The chain is *identical* for every
+    /// value (the executor's per-row-block RNG discipline — see
+    /// [`crate::parallel`]); this only changes how the serial oracle's
+    /// simulated workers schedule their blocks.
+    pub threads_per_worker: usize,
     pub opts: SamplerOptions,
 }
 
 impl Default for HybridConfig {
     fn default() -> Self {
-        Self { processors: 1, sub_iters: 5, opts: SamplerOptions::default() }
+        Self {
+            processors: 1,
+            sub_iters: 5,
+            threads_per_worker: 1,
+            opts: SamplerOptions::default(),
+        }
     }
 }
 
@@ -104,6 +122,8 @@ pub struct HybridSampler {
     resid: Mat,
     /// Persistent tail assignments on p′ between sub-iterations.
     tail_state: Option<FeatureState>,
+    /// Per-shard copies of X (fixed): suff-stat accumulation input.
+    x_shards: Vec<Mat>,
     /// Master RNG stream: `Pcg64::new(seed).split(1)` (coordinator layout).
     master_rng: Pcg64,
     /// Per-processor streams: `Pcg64::new(seed).split(1000 + p)`.
@@ -130,7 +150,18 @@ impl HybridSampler {
         let z = FeatureState::empty(n);
         let params = GlobalParams { a: Mat::zeros(0, x.cols()), pi: vec![], lg, alpha };
         let resid = x.clone();
-        let tr_xx = x.frob2();
+        // Per-shard copies of X, fixed for the run: reused every master
+        // step for the shard-ordered suff-stat accumulation below.
+        let d = x.cols();
+        let x_shards: Vec<Mat> = shards
+            .iter()
+            .map(|sh| Mat::from_fn(sh.len(), d, |i, j| x[(sh.start + i, j)]))
+            .collect();
+        // tr XᵀX = Σ_p ‖X_p‖² accumulated in worker order — the same
+        // association the coordinator's merge uses, so the σ_X
+        // conditional sees bit-identical input at any P (a global frob2
+        // groups the additions differently and rounds differently).
+        let tr_xx = x_shards.iter().fold(0.0f64, |acc, xp| acc + xp.frob2());
         Self {
             x,
             z,
@@ -140,6 +171,7 @@ impl HybridSampler {
             cfg,
             resid,
             tail_state: None,
+            x_shards,
             master_rng,
             worker_rngs,
             tr_xx,
@@ -162,40 +194,47 @@ impl HybridSampler {
             })
             .collect();
 
+        let exec = ExecConfig::with_threads(self.cfg.threads_per_worker);
+        let shard_pp = self.shards[self.p_prime].clone();
+        let b = shard_pp.len();
+        let carried = self
+            .tail_state
+            .take()
+            .unwrap_or_else(|| FeatureState::empty(b));
+        let mut tp = TailProposer::new(carried, self.params.lg);
+        // reusable view of p′'s residual rows (refreshed per sub-iteration)
+        let mut local_resid = Mat::zeros(b, self.x.cols());
         for _l in 0..self.cfg.sub_iters {
             // --- every processor: uncollapsed sweep over K⁺ (each on its
-            //     own RNG stream, like the real worker threads) ---
+            //     own RNG stream, like the real worker threads; blocks of
+            //     each shard run on per-block substreams) ---
             for p in 0..self.cfg.processors {
                 let shard = self.shards[p].clone();
                 if k_plus > 0 {
-                    sweep_rows(
-                        &self.x, &mut self.z, &mut self.resid,
-                        &self.params.a, &prior_logit, inv2s2,
-                        shard, k_plus, &mut self.worker_rngs[p],
+                    par_sweep_rows(
+                        &mut self.z, &mut self.resid, &self.params.a,
+                        &prior_logit, inv2s2, shard, k_plus, &exec,
+                        &mut self.worker_rngs[p],
                     );
                 }
             }
-            // --- p′: collapsed tail on residuals ---
-            let shard = self.shards[self.p_prime].clone();
-            let b = shard.len();
-            let local_resid = Mat::from_fn(b, self.x.cols(), |i, j| {
-                self.resid[(shard.start + i, j)]
-            });
-            let carried = self
-                .tail_state
-                .take()
-                .unwrap_or_else(|| FeatureState::empty(b));
-            let mut tp = TailProposer::new(local_resid, carried, self.params.lg);
+            // --- p′: collapsed tail on its shard's residuals ---
+            for i in 0..b {
+                local_resid
+                    .row_mut(i)
+                    .copy_from_slice(self.resid.row(shard_pp.start + i));
+            }
             let p_prime = self.p_prime;
             tp.sweep(
+                &local_resid,
                 self.params.alpha,
                 self.x.rows(),
                 self.cfg.opts.kmax_new,
                 self.cfg.opts.k_cap.saturating_sub(k_plus),
                 &mut self.worker_rngs[p_prime],
             );
-            self.tail_state = Some(tp.take_tail());
         }
+        self.tail_state = Some(tp.take_tail());
 
         self.master_step();
         self.iter += 1;
@@ -238,9 +277,19 @@ impl HybridSampler {
         let p_next = self.master_rng.below(self.cfg.processors as u64) as usize;
         // --- sample globals given the (promoted, compacted) Z ---
         if k > 0 {
-            let zm = self.z.to_mat();
-            let ztz = zm.gram();
-            let ztx = zm.t_matmul(&self.x);
+            // ZᵀZ / ZᵀX merged shard-by-shard in worker order, replicating
+            // the coordinator master's accumulation so every FP rounding
+            // matches at any P (ZᵀZ is integer-valued and order-exact;
+            // ZᵀX and tr XᵀX are not associativity-proof).
+            let mut ztz = Mat::zeros(k, k);
+            let mut ztx = Mat::zeros(k, d);
+            for (sh, xp) in self.shards.iter().zip(&self.x_shards) {
+                let zp = Mat::from_fn(sh.len(), k, |i, j| {
+                    self.z.get(sh.start + i, j) as f64
+                });
+                ztz.add_assign(&zp.gram());
+                ztx.add_assign(&zp.t_matmul(xp));
+            }
             self.params.a =
                 self.params.lg.apost_sample(&ztz, &ztx, &mut self.master_rng);
             self.params.pi = ibp::sample_pi(self.z.m(), n, &mut self.master_rng);
@@ -369,6 +418,7 @@ mod tests {
             HybridConfig {
                 processors: 1,
                 sub_iters: 5,
+                threads_per_worker: 1,
                 opts: SamplerOptions { sample_sigmas: false, ..Default::default() },
             },
             2,
@@ -410,6 +460,7 @@ mod tests {
                 HybridConfig {
                     processors: p,
                     sub_iters: 5,
+                    threads_per_worker: 1,
                     opts: SamplerOptions { sample_sigmas: false, ..Default::default() },
                 },
                 seed,

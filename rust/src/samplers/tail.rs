@@ -34,6 +34,13 @@ pub enum Proposal {
 /// Collapsed sampler for the uninstantiated tail on one shard's residuals
 /// (the p′ step of the hybrid algorithm).
 ///
+/// The proposer owns only the tail *assignments*; the residual matrix is
+/// **borrowed per sweep** (`sweep(&resid, …)`). The instantiated-feature
+/// sweeps rewrite the residual between sub-iterations, so the collapsed
+/// cache is rebuilt from the borrowed matrix at the start of every sweep
+/// — exactly what the old owned-residual API recomputed, minus the B × D
+/// clone the hot loop used to pay per sub-iteration.
+///
 /// # Examples
 ///
 /// Residuals with a strong repeated pattern make the tail sampler
@@ -52,10 +59,10 @@ pub enum Proposal {
 ///     let signal = if i % 3 == 0 { 3.0 } else { 0.0 };
 ///     signal + 0.05 * (((i * 8 + j) % 7) as f64 - 3.0)
 /// });
-/// let mut tp = TailProposer::new(resid, FeatureState::empty(30), LinGauss::new(0.3, 1.0));
+/// let mut tp = TailProposer::new(FeatureState::empty(30), LinGauss::new(0.3, 1.0));
 /// for _ in 0..5 {
 ///     // alpha = 1, global N = 30, propose up to 4 features, budget 8
-///     tp.sweep(1.0, 30, 4, 8, &mut rng);
+///     tp.sweep(&resid, 1.0, 30, 4, 8, &mut rng);
 /// }
 /// assert!(tp.k_star() >= 1, "structured residuals must instantiate a tail feature");
 /// let tail = tp.take_tail();        // hand the bits to the master…
@@ -63,22 +70,20 @@ pub enum Proposal {
 /// assert!(tail.check_invariants());
 /// ```
 pub struct TailProposer {
-    /// Residuals for the shard's rows (B × D), data for the tail model.
-    resid: Mat,
+    /// Shard rows B (shape contract for every borrowed residual).
+    rows: usize,
     /// Shard-local tail assignments (B × K*).
     pub z_tail: FeatureState,
-    cache: CollapsedCache,
     lg: LinGauss,
     pub proposal: Proposal,
 }
 
 impl TailProposer {
-    /// Build from the current residuals, carrying over existing tail
-    /// assignments (pass `FeatureState::empty(b)` on first use).
-    pub fn new(resid: Mat, z_tail: FeatureState, lg: LinGauss) -> Self {
-        assert_eq!(resid.rows(), z_tail.n());
-        let cache = CollapsedCache::new(&resid, &z_tail.to_mat(), lg.ratio());
-        Self { resid, z_tail, cache, lg, proposal: Proposal::default() }
+    /// Build from carried-over tail assignments (pass
+    /// `FeatureState::empty(b)` on first use). Cheap: no cache is built
+    /// until a residual is seen in [`Self::sweep`].
+    pub fn new(z_tail: FeatureState, lg: LinGauss) -> Self {
+        Self { rows: z_tail.n(), z_tail, lg, proposal: Proposal::default() }
     }
 
     pub fn with_proposal(mut self, proposal: Proposal) -> Self {
@@ -91,19 +96,27 @@ impl TailProposer {
         self.z_tail.k()
     }
 
-    /// One collapsed sweep over all shard rows: resample existing tail
-    /// bits, then the truncated-exact K_new step per row.
+    /// One collapsed sweep over all shard rows of `resid` (the current
+    /// X_p′ − Z⁺ A⁺, B × D): resample existing tail bits, then the
+    /// truncated-exact K_new step per row.
     /// `n_global` is the full data-set N (the prior's denominator);
     /// `k_budget` caps how many new features may still be created.
     pub fn sweep(
         &mut self,
+        resid: &Mat,
         alpha: f64,
         n_global: usize,
         kmax_new: usize,
         k_budget: usize,
         rng: &mut Pcg64,
     ) {
-        let b = self.resid.rows();
+        assert_eq!(resid.rows(), self.rows, "residual shape changed");
+        let b = self.rows;
+        // the instantiated sweeps rewrote the residual since the last
+        // call, so the collapsed state is rebuilt from scratch (what the
+        // owned-residual API did by reconstructing the whole proposer)
+        let mut cache =
+            CollapsedCache::new(resid, &self.z_tail.to_mat(), self.lg.ratio());
         // §Perf L3-2: the Poisson(α/N) pmf is row-invariant — precompute
         // it once per sweep instead of paying ln_gamma per (row, j).
         let lambda = alpha / n_global as f64;
@@ -111,19 +124,22 @@ impl TailProposer {
             .map(|j| ibp::log_poisson_pmf(j, lambda))
             .collect();
         for row in 0..b {
-            self.update_row(row, &logpmf, n_global, kmax_new, k_budget, rng);
+            self.update_row(
+                &mut cache, resid, row, &logpmf, n_global, kmax_new, k_budget,
+                rng,
+            );
         }
         // tail columns that died stay dead — drop them now so the
-        // promotion payload is minimal.
-        let before = self.z_tail.k();
+        // promotion payload is minimal (the cache dies with this sweep,
+        // so no refresh is needed after compaction).
         self.z_tail.compact();
-        if self.z_tail.k() != before {
-            self.cache.refresh(&self.resid, &self.z_tail.to_mat(), self.lg.ratio());
-        }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn update_row(
         &mut self,
+        cache: &mut CollapsedCache,
+        resid: &Mat,
         row: usize,
         logpmf: &[f64],
         n_global: usize,
@@ -132,15 +148,15 @@ impl TailProposer {
         rng: &mut Pcg64,
     ) {
         let k = self.z_tail.k();
-        let x_row: Vec<f64> = self.resid.row(row).to_vec();
+        let x_row: Vec<f64> = resid.row(row).to_vec();
         let mut z_cur = self.z_tail.row_f64(row);
         if k > 0 {
             let m_minus: Vec<usize> = (0..k)
                 .map(|j| self.z_tail.m()[j] - self.z_tail.get(row, j) as usize)
                 .collect();
-            if !self.cache.remove_row(&z_cur, &x_row) {
-                self.cache.refresh(&self.resid, &self.z_tail.to_mat(), self.lg.ratio());
-                let ok = self.cache.remove_row(&z_cur, &x_row);
+            if !cache.remove_row(&z_cur, &x_row) {
+                cache.refresh(resid, &self.z_tail.to_mat(), self.lg.ratio());
+                let ok = cache.remove_row(&z_cur, &x_row);
                 debug_assert!(ok);
             }
             for j in 0..k {
@@ -154,8 +170,8 @@ impl TailProposer {
                 z1[j] = 1.0;
                 let mut z0 = z_cur;
                 z0[j] = 0.0;
-                let ll1 = self.cache.candidate_loglik(&z1, &x_row, &self.lg);
-                let ll0 = self.cache.candidate_loglik(&z0, &x_row, &self.lg);
+                let ll1 = cache.candidate_loglik(&z1, &x_row, &self.lg);
+                let ll0 = cache.candidate_loglik(&z0, &x_row, &self.lg);
                 let logit = prior_logit + ll1 - ll0;
                 let u = rng.uniform();
                 z_cur = if (u / (1.0 - u)).ln() < logit { z1 } else { z0 };
@@ -164,9 +180,8 @@ impl TailProposer {
         // K_new ~ P(j) ∝ Poisson(j; α/N) · P(R | Z* ∪ j singletons)
         // (batched Schur-complement evaluation — §Perf L3-3)
         let kmax = kmax_new.min(k_budget.saturating_sub(self.z_tail.k()));
-        let logw = self
-            .cache
-            .candidate_loglik_aug_batch(&z_cur, &x_row, kmax, &self.lg);
+        let logw =
+            cache.candidate_loglik_aug_batch(&z_cur, &x_row, kmax, &self.lg);
         let k_new = match self.proposal {
             Proposal::TruncatedExact => {
                 let weighted: Vec<f64> = logw
@@ -200,17 +215,16 @@ impl TailProposer {
             for j in 0..k_new {
                 self.z_tail.set(row, first + j, 1);
             }
-            self.cache.refresh(&self.resid, &self.z_tail.to_mat(), self.lg.ratio());
+            cache.refresh(resid, &self.z_tail.to_mat(), self.lg.ratio());
         } else if self.z_tail.k() > 0 {
             let z_row = self.z_tail.row_f64(row);
-            self.cache.insert_row(&z_row, &x_row);
+            cache.insert_row(&z_row, &x_row);
         }
     }
 
     /// Hand the tail assignments to the master for promotion and reset.
     pub fn take_tail(&mut self) -> FeatureState {
-        let b = self.resid.rows();
-        std::mem::replace(&mut self.z_tail, FeatureState::empty(b))
+        std::mem::replace(&mut self.z_tail, FeatureState::empty(self.rows))
     }
 }
 
@@ -236,9 +250,9 @@ mod tests {
             }
         }
         let lg = LinGauss::new(0.25, 1.5);
-        let mut tp = TailProposer::new(resid, FeatureState::empty(b), lg);
+        let mut tp = TailProposer::new(FeatureState::empty(b), lg);
         for _ in 0..8 {
-            tp.sweep(2.0, 1000, 4, 16, &mut rng);
+            tp.sweep(&resid, 2.0, 1000, 4, 16, &mut rng);
         }
         assert!(
             (1..=2).contains(&tp.k_star()),
@@ -261,9 +275,9 @@ mod tests {
         let mut rng = Pcg64::new(2);
         let resid = Mat::from_fn(50, 12, |_, _| 0.3 * rng.normal());
         let lg = LinGauss::new(0.3, 1.0);
-        let mut tp = TailProposer::new(resid, FeatureState::empty(50), lg);
+        let mut tp = TailProposer::new(FeatureState::empty(50), lg);
         for _ in 0..5 {
-            tp.sweep(1.0, 1000, 4, 16, &mut rng);
+            tp.sweep(&resid, 1.0, 1000, 4, 16, &mut rng);
         }
         assert!(tp.k_star() <= 1, "noise grew {} features", tp.k_star());
     }
@@ -274,9 +288,9 @@ mod tests {
         // very structured residuals that would like many features
         let resid = Mat::from_fn(40, 10, |i, j| ((i * j) % 7) as f64 - 3.0);
         let lg = LinGauss::new(0.2, 1.5);
-        let mut tp = TailProposer::new(resid, FeatureState::empty(40), lg);
+        let mut tp = TailProposer::new(FeatureState::empty(40), lg);
         for _ in 0..5 {
-            tp.sweep(3.0, 500, 4, 3, &mut rng);
+            tp.sweep(&resid, 3.0, 500, 4, 3, &mut rng);
         }
         assert!(tp.k_star() <= 3, "budget violated: {}", tp.k_star());
     }
@@ -295,12 +309,12 @@ mod tests {
             }
         }
         let lg = LinGauss::new(0.25, 1.5);
-        let mut tp = TailProposer::new(resid, FeatureState::empty(b), lg)
+        let mut tp = TailProposer::new(FeatureState::empty(b), lg)
             .with_proposal(Proposal::MetropolisHastings);
         // MH fires at prior rate α/N per row-visit — use the local N so
         // the expected number of accepted proposals is comfortably > 1
         for _ in 0..20 {
-            tp.sweep(2.0, b, 4, 16, &mut rng);
+            tp.sweep(&resid, 2.0, b, 4, 16, &mut rng);
         }
         assert!(
             tp.k_star() >= 1 && tp.k_star() <= 3,
@@ -314,10 +328,10 @@ mod tests {
         let mut rng = Pcg64::new(10);
         let resid = Mat::from_fn(40, 10, |_, _| 0.3 * rng.normal());
         let lg = LinGauss::new(0.3, 1.0);
-        let mut tp = TailProposer::new(resid, FeatureState::empty(40), lg)
+        let mut tp = TailProposer::new(FeatureState::empty(40), lg)
             .with_proposal(Proposal::MetropolisHastings);
         for _ in 0..10 {
-            tp.sweep(1.0, 1000, 4, 16, &mut rng);
+            tp.sweep(&resid, 1.0, 1000, 4, 16, &mut rng);
         }
         assert!(tp.k_star() <= 1, "MH grew {} on noise", tp.k_star());
     }
@@ -327,8 +341,8 @@ mod tests {
         let mut rng = Pcg64::new(4);
         let resid = Mat::from_fn(30, 8, |i, _| if i % 2 == 0 { 3.0 } else { -3.0 });
         let lg = LinGauss::new(0.3, 1.5);
-        let mut tp = TailProposer::new(resid, FeatureState::empty(30), lg);
-        tp.sweep(2.0, 100, 4, 8, &mut rng);
+        let mut tp = TailProposer::new(FeatureState::empty(30), lg);
+        tp.sweep(&resid, 2.0, 100, 4, 8, &mut rng);
         let t = tp.take_tail();
         assert!(t.check_invariants());
         assert_eq!(tp.k_star(), 0);

@@ -19,29 +19,47 @@ use crate::model::{ibp, GlobalParams, LinGauss};
 use crate::rng::Pcg64;
 use crate::samplers::{IterStats, SamplerOptions};
 
-/// One Gibbs sweep of `z[rows]` over columns `0..k_limit`, given loadings
-/// `a` and per-feature prior logits. `resid` must hold X − Z A on entry for
-/// the swept rows and is kept consistent. Returns the number of flips.
-pub fn sweep_rows(
-    x: &Mat,
-    z: &mut FeatureState,
-    resid: &mut Mat,
+/// Block-local sweep kernel: one Gibbs sweep over a contiguous row block,
+/// columns `0..k_limit`, given loadings `a` and per-feature prior logits.
+///
+/// `zbits` and `resid` are the raw row-major slices for exactly the
+/// block's rows (strides `stride` = K and `d` respectively; see
+/// [`FeatureState::rows_bits_mut`]); `resid` must hold X − Z A for those
+/// rows on entry and is kept consistent. Column-count changes are
+/// accumulated into `m_delta` (length ≥ `k_limit`) for the caller to fold
+/// back via [`FeatureState::apply_m_delta`]. Returns the number of flips.
+///
+/// This is the unit the [`crate::parallel`] executor schedules: it touches
+/// nothing outside its slices, so disjoint blocks run concurrently with
+/// one RNG substream each and merge by summing `m_delta`s.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_block(
+    zbits: &mut [u8],
+    stride: usize,
+    resid: &mut [f64],
+    d: usize,
     a: &Mat,
     prior_logit: &[f64],
     inv2s2: f64,
-    rows: std::ops::Range<usize>,
     k_limit: usize,
     rng: &mut Pcg64,
+    m_delta: &mut [i64],
 ) -> usize {
-    debug_assert_eq!(resid.rows(), x.rows());
-    debug_assert!(k_limit <= z.k() && k_limit <= a.rows());
-    let d = x.cols();
+    if k_limit == 0 || d == 0 {
+        return 0;
+    }
+    debug_assert!(k_limit <= stride && k_limit <= a.rows());
+    debug_assert!(k_limit <= m_delta.len());
+    let b = resid.len() / d;
+    debug_assert_eq!(resid.len(), b * d);
+    debug_assert_eq!(zbits.len(), b * stride);
     let mut flips = 0;
-    for n in rows {
+    for n in 0..b {
+        let zrow = &mut zbits[n * stride..n * stride + stride];
+        let rrow = &mut resid[n * d..(n + 1) * d];
         for k in 0..k_limit {
-            let z_old = z.get(n, k);
+            let z_old = zrow[k];
             let arow = a.row(k);
-            let rrow = resid.row_mut(n);
             // r0 = residual with bit k forced to 0
             // dll = loglik(1) − loglik(0) = (2·r0·a_k − a_k·a_k)·inv2s2
             let mut r0_dot_a = 0.0;
@@ -71,10 +89,55 @@ pub fn sweep_rows(
                 for j in 0..d {
                     rrow[j] += sign * arow[j];
                 }
-                z.set(n, k, z_new);
+                zrow[k] = z_new;
+                m_delta[k] += if z_new == 1 { 1 } else { -1 };
             }
         }
     }
+    flips
+}
+
+/// One *serial* Gibbs sweep of `z[rows]` over columns `0..k_limit`: the
+/// whole range as a single block on the caller's RNG stream (one uniform
+/// per (row, column), row-major order). `resid` must hold X − Z A on
+/// entry for the swept rows and is kept consistent. Returns the number of
+/// flips.
+///
+/// The hybrid workers, the serial oracle and the held-out evaluator use
+/// [`crate::parallel::par_sweep_rows`] instead, which runs
+/// [`sweep_block`]s on per-block RNG substreams so the result is
+/// identical for every thread count; this single-stream form remains the
+/// finite-K baseline's sweep and the kernel's reference semantics.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_rows(
+    x: &Mat,
+    z: &mut FeatureState,
+    resid: &mut Mat,
+    a: &Mat,
+    prior_logit: &[f64],
+    inv2s2: f64,
+    rows: std::ops::Range<usize>,
+    k_limit: usize,
+    rng: &mut Pcg64,
+) -> usize {
+    debug_assert_eq!(resid.rows(), x.rows());
+    debug_assert!(k_limit <= z.k() && k_limit <= a.rows());
+    let d = x.cols();
+    let stride = z.k();
+    let mut m_delta = vec![0i64; k_limit];
+    let flips = sweep_block(
+        z.rows_bits_mut(rows.clone()),
+        stride,
+        &mut resid.as_mut_slice()[rows.start * d..rows.end * d],
+        d,
+        a,
+        prior_logit,
+        inv2s2,
+        k_limit,
+        rng,
+        &mut m_delta,
+    );
+    z.apply_m_delta(&m_delta);
     flips
 }
 

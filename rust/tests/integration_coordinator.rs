@@ -21,6 +21,7 @@ fn cfg(p: usize, seed: u64) -> CoordinatorConfig {
     CoordinatorConfig {
         processors: p,
         sub_iters: 5,
+        threads_per_worker: 1,
         seed,
         lg: LinGauss::new(0.5, 1.0),
         alpha: 1.0,
@@ -60,7 +61,12 @@ fn parallel_matches_serial_oracle_distributionally() {
         train.x.clone(),
         LinGauss::new(0.5, 1.0),
         1.0,
-        HybridConfig { processors: 2, sub_iters: 5, opts: SamplerOptions::default() },
+        HybridConfig {
+            processors: 2,
+            sub_iters: 5,
+            threads_per_worker: 1,
+            opts: SamplerOptions::default(),
+        },
         4,
     );
     let mut ev1 = HeldoutEval::new(test.x.clone(), 3);

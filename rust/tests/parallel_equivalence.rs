@@ -6,7 +6,10 @@
 //!    **chain-for-chain** (every global parameter bit-identical, every
 //!    iteration) given the same root seed — both sides derive the master
 //!    stream as `Pcg64::new(seed).split(1)` and worker p's stream as
-//!    `Pcg64::new(seed).split(1000 + p)`;
+//!    `Pcg64::new(seed).split(1000 + p)`, and both run each sweep under
+//!    the per-row-block substream discipline of `pibp::parallel` (the
+//!    (P × T) grid extension of this pin lives in
+//!    `rust/tests/thread_equivalence.rs`);
 //! 2. at P > 1 the master's merged sufficient statistics (m_k, ZᵀZ, ZᵀX,
 //!    tr XᵀX) must match a serial shard-by-shard recomputation from the
 //!    gathered global Z bit-for-bit after every global step.
@@ -25,6 +28,7 @@ fn coord_cfg(p: usize, seed: u64, opts: SamplerOptions) -> CoordinatorConfig {
     CoordinatorConfig {
         processors: p,
         sub_iters: 5,
+        threads_per_worker: 1,
         seed,
         lg: LinGauss::new(0.5, 1.0),
         alpha: 1.0,
@@ -51,7 +55,12 @@ fn p1_coordinator_reproduces_serial_hybrid_chain_exactly() {
         ds.x.clone(),
         LinGauss::new(0.5, 1.0),
         1.0,
-        HybridConfig { processors: 1, sub_iters: 5, opts: opts_no_demote() },
+        HybridConfig {
+            processors: 1,
+            sub_iters: 5,
+            threads_per_worker: 1,
+            opts: opts_no_demote(),
+        },
         seed,
     );
 

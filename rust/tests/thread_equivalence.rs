@@ -1,0 +1,163 @@
+//! Exactness pinning of the two-level parallelism grid: P coordinator
+//! workers × T intra-worker sweep threads (`crate::parallel`).
+//!
+//! The executor's contract is that T is a pure scheduling knob — block
+//! layout and per-block RNG substreams depend only on the row range — so
+//! every (P, T) coordinator must reproduce the *same* chain as the serial
+//! hybrid oracle for that P, bit-for-bit, and any two T values must agree
+//! with each other even in configurations the oracle does not model
+//! (demotion on).
+
+use std::path::Path;
+
+use pibp::config::{Backend, CommModel};
+use pibp::coordinator::{Coordinator, CoordinatorConfig};
+use pibp::data::cambridge::{generate, CambridgeConfig};
+use pibp::linalg::Mat;
+use pibp::model::LinGauss;
+use pibp::samplers::hybrid::{HybridConfig, HybridSampler};
+use pibp::samplers::SamplerOptions;
+
+const ITERS: usize = 12;
+
+fn coord_cfg(p: usize, t: usize, seed: u64, opts: SamplerOptions) -> CoordinatorConfig {
+    CoordinatorConfig {
+        processors: p,
+        sub_iters: 5,
+        threads_per_worker: t,
+        seed,
+        lg: LinGauss::new(0.5, 1.0),
+        alpha: 1.0,
+        opts,
+        backend: Backend::Native,
+        artifacts_dir: Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        comm: CommModel::default(),
+    }
+}
+
+/// The serial oracle does not implement the coordinator's demotion
+/// optimisation, so oracle-exactness is stated with demotion off.
+fn opts_no_demote() -> SamplerOptions {
+    SamplerOptions { demote_below: 0, ..Default::default() }
+}
+
+/// One oracle iteration's global state, bit-level.
+#[derive(Clone)]
+struct IterPin {
+    k: usize,
+    alpha: u64,
+    sigma_x: u64,
+    sigma_a: u64,
+    pi: Vec<u64>,
+    a: Mat,
+}
+
+#[test]
+fn pt_grid_reproduces_serial_oracle_chain_exactly() {
+    // n = 200 so every shard spans several 32-row blocks at both P values
+    // (P=1 ⇒ 7 blocks, P=4 ⇒ 2 blocks of the 50-row shards): T > 1 has
+    // real work to schedule.
+    let (ds, _) = generate(&CambridgeConfig { n: 200, seed: 3, ..Default::default() });
+    let seed = 17u64;
+
+    for p in [1usize, 4] {
+        // ---- reference chain: the serial hybrid oracle for this P ----
+        let mut serial = HybridSampler::new(
+            ds.x.clone(),
+            LinGauss::new(0.5, 1.0),
+            1.0,
+            HybridConfig {
+                processors: p,
+                sub_iters: 5,
+                threads_per_worker: 1,
+                opts: opts_no_demote(),
+            },
+            seed,
+        );
+        let mut pins: Vec<IterPin> = Vec::with_capacity(ITERS);
+        for _ in 0..ITERS {
+            let st = serial.step();
+            pins.push(IterPin {
+                k: st.k,
+                alpha: st.alpha.to_bits(),
+                sigma_x: st.sigma_x.to_bits(),
+                sigma_a: st.sigma_a.to_bits(),
+                pi: serial.params.pi.iter().map(|v| v.to_bits()).collect(),
+                a: serial.params.a.clone(),
+            });
+        }
+        assert!(serial.k() > 0, "P={p}: chain never instantiated a feature");
+
+        // ---- every T must reproduce it bit-for-bit ----
+        for t in [1usize, 4] {
+            let mut coord =
+                Coordinator::new(&ds.x, coord_cfg(p, t, seed, opts_no_demote()))
+                    .unwrap();
+            for (it, pin) in pins.iter().enumerate() {
+                let rec = coord.step().unwrap();
+                assert_eq!(rec.k, pin.k, "P={p} T={t} iter {it}: K⁺ diverged");
+                assert_eq!(
+                    rec.alpha.to_bits(),
+                    pin.alpha,
+                    "P={p} T={t} iter {it}: alpha diverged"
+                );
+                assert_eq!(
+                    rec.sigma_x.to_bits(),
+                    pin.sigma_x,
+                    "P={p} T={t} iter {it}: sigma_x diverged"
+                );
+                assert_eq!(
+                    rec.sigma_a.to_bits(),
+                    pin.sigma_a,
+                    "P={p} T={t} iter {it}: sigma_a diverged"
+                );
+                let cp = coord.params();
+                let pi_bits: Vec<u64> =
+                    cp.pi.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(pi_bits, pin.pi, "P={p} T={t} iter {it}: π diverged");
+                assert_eq!(cp.a.rows(), pin.a.rows(), "P={p} T={t} iter {it}: A rows");
+                assert!(
+                    cp.a.max_abs_diff(&pin.a) == 0.0,
+                    "P={p} T={t} iter {it}: loadings A diverged"
+                );
+            }
+            let z = coord.gather_z().unwrap();
+            assert_eq!(
+                z, serial.z,
+                "P={p} T={t}: gathered Z diverged from the serial oracle"
+            );
+        }
+    }
+}
+
+#[test]
+fn thread_count_is_invisible_even_with_demotion_on() {
+    // Demotion is a coordinator-only optimisation the oracle doesn't
+    // model; T-invariance must hold there too. Pin T=1 against T=4 on the
+    // production options, chain-for-chain.
+    let (ds, _) = generate(&CambridgeConfig { n: 150, seed: 9, ..Default::default() });
+    let seed = 23u64;
+    let run = |t: usize| {
+        let mut coord = Coordinator::new(
+            &ds.x,
+            coord_cfg(3, t, seed, SamplerOptions::default()),
+        )
+        .unwrap();
+        let mut trace = Vec::new();
+        for _ in 0..10 {
+            let rec = coord.step().unwrap();
+            trace.push((
+                rec.k,
+                rec.alpha.to_bits(),
+                rec.sigma_x.to_bits(),
+                rec.sigma_a.to_bits(),
+            ));
+        }
+        (trace, coord.gather_z().unwrap())
+    };
+    let (trace1, z1) = run(1);
+    let (trace4, z4) = run(4);
+    assert_eq!(trace1, trace4, "T changed the chain under demotion");
+    assert_eq!(z1, z4, "T changed the gathered Z under demotion");
+    assert!(z1.k() > 0, "chain never instantiated a feature");
+}

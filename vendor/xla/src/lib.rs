@@ -1,0 +1,141 @@
+//! Offline **API stub** of the XLA PJRT bindings (`xla` crate subset).
+//!
+//! The build image has no crate registry and the real PJRT bindings are
+//! not vendored, but the feature-gated engine in
+//! `rust/src/runtime/pjrt.rs` must not silently rot. This crate mirrors
+//! exactly the API surface that engine uses — same types, same method
+//! signatures — with every entry point returning [`Error::Unavailable`]
+//! at runtime, so:
+//!
+//! * `cargo build/clippy --features pjrt` type-checks the real engine
+//!   path (CI's feature-matrix job);
+//! * a `pjrt`-featured binary still degrades exactly like the default
+//!   stub: `Engine::load` errors at `PjRtClient::cpu()` and every caller
+//!   already treats that as "PJRT unavailable, use the native backend".
+//!
+//! To run the AOT artifacts for real, replace this path dependency in
+//! `rust/Cargo.toml` with the actual XLA PJRT bindings — the API below
+//! is the contract they must satisfy.
+
+use std::fmt;
+
+/// Error type matching the bindings' `xla::Error` (only `Display` is
+/// observed by pibp, via `anyhow!("{e}")`).
+#[derive(Debug)]
+pub enum Error {
+    /// The stub's only inhabitant: the real bindings are not linked.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real XLA PJRT bindings \
+                 (vendor/xla is an offline API stub; see its crate docs)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal (tensor) handle.
+#[derive(Debug, Default)]
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Self {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module (text interchange).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// Device-resident buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Matches the bindings' generic-over-argument execute.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A PJRT client (CPU plugin in pibp's deployment).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// The stub fails here, which is the earliest call on the engine's
+    /// load path — `Engine::load` therefore errors cleanly and pibp
+    /// falls back to the native backend, same as the default build.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let msg = format!("{}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("stub"), "unhelpful error: {msg}");
+    }
+}
