@@ -1,0 +1,118 @@
+//! T-S4 — posterior-serving throughput: queries/second of the
+//! `serve::PredictEngine` vs the number of posterior samples averaged
+//! over, for the three query types (imputation, held-out predictive
+//! log-likelihood, reconstruction). One query = one row × one query type.
+//!
+//! Writes the machine-readable `BENCH_predict.json` trajectory point —
+//! the serving counterpart of `BENCH_sweep.json` — so the perf log tracks
+//! the query path as the subsystem evolves (batching, caching, per-sample
+//! parallel fan-out are the obvious next levers).
+
+use std::time::Duration;
+
+use pibp::bench::{bench, header};
+use pibp::linalg::Mat;
+use pibp::model::missing::Mask;
+use pibp::model::state::FeatureState;
+use pibp::rng::Pcg64;
+use pibp::serve::{PosteriorSample, PredictEngine};
+
+/// Planted model + S jittered posterior samples around its truth.
+fn problem(n: usize, k: usize, d: usize, s_count: usize)
+           -> (Mat, Vec<PosteriorSample>) {
+    let mut rng = Pcg64::new(1);
+    let mut z = FeatureState::empty(n);
+    z.add_features(k);
+    for i in 0..n {
+        for j in 0..k {
+            if rng.bernoulli(0.5) {
+                z.set(i, j, 1);
+            }
+        }
+    }
+    let a = Mat::from_fn(k, d, |_, _| 2.0 * rng.normal());
+    let mut x = z.to_mat().matmul(&a);
+    for v in x.as_mut_slice().iter_mut() {
+        *v += 0.2 * rng.normal();
+    }
+    let samples = (0..s_count)
+        .map(|s| {
+            let mut a_s = a.clone();
+            for v in a_s.as_mut_slice().iter_mut() {
+                *v += 0.05 * rng.normal();
+            }
+            PosteriorSample {
+                iter: s as u64 + 1,
+                z: z.clone(),
+                a: a_s,
+                pi: vec![0.5; k],
+                sigma_x: 0.25,
+                sigma_a: 1.0,
+                alpha: 1.0,
+            }
+        })
+        .collect();
+    (x, samples)
+}
+
+fn main() {
+    let (q, k, d, sweeps) = (128usize, 8usize, 36usize, 3usize);
+    println!("## T-S4 — posterior-serving query throughput (Q={q} rows, K={k}, D={d}, {sweeps} sweeps/sample)\n");
+    println!("{}", header());
+    let budget = Duration::from_millis(600);
+    let mut results: Vec<(usize, f64, f64, f64)> = Vec::new();
+
+    for &s_count in &[1usize, 4, 16] {
+        let (x, samples) = problem(q, k, d, s_count);
+        let mut mrng = Pcg64::new(2);
+        let mask = Mask::random(q, d, 0.3, &mut mrng);
+        let engine = PredictEngine::new(&samples, sweeps, 1);
+
+        let r = bench(&format!("impute      S={s_count}"), 1, budget, 3, || {
+            let _ = engine.impute(&x, &mask, 7);
+        });
+        let imp = q as f64 / r.per_iter.mean;
+        println!("{}  [{imp:.1} rows/s]", r.row());
+
+        let r = bench(&format!("heldout ll  S={s_count}"), 1, budget, 3, || {
+            let _ = engine.heldout_loglik(&x, 7);
+        });
+        let ll = q as f64 / r.per_iter.mean;
+        println!("{}  [{ll:.1} rows/s]", r.row());
+
+        let r = bench(&format!("reconstruct S={s_count}"), 1, budget, 3, || {
+            let _ = engine.reconstruct(&x, 7);
+        });
+        let rec = q as f64 / r.per_iter.mean;
+        println!("{}  [{rec:.1} rows/s]", r.row());
+
+        results.push((s_count, imp, ll, rec));
+    }
+
+    // machine-readable trajectory point for the perf log
+    let entries: Vec<String> = results
+        .iter()
+        .map(|(s, imp, ll, rec)| {
+            format!(
+                "    {{\"samples\": {s}, \"impute_rows_per_s\": {imp:.1}, \
+                 \"loglik_rows_per_s\": {ll:.1}, \"reconstruct_rows_per_s\": {rec:.1}}}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"predict_throughput\",\n  \"rows\": {q},\n  \
+         \"k\": {k},\n  \"d\": {d},\n  \"sweeps\": {sweeps},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    // cargo runs bench binaries with cwd = the package dir (rust/), so
+    // anchor the output at the workspace root where CI expects it
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_predict.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nserving throughput results → {}", out.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", out.display()),
+    }
+    println!("(mean column is seconds per full batched query over the Q rows)");
+}

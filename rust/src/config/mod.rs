@@ -56,6 +56,13 @@ impl Backend {
             _ => bail!("unknown backend '{s}' (native|pjrt)"),
         })
     }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Native => "native",
+            Self::Pjrt => "pjrt",
+        }
+    }
 }
 
 /// The communication model used by virtual-time accounting
@@ -111,6 +118,18 @@ pub struct RunConfig {
     pub artifacts_dir: String,
     pub out_dir: String,
     pub comm: CommModel,
+    /// Write a full sampler checkpoint every this many iterations
+    /// (`crate::snapshot`; 0 = off). A final checkpoint is also written
+    /// when the run completes, so `pibp predict` always has an artifact.
+    pub checkpoint_every: usize,
+    /// Checkpoint file path ("" = `<out_dir>/checkpoint.pibp`).
+    pub checkpoint_path: String,
+    /// Posterior-sample reservoir capacity (`crate::serve`; 0 = off).
+    /// Samples are thinned deterministically to stay within capacity.
+    pub keep_samples: usize,
+    /// Trace thinning stride: keep every k-th recorded evaluation point
+    /// (1 = keep all) so long checkpointed chains bound trace memory.
+    pub trace_thin: usize,
 }
 
 impl Default for RunConfig {
@@ -140,6 +159,10 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             out_dir: "results".into(),
             comm: CommModel::default(),
+            checkpoint_every: 0,
+            checkpoint_path: String::new(),
+            keep_samples: 0,
+            trace_thin: 1,
         }
     }
 }
@@ -198,9 +221,17 @@ impl RunConfig {
             "artifacts_dir" => self.artifacts_dir = value.into(),
             "out_dir" => self.out_dir = value.into(),
             "comm_latency_us" => self.comm.latency_s = float()? * 1e-6,
+            // seconds directly — the canonical (checkpoint) serialisation
+            // uses this key because `µs → s` multiplies by a non-power-of-
+            // two and is not bit-exact round-trip; gbps is fine (2³⁰ is)
+            "comm_latency_s" => self.comm.latency_s = float()?,
             "comm_bandwidth_gbps" => {
                 self.comm.bandwidth_bps = float()? * 1024.0 * 1024.0 * 1024.0
             }
+            "checkpoint_every" => self.checkpoint_every = uint()?,
+            "checkpoint_path" => self.checkpoint_path = value.into(),
+            "keep_samples" => self.keep_samples = uint()?,
+            "trace_thin" => self.trace_thin = uint()?,
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -222,7 +253,122 @@ impl RunConfig {
         if self.sigma_x <= 0.0 || self.sigma_a <= 0.0 || self.alpha <= 0.0 {
             bail!("sigma_x, sigma_a, alpha must be positive");
         }
+        if self.trace_thin == 0 {
+            bail!("trace_thin must be ≥ 1 (1 keeps every point)");
+        }
+        if (self.checkpoint_every > 0 || self.keep_samples > 0)
+            && self.sampler != SamplerKind::Hybrid
+        {
+            bail!(
+                "checkpoint_every / keep_samples require the hybrid sampler \
+                 (the serial baselines have no durable-state support)"
+            );
+        }
         Ok(())
+    }
+
+    /// Canonical `key=value` serialisation of *every* settable field, in
+    /// a fixed order, using the same keys [`Self::apply`] accepts — so a
+    /// config can be reconstructed from the text with
+    /// [`Self::from_canonical`]. Stored verbatim inside checkpoints:
+    /// `pibp resume` needs no external config file.
+    pub fn canonical(&self) -> String {
+        format!(
+            "dataset={}\nn={}\nk_true={}\ndim={}\ndata_sigma_x={}\n\
+             sampler={}\nbackend={}\nprocessors={}\nthreads_per_worker={}\n\
+             sub_iters={}\niters={}\nseed={}\nalpha={}\nsigma_x={}\n\
+             sigma_a={}\nsample_hypers={}\nheldout_frac={}\neval_every={}\n\
+             eval_sweeps={}\nkmax_new={}\nk_cap={}\nartifacts_dir={}\n\
+             out_dir={}\ncomm_latency_s={}\ncomm_bandwidth_gbps={}\n\
+             checkpoint_every={}\ncheckpoint_path={}\nkeep_samples={}\n\
+             trace_thin={}\n",
+            self.dataset,
+            self.n,
+            self.k_true,
+            self.dim,
+            self.data_sigma_x,
+            self.sampler.name(),
+            self.backend.name(),
+            self.processors,
+            self.threads_per_worker,
+            self.sub_iters,
+            self.iters,
+            self.seed,
+            self.alpha,
+            self.sigma_x,
+            self.sigma_a,
+            self.sample_hypers,
+            self.heldout_frac,
+            self.eval_every,
+            self.eval_sweeps,
+            self.kmax_new,
+            self.k_cap,
+            self.artifacts_dir,
+            self.out_dir,
+            self.comm.latency_s,
+            self.comm.bandwidth_bps / (1024.0 * 1024.0 * 1024.0),
+            self.checkpoint_every,
+            self.checkpoint_path,
+            self.keep_samples,
+            self.trace_thin,
+        )
+    }
+
+    /// Reconstruct a config from [`Self::canonical`] text (replays every
+    /// line through [`Self::apply`], so unknown keys are rejected).
+    pub fn from_canonical(text: &str) -> Result<Self> {
+        let mut cfg = Self::default();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("canonical config line '{line}' has no '='"))?;
+            cfg.apply(k, v)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Chain fingerprint: an FNV-1a hash over exactly the fields that
+    /// determine the Markov chain and its evaluation stream — dataset
+    /// identity/shape, sampler, backend, P, L, seed, priors, hyper
+    /// sampling, held-out split and evaluation schedule, and the tail
+    /// proposal caps. Deliberately *excluded*: `threads_per_worker` (T is
+    /// bit-invariant by the `crate::parallel` contract), `iters` (resume
+    /// extends the horizon), checkpoint/serving knobs, output/artifact
+    /// paths, and the comm model (virtual-time accounting only). `pibp
+    /// resume` refuses a checkpoint whose fingerprint differs from the
+    /// resumed configuration's.
+    pub fn fingerprint(&self) -> u64 {
+        let chain = format!(
+            "dataset={}\nn={}\nk_true={}\ndim={}\ndata_sigma_x={}\n\
+             sampler={}\nbackend={}\nprocessors={}\nsub_iters={}\nseed={}\n\
+             alpha={}\nsigma_x={}\nsigma_a={}\nsample_hypers={}\n\
+             heldout_frac={}\neval_every={}\neval_sweeps={}\nkmax_new={}\n\
+             k_cap={}\n",
+            self.dataset,
+            self.n,
+            self.k_true,
+            self.dim,
+            self.data_sigma_x,
+            self.sampler.name(),
+            self.backend.name(),
+            self.processors,
+            self.sub_iters,
+            self.seed,
+            self.alpha,
+            self.sigma_x,
+            self.sigma_a,
+            self.sample_hypers,
+            self.heldout_frac,
+            self.eval_every,
+            self.eval_sweeps,
+            self.kmax_new,
+            self.k_cap,
+        );
+        crate::snapshot::fnv1a(chain.as_bytes())
     }
 }
 
@@ -284,6 +430,76 @@ mod tests {
         assert_eq!(c.processors, 3);
         assert_eq!(c.iters, 10);
         assert_eq!(c.sampler, SamplerKind::Hybrid);
+    }
+
+    #[test]
+    fn canonical_roundtrips_through_apply() {
+        let mut c = RunConfig::default();
+        c.apply("processors", "5").unwrap();
+        c.apply("dataset", "synth").unwrap();
+        c.apply("seed", "99").unwrap();
+        c.apply("sigma_x", "0.3725").unwrap();
+        c.apply("checkpoint_every", "25").unwrap();
+        c.apply("checkpoint_path", "out/state.pibp").unwrap();
+        c.apply("keep_samples", "16").unwrap();
+        c.apply("trace_thin", "4").unwrap();
+        let back = RunConfig::from_canonical(&c.canonical()).unwrap();
+        assert_eq!(back.processors, 5);
+        assert_eq!(back.dataset, "synth");
+        assert_eq!(back.seed, 99);
+        assert_eq!(back.sigma_x.to_bits(), 0.3725f64.to_bits());
+        assert_eq!(back.checkpoint_every, 25);
+        assert_eq!(back.checkpoint_path, "out/state.pibp");
+        assert_eq!(back.keep_samples, 16);
+        assert_eq!(back.trace_thin, 4);
+        // and the chain fingerprint survives the text roundtrip
+        assert_eq!(back.fingerprint(), c.fingerprint());
+        // the comm model round-trips bit-exactly (canonical stores
+        // latency in seconds; µs would double-round by one ulp)
+        assert_eq!(back.comm.latency_s.to_bits(), c.comm.latency_s.to_bits());
+        assert_eq!(
+            back.comm.bandwidth_bps.to_bits(),
+            c.comm.bandwidth_bps.to_bits()
+        );
+    }
+
+    #[test]
+    fn fingerprint_tracks_chain_keys_only() {
+        let base = RunConfig::default();
+        // T, iters and checkpoint knobs must NOT change the fingerprint
+        let mut c = base.clone();
+        c.threads_per_worker = 8;
+        c.iters = 5000;
+        c.checkpoint_every = 10;
+        c.keep_samples = 32;
+        c.out_dir = "elsewhere".into();
+        assert_eq!(c.fingerprint(), base.fingerprint());
+        // chain-relevant keys MUST change it
+        let mut c = base.clone();
+        c.seed = 1;
+        assert_ne!(c.fingerprint(), base.fingerprint());
+        let mut c = base.clone();
+        c.processors = 4;
+        assert_ne!(c.fingerprint(), base.fingerprint());
+        let mut c = base.clone();
+        c.eval_every = 7;
+        assert_ne!(c.fingerprint(), base.fingerprint());
+    }
+
+    #[test]
+    fn checkpoint_keys_require_hybrid_and_trace_thin_positive() {
+        let mut c = RunConfig::default();
+        c.checkpoint_every = 5;
+        assert!(c.validate().is_ok());
+        c.sampler = SamplerKind::Collapsed;
+        assert!(c.validate().is_err());
+        c.checkpoint_every = 0;
+        c.keep_samples = 4;
+        assert!(c.validate().is_err());
+        c.sampler = SamplerKind::Hybrid;
+        assert!(c.validate().is_ok());
+        c.trace_thin = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

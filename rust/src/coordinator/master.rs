@@ -25,6 +25,7 @@ use crate::rng::Pcg64;
 use crate::runtime::{Engine, Ops};
 use crate::samplers::hybrid::make_shards;
 use crate::samplers::SamplerOptions;
+use crate::snapshot::{CoordinatorSnapshot, MasterSnapshot, WorkerSnapshot};
 
 use super::messages::{Broadcast, Summary, ToWorker, ZReport};
 use super::vtime::{IterTiming, VClock};
@@ -483,6 +484,117 @@ impl Coordinator {
             row0 += self.shard_sizes[p];
         }
         Ok(global)
+    }
+
+    /// Capture the complete chain state at the current iteration
+    /// boundary: master RNG + globals + pending structural instruction +
+    /// virtual clock, and (via a `GetState` round-trip) every worker's
+    /// RNG stream, Z bits and pending tail. A pure read — no RNG stream
+    /// advances — so taking snapshots never perturbs the chain.
+    ///
+    /// The `last_merged` diagnostic hook is deliberately not captured: it
+    /// is re-populated by the next `step` and feeds no sampling decision.
+    pub fn snapshot(&mut self) -> Result<CoordinatorSnapshot> {
+        let msg = ToWorker::GetState.encode();
+        for tx in &self.to_workers {
+            tx.send(msg.clone()).context("worker channel closed")?;
+        }
+        let mut workers: Vec<Option<WorkerSnapshot>> =
+            (0..self.cfg.processors).map(|_| None).collect();
+        for _ in 0..self.cfg.processors {
+            let (id, buf) = self
+                .from_workers
+                .recv()
+                .context("worker died during snapshot")?;
+            workers[id] = Some(WorkerSnapshot::decode(&buf)?);
+        }
+        Ok(CoordinatorSnapshot {
+            iter: self.iter as u64,
+            master: MasterSnapshot {
+                rng: self.rng.export_state(),
+                a: self.params.a.clone(),
+                pi: self.params.pi.clone(),
+                sigma_x: self.params.lg.sigma_x,
+                sigma_a: self.params.lg.sigma_a,
+                alpha: self.params.alpha,
+                next_keep: self.next_keep.clone(),
+                next_k_star: self.next_k_star,
+                next_tail_owner: self.next_tail_owner,
+                next_demote: self.next_demote.clone(),
+                pending_tail_bits: self.pending_tail_bits.clone(),
+                p_prime: self.p_prime,
+                m_global: self.m_global.iter().map(|&m| m as u64).collect(),
+                clock_elapsed_s: self.clock.elapsed_s(),
+                clock_iterations: self.clock.iterations as u64,
+                clock_comm_bytes: self.clock.total_comm_bytes as u64,
+            },
+            workers: workers.into_iter().map(Option::unwrap).collect(),
+        })
+    }
+
+    /// Install a previously captured state, overwriting the freshly
+    /// constructed chain: after this, `step` continues bit-identically to
+    /// the run the snapshot was taken from — for any thread count T,
+    /// since per-block sweep substreams derive from the restored worker
+    /// streams. The coordinator must have been built over the same data
+    /// shape and processor count (validated here against the shards).
+    pub fn restore(&mut self, snap: &CoordinatorSnapshot) -> Result<()> {
+        if snap.workers.len() != self.cfg.processors {
+            bail!(
+                "checkpoint has {} workers but this run is configured for P={}",
+                snap.workers.len(),
+                self.cfg.processors
+            );
+        }
+        for (p, ws) in snap.workers.iter().enumerate() {
+            if ws.id as usize != p {
+                bail!("checkpoint worker {p} carries id {}", ws.id);
+            }
+            if ws.z.n() != self.shard_sizes[p] {
+                bail!(
+                    "checkpoint worker {p} has a {}-row shard, this run's shard \
+                     is {} rows (different N or P?)",
+                    ws.z.n(),
+                    self.shard_sizes[p]
+                );
+            }
+        }
+        for (p, ws) in snap.workers.iter().enumerate() {
+            let msg = ToWorker::SetState(ws.clone()).encode();
+            self.to_workers[p].send(msg).context("worker channel closed")?;
+        }
+        for _ in 0..self.cfg.processors {
+            self.from_workers
+                .recv()
+                .context("worker died during restore")?;
+        }
+        let m = &snap.master;
+        if m.a.rows() != m.pi.len() {
+            bail!("checkpoint master state inconsistent: |A|={} rows, |π|={}",
+                  m.a.rows(), m.pi.len());
+        }
+        self.rng = Pcg64::from_state(m.rng);
+        self.params = GlobalParams {
+            a: m.a.clone(),
+            pi: m.pi.clone(),
+            lg: LinGauss::new(m.sigma_x, m.sigma_a),
+            alpha: m.alpha,
+        };
+        self.next_keep = m.next_keep.clone();
+        self.next_k_star = m.next_k_star;
+        self.next_tail_owner = m.next_tail_owner;
+        self.next_demote = m.next_demote.clone();
+        self.pending_tail_bits = m.pending_tail_bits.clone();
+        self.p_prime = m.p_prime;
+        self.m_global = m.m_global.iter().map(|&v| v as usize).collect();
+        self.last_merged = None;
+        self.iter = snap.iter as usize;
+        self.clock = VClock::from_parts(
+            m.clock_elapsed_s,
+            m.clock_iterations as usize,
+            m.clock_comm_bytes as usize,
+        );
+        Ok(())
     }
 
     pub fn shutdown(&mut self) {

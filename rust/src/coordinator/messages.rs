@@ -9,12 +9,15 @@
 //! overhead the paper's §5 worries about stays measurable.
 //!
 //! Wire format: little-endian, `u32` tags/lengths, `f64` payloads. No
-//! versioning — both ends are the same binary.
+//! versioning — both ends are the same binary. (The on-disk checkpoint
+//! format in `crate::snapshot` reuses these `Writer`/`Reader` primitives
+//! but adds magic/version/checksum, because files outlive binaries.)
 
 use anyhow::{bail, Result};
 
 use crate::linalg::Mat;
 use crate::model::state::FeatureState;
+use crate::snapshot::WorkerSnapshot;
 
 /// Master → worker.
 #[derive(Clone, Debug, PartialEq)]
@@ -23,6 +26,12 @@ pub enum ToWorker {
     Run(Broadcast),
     /// Send back the shard's current Z bits (final gathering / Fig 2).
     SendZ,
+    /// Send back the full worker state (RNG stream, Z bits, pending tail)
+    /// for a checkpoint — replied to with an encoded [`WorkerSnapshot`].
+    GetState,
+    /// Install a previously captured worker state (resume); the worker
+    /// acknowledges with an empty message so the master can stay lockstep.
+    SetState(WorkerSnapshot),
     Shutdown,
 }
 
@@ -102,8 +111,21 @@ impl Writer {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// 128-bit value as two explicit little-endian u64 halves (lo, hi) —
+    /// the PCG state/increment width used by checkpoint RNG snapshots.
+    pub fn u128(&mut self, v: u128) {
+        self.u64(v as u64);
+        self.u64((v >> 64) as u64);
+    }
+
     pub fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
     }
 
     pub fn mat(&mut self, m: &Mat) {
@@ -170,8 +192,20 @@ impl<'a> Reader<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    pub fn u128(&mut self) -> Result<u128> {
+        let lo = self.u64()? as u128;
+        let hi = self.u64()? as u128;
+        Ok(lo | (hi << 64))
+    }
+
     pub fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| anyhow::anyhow!("bad utf-8 string: {e}"))
     }
 
     pub fn mat(&mut self) -> Result<Mat> {
@@ -211,6 +245,8 @@ impl<'a> Reader<'a> {
 const TAG_RUN: u32 = 1;
 const TAG_SENDZ: u32 = 2;
 const TAG_SHUTDOWN: u32 = 3;
+const TAG_GETSTATE: u32 = 4;
+const TAG_SETSTATE: u32 = 5;
 
 impl ToWorker {
     pub fn encode(&self) -> Vec<u8> {
@@ -240,6 +276,11 @@ impl ToWorker {
                 }
             }
             ToWorker::SendZ => w.u32(TAG_SENDZ),
+            ToWorker::GetState => w.u32(TAG_GETSTATE),
+            ToWorker::SetState(ws) => {
+                w.u32(TAG_SETSTATE);
+                ws.encode_into(&mut w);
+            }
             ToWorker::Shutdown => w.u32(TAG_SHUTDOWN),
         }
         w.buf
@@ -279,6 +320,8 @@ impl ToWorker {
                 })
             }
             TAG_SENDZ => ToWorker::SendZ,
+            TAG_GETSTATE => ToWorker::GetState,
+            TAG_SETSTATE => ToWorker::SetState(WorkerSnapshot::decode_from(&mut r)?),
             TAG_SHUTDOWN => ToWorker::Shutdown,
             t => bail!("bad ToWorker tag {t}"),
         };
@@ -391,9 +434,36 @@ mod tests {
 
     #[test]
     fn control_roundtrip() {
-        for msg in [ToWorker::SendZ, ToWorker::Shutdown] {
+        for msg in [ToWorker::SendZ, ToWorker::GetState, ToWorker::Shutdown] {
             assert_eq!(ToWorker::decode(&msg.encode()).unwrap(), msg);
         }
+    }
+
+    #[test]
+    fn set_state_roundtrip() {
+        let rng = crate::rng::Pcg64::new(77).split(1003);
+        for last_tail in [None, Some(state(9, 2, 5))] {
+            let msg = ToWorker::SetState(WorkerSnapshot {
+                id: 3,
+                rng: rng.export_state(),
+                z: state(9, 4, 4),
+                last_tail,
+            });
+            assert_eq!(ToWorker::decode(&msg.encode()).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn str_and_u128_primitives_roundtrip() {
+        let mut w = Writer::new();
+        w.str("pibp — checkpoint");
+        w.u128(0x0123_4567_89ab_cdef_fedc_ba98_7654_3210u128);
+        w.str("");
+        let mut r = Reader::new(&w.buf);
+        assert_eq!(r.str().unwrap(), "pibp — checkpoint");
+        assert_eq!(r.u128().unwrap(), 0x0123_4567_89ab_cdef_fedc_ba98_7654_3210u128);
+        assert_eq!(r.str().unwrap(), "");
+        assert!(r.done());
     }
 
     #[test]

@@ -66,6 +66,13 @@ impl VClock {
         Self::default()
     }
 
+    /// Rebuild a clock from checkpointed parts (`crate::snapshot`), so a
+    /// resumed run's virtual time continues from where the interrupted
+    /// run stopped instead of restarting at zero.
+    pub fn from_parts(elapsed_s: f64, iterations: usize, total_comm_bytes: usize) -> Self {
+        Self { elapsed_s, iterations, total_comm_bytes }
+    }
+
     /// Advance by one iteration; returns the iteration's virtual duration.
     pub fn advance(&mut self, t: &IterTiming, comm: &CommModel) -> f64 {
         let dt = t.virtual_s(comm);

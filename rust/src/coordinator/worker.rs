@@ -22,6 +22,7 @@ use crate::rng::Pcg64;
 use crate::runtime::{Engine, Ops};
 use crate::samplers::tail::TailProposer;
 use crate::samplers::uncollapsed::residuals;
+use crate::snapshot::WorkerSnapshot;
 
 use super::messages::{Broadcast, Summary, ToWorker, ZReport};
 
@@ -82,6 +83,27 @@ fn worker_loop(
             ToWorker::SendZ => {
                 let msg = ZReport { worker: cfg.id as u32, z: z.clone() };
                 tx.send((cfg.id, msg.encode())).ok();
+            }
+            ToWorker::GetState => {
+                // checkpoint capture: a pure read — touches no RNG, so a
+                // checkpointed run stays bit-identical to an
+                // uncheckpointed one
+                let snap = WorkerSnapshot {
+                    id: cfg.id as u32,
+                    rng: rng.export_state(),
+                    z: z.clone(),
+                    last_tail: last_tail.clone(),
+                };
+                tx.send((cfg.id, snap.encode())).ok();
+            }
+            ToWorker::SetState(snap) => {
+                // resume: the master validated shard shape before sending
+                debug_assert_eq!(snap.z.n(), b_rows, "snapshot shard mismatch");
+                rng = Pcg64::from_state(snap.rng);
+                z = snap.z;
+                last_tail = snap.last_tail;
+                // empty ack keeps the master's recv loop lockstep
+                tx.send((cfg.id, Vec::new())).ok();
             }
             ToWorker::Run(b) => {
                 let summary =

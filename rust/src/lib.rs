@@ -20,6 +20,13 @@
 //!   serial hybrid reference.
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas kernels
 //!   (`artifacts/*.hlo.txt`); python never runs at inference time.
+//! * [`snapshot`] — versioned binary checkpoints of the *entire* sampler
+//!   state (all RNG streams, master + worker chain state, evaluator,
+//!   sample reservoir): a run interrupted at iteration t and resumed is
+//!   bit-identical to one that never stopped.
+//! * [`serve`] — the posterior as a durable, queryable artifact: a
+//!   thinned sample reservoir plus a batched prediction engine
+//!   (reconstruction / imputation / held-out log-likelihood).
 //! * substrates: [`rng`], [`linalg`], [`data`], [`model`], [`metrics`],
 //!   [`viz`], [`cli`], [`config`], [`propcheck`], [`bench`].
 
@@ -37,4 +44,6 @@ pub mod rng;
 pub mod runtime;
 pub mod runner;
 pub mod samplers;
+pub mod serve;
+pub mod snapshot;
 pub mod viz;

@@ -1,22 +1,30 @@
 //! `pibp` — the launcher.
 //!
 //! ```text
-//! pibp run    [--config c.json] [--set key=value]...   one experiment
-//! pibp fig1   [--iters N] [--n N] [--out dir]          paper Figure 1
-//! pibp fig2   [--iters N] [--n N] [--out dir]          paper Figure 2
-//! pibp info   [--artifacts dir]                        artifact manifest
+//! pibp run     [--config c.json] [--set key=value]...   one experiment
+//! pibp resume  [--checkpoint f] [--set iters=N]...      continue a checkpointed run
+//! pibp predict [--checkpoint f] [--missing frac]...     query saved posterior samples
+//! pibp fig1    [--iters N] [--n N] [--out dir]          paper Figure 1
+//! pibp fig2    [--iters N] [--n N] [--out dir]          paper Figure 2
+//! pibp info    [--artifacts dir]                        artifact manifest
 //! ```
 
 use std::path::Path;
+use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use pibp::cli::{flag, repeated, Cli, CommandSpec, Parsed};
 use pibp::config::{RunConfig, SamplerKind};
 use pibp::data::cambridge;
+use pibp::linalg::Mat;
 use pibp::metrics::Trace;
+use pibp::model::missing::{missing_mse, Mask};
+use pibp::rng::Pcg64;
 use pibp::runner;
 use pibp::runtime::Manifest;
+use pibp::serve::PredictEngine;
+use pibp::snapshot::Checkpoint;
 use pibp::viz;
 
 fn spec() -> Cli {
@@ -31,6 +39,30 @@ fn spec() -> Cli {
                     flag("config", "JSON config file ('' = defaults)", ""),
                     flag("threads", "intra-worker sweep threads T ('' = config value)", ""),
                     repeated("set", "override, e.g. --set processors=5"),
+                ],
+            },
+            CommandSpec {
+                name: "resume",
+                about: "continue a checkpointed run, bit-identical to an uninterrupted one",
+                flags: vec![
+                    flag("checkpoint", "checkpoint file written by a run with checkpoint_every",
+                         "results/checkpoint.pibp"),
+                    flag("threads", "intra-worker sweep threads T ('' = checkpointed value)", ""),
+                    repeated("set", "override, e.g. --set iters=2000 (chain-relevant keys must match)"),
+                ],
+            },
+            CommandSpec {
+                name: "predict",
+                about: "batched posterior queries (imputation, reconstruction, held-out loglik) from a checkpoint",
+                flags: vec![
+                    flag("checkpoint", "checkpoint holding posterior samples (run with keep_samples=N)",
+                         "results/checkpoint.pibp"),
+                    flag("queries", "query rows as CSV ('' = the run's held-out split)", ""),
+                    flag("rows", "cap on query rows (0 = all)", "0"),
+                    flag("missing", "fraction of entries hidden for the imputation query", "0.25"),
+                    flag("sweeps", "Gibbs sweeps per posterior sample for latent inference", "3"),
+                    flag("seed", "query RNG seed (per-sample streams derive from it)", "0"),
+                    flag("threads", "sweep threads for full-row queries (never changes results)", "1"),
                 ],
             },
             CommandSpec {
@@ -83,6 +115,8 @@ fn main() {
 fn dispatch(p: &Parsed) -> Result<()> {
     match p.command.as_str() {
         "run" => cmd_run(p),
+        "resume" => cmd_resume(p),
+        "predict" => cmd_predict(p),
         "fig1" => cmd_fig1(p),
         "fig2" => cmd_fig2(p),
         "info" => cmd_info(p),
@@ -120,11 +154,150 @@ fn cmd_run(p: &Parsed) -> Result<()> {
         }
     })?;
     println!();
+    finish_run(&cfg, &out)
+}
+
+fn cmd_resume(p: &Parsed) -> Result<()> {
+    let ckpt = p.get("checkpoint").unwrap_or("results/checkpoint.pibp").to_string();
+    let mut overrides: Vec<(String, String)> = Vec::new();
+    match p.get("threads") {
+        Some("") | None => {}
+        Some(t) => overrides.push(("threads_per_worker".into(), t.into())),
+    }
+    for kv in p.get_list("set") {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set wants key=value, got '{kv}'"))?;
+        overrides.push((k.into(), v.into()));
+    }
+    let (cfg, out) = runner::resume(Path::new(&ckpt), &overrides, |i| {
+        if i % 10 == 0 {
+            print!(".");
+            use std::io::Write;
+            std::io::stdout().flush().ok();
+        }
+    })?;
+    println!();
+    println!(
+        "pibp resume: {} → iteration {} (P={} T={} seed={})",
+        ckpt, cfg.iters, cfg.processors, cfg.threads_per_worker, cfg.seed
+    );
+    finish_run(&cfg, &out)
+}
+
+fn cmd_predict(p: &Parsed) -> Result<()> {
+    let ckpt_path = p.get("checkpoint").unwrap_or("results/checkpoint.pibp").to_string();
+    let ckpt = Checkpoint::load(Path::new(&ckpt_path))?;
+    let cfg = RunConfig::from_canonical(&ckpt.config_text)?;
+    let samples = ckpt.reservoir.samples();
+    if samples.is_empty() {
+        bail!(
+            "checkpoint {ckpt_path} holds no posterior samples — run the chain \
+             with --set keep_samples=N (and checkpoint_every=M) first"
+        );
+    }
+    // query rows: an explicit CSV, or the run's own held-out split
+    let queries: Mat = match p.get("queries") {
+        Some("") | None => {
+            let ds = runner::build_dataset(&cfg)?;
+            if cfg.heldout_frac > 0.0 {
+                ds.split_heldout(cfg.heldout_frac).1.x
+            } else {
+                ds.x
+            }
+        }
+        Some(path) => pibp::data::loader::read_csv(Path::new(path))?,
+    };
+    let cap = p.get_usize("rows")?;
+    let queries = if cap > 0 && cap < queries.rows() {
+        queries.crop(cap, queries.cols())
+    } else {
+        queries
+    };
+    let missing = p.get_f64("missing")?;
+    if !(0.0..1.0).contains(&missing) {
+        bail!("--missing must be in [0, 1)");
+    }
+    let sweeps = p.get_usize("sweeps")?;
+    let seed: u64 = p.get("seed").unwrap_or("0").parse()?;
+    let threads = p.get_usize("threads")?.max(1);
+    let (q, d) = (queries.rows(), queries.cols());
+    if d != samples[0].a.cols() {
+        bail!(
+            "query rows have {d} dims but the posterior was fitted on {} dims",
+            samples[0].a.cols()
+        );
+    }
+    println!(
+        "pibp predict: {} posterior samples (iters {}..{}, thinning stride {}), \
+         {q} query rows × {d} dims, {sweeps} sweeps/sample, seed {seed}",
+        samples.len(),
+        samples.first().map_or(0, |s| s.iter),
+        samples.last().map_or(0, |s| s.iter),
+        ckpt.reservoir.stride(),
+    );
+    let engine = PredictEngine::new(samples, sweeps, threads);
+
+    // ---- imputation: hide a fraction of entries, fill, score vs truth ----
+    let mask = Mask::random(q, d, missing, &mut Pcg64::new(seed).split(4242));
+    let hidden = q * d - mask.observed_count();
+    let t0 = Instant::now();
+    let recon = engine.impute(&queries, &mask, seed);
+    let dt_imp = t0.elapsed().as_secs_f64();
+    let mse = missing_mse(&queries, &recon, &mask);
+    println!(
+        "  imputation   : {hidden} hidden entries ({:.0}%)  MSE={mse:.5}  \
+         [{:.1} rows/s]",
+        100.0 * missing,
+        q as f64 / dt_imp.max(1e-9),
+    );
+
+    // ---- held-out predictive log-likelihood over the full rows ----
+    let t0 = Instant::now();
+    let hp = engine.heldout_loglik(&queries, seed);
+    let dt_ll = t0.elapsed().as_secs_f64();
+    println!(
+        "  heldout      : log-mean-exp predictive  total={:.2}  per-row mean={:.3}  \
+         [{:.1} rows/s]",
+        hp.total,
+        hp.total / q as f64,
+        q as f64 / dt_ll.max(1e-9),
+    );
+
+    // ---- posterior-mean reconstruction (denoising) ----
+    let t0 = Instant::now();
+    let denoised = engine.reconstruct(&queries, seed);
+    let dt_rec = t0.elapsed().as_secs_f64();
+    let rec_rmse = (denoised.sub(&queries).frob2() / (q * d) as f64).sqrt();
+    println!(
+        "  reconstruct  : RMSE vs observed={rec_rmse:.5}  [{:.1} rows/s]",
+        q as f64 / dt_rec.max(1e-9),
+    );
+    println!(
+        "  throughput   : {:.1} queries/s over {} samples (1 query = 1 row × 1 query type)",
+        (3 * q) as f64 / (dt_imp + dt_ll + dt_rec).max(1e-9),
+        samples.len(),
+    );
+    Ok(())
+}
+
+/// Shared tail of `run`/`resume`: report, persist the trace, show features.
+fn finish_run(cfg: &RunConfig, out: &runner::RunOutcome) -> Result<()> {
     report(&out.trace);
     let dir = Path::new(&cfg.out_dir);
     let csv = dir.join(format!("{}.csv", out.trace.label));
     out.trace.save_csv(&csv)?;
     println!("trace → {}", csv.display());
+    if cfg.checkpoint_every > 0 {
+        println!("checkpoint → {}", runner::checkpoint_file(cfg).display());
+    }
+    if cfg.keep_samples > 0 {
+        println!(
+            "posterior samples kept: {} (stride {})",
+            out.reservoir.len(),
+            out.reservoir.stride()
+        );
+    }
     if out.final_k > 0 {
         println!("\nposterior features (K={}):\n{}", out.final_k,
                  viz::render_features_ascii(&out.features));

@@ -26,15 +26,44 @@ pub struct TracePoint {
 pub struct Trace {
     pub label: String,
     pub points: Vec<TracePoint>,
+    /// Keep-every-k thinning stride over *offered* points (1 = keep all).
+    /// Long checkpointed chains record thousands of evaluations; thinning
+    /// bounds trace memory without skewing the kept schedule. 0 is
+    /// treated as 1 so `Trace::default()` keeps everything.
+    thin_stride: usize,
+    /// Points offered to `push` so far (kept or not) — part of the
+    /// thinning schedule, persisted across checkpoint/resume.
+    seen: usize,
 }
 
 impl Trace {
     pub fn new(label: impl Into<String>) -> Self {
-        Self { label: label.into(), points: Vec::new() }
+        Self { label: label.into(), points: Vec::new(), thin_stride: 1, seen: 0 }
+    }
+
+    /// Keep only every `stride`-th offered point from now on (the 1st,
+    /// `stride+1`-th, … of the offered sequence). `stride ≤ 1` keeps all.
+    pub fn set_thinning(&mut self, stride: usize) {
+        self.thin_stride = stride.max(1);
+    }
+
+    /// (stride, offered-count) — checkpoint serialisation hook.
+    pub fn thinning(&self) -> (usize, usize) {
+        (self.thin_stride.max(1), self.seen)
+    }
+
+    /// Restore the thinning schedule from a checkpoint.
+    pub fn restore_thinning(&mut self, stride: usize, seen: usize) {
+        self.thin_stride = stride.max(1);
+        self.seen = seen;
     }
 
     pub fn push(&mut self, p: TracePoint) {
-        self.points.push(p);
+        let keep = self.seen % self.thin_stride.max(1) == 0;
+        self.seen += 1;
+        if keep {
+            self.points.push(p);
+        }
     }
 
     pub fn last(&self) -> Option<&TracePoint> {
@@ -138,5 +167,63 @@ mod tests {
         let t = mk(2);
         let j = t.to_json();
         assert_eq!(j.get("heldout").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn thinning_keeps_every_kth_offered_point() {
+        let mut t = Trace::new("thin");
+        t.set_thinning(3);
+        for i in 0..10 {
+            t.push(TracePoint {
+                iter: i,
+                vtime_s: 0.0,
+                wall_s: 0.0,
+                heldout: -1.0,
+                k: 0,
+                sigma_x: 0.5,
+                alpha: 1.0,
+            });
+        }
+        // offered indices 0..10, stride 3 ⇒ kept offered-indices 0,3,6,9
+        let kept: Vec<usize> = t.points.iter().map(|p| p.iter).collect();
+        assert_eq!(kept, vec![0, 3, 6, 9]);
+        assert_eq!(t.thinning(), (3, 10));
+    }
+
+    #[test]
+    fn thinning_schedule_survives_restore() {
+        let mut t = Trace::new("thin");
+        t.set_thinning(2);
+        for i in 0..3 {
+            t.push(TracePoint {
+                iter: i, vtime_s: 0.0, wall_s: 0.0, heldout: -1.0,
+                k: 0, sigma_x: 0.5, alpha: 1.0,
+            });
+        }
+        // simulate resume: rebuild and continue the offered sequence
+        let (stride, seen) = t.thinning();
+        let mut resumed = Trace::new("thin");
+        resumed.points = t.points.clone();
+        resumed.restore_thinning(stride, seen);
+        for i in 3..7 {
+            resumed.push(TracePoint {
+                iter: i, vtime_s: 0.0, wall_s: 0.0, heldout: -1.0,
+                k: 0, sigma_x: 0.5, alpha: 1.0,
+            });
+        }
+        let kept: Vec<usize> = resumed.points.iter().map(|p| p.iter).collect();
+        assert_eq!(kept, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn default_and_zero_stride_keep_everything() {
+        let mut t = Trace::default();
+        for i in 0..4 {
+            t.push(TracePoint {
+                iter: i, vtime_s: 0.0, wall_s: 0.0, heldout: -1.0,
+                k: 0, sigma_x: 0.5, alpha: 1.0,
+            });
+        }
+        assert_eq!(t.points.len(), 4);
     }
 }

@@ -132,14 +132,37 @@ pub fn masked_sweep(
 /// Posterior-mean reconstruction: observed entries pass through, missing
 /// entries are filled with `(Z A)[i,j]`.
 pub fn reconstruct(x: &Mat, mask: &Mask, z: &FeatureState, a: &Mat) -> Mat {
-    let pred = z.to_mat().matmul(a);
-    Mat::from_fn(x.rows(), x.cols(), |i, j| {
-        if mask.observed(i, j) {
-            x[(i, j)]
-        } else {
-            pred[(i, j)]
+    let mut out = Mat::zeros(x.rows(), x.cols());
+    reconstruct_into(&mut out, x, mask, z, a);
+    out
+}
+
+/// In-place variant of [`reconstruct`]: overwrites `out` (same shape as
+/// `x`) without allocating, summing active rows of `A` directly instead
+/// of materialising a dense Z and a dense Z·A. The prediction hot loop
+/// (`serve::PredictEngine::impute`) reuses one buffer across all S
+/// posterior samples, so averaging costs O(1) allocations, not O(S).
+pub fn reconstruct_into(out: &mut Mat, x: &Mat, mask: &Mask, z: &FeatureState, a: &Mat) {
+    assert_eq!(out.rows(), x.rows(), "reconstruct_into: row mismatch");
+    assert_eq!(out.cols(), x.cols(), "reconstruct_into: col mismatch");
+    let d = x.cols();
+    let k_limit = z.k().min(a.rows());
+    for i in 0..x.rows() {
+        let row = out.row_mut(i);
+        row.fill(0.0);
+        for k in 0..k_limit {
+            if z.get(i, k) == 1 {
+                for (t, &v) in row.iter_mut().zip(a.row(k)) {
+                    *t += v;
+                }
+            }
         }
-    })
+        for j in 0..d {
+            if mask.observed(i, j) {
+                row[j] = x[(i, j)];
+            }
+        }
+    }
 }
 
 /// MSE over the MISSING entries only (against ground truth).
@@ -267,6 +290,22 @@ mod tests {
             model_mse < 0.3 * base_mse,
             "model {model_mse:.4} vs mean-impute {base_mse:.4}"
         );
+    }
+
+    #[test]
+    fn reconstruct_into_matches_reconstruct_without_allocating_fresh() {
+        let (x, z, a) = planted(25, 3, 10, 8);
+        let mut rng = Pcg64::new(9);
+        let mask = Mask::random(25, 10, 0.3, &mut rng);
+        let want = reconstruct(&x, &mask, &z, &a);
+        // dirty buffer: reconstruct_into must fully overwrite it
+        let mut out = Mat::from_fn(25, 10, |_, _| f64::NAN);
+        reconstruct_into(&mut out, &x, &mask, &z, &a);
+        assert!(out.max_abs_diff(&want) == 0.0);
+        // reuse the same buffer for a second (different) reconstruction
+        let mask2 = Mask::full(25, 10);
+        reconstruct_into(&mut out, &x, &mask2, &z, &a);
+        assert!(out.max_abs_diff(&x) == 0.0);
     }
 
     #[test]

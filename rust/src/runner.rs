@@ -2,6 +2,12 @@
 //! harness share. Builds the dataset from a [`RunConfig`], drives the
 //! selected sampler, evaluates the held-out joint log-likelihood on a
 //! schedule, and returns the Figure-1 [`Trace`].
+//!
+//! For the hybrid sampler this is also where durable state is wired in:
+//! `checkpoint_every` writes full [`Checkpoint`]s (`crate::snapshot`) on
+//! an iteration schedule, `keep_samples` accumulates a thinned posterior
+//! [`SampleReservoir`] (`crate::serve`), and [`resume`] continues an
+//! interrupted run **bit-identically** to one that never stopped.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -20,6 +26,8 @@ use crate::samplers::collapsed::{CollapsedGibbs, Mode};
 use crate::samplers::eval::HeldoutEval;
 use crate::samplers::uncollapsed::UncollapsedGibbs;
 use crate::samplers::SamplerOptions;
+use crate::serve::{PosteriorSample, SampleReservoir};
+use crate::snapshot::{Checkpoint, CheckpointRef};
 
 /// Build the dataset named by the config.
 pub fn build_dataset(cfg: &RunConfig) -> Result<Dataset> {
@@ -59,7 +67,17 @@ fn sampler_options(cfg: &RunConfig) -> SamplerOptions {
     }
 }
 
+/// Where this config's checkpoints live ("" ⇒ `<out_dir>/checkpoint.pibp`).
+pub fn checkpoint_file(cfg: &RunConfig) -> PathBuf {
+    if cfg.checkpoint_path.is_empty() {
+        Path::new(&cfg.out_dir).join("checkpoint.pibp")
+    } else {
+        PathBuf::from(&cfg.checkpoint_path)
+    }
+}
+
 /// The outcome of a run: the convergence trace plus final state views.
+#[derive(Debug)]
 pub struct RunOutcome {
     pub trace: Trace,
     pub final_k: usize,
@@ -68,140 +86,317 @@ pub struct RunOutcome {
     pub features: Mat,
     /// Total virtual seconds (hybrid) or wall seconds (serial samplers).
     pub elapsed_s: f64,
+    /// Thinned posterior samples accumulated when `keep_samples > 0`
+    /// (empty otherwise; always empty for the serial baselines).
+    pub reservoir: SampleReservoir,
 }
 
 /// Run the configured sampler for `cfg.iters` iterations.
 ///
-/// Progress callback fires after every iteration with (iter, trace-point
-/// just recorded if any).
-pub fn run(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOutcome> {
+/// Progress callback fires after every iteration with the iteration index.
+pub fn run(cfg: &RunConfig, progress: impl FnMut(usize)) -> Result<RunOutcome> {
     cfg.validate()?;
+    match cfg.sampler {
+        SamplerKind::Hybrid => run_hybrid(cfg, None, progress),
+        _ => run_serial(cfg, progress),
+    }
+}
+
+/// Resume a checkpointed hybrid run. `overrides` are `--set`-style
+/// (key, value) pairs applied on top of the checkpoint's stored config —
+/// typically `iters` to extend the horizon, or `threads_per_worker`
+/// (both outside the chain fingerprint). Any override that changes a
+/// chain-relevant setting is rejected: the resumed chain must be the
+/// same chain.
+pub fn resume(
+    ckpt_path: &Path,
+    overrides: &[(String, String)],
+    progress: impl FnMut(usize),
+) -> Result<(RunConfig, RunOutcome)> {
+    let ckpt = Checkpoint::load(ckpt_path)?;
+    let mut cfg = RunConfig::from_canonical(&ckpt.config_text)
+        .context("reconstructing the checkpoint's run configuration")?;
+    for (k, v) in overrides {
+        cfg.apply(k, v)?;
+    }
+    cfg.validate()?;
+    if cfg.fingerprint() != ckpt.fingerprint {
+        bail!(
+            "configuration fingerprint mismatch: the resumed settings change \
+             the chain (dataset / sampler / backend / P / L / seed / priors / \
+             eval schedule must match the checkpointed run; extend with \
+             --set iters=N or change threads instead)"
+        );
+    }
+    let done = ckpt.coord.iter as usize;
+    if cfg.iters <= done {
+        bail!(
+            "checkpoint is already at iteration {done} ≥ target iters={}; \
+             extend the run with --set iters=N",
+            cfg.iters
+        );
+    }
+    let out = run_hybrid(&cfg, Some(ckpt), progress)?;
+    Ok((cfg, out))
+}
+
+/// Shared prologue of the hybrid and serial paths: dataset build,
+/// held-out split, evaluator on the `split(7777)` stream, labelled +
+/// thinned trace. One place, so the baselines' evaluation streams can
+/// never drift from the hybrid's (the Figure-1 comparison depends on
+/// that).
+struct RunSetup {
+    train: Dataset,
+    lg: LinGauss,
+    eval_rng: Pcg64,
+    evaluator: HeldoutEval,
+    trace: Trace,
+}
+
+fn setup_run(cfg: &RunConfig) -> Result<RunSetup> {
     let ds = build_dataset(cfg)?;
     let (train, test) = if cfg.heldout_frac > 0.0 {
         ds.split_heldout(cfg.heldout_frac)
     } else {
         (ds.clone(), ds)
     };
-    let lg = LinGauss::new(cfg.sigma_x, cfg.sigma_a);
-    let mut eval_rng = Pcg64::new(cfg.seed).split(7777);
-    let mut evaluator = HeldoutEval::new(test.x.clone(), cfg.eval_sweeps)
-        .with_threads(cfg.threads_per_worker);
-    let label = format!("{}-p{}", cfg.sampler.name(), cfg.processors);
-    let mut trace = Trace::new(label);
+    let mut trace = Trace::new(format!("{}-p{}", cfg.sampler.name(), cfg.processors));
+    trace.set_thinning(cfg.trace_thin);
+    Ok(RunSetup {
+        train,
+        lg: LinGauss::new(cfg.sigma_x, cfg.sigma_a),
+        eval_rng: Pcg64::new(cfg.seed).split(7777),
+        evaluator: HeldoutEval::new(test.x, cfg.eval_sweeps)
+            .with_threads(cfg.threads_per_worker),
+        trace,
+    })
+}
 
-    match cfg.sampler {
-        SamplerKind::Hybrid => {
-            let ccfg = CoordinatorConfig {
-                processors: cfg.processors,
-                sub_iters: cfg.sub_iters,
-                threads_per_worker: cfg.threads_per_worker,
-                seed: cfg.seed,
-                lg,
-                alpha: cfg.alpha,
-                opts: sampler_options(cfg),
-                backend: cfg.backend,
-                artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
-                comm: cfg.comm,
-            };
-            let mut coord =
-                Coordinator::new(&train.x, ccfg).context("starting coordinator")?;
-            let wall0 = Instant::now();
-            for i in 0..cfg.iters {
-                let rec = coord.step()?;
-                if i % cfg.eval_every == 0 || i + 1 == cfg.iters {
-                    let h = evaluator.evaluate(coord.params(), &mut eval_rng);
-                    trace.push(TracePoint {
-                        iter: rec.iter,
-                        vtime_s: rec.vtime_total_s,
-                        wall_s: wall0.elapsed().as_secs_f64(),
-                        heldout: h,
-                        k: rec.k,
-                        sigma_x: rec.sigma_x,
-                        alpha: rec.alpha,
-                    });
-                }
-                progress(i);
-            }
-            let params = coord.params().clone();
-            Ok(RunOutcome {
-                final_k: params.k(),
-                features: params.a.clone(),
-                elapsed_s: coord.clock.elapsed_s(),
-                final_params: params,
-                trace,
-            })
-        }
-        SamplerKind::Collapsed | SamplerKind::Accelerated => {
-            let mode = if cfg.sampler == SamplerKind::Collapsed {
-                Mode::Exact
-            } else {
-                Mode::Predictive
-            };
-            let mut rng = Pcg64::new(cfg.seed).split(2);
-            let mut s = CollapsedGibbs::new(
-                train.x.clone(), lg, cfg.alpha, mode, sampler_options(cfg), &mut rng,
-            );
-            let wall0 = Instant::now();
-            for i in 0..cfg.iters {
-                let rec = s.step(&mut rng);
-                if i % cfg.eval_every == 0 || i + 1 == cfg.iters {
-                    // draw (A, π) from their conditionals so the held-out
-                    // metric is the same joint as the hybrid's
-                    let params = collapsed_params(&s, &mut rng);
-                    let h = evaluator.evaluate(&params, &mut eval_rng);
-                    trace.push(TracePoint {
-                        iter: rec.iter,
-                        vtime_s: wall0.elapsed().as_secs_f64(),
-                        wall_s: wall0.elapsed().as_secs_f64(),
-                        heldout: h,
-                        k: rec.k,
-                        sigma_x: rec.sigma_x,
-                        alpha: rec.alpha,
-                    });
-                }
-                progress(i);
-            }
-            let params = collapsed_params(&s, &mut rng);
-            Ok(RunOutcome {
-                final_k: params.k(),
-                features: params.a.clone(),
-                elapsed_s: wall0.elapsed().as_secs_f64(),
-                final_params: params,
-                trace,
-            })
-        }
-        SamplerKind::Uncollapsed => {
-            let mut rng = Pcg64::new(cfg.seed).split(3);
-            let k_fixed = cfg.k_cap.min(16);
-            let mut s = UncollapsedGibbs::new(
-                train.x.clone(), k_fixed, lg, cfg.alpha, sampler_options(cfg), &mut rng,
-            );
-            let wall0 = Instant::now();
-            for i in 0..cfg.iters {
-                let rec = s.step(&mut rng);
-                if i % cfg.eval_every == 0 || i + 1 == cfg.iters {
-                    let h = evaluator.evaluate(&s.params, &mut eval_rng);
-                    trace.push(TracePoint {
-                        iter: rec.iter,
-                        vtime_s: wall0.elapsed().as_secs_f64(),
-                        wall_s: wall0.elapsed().as_secs_f64(),
-                        heldout: h,
-                        k: rec.k,
-                        sigma_x: rec.sigma_x,
-                        alpha: rec.alpha,
-                    });
-                }
-                progress(i);
-            }
-            Ok(RunOutcome {
-                final_k: s.params.k(),
-                features: s.params.a.clone(),
-                elapsed_s: wall0.elapsed().as_secs_f64(),
-                final_params: s.params.clone(),
-                trace,
-            })
-        }
+/// The hybrid (coordinator) path, optionally continuing from a
+/// checkpoint. Fresh runs and resumed runs share every line of the
+/// iteration loop, so their schedules (evaluation, sampling, checkpoint
+/// cadence) are identical by construction.
+fn run_hybrid(
+    cfg: &RunConfig,
+    resume_from: Option<Checkpoint>,
+    mut progress: impl FnMut(usize),
+) -> Result<RunOutcome> {
+    let RunSetup { train, lg, mut eval_rng, mut evaluator, mut trace } = setup_run(cfg)?;
+    let ccfg = CoordinatorConfig {
+        processors: cfg.processors,
+        sub_iters: cfg.sub_iters,
+        threads_per_worker: cfg.threads_per_worker,
+        seed: cfg.seed,
+        lg,
+        alpha: cfg.alpha,
+        opts: sampler_options(cfg),
+        backend: cfg.backend,
+        artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
+        comm: cfg.comm,
+    };
+    let mut coord = Coordinator::new(&train.x, ccfg).context("starting coordinator")?;
+    let mut reservoir = SampleReservoir::new(cfg.keep_samples);
+    let mut start_iter = 0usize;
+    let mut wall_base = 0.0f64;
+    if let Some(ck) = resume_from {
+        coord.restore(&ck.coord).context("restoring coordinator state")?;
+        eval_rng = Pcg64::from_state(ck.eval_rng);
+        evaluator.restore_z_state(ck.z_test)?;
+        trace = ck.trace;
+        trace.set_thinning(cfg.trace_thin);
+        reservoir = ck.reservoir;
+        // like trace_thin above, a --set keep_samples override on resume
+        // takes effect (no-op when unchanged, preserving bit-exactness)
+        reservoir.set_capacity(cfg.keep_samples);
+        start_iter = ck.coord.iter as usize;
+        wall_base = ck.wall_s;
     }
+
+    let wall0 = Instant::now();
+    for i in start_iter..cfg.iters {
+        let rec = coord.step()?;
+        let scheduled_eval = i % cfg.eval_every == 0;
+        if scheduled_eval {
+            let h = evaluator.evaluate(coord.params(), &mut eval_rng);
+            trace.push(TracePoint {
+                iter: rec.iter,
+                vtime_s: rec.vtime_total_s,
+                wall_s: wall_base + wall0.elapsed().as_secs_f64(),
+                heldout: h,
+                k: rec.k,
+                sigma_x: rec.sigma_x,
+                alpha: rec.alpha,
+            });
+        }
+        if reservoir.wants(rec.iter as u64) {
+            // gather_z is a pure read of the workers (no RNG), so sample
+            // recording never perturbs the chain
+            let z = coord.gather_z()?;
+            let p = coord.params();
+            reservoir.record(PosteriorSample {
+                iter: rec.iter as u64,
+                z,
+                a: p.a.clone(),
+                pi: p.pi.clone(),
+                sigma_x: p.lg.sigma_x,
+                sigma_a: p.lg.sigma_a,
+                alpha: p.alpha,
+            });
+        }
+        if cfg.checkpoint_every > 0
+            && ((i + 1) % cfg.checkpoint_every == 0 || i + 1 == cfg.iters)
+        {
+            let path = checkpoint_file(cfg);
+            save_checkpoint(
+                cfg,
+                &mut coord,
+                &eval_rng,
+                &evaluator,
+                &trace,
+                &reservoir,
+                wall_base + wall0.elapsed().as_secs_f64(),
+                &path,
+            )
+            .with_context(|| format!("writing checkpoint {}", path.display()))?;
+        }
+        if i + 1 == cfg.iters && !scheduled_eval {
+            // bonus final evaluation so every returned trace ends fresh.
+            // Deliberately AFTER the checkpoint write: this eval depends
+            // on the target horizon (`iters`), so letting it touch
+            // checkpointed state (the eval RNG stream, the warm Z_test,
+            // the trace thinning counter) would make a resumed run
+            // diverge from an uninterrupted one on the evaluation stream.
+            // Checkpoints therefore always sit at horizon-independent
+            // iteration boundaries.
+            let h = evaluator.evaluate(coord.params(), &mut eval_rng);
+            trace.push(TracePoint {
+                iter: rec.iter,
+                vtime_s: rec.vtime_total_s,
+                wall_s: wall_base + wall0.elapsed().as_secs_f64(),
+                heldout: h,
+                k: rec.k,
+                sigma_x: rec.sigma_x,
+                alpha: rec.alpha,
+            });
+        }
+        progress(i);
+    }
+    let params = coord.params().clone();
+    Ok(RunOutcome {
+        final_k: params.k(),
+        features: params.a.clone(),
+        elapsed_s: coord.clock.elapsed_s(),
+        final_params: params,
+        trace,
+        reservoir,
+    })
+}
+
+/// Capture and atomically write a checkpoint of the live run. Serialises
+/// the trace / reservoir / evaluator state by reference ([`CheckpointRef`])
+/// — no deep clones of large state on the checkpoint cadence.
+#[allow(clippy::too_many_arguments)]
+fn save_checkpoint(
+    cfg: &RunConfig,
+    coord: &mut Coordinator,
+    eval_rng: &Pcg64,
+    evaluator: &HeldoutEval,
+    trace: &Trace,
+    reservoir: &SampleReservoir,
+    wall_s: f64,
+    path: &Path,
+) -> Result<()> {
+    let coord_snap = coord.snapshot()?;
+    let config_text = cfg.canonical();
+    let eval_state = eval_rng.export_state();
+    CheckpointRef {
+        fingerprint: cfg.fingerprint(),
+        config_text: &config_text,
+        coord: &coord_snap,
+        eval_rng: &eval_state,
+        z_test: evaluator.z_state(),
+        trace,
+        reservoir,
+        wall_s,
+    }
+    .save(path)
+}
+
+/// The serial baselines (collapsed / accelerated / uncollapsed); the
+/// hybrid is dispatched to [`run_hybrid`] before this is reached.
+fn run_serial(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOutcome> {
+    let RunSetup { train, lg, mut eval_rng, mut evaluator, mut trace } = setup_run(cfg)?;
+    let wall0 = Instant::now();
+
+    if cfg.sampler == SamplerKind::Uncollapsed {
+        let mut rng = Pcg64::new(cfg.seed).split(3);
+        let k_fixed = cfg.k_cap.min(16);
+        let mut s = UncollapsedGibbs::new(
+            train.x.clone(), k_fixed, lg, cfg.alpha, sampler_options(cfg), &mut rng,
+        );
+        for i in 0..cfg.iters {
+            let rec = s.step(&mut rng);
+            if i % cfg.eval_every == 0 || i + 1 == cfg.iters {
+                let h = evaluator.evaluate(&s.params, &mut eval_rng);
+                trace.push(TracePoint {
+                    iter: rec.iter,
+                    vtime_s: wall0.elapsed().as_secs_f64(),
+                    wall_s: wall0.elapsed().as_secs_f64(),
+                    heldout: h,
+                    k: rec.k,
+                    sigma_x: rec.sigma_x,
+                    alpha: rec.alpha,
+                });
+            }
+            progress(i);
+        }
+        return Ok(RunOutcome {
+            final_k: s.params.k(),
+            features: s.params.a.clone(),
+            elapsed_s: wall0.elapsed().as_secs_f64(),
+            final_params: s.params.clone(),
+            trace,
+            reservoir: SampleReservoir::new(0),
+        });
+    }
+
+    let mode = if cfg.sampler == SamplerKind::Collapsed {
+        Mode::Exact
+    } else {
+        Mode::Predictive
+    };
+    let mut rng = Pcg64::new(cfg.seed).split(2);
+    let mut s = CollapsedGibbs::new(
+        train.x.clone(), lg, cfg.alpha, mode, sampler_options(cfg), &mut rng,
+    );
+    for i in 0..cfg.iters {
+        let rec = s.step(&mut rng);
+        if i % cfg.eval_every == 0 || i + 1 == cfg.iters {
+            // draw (A, π) from their conditionals so the held-out
+            // metric is the same joint as the hybrid's
+            let params = collapsed_params(&s, &mut rng);
+            let h = evaluator.evaluate(&params, &mut eval_rng);
+            trace.push(TracePoint {
+                iter: rec.iter,
+                vtime_s: wall0.elapsed().as_secs_f64(),
+                wall_s: wall0.elapsed().as_secs_f64(),
+                heldout: h,
+                k: rec.k,
+                sigma_x: rec.sigma_x,
+                alpha: rec.alpha,
+            });
+        }
+        progress(i);
+    }
+    let params = collapsed_params(&s, &mut rng);
+    Ok(RunOutcome {
+        final_k: params.k(),
+        features: params.a.clone(),
+        elapsed_s: wall0.elapsed().as_secs_f64(),
+        final_params: params,
+        trace,
+        reservoir: SampleReservoir::new(0),
+    })
 }
 
 /// Draw (A, π) from their conditionals given a collapsed sampler's state,
@@ -253,6 +448,7 @@ mod tests {
             let out = run(&tiny(kind), |_| {}).unwrap();
             assert!(!out.trace.points.is_empty(), "{kind:?}");
             assert!(out.trace.last().unwrap().heldout.is_finite(), "{kind:?}");
+            assert!(out.reservoir.is_empty(), "{kind:?}: no keep_samples set");
         }
     }
 
@@ -273,5 +469,31 @@ mod tests {
         cfg.processors = 3;
         let out = run(&cfg, |_| {}).unwrap();
         assert!(out.elapsed_s > 0.0);
+    }
+
+    #[test]
+    fn keep_samples_fills_the_reservoir() {
+        let mut cfg = tiny(SamplerKind::Hybrid);
+        cfg.keep_samples = 4;
+        let out = run(&cfg, |_| {}).unwrap();
+        assert!(!out.reservoir.is_empty());
+        assert!(out.reservoir.len() <= 4);
+        let last = out.reservoir.samples().last().unwrap();
+        // samples live in the same column space as the broadcast globals
+        assert_eq!(last.a.rows(), last.pi.len());
+        assert_eq!(last.z.k(), last.pi.len());
+        // train split of n=60 at heldout 0.1 keeps 54 rows
+        assert_eq!(last.z.n(), 54);
+    }
+
+    #[test]
+    fn checkpoint_file_resolution() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(
+            checkpoint_file(&cfg),
+            Path::new("results").join("checkpoint.pibp")
+        );
+        cfg.checkpoint_path = "elsewhere/ck.pibp".into();
+        assert_eq!(checkpoint_file(&cfg), PathBuf::from("elsewhere/ck.pibp"));
     }
 }

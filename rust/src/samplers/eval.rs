@@ -44,6 +44,25 @@ impl HeldoutEval {
         self
     }
 
+    /// The warm-started held-out Z — checkpointed so a resumed run's
+    /// evaluation schedule continues bit-identically (`crate::snapshot`).
+    pub fn z_state(&self) -> &FeatureState {
+        &self.z_test
+    }
+
+    /// Restore the warm-started held-out Z from a checkpoint.
+    pub fn restore_z_state(&mut self, z: FeatureState) -> anyhow::Result<()> {
+        if z.n() != self.x_test.rows() {
+            anyhow::bail!(
+                "evaluator snapshot has {} rows, held-out set has {}",
+                z.n(),
+                self.x_test.rows()
+            );
+        }
+        self.z_test = z;
+        Ok(())
+    }
+
     /// Evaluate the joint held-out log-likelihood under `params`.
     pub fn evaluate(&mut self, params: &GlobalParams, rng: &mut Pcg64) -> f64 {
         let n = self.x_test.rows();

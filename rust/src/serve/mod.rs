@@ -1,0 +1,578 @@
+//! Posterior serving: a fitted model as a durable, queryable artifact.
+//!
+//! Two pieces:
+//!
+//! * [`SampleReservoir`] — a bounded, deterministically thinned store of
+//!   posterior samples (Z, A, π, σ, α) accumulated during a run
+//!   (`keep_samples` in `RunConfig`) and persisted inside checkpoints
+//!   (`crate::snapshot`). Thinning is the classic keep-every-k-and-double
+//!   scheme: record every `stride`-th iteration; when the reservoir is
+//!   full, drop every other kept sample and double the stride. The kept
+//!   set is a pure function of (capacity, offered iterations) — no RNG —
+//!   so it survives checkpoint/resume bit-exactly.
+//! * [`PredictEngine`] — batched prediction queries averaged over the
+//!   stored samples: posterior-mean **reconstruction** of query rows,
+//!   **missing-entry imputation** (reusing `model::missing`), and
+//!   held-out per-row predictive **log-likelihood** (log-mean-exp across
+//!   samples). Per-sample latent inference for fully observed rows runs
+//!   through the deterministic `crate::parallel` executor, so query
+//!   results are bit-identical for every thread count; each sample draws
+//!   from its own derived stream (`Pcg64::new(seed).split(9000 + s)`), so
+//!   they are also independent of sample evaluation order.
+//!
+//! This mirrors how Dubey et al. (distributed collapsed BNP) and Zhang et
+//! al. (accelerated non-conjugate sampling) use fitted BNP models: not as
+//! one-shot experiments but as posterior artifacts answering held-out
+//! prediction and imputation queries.
+
+use crate::linalg::Mat;
+use crate::model::missing::{masked_sweep, reconstruct_into, Mask};
+use crate::model::state::FeatureState;
+use crate::model::LinGauss;
+use crate::parallel::{par_sweep_rows, ExecConfig};
+use crate::rng::Pcg64;
+use crate::samplers::uncollapsed::residuals;
+
+/// RNG tag base for per-sample query streams (see the repo-wide tag table
+/// in docs/ARCHITECTURE.md): sample s draws from
+/// `Pcg64::new(query_seed).split(QUERY_TAG_BASE + s)`.
+pub const QUERY_TAG_BASE: u64 = 9000;
+
+/// One thinned posterior draw: the global feature assignment at that
+/// iteration plus every global parameter needed to answer queries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PosteriorSample {
+    /// Global iteration (1-based) this sample was taken at.
+    pub iter: u64,
+    /// Gathered global Z (N × K⁺), matching the column space of `a`/`pi`.
+    pub z: FeatureState,
+    /// Feature loadings (K⁺ × D).
+    pub a: Mat,
+    pub pi: Vec<f64>,
+    pub sigma_x: f64,
+    pub sigma_a: f64,
+    pub alpha: f64,
+}
+
+impl PosteriorSample {
+    pub fn k(&self) -> usize {
+        self.pi.len()
+    }
+
+    fn prior_logit(&self) -> Vec<f64> {
+        self.pi
+            .iter()
+            .map(|&p| {
+                let p = p.clamp(1e-12, 1.0 - 1e-12);
+                (p / (1.0 - p)).ln()
+            })
+            .collect()
+    }
+}
+
+/// Bounded store of thinned posterior samples (see module docs for the
+/// thinning scheme). `capacity == 0` disables recording entirely.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SampleReservoir {
+    cap: usize,
+    stride: u64,
+    samples: Vec<PosteriorSample>,
+}
+
+impl SampleReservoir {
+    pub fn new(capacity: usize) -> Self {
+        Self { cap: capacity, stride: 1, samples: Vec::new() }
+    }
+
+    /// Rebuild from checkpointed parts (`crate::snapshot`).
+    pub fn from_parts(cap: usize, stride: u64, samples: Vec<PosteriorSample>) -> Self {
+        Self { cap, stride: stride.max(1), samples }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Current thinning stride: samples are recorded at iterations that
+    /// are multiples of this.
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    pub fn samples(&self) -> &[PosteriorSample] {
+        &self.samples
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Should iteration `iter` (1-based, counting completed global
+    /// iterations) be recorded? Callers gate the (expensive) global-Z
+    /// gather on this before building a [`PosteriorSample`].
+    pub fn wants(&self, iter: u64) -> bool {
+        self.cap > 0 && iter % self.stride == 0
+    }
+
+    /// Change the capacity in place (e.g. a `--set keep_samples=N`
+    /// override on resume). Growing keeps everything; shrinking thins
+    /// with the same stride-doubling rule until the kept set fits; 0
+    /// stops future recording but keeps what was already collected (so
+    /// later checkpoints don't lose data).
+    pub fn set_capacity(&mut self, cap: usize) {
+        self.cap = cap;
+        if cap > 0 {
+            while self.samples.len() > cap {
+                self.stride *= 2;
+                let stride = self.stride;
+                self.samples.retain(|t| t.iter % stride == 0);
+            }
+        }
+    }
+
+    /// Record a sample taken at a `wants`-approved iteration. When the
+    /// reservoir is full, every other kept sample is dropped and the
+    /// stride doubles — capacity is never exceeded and the kept set stays
+    /// evenly spaced over the whole chain.
+    pub fn record(&mut self, s: PosteriorSample) {
+        if !self.wants(s.iter) {
+            return;
+        }
+        while self.samples.len() >= self.cap {
+            self.stride *= 2;
+            let stride = self.stride;
+            self.samples.retain(|t| t.iter % stride == 0);
+            if s.iter % stride != 0 {
+                return;
+            }
+        }
+        self.samples.push(s);
+    }
+}
+
+/// Per-row held-out predictive log-likelihood query result.
+#[derive(Clone, Debug)]
+pub struct HeldoutPredict {
+    /// log (1/S Σ_s P(x_i, z_i | θ_s)) per query row (log-mean-exp over
+    /// samples of the per-sample joint row score).
+    pub per_row: Vec<f64>,
+    /// Sum over rows.
+    pub total: f64,
+}
+
+/// Numerically stable log-mean-exp.
+pub fn log_mean_exp(vals: &[f64]) -> f64 {
+    let m = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f64 = vals.iter().map(|v| (v - m).exp()).sum();
+    m + (s / vals.len() as f64).ln()
+}
+
+/// Batched prediction over a set of posterior samples.
+pub struct PredictEngine<'a> {
+    samples: &'a [PosteriorSample],
+    /// Gibbs sweeps used to infer each query row's latent z per sample.
+    sweeps: usize,
+    exec: ExecConfig,
+}
+
+impl<'a> PredictEngine<'a> {
+    /// `threads` parallelises the per-sample full-row sweeps through the
+    /// deterministic executor — results are identical for every value.
+    pub fn new(samples: &'a [PosteriorSample], sweeps: usize, threads: usize) -> Self {
+        Self { samples, sweeps, exec: ExecConfig::with_threads(threads) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn sample_rng(seed: u64, s: usize) -> Pcg64 {
+        Pcg64::new(seed).split(QUERY_TAG_BASE + s as u64)
+    }
+
+    /// Infer latent assignments for the query rows under one sample.
+    /// `mask: None` means fully observed rows, swept through the PR-2
+    /// parallel executor (bit-identical for every T); `Some(mask)` sweeps
+    /// only over the observed entries (`masked_sweep`, for imputation).
+    /// Both paths share every other piece of the inference setup so they
+    /// cannot drift apart.
+    fn infer_z(
+        &self,
+        ps: &PosteriorSample,
+        x: &Mat,
+        mask: Option<&Mask>,
+        rng: &mut Pcg64,
+    ) -> FeatureState {
+        let n = x.rows();
+        let k = ps.k();
+        let mut z = FeatureState::empty(n);
+        z.add_features(k);
+        if k > 0 {
+            let logit = ps.prior_logit();
+            let inv2s2 = 1.0 / (2.0 * ps.sigma_x * ps.sigma_x);
+            match mask {
+                Some(m) => {
+                    for _ in 0..self.sweeps {
+                        masked_sweep(x, m, &mut z, &ps.a, &logit, inv2s2, rng);
+                    }
+                }
+                None => {
+                    let mut resid = residuals(x, &z, &ps.a, 0..n);
+                    for _ in 0..self.sweeps {
+                        par_sweep_rows(
+                            &mut z, &mut resid, &ps.a, &logit, inv2s2, 0..n, k,
+                            &self.exec, rng,
+                        );
+                    }
+                }
+            }
+        }
+        z
+    }
+
+    /// Posterior-mean denoising reconstruction of fully observed query
+    /// rows: mean over samples of Z_q A.
+    pub fn reconstruct(&self, x: &Mat, seed: u64) -> Mat {
+        assert!(!self.samples.is_empty(), "predict: no posterior samples");
+        let (n, d) = (x.rows(), x.cols());
+        let mut acc = Mat::zeros(n, d);
+        for (s, ps) in self.samples.iter().enumerate() {
+            let mut rng = Self::sample_rng(seed, s);
+            let z = self.infer_z(ps, x, None, &mut rng);
+            for i in 0..n {
+                let row = acc.row_mut(i);
+                for k in 0..ps.k() {
+                    if z.get(i, k) == 1 {
+                        for (t, &v) in row.iter_mut().zip(ps.a.row(k)) {
+                            *t += v;
+                        }
+                    }
+                }
+            }
+        }
+        acc.scale(1.0 / self.samples.len() as f64);
+        acc
+    }
+
+    /// Batched missing-entry imputation: for each sample, infer the query
+    /// rows' z from the *observed* entries only (`masked_sweep`), then
+    /// average the per-sample reconstructions. Observed entries pass
+    /// through unchanged; missing entries get the posterior-mean fill.
+    ///
+    /// The hot loop reuses one scratch matrix through
+    /// [`reconstruct_into`], so averaging S samples costs two allocations
+    /// total instead of 2·S.
+    pub fn impute(&self, x: &Mat, mask: &Mask, seed: u64) -> Mat {
+        assert!(!self.samples.is_empty(), "predict: no posterior samples");
+        let (n, d) = (x.rows(), x.cols());
+        let mut acc = Mat::zeros(n, d);
+        let mut recon = Mat::zeros(n, d); // reused across all S samples
+        for (s, ps) in self.samples.iter().enumerate() {
+            let mut rng = Self::sample_rng(seed, s);
+            let z = self.infer_z(ps, x, Some(mask), &mut rng);
+            reconstruct_into(&mut recon, x, mask, &z, &ps.a);
+            acc.add_assign(&recon);
+        }
+        acc.scale(1.0 / self.samples.len() as f64);
+        acc
+    }
+
+    /// Held-out predictive joint log-likelihood per query row:
+    /// `log (1/S) Σ_s P(x_i | z_i^s, A^s, σ^s) P(z_i^s | π^s)` with z_i^s
+    /// inferred per sample from the full row.
+    pub fn heldout_loglik(&self, x: &Mat, seed: u64) -> HeldoutPredict {
+        assert!(!self.samples.is_empty(), "predict: no posterior samples");
+        let n = x.rows();
+        let mut per_sample: Vec<Vec<f64>> = Vec::with_capacity(self.samples.len());
+        for (s, ps) in self.samples.iter().enumerate() {
+            let mut rng = Self::sample_rng(seed, s);
+            let z = self.infer_z(ps, x, None, &mut rng);
+            let lg = LinGauss::new(ps.sigma_x, ps.sigma_a);
+            let mut rows = Vec::with_capacity(n);
+            for i in 0..n {
+                let zr = z.row_f64(i);
+                let mut ll = lg.row_loglik(x.row(i), &zr, &ps.a);
+                for (k, &p) in ps.pi.iter().enumerate() {
+                    let p = p.clamp(1e-12, 1.0 - 1e-12);
+                    ll += if z.get(i, k) == 1 { p.ln() } else { (1.0 - p).ln() };
+                }
+                rows.push(ll);
+            }
+            per_sample.push(rows);
+        }
+        let mut per_row = Vec::with_capacity(n);
+        let mut vals = vec![0.0f64; per_sample.len()];
+        for i in 0..n {
+            for (s, rows) in per_sample.iter().enumerate() {
+                vals[s] = rows[i];
+            }
+            per_row.push(log_mean_exp(&vals));
+        }
+        let total = per_row.iter().sum();
+        HeldoutPredict { per_row, total }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::missing::missing_mse;
+
+    fn mk_sample(iter: u64) -> PosteriorSample {
+        PosteriorSample {
+            iter,
+            z: FeatureState::empty(1),
+            a: Mat::zeros(0, 1),
+            pi: vec![],
+            sigma_x: 0.5,
+            sigma_a: 1.0,
+            alpha: 1.0,
+        }
+    }
+
+    /// Planted model + S jittered posterior samples around it.
+    fn planted(n: usize, k: usize, d: usize, s_count: usize, seed: u64)
+               -> (Mat, Vec<PosteriorSample>) {
+        let mut rng = Pcg64::new(seed);
+        let mut z = FeatureState::empty(n);
+        z.add_features(k);
+        for i in 0..n {
+            for j in 0..k {
+                if rng.bernoulli(0.5) {
+                    z.set(i, j, 1);
+                }
+            }
+        }
+        let a = Mat::from_fn(k, d, |_, _| 2.0 * rng.normal());
+        let mut x = z.to_mat().matmul(&a);
+        for v in x.as_mut_slice().iter_mut() {
+            *v += 0.1 * rng.normal();
+        }
+        let samples = (0..s_count)
+            .map(|s| {
+                let mut a_s = a.clone();
+                for v in a_s.as_mut_slice().iter_mut() {
+                    *v += 0.02 * rng.normal();
+                }
+                PosteriorSample {
+                    iter: s as u64 + 1,
+                    z: z.clone(),
+                    a: a_s,
+                    pi: vec![0.5; k],
+                    sigma_x: 0.15,
+                    sigma_a: 1.0,
+                    alpha: 1.0,
+                }
+            })
+            .collect();
+        (x, samples)
+    }
+
+    #[test]
+    fn reservoir_thins_deterministically_and_never_exceeds_capacity() {
+        let mut r = SampleReservoir::new(4);
+        for iter in 1..=20u64 {
+            if r.wants(iter) {
+                r.record(mk_sample(iter));
+            }
+            assert!(r.len() <= 4, "capacity exceeded at iter {iter}");
+        }
+        // cap 4, iters 1..=20: stride doubles 1→2→4→8; survivors are the
+        // multiples of 8 seen so far
+        assert_eq!(r.stride(), 8);
+        let kept: Vec<u64> = r.samples().iter().map(|s| s.iter).collect();
+        assert_eq!(kept, vec![8, 16]);
+    }
+
+    #[test]
+    fn set_capacity_shrinks_grows_and_disables() {
+        let mut r = SampleReservoir::new(8);
+        for iter in 1..=8u64 {
+            if r.wants(iter) {
+                r.record(mk_sample(iter));
+            }
+        }
+        assert_eq!(r.len(), 8);
+        // shrink: thins with the same doubling rule
+        r.set_capacity(3);
+        assert!(r.len() <= 3, "len {} after shrink", r.len());
+        let kept: Vec<u64> = r.samples().iter().map(|s| s.iter).collect();
+        assert_eq!(kept, vec![4, 8]); // stride doubled 1→2→4
+        assert_eq!(r.stride(), 4);
+        // grow: keeps everything, future recording resumes
+        r.set_capacity(4);
+        if r.wants(12) {
+            r.record(mk_sample(12));
+        }
+        assert_eq!(r.len(), 3);
+        // disable: keeps the collected samples but records no more
+        r.set_capacity(0);
+        assert!(!r.wants(16));
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn reservoir_zero_capacity_records_nothing() {
+        let mut r = SampleReservoir::new(0);
+        for iter in 1..=10u64 {
+            assert!(!r.wants(iter));
+            r.record(mk_sample(iter));
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn reservoir_small_capacity_keeps_latest_spacing() {
+        let mut r = SampleReservoir::new(1);
+        for iter in 1..=8u64 {
+            if r.wants(iter) {
+                r.record(mk_sample(iter));
+            }
+        }
+        assert_eq!(r.len(), 1);
+        // stride grows past the horizon; the survivor is a power of two
+        let it = r.samples()[0].iter;
+        assert!(it == 4 || it == 8, "kept iter {it}");
+    }
+
+    #[test]
+    fn impute_is_deterministic_and_thread_invariant() {
+        let (x, samples) = planted(40, 3, 12, 4, 1);
+        let mut mrng = Pcg64::new(2);
+        let mask = Mask::random(40, 12, 0.3, &mut mrng);
+        let e1 = PredictEngine::new(&samples, 3, 1);
+        let e2 = PredictEngine::new(&samples, 3, 4);
+        let r1 = e1.impute(&x, &mask, 7);
+        let r2 = e2.impute(&x, &mask, 7);
+        assert!(r1.max_abs_diff(&r2) == 0.0, "imputation depends on T");
+        // loglik goes through the parallel executor — also T-invariant
+        let l1 = e1.heldout_loglik(&x, 7);
+        let l2 = e2.heldout_loglik(&x, 7);
+        assert_eq!(l1.total.to_bits(), l2.total.to_bits());
+        for (a, b) in l1.per_row.iter().zip(&l2.per_row) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn impute_beats_column_mean_fill() {
+        let (x, samples) = planted(60, 3, 24, 5, 3);
+        let mut mrng = Pcg64::new(4);
+        let mask = Mask::random(60, 24, 0.35, &mut mrng);
+        let engine = PredictEngine::new(&samples, 4, 1);
+        let recon = engine.impute(&x, &mask, 9);
+        let model_mse = missing_mse(&x, &recon, &mask);
+        // baseline: per-column observed mean
+        let mut fill = x.clone();
+        for j in 0..24 {
+            let (mut s, mut c) = (0.0f64, 0.0f64);
+            for i in 0..60 {
+                if mask.observed(i, j) {
+                    s += x[(i, j)];
+                    c += 1.0;
+                }
+            }
+            let mu = s / c.max(1.0);
+            for i in 0..60 {
+                if !mask.observed(i, j) {
+                    fill[(i, j)] = mu;
+                }
+            }
+        }
+        let base_mse = missing_mse(&x, &fill, &mask);
+        assert!(
+            model_mse < 0.5 * base_mse,
+            "posterior imputation {model_mse:.4} vs mean fill {base_mse:.4}"
+        );
+    }
+
+    #[test]
+    fn impute_passes_observed_entries_through() {
+        let (x, samples) = planted(15, 2, 8, 3, 5);
+        let mut mrng = Pcg64::new(6);
+        let mask = Mask::random(15, 8, 0.4, &mut mrng);
+        let engine = PredictEngine::new(&samples, 2, 1);
+        let recon = engine.impute(&x, &mask, 11);
+        for i in 0..15 {
+            for j in 0..8 {
+                if mask.observed(i, j) {
+                    assert_eq!(recon[(i, j)].to_bits(), x[(i, j)].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruct_denoises_toward_truth() {
+        let (x, samples) = planted(50, 3, 16, 4, 8);
+        let engine = PredictEngine::new(&samples, 4, 2);
+        let recon = engine.reconstruct(&x, 13);
+        // reconstruction should be close to the observed matrix (which is
+        // truth + small noise) — much closer than a zero prediction
+        let err = recon.sub(&x).frob2() / x.frob2();
+        assert!(err < 0.25, "relative reconstruction error {err}");
+    }
+
+    #[test]
+    fn heldout_loglik_prefers_matching_rows() {
+        let (x, samples) = planted(30, 3, 16, 3, 10);
+        let engine = PredictEngine::new(&samples, 4, 1);
+        let good = engine.heldout_loglik(&x, 17);
+        // scrambled rows should score much worse
+        let mut rng = Pcg64::new(11);
+        let mut xb = x.clone();
+        for v in xb.as_mut_slice().iter_mut() {
+            *v = 3.0 * rng.normal();
+        }
+        let bad = engine.heldout_loglik(&xb, 17);
+        assert!(good.total > bad.total + 50.0,
+                "good {} vs scrambled {}", good.total, bad.total);
+        assert_eq!(good.per_row.len(), 30);
+        assert!(good.per_row.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn log_mean_exp_basics() {
+        let v = log_mean_exp(&[0.0, 0.0, 0.0]);
+        assert!(v.abs() < 1e-12);
+        // dominated by the max term
+        let v = log_mean_exp(&[-1000.0, 0.0]);
+        assert!((v - (0.5f64).ln()).abs() < 1e-9);
+        assert_eq!(log_mean_exp(&[f64::NEG_INFINITY]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn k_zero_samples_are_handled() {
+        let x = Mat::from_fn(8, 4, |i, j| (i + j) as f64 * 0.1);
+        let samples = vec![mk_sample_with_n(1), mk_sample_with_n(2)];
+        let engine = PredictEngine::new(&samples, 2, 1);
+        let mask = Mask::full(8, 4);
+        let recon = engine.impute(&x, &mask, 3);
+        assert!(recon.max_abs_diff(&x) == 0.0); // fully observed ⇒ passthrough
+        let ll = engine.heldout_loglik(&x, 3);
+        assert!(ll.total.is_finite());
+    }
+
+    fn mk_sample_with_n(iter: u64) -> PosteriorSample {
+        PosteriorSample {
+            iter,
+            z: FeatureState::empty(8),
+            a: Mat::zeros(0, 4),
+            pi: vec![],
+            sigma_x: 0.5,
+            sigma_a: 1.0,
+            alpha: 1.0,
+        }
+    }
+}

@@ -1,0 +1,714 @@
+//! Durable sampler state: a versioned, dependency-free binary checkpoint
+//! format for the hybrid coordinator.
+//!
+//! A [`Checkpoint`] captures *everything* a run's future depends on —
+//! master RNG + globals + pending structural instruction, every worker's
+//! RNG stream / Z bits / pending tail, the held-out evaluator's warm
+//! state and its RNG, the convergence trace, and the posterior-sample
+//! reservoir (`crate::serve`) — so a chain interrupted at iteration t and
+//! resumed is **bit-identical** to one that never stopped, for every
+//! (P, T) combination. The per-block sweep substreams from
+//! `crate::parallel` need no snapshot of their own: they are derived
+//! fresh from the worker stream at each sweep call, so capturing the
+//! worker stream state captures them (see docs/ARCHITECTURE.md
+//! §Durable state & serving for the layout table).
+//!
+//! ## File format
+//!
+//! Little-endian throughout, built on the same `Writer`/`Reader`
+//! primitives as the coordinator wire format (`coordinator::messages`):
+//!
+//! ```text
+//! magic "PIBPSNAP" (8) | version u32 | config fingerprint u64
+//! | config text (canonical key=value lines)
+//! | coordinator snapshot (iter, master, P workers)
+//! | eval RNG | eval Z_test bits | trace | sample reservoir | wall_s f64
+//! | FNV-1a 64 checksum over every preceding byte
+//! ```
+//!
+//! Unlike the in-process wire format, files outlive binaries, so this
+//! format *is* versioned: a magic mismatch, version mismatch, checksum
+//! mismatch (corruption / truncation) each fail with a distinct, clear
+//! error. Writes are atomic (temp file + rename), so a crash mid-write
+//! never destroys the previous good checkpoint.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::messages::{Reader, Writer};
+use crate::linalg::Mat;
+use crate::metrics::{Trace, TracePoint};
+use crate::model::state::FeatureState;
+use crate::rng::PcgState;
+use crate::serve::{PosteriorSample, SampleReservoir};
+
+/// File magic: identifies a pibp checkpoint regardless of version.
+pub const MAGIC: [u8; 8] = *b"PIBPSNAP";
+/// Current format version. Bump on any layout change; `load` rejects
+/// other versions with a clear message rather than misreading bytes.
+pub const VERSION: u32 = 1;
+
+/// FNV-1a 64-bit hash — used both as the file checksum and as the
+/// `RunConfig` chain fingerprint. Tiny, dependency-free, and stable
+/// across platforms (pure integer arithmetic).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// field codecs
+// ---------------------------------------------------------------------
+
+fn write_rng(w: &mut Writer, st: &PcgState) {
+    w.u128(st.state);
+    w.u128(st.inc);
+    match st.spare_normal {
+        Some(v) => {
+            w.u32(1);
+            w.f64(v);
+        }
+        None => w.u32(0),
+    }
+}
+
+fn read_rng(r: &mut Reader) -> Result<PcgState> {
+    let state = r.u128()?;
+    let inc = r.u128()?;
+    if inc & 1 == 0 {
+        bail!("rng snapshot: PCG increment must be odd (corrupt stream state)");
+    }
+    let spare_normal = if r.u32()? == 1 { Some(r.f64()?) } else { None };
+    Ok(PcgState { state, inc, spare_normal })
+}
+
+fn write_opt_bits(w: &mut Writer, st: &Option<FeatureState>) {
+    match st {
+        Some(t) => {
+            w.u32(1);
+            w.bits(t);
+        }
+        None => w.u32(0),
+    }
+}
+
+fn read_opt_bits(r: &mut Reader) -> Result<Option<FeatureState>> {
+    Ok(if r.u32()? == 1 { Some(r.bits()?) } else { None })
+}
+
+fn write_u32s(w: &mut Writer, xs: &[u32]) {
+    w.u32(xs.len() as u32);
+    for &x in xs {
+        w.u32(x);
+    }
+}
+
+fn read_u32s(r: &mut Reader) -> Result<Vec<u32>> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.u32()?);
+    }
+    Ok(out)
+}
+
+fn write_f64s(w: &mut Writer, xs: &[f64]) {
+    w.u32(xs.len() as u32);
+    for &x in xs {
+        w.f64(x);
+    }
+}
+
+fn read_f64s(r: &mut Reader) -> Result<Vec<f64>> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.f64()?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// snapshot types
+// ---------------------------------------------------------------------
+
+/// One worker's complete chain state: its RNG stream (which also derives
+/// every per-block sweep substream), shard-local Z bits, and the tail
+/// bits pending promotion (p′ only). Captured via `ToWorker::GetState`,
+/// installed via `ToWorker::SetState`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerSnapshot {
+    pub id: u32,
+    pub rng: PcgState,
+    pub z: FeatureState,
+    pub last_tail: Option<FeatureState>,
+}
+
+impl WorkerSnapshot {
+    pub fn encode_into(&self, w: &mut Writer) {
+        w.u32(self.id);
+        write_rng(w, &self.rng);
+        w.bits(&self.z);
+        write_opt_bits(w, &self.last_tail);
+    }
+
+    pub fn decode_from(r: &mut Reader) -> Result<Self> {
+        Ok(Self {
+            id: r.u32()?,
+            rng: read_rng(r)?,
+            z: r.bits()?,
+            last_tail: read_opt_bits(r)?,
+        })
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.encode_into(&mut w);
+        w.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let ws = Self::decode_from(&mut r)?;
+        if !r.done() {
+            bail!("trailing bytes in WorkerSnapshot");
+        }
+        Ok(ws)
+    }
+}
+
+/// The master's chain state: RNG, global parameters, the structural
+/// instruction pending for the next broadcast, and the virtual clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MasterSnapshot {
+    pub rng: PcgState,
+    pub a: Mat,
+    pub pi: Vec<f64>,
+    pub sigma_x: f64,
+    pub sigma_a: f64,
+    pub alpha: f64,
+    pub next_keep: Vec<u32>,
+    pub next_k_star: u32,
+    pub next_tail_owner: u32,
+    pub next_demote: Vec<u32>,
+    pub pending_tail_bits: Option<FeatureState>,
+    pub p_prime: u32,
+    pub m_global: Vec<u64>,
+    pub clock_elapsed_s: f64,
+    pub clock_iterations: u64,
+    pub clock_comm_bytes: u64,
+}
+
+impl MasterSnapshot {
+    fn encode_into(&self, w: &mut Writer) {
+        write_rng(w, &self.rng);
+        w.mat(&self.a);
+        write_f64s(w, &self.pi);
+        w.f64(self.sigma_x);
+        w.f64(self.sigma_a);
+        w.f64(self.alpha);
+        write_u32s(w, &self.next_keep);
+        w.u32(self.next_k_star);
+        w.u32(self.next_tail_owner);
+        write_u32s(w, &self.next_demote);
+        write_opt_bits(w, &self.pending_tail_bits);
+        w.u32(self.p_prime);
+        w.u32(self.m_global.len() as u32);
+        for &m in &self.m_global {
+            w.u64(m);
+        }
+        w.f64(self.clock_elapsed_s);
+        w.u64(self.clock_iterations);
+        w.u64(self.clock_comm_bytes);
+    }
+
+    fn decode_from(r: &mut Reader) -> Result<Self> {
+        let rng = read_rng(r)?;
+        let a = r.mat()?;
+        let pi = read_f64s(r)?;
+        let sigma_x = r.f64()?;
+        let sigma_a = r.f64()?;
+        let alpha = r.f64()?;
+        let next_keep = read_u32s(r)?;
+        let next_k_star = r.u32()?;
+        let next_tail_owner = r.u32()?;
+        let next_demote = read_u32s(r)?;
+        let pending_tail_bits = read_opt_bits(r)?;
+        let p_prime = r.u32()?;
+        let nm = r.u32()? as usize;
+        let mut m_global = Vec::with_capacity(nm);
+        for _ in 0..nm {
+            m_global.push(r.u64()?);
+        }
+        Ok(Self {
+            rng,
+            a,
+            pi,
+            sigma_x,
+            sigma_a,
+            alpha,
+            next_keep,
+            next_k_star,
+            next_tail_owner,
+            next_demote,
+            pending_tail_bits,
+            p_prime,
+            m_global,
+            clock_elapsed_s: r.f64()?,
+            clock_iterations: r.u64()?,
+            clock_comm_bytes: r.u64()?,
+        })
+    }
+}
+
+/// Full coordinator state at an iteration boundary: the master plus all P
+/// workers. `iter` counts completed global iterations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoordinatorSnapshot {
+    pub iter: u64,
+    pub master: MasterSnapshot,
+    pub workers: Vec<WorkerSnapshot>,
+}
+
+impl CoordinatorSnapshot {
+    fn encode_into(&self, w: &mut Writer) {
+        w.u64(self.iter);
+        self.master.encode_into(w);
+        w.u32(self.workers.len() as u32);
+        for ws in &self.workers {
+            ws.encode_into(w);
+        }
+    }
+
+    fn decode_from(r: &mut Reader) -> Result<Self> {
+        let iter = r.u64()?;
+        let master = MasterSnapshot::decode_from(r)?;
+        let np = r.u32()? as usize;
+        let mut workers = Vec::with_capacity(np);
+        for _ in 0..np {
+            workers.push(WorkerSnapshot::decode_from(r)?);
+        }
+        Ok(Self { iter, master, workers })
+    }
+}
+
+fn write_trace(w: &mut Writer, t: &Trace) {
+    w.str(&t.label);
+    let (stride, seen) = t.thinning();
+    w.u64(stride as u64);
+    w.u64(seen as u64);
+    w.u32(t.points.len() as u32);
+    for p in &t.points {
+        w.u64(p.iter as u64);
+        w.f64(p.vtime_s);
+        w.f64(p.wall_s);
+        w.f64(p.heldout);
+        w.u64(p.k as u64);
+        w.f64(p.sigma_x);
+        w.f64(p.alpha);
+    }
+}
+
+fn read_trace(r: &mut Reader) -> Result<Trace> {
+    let label = r.str()?;
+    let stride = r.u64()? as usize;
+    let seen = r.u64()? as usize;
+    let npoints = r.u32()? as usize;
+    let mut t = Trace::new(label);
+    let mut points = Vec::with_capacity(npoints);
+    for _ in 0..npoints {
+        points.push(TracePoint {
+            iter: r.u64()? as usize,
+            vtime_s: r.f64()?,
+            wall_s: r.f64()?,
+            heldout: r.f64()?,
+            k: r.u64()? as usize,
+            sigma_x: r.f64()?,
+            alpha: r.f64()?,
+        });
+    }
+    t.points = points;
+    t.restore_thinning(stride, seen);
+    Ok(t)
+}
+
+fn write_sample(w: &mut Writer, s: &PosteriorSample) {
+    w.u64(s.iter);
+    w.bits(&s.z);
+    w.mat(&s.a);
+    write_f64s(w, &s.pi);
+    w.f64(s.sigma_x);
+    w.f64(s.sigma_a);
+    w.f64(s.alpha);
+}
+
+fn read_sample(r: &mut Reader) -> Result<PosteriorSample> {
+    Ok(PosteriorSample {
+        iter: r.u64()?,
+        z: r.bits()?,
+        a: r.mat()?,
+        pi: read_f64s(r)?,
+        sigma_x: r.f64()?,
+        sigma_a: r.f64()?,
+        alpha: r.f64()?,
+    })
+}
+
+fn write_reservoir(w: &mut Writer, res: &SampleReservoir) {
+    w.u64(res.capacity() as u64);
+    w.u64(res.stride());
+    w.u32(res.samples().len() as u32);
+    for s in res.samples() {
+        write_sample(w, s);
+    }
+}
+
+fn read_reservoir(r: &mut Reader) -> Result<SampleReservoir> {
+    let cap = r.u64()? as usize;
+    let stride = r.u64()?.max(1);
+    let n = r.u32()? as usize;
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        samples.push(read_sample(r)?);
+    }
+    Ok(SampleReservoir::from_parts(cap, stride, samples))
+}
+
+// ---------------------------------------------------------------------
+// the checkpoint file
+// ---------------------------------------------------------------------
+
+/// Everything `pibp resume` / `pibp predict` need, in one atomic file.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Chain fingerprint of the `RunConfig` that produced this state
+    /// (`RunConfig::fingerprint`); resume refuses to continue under a
+    /// configuration whose fingerprint differs.
+    pub fingerprint: u64,
+    /// Canonical `key=value` lines of the full `RunConfig`
+    /// (`RunConfig::canonical`) — resume reconstructs the config from
+    /// this, so no external config file is needed.
+    pub config_text: String,
+    pub coord: CoordinatorSnapshot,
+    /// Held-out evaluator stream (`root.split(7777)`).
+    pub eval_rng: PcgState,
+    /// The evaluator's warm-started held-out Z.
+    pub z_test: FeatureState,
+    pub trace: Trace,
+    /// Thinned posterior samples accumulated so far (`crate::serve`).
+    pub reservoir: SampleReservoir,
+    /// Accumulated wall-clock seconds across all segments of the run.
+    pub wall_s: f64,
+}
+
+/// Borrowing view of checkpoint state for the *writer* path: the live
+/// run serialises its trace / reservoir / evaluator state in place,
+/// without deep-cloning them into an owned [`Checkpoint`] first (which
+/// would transiently double the serialised-state footprint on every
+/// checkpoint write). [`Checkpoint`] remains the owned decode target.
+pub struct CheckpointRef<'a> {
+    pub fingerprint: u64,
+    pub config_text: &'a str,
+    pub coord: &'a CoordinatorSnapshot,
+    pub eval_rng: &'a PcgState,
+    pub z_test: &'a FeatureState,
+    pub trace: &'a Trace,
+    pub reservoir: &'a SampleReservoir,
+    pub wall_s: f64,
+}
+
+impl CheckpointRef<'_> {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.buf.extend_from_slice(&MAGIC);
+        w.u32(VERSION);
+        w.u64(self.fingerprint);
+        w.str(self.config_text);
+        self.coord.encode_into(&mut w);
+        write_rng(&mut w, self.eval_rng);
+        w.bits(self.z_test);
+        write_trace(&mut w, self.trace);
+        write_reservoir(&mut w, self.reservoir);
+        w.f64(self.wall_s);
+        let sum = fnv1a(&w.buf);
+        w.u64(sum);
+        w.buf
+    }
+
+    /// Atomic write: encode, write to a `.pibp.tmp` sibling, rename over
+    /// `path` — a crash mid-write never clobbers the previous good
+    /// checkpoint.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let bytes = self.encode();
+        let tmp = path.with_extension("pibp.tmp");
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} → {}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+}
+
+impl Checkpoint {
+    fn as_ref(&self) -> CheckpointRef<'_> {
+        CheckpointRef {
+            fingerprint: self.fingerprint,
+            config_text: &self.config_text,
+            coord: &self.coord,
+            eval_rng: &self.eval_rng,
+            z_test: &self.z_test,
+            trace: &self.trace,
+            reservoir: &self.reservoir,
+            wall_s: self.wall_s,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        self.as_ref().encode()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        if buf.len() < MAGIC.len() + 4 + 8 {
+            bail!("checkpoint is truncated: {} bytes is too short for a header", buf.len());
+        }
+        if buf[..MAGIC.len()] != MAGIC {
+            bail!("not a pibp checkpoint (bad magic; expected \"PIBPSNAP\")");
+        }
+        let version =
+            u32::from_le_bytes(buf[MAGIC.len()..MAGIC.len() + 4].try_into().unwrap());
+        if version != VERSION {
+            bail!(
+                "checkpoint format version {version} is not supported by this \
+                 build (reads version {VERSION}); re-create the checkpoint or \
+                 use a matching pibp binary"
+            );
+        }
+        let body_end = buf.len() - 8;
+        let stored = u64::from_le_bytes(buf[body_end..].try_into().unwrap());
+        let computed = fnv1a(&buf[..body_end]);
+        if stored != computed {
+            bail!(
+                "checkpoint is corrupt: checksum mismatch (stored \
+                 {stored:#018x}, computed {computed:#018x}) — the file was \
+                 truncated or altered after writing"
+            );
+        }
+        let mut r = Reader::new(&buf[MAGIC.len() + 4..body_end]);
+        let fingerprint = r.u64()?;
+        let config_text = r.str()?;
+        let coord = CoordinatorSnapshot::decode_from(&mut r)?;
+        let eval_rng = read_rng(&mut r)?;
+        let z_test = r.bits()?;
+        let trace = read_trace(&mut r)?;
+        let reservoir = read_reservoir(&mut r)?;
+        let wall_s = r.f64()?;
+        if !r.done() {
+            bail!("trailing bytes in checkpoint body");
+        }
+        Ok(Self {
+            fingerprint,
+            config_text,
+            coord,
+            eval_rng,
+            z_test,
+            trace,
+            reservoir,
+            wall_s,
+        })
+    }
+
+    /// Atomic write (see [`CheckpointRef::save`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.as_ref().save(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::decode(&buf)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn bits(n: usize, k: usize, seed: u64) -> FeatureState {
+        let mut rng = Pcg64::new(seed);
+        let mut st = FeatureState::empty(n);
+        st.add_features(k);
+        for i in 0..n {
+            for j in 0..k {
+                if rng.bernoulli(0.35) {
+                    st.set(i, j, 1);
+                }
+            }
+        }
+        st
+    }
+
+    fn sample(iter: u64, seed: u64) -> PosteriorSample {
+        let mut rng = Pcg64::new(seed);
+        PosteriorSample {
+            iter,
+            z: bits(11, 3, seed),
+            a: Mat::from_fn(3, 5, |_, _| rng.normal()),
+            pi: vec![0.2, 0.5, 0.9],
+            sigma_x: 0.4,
+            sigma_a: 1.1,
+            alpha: 2.5,
+        }
+    }
+
+    fn checkpoint() -> Checkpoint {
+        let mut rng = Pcg64::new(3).split(9);
+        rng.normal(); // leave a spare normal cached in some streams
+        let mut trace = Trace::new("hybrid-p2");
+        trace.push(TracePoint {
+            iter: 1,
+            vtime_s: 0.25,
+            wall_s: 0.5,
+            heldout: -120.5,
+            k: 3,
+            sigma_x: 0.45,
+            alpha: 1.5,
+        });
+        let workers = (0..2)
+            .map(|p| WorkerSnapshot {
+                id: p as u32,
+                rng: Pcg64::new(3).split(1000 + p).export_state(),
+                z: bits(7, 4, 20 + p),
+                last_tail: if p == 1 { Some(bits(7, 2, 30)) } else { None },
+            })
+            .collect();
+        Checkpoint {
+            fingerprint: 0xdead_beef_cafe_f00d,
+            config_text: "dataset=cambridge\nn=14\nseed=3\n".into(),
+            coord: CoordinatorSnapshot {
+                iter: 6,
+                master: MasterSnapshot {
+                    rng: rng.export_state(),
+                    a: Mat::from_fn(4, 5, |i, j| i as f64 * 0.5 - j as f64),
+                    pi: vec![0.1, 0.4, 0.6, 0.95],
+                    sigma_x: 0.5,
+                    sigma_a: 1.0,
+                    alpha: 1.25,
+                    next_keep: vec![0, 2, 3],
+                    next_k_star: 1,
+                    next_tail_owner: 1,
+                    next_demote: vec![1],
+                    pending_tail_bits: Some(bits(7, 1, 40)),
+                    p_prime: 0,
+                    m_global: vec![5, 3, 2, 1],
+                    clock_elapsed_s: 1.75,
+                    clock_iterations: 6,
+                    clock_comm_bytes: 12345,
+                },
+                workers,
+            },
+            eval_rng: Pcg64::new(3).split(7777).export_state(),
+            z_test: bits(5, 4, 50),
+            trace,
+            reservoir: SampleReservoir::from_parts(
+                4,
+                2,
+                vec![sample(2, 60), sample(4, 61)],
+            ),
+            wall_s: 3.125,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let ck = checkpoint();
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(back.fingerprint, ck.fingerprint);
+        assert_eq!(back.config_text, ck.config_text);
+        assert_eq!(back.coord, ck.coord);
+        assert_eq!(back.eval_rng, ck.eval_rng);
+        assert_eq!(back.z_test, ck.z_test);
+        assert_eq!(back.trace.label, ck.trace.label);
+        assert_eq!(back.trace.points, ck.trace.points);
+        assert_eq!(back.trace.thinning(), ck.trace.thinning());
+        assert_eq!(back.reservoir, ck.reservoir);
+        assert_eq!(back.wall_s.to_bits(), ck.wall_s.to_bits());
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("pibp_snapshot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.pibp");
+        let ck = checkpoint();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.coord, ck.coord);
+        assert_eq!(back.reservoir, ck.reservoir);
+        // and the restored RNG stream really continues the original
+        let mut orig = Pcg64::from_state(ck.coord.master.rng);
+        let mut rest = Pcg64::from_state(back.coord.master.rng);
+        for _ in 0..32 {
+            assert_eq!(orig.next_u64(), rest.next_u64());
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_checksum_and_truncation_rejected() {
+        let ck = checkpoint();
+        let enc = ck.encode();
+
+        // magic
+        let mut bad = enc.clone();
+        bad[0] = b'X';
+        let e = Checkpoint::decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("not a pibp checkpoint"), "{e}");
+
+        // version
+        let mut bad = enc.clone();
+        bad[8] = 99;
+        let e = Checkpoint::decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("version 99"), "{e}");
+
+        // flipped payload byte ⇒ checksum
+        let mut bad = enc.clone();
+        let mid = enc.len() / 2;
+        bad[mid] ^= 0x40;
+        let e = Checkpoint::decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("corrupt"), "{e}");
+
+        // truncation at several depths
+        for cut in [0usize, 7, 13, enc.len() / 2, enc.len() - 1] {
+            let e = Checkpoint::decode(&enc[..cut]).unwrap_err().to_string();
+            assert!(
+                e.contains("truncated") || e.contains("corrupt") || e.contains("magic"),
+                "cut={cut}: {e}"
+            );
+        }
+
+        // trailing garbage also breaks the checksum
+        let mut bad = enc.clone();
+        bad.push(0);
+        assert!(Checkpoint::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+}

@@ -1,0 +1,312 @@
+//! Durable-state exactness: a chain checkpointed at iteration t and
+//! resumed must be **bit-identical** to one that never stopped — for
+//! every (P, T) in the tested grid — and posterior queries answered from
+//! a checkpoint file must match the same queries answered from the
+//! in-process sample reservoir.
+
+use std::path::{Path, PathBuf};
+
+use pibp::config::{Backend, CommModel, RunConfig, SamplerKind};
+use pibp::coordinator::{Coordinator, CoordinatorConfig};
+use pibp::data::cambridge::{generate, CambridgeConfig};
+use pibp::model::missing::{missing_mse, Mask};
+use pibp::model::LinGauss;
+use pibp::rng::Pcg64;
+use pibp::runner;
+use pibp::samplers::SamplerOptions;
+use pibp::serve::PredictEngine;
+use pibp::snapshot::Checkpoint;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pibp_ckpt_it_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn coord_cfg(p: usize, t: usize, seed: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        processors: p,
+        sub_iters: 5,
+        threads_per_worker: t,
+        seed,
+        lg: LinGauss::new(0.5, 1.0),
+        alpha: 1.0,
+        // production options — demotion ON, so the snapshot must carry
+        // the full demote/promote pipeline state
+        opts: SamplerOptions::default(),
+        backend: Backend::Native,
+        artifacts_dir: Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        comm: CommModel::default(),
+    }
+}
+
+/// Coordinator-level: snapshot mid-chain, restore into a *fresh*
+/// coordinator, and require every subsequent iteration (and the gathered
+/// Z) to match the original bit-for-bit across the (P, T) grid.
+#[test]
+fn coordinator_snapshot_restore_is_bit_exact_across_p_t_grid() {
+    let (ds, _) = generate(&CambridgeConfig { n: 160, seed: 5, ..Default::default() });
+    for p in [1usize, 4] {
+        for t in [1usize, 4] {
+            let mut a = Coordinator::new(&ds.x, coord_cfg(p, t, 31)).unwrap();
+            for _ in 0..5 {
+                a.step().unwrap();
+            }
+            let snap = a.snapshot().unwrap();
+            assert_eq!(snap.iter, 5);
+            assert_eq!(snap.workers.len(), p);
+            // original continues
+            let mut pins = Vec::new();
+            for _ in 0..5 {
+                let rec = a.step().unwrap();
+                pins.push((
+                    rec.k,
+                    rec.alpha.to_bits(),
+                    rec.sigma_x.to_bits(),
+                    rec.sigma_a.to_bits(),
+                ));
+            }
+            let z_a = a.gather_z().unwrap();
+            let pi_a: Vec<u64> = a.params().pi.iter().map(|v| v.to_bits()).collect();
+
+            // fresh coordinator, restored, must replay identically
+            let mut b = Coordinator::new(&ds.x, coord_cfg(p, t, 31)).unwrap();
+            b.restore(&snap).unwrap();
+            for (it, pin) in pins.iter().enumerate() {
+                let rec = b.step().unwrap();
+                assert_eq!(
+                    (
+                        rec.k,
+                        rec.alpha.to_bits(),
+                        rec.sigma_x.to_bits(),
+                        rec.sigma_a.to_bits()
+                    ),
+                    *pin,
+                    "P={p} T={t}: iteration {it} after restore diverged"
+                );
+            }
+            let z_b = b.gather_z().unwrap();
+            assert_eq!(z_a, z_b, "P={p} T={t}: gathered Z diverged after restore");
+            let pi_b: Vec<u64> = b.params().pi.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(pi_a, pi_b, "P={p} T={t}: π diverged after restore");
+            assert!(
+                a.params().a.max_abs_diff(&b.params().a) == 0.0,
+                "P={p} T={t}: loadings A diverged after restore"
+            );
+            assert!(z_a.k() > 0, "P={p} T={t}: chain never instantiated a feature");
+        }
+    }
+}
+
+/// Restoring a snapshot into a coordinator with a different processor
+/// count must be rejected, not silently mangled.
+#[test]
+fn restore_rejects_mismatched_processor_count() {
+    let (ds, _) = generate(&CambridgeConfig { n: 60, seed: 2, ..Default::default() });
+    let mut a = Coordinator::new(&ds.x, coord_cfg(2, 1, 3)).unwrap();
+    a.step().unwrap();
+    let snap = a.snapshot().unwrap();
+    let mut b = Coordinator::new(&ds.x, coord_cfg(3, 1, 3)).unwrap();
+    let err = b.restore(&snap).unwrap_err().to_string();
+    assert!(err.contains("workers"), "unexpected error: {err}");
+}
+
+fn run_cfg(p: usize, t: usize, dir: &Path) -> RunConfig {
+    RunConfig {
+        n: 120,
+        iters: 10,
+        eval_every: 3,
+        sampler: SamplerKind::Hybrid,
+        processors: p,
+        threads_per_worker: t,
+        seed: 41,
+        keep_samples: 16,
+        out_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+}
+
+/// Full-stack acceptance: run 10 iterations uninterrupted; run 5
+/// iterations with checkpointing, then `runner::resume` to 10 from the
+/// file. α / σ / π / A / Z (via the per-iteration reservoir samples) and
+/// the held-out trace must agree bit-for-bit, for every (P, T).
+#[test]
+fn resume_from_file_matches_uninterrupted_run_across_p_t_grid() {
+    for p in [1usize, 4] {
+        for t in [1usize, 4] {
+            let dir = tmp_dir(&format!("resume_{p}_{t}"));
+            let ckpt = dir.join("state.pibp");
+
+            // uninterrupted reference (no checkpointing at all)
+            let full = runner::run(&run_cfg(p, t, &dir), |_| {}).unwrap();
+
+            // interrupted segment: same chain, stop at 5, checkpoint at 5
+            let mut part_cfg = run_cfg(p, t, &dir);
+            part_cfg.iters = 5;
+            part_cfg.checkpoint_every = 5;
+            part_cfg.checkpoint_path = ckpt.to_string_lossy().into_owned();
+            runner::run(&part_cfg, |_| {}).unwrap();
+
+            // resume to the full horizon from the file
+            let overrides = vec![("iters".to_string(), "10".to_string())];
+            let (_, resumed) = runner::resume(&ckpt, &overrides, |_| {}).unwrap();
+
+            // ---- final global parameters, bit-level ----
+            let (fa, ra) = (&full.final_params, &resumed.final_params);
+            assert_eq!(fa.k(), ra.k(), "P={p} T={t}: K diverged");
+            assert_eq!(
+                fa.alpha.to_bits(),
+                ra.alpha.to_bits(),
+                "P={p} T={t}: alpha diverged"
+            );
+            assert_eq!(
+                fa.lg.sigma_x.to_bits(),
+                ra.lg.sigma_x.to_bits(),
+                "P={p} T={t}: sigma_x diverged"
+            );
+            assert_eq!(
+                fa.lg.sigma_a.to_bits(),
+                ra.lg.sigma_a.to_bits(),
+                "P={p} T={t}: sigma_a diverged"
+            );
+            let pi_f: Vec<u64> = fa.pi.iter().map(|v| v.to_bits()).collect();
+            let pi_r: Vec<u64> = ra.pi.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(pi_f, pi_r, "P={p} T={t}: π diverged");
+            assert!(
+                fa.a.max_abs_diff(&ra.a) == 0.0,
+                "P={p} T={t}: loadings A diverged"
+            );
+
+            // ---- Z at every recorded iteration, via reservoir samples ----
+            assert_eq!(
+                full.reservoir.samples().len(),
+                resumed.reservoir.samples().len(),
+                "P={p} T={t}: reservoir sizes diverged"
+            );
+            for (sf, sr) in full
+                .reservoir
+                .samples()
+                .iter()
+                .zip(resumed.reservoir.samples())
+            {
+                assert_eq!(sf.iter, sr.iter, "P={p} T={t}: sample iters diverged");
+                assert_eq!(sf.z, sr.z, "P={p} T={t}: Z at iter {} diverged", sf.iter);
+                assert!(
+                    sf.a.max_abs_diff(&sr.a) == 0.0,
+                    "P={p} T={t}: sample A at iter {} diverged",
+                    sf.iter
+                );
+                assert_eq!(
+                    sf.sigma_x.to_bits(),
+                    sr.sigma_x.to_bits(),
+                    "P={p} T={t}: sample σx diverged"
+                );
+            }
+            assert!(full.final_k > 0, "P={p} T={t}: chain never grew a feature");
+
+            // ---- held-out trace: chain columns including the evaluated
+            //      metric (the eval RNG stream is checkpointed too) ----
+            assert_eq!(
+                full.trace.points.len(),
+                resumed.trace.points.len(),
+                "P={p} T={t}: trace lengths diverged"
+            );
+            for (pf, pr) in full.trace.points.iter().zip(&resumed.trace.points) {
+                assert_eq!(pf.iter, pr.iter, "P={p} T={t}: trace iters diverged");
+                assert_eq!(pf.k, pr.k, "P={p} T={t}: trace K diverged");
+                assert_eq!(
+                    pf.heldout.to_bits(),
+                    pr.heldout.to_bits(),
+                    "P={p} T={t}: held-out metric at iter {} diverged",
+                    pf.iter
+                );
+                assert_eq!(pf.sigma_x.to_bits(), pr.sigma_x.to_bits());
+                assert_eq!(pf.alpha.to_bits(), pr.alpha.to_bits());
+            }
+        }
+    }
+}
+
+/// Resuming under a configuration that changes the chain must be refused.
+#[test]
+fn resume_rejects_chain_relevant_overrides() {
+    let dir = tmp_dir("reject");
+    let ckpt = dir.join("reject.pibp");
+    let mut cfg = run_cfg(1, 1, &dir);
+    cfg.iters = 4;
+    cfg.checkpoint_every = 2;
+    cfg.checkpoint_path = ckpt.to_string_lossy().into_owned();
+    runner::run(&cfg, |_| {}).unwrap();
+
+    // chain-relevant override → fingerprint mismatch
+    let bad = vec![
+        ("iters".to_string(), "8".to_string()),
+        ("seed".to_string(), "999".to_string()),
+    ];
+    let err = runner::resume(&ckpt, &bad, |_| {}).unwrap_err().to_string();
+    assert!(err.contains("fingerprint"), "unexpected error: {err}");
+
+    // already past the horizon → clear refusal
+    let noop = vec![("iters".to_string(), "3".to_string())];
+    let err = runner::resume(&ckpt, &noop, |_| {}).unwrap_err().to_string();
+    assert!(err.contains("already"), "unexpected error: {err}");
+
+    // benign overrides (threads) are fine
+    let ok = vec![
+        ("iters".to_string(), "6".to_string()),
+        ("threads_per_worker".to_string(), "2".to_string()),
+    ];
+    runner::resume(&ckpt, &ok, |_| {}).unwrap();
+}
+
+/// Acceptance: `pibp predict`-style queries answered from a *loaded*
+/// checkpoint must match the same queries answered from the in-process
+/// reservoir of the run that wrote it — including the imputation MSE —
+/// and must be invariant to the predict thread count.
+#[test]
+fn predict_from_checkpoint_matches_in_process_computation() {
+    let dir = tmp_dir("predict");
+    let ckpt_path = dir.join("predict.pibp");
+    let mut cfg = run_cfg(2, 1, &dir);
+    cfg.iters = 8;
+    cfg.keep_samples = 6;
+    cfg.checkpoint_every = 4;
+    cfg.checkpoint_path = ckpt_path.to_string_lossy().into_owned();
+    let out = runner::run(&cfg, |_| {}).unwrap();
+    assert!(!out.reservoir.is_empty(), "run kept no samples");
+
+    let ck = Checkpoint::load(&ckpt_path).unwrap();
+    assert_eq!(
+        ck.reservoir.samples().len(),
+        out.reservoir.samples().len(),
+        "checkpointed reservoir diverged from the in-process one"
+    );
+    for (a, b) in ck.reservoir.samples().iter().zip(out.reservoir.samples()) {
+        assert_eq!(a, b, "sample at iter {} changed through the file", a.iter);
+    }
+
+    // the run's own held-out rows as the query batch
+    let ds = runner::build_dataset(&cfg).unwrap();
+    let (_, test) = ds.split_heldout(cfg.heldout_frac);
+    let q = test.x;
+    let mask = Mask::random(q.rows(), q.cols(), 0.3, &mut Pcg64::new(7).split(4242));
+
+    let in_proc = PredictEngine::new(out.reservoir.samples(), 3, 1);
+    let from_file = PredictEngine::new(ck.reservoir.samples(), 3, 4);
+
+    let r1 = in_proc.impute(&q, &mask, 13);
+    let r2 = from_file.impute(&q, &mask, 13);
+    assert!(r1.max_abs_diff(&r2) == 0.0, "imputation diverged through the file");
+    let mse1 = missing_mse(&q, &r1, &mask);
+    let mse2 = missing_mse(&q, &r2, &mask);
+    assert_eq!(mse1.to_bits(), mse2.to_bits(), "imputation MSE diverged");
+    assert!(mse1.is_finite());
+
+    let l1 = in_proc.heldout_loglik(&q, 13);
+    let l2 = from_file.heldout_loglik(&q, 13);
+    assert_eq!(l1.total.to_bits(), l2.total.to_bits(), "predictive loglik diverged");
+
+    let d1 = in_proc.reconstruct(&q, 13);
+    let d2 = from_file.reconstruct(&q, 13);
+    assert!(d1.max_abs_diff(&d2) == 0.0, "reconstruction diverged");
+}
