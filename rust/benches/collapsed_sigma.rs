@@ -1,0 +1,86 @@
+//! T-S4 — σ-MH proposal cost in the collapsed sampler: the retired
+//! full-recompute path (`z.to_mat()` + `collapsed_loglik` over all N
+//! rows — what `mh_sigmas` paid per proposal, accepted OR rejected)
+//! vs the ratio-reparameterised cache path (`loglik_at_ratio`, which
+//! factorises M′ = ZᵀZ + r′I from cached sufficient statistics and
+//! never touches X or Z). The new path's cost must be independent of N
+//! — that is the machine-checkable claim in `BENCH_collapsed.json`.
+
+use std::hint::black_box;
+use std::time::Duration;
+
+use pibp::bench::{bench, header};
+use pibp::linalg::Mat;
+use pibp::model::state::FeatureState;
+use pibp::model::{CollapsedCache, LinGauss};
+use pibp::rng::Pcg64;
+
+fn problem(n: usize, k: usize, d: usize) -> (Mat, FeatureState) {
+    let mut rng = Pcg64::new(1);
+    let mut z = FeatureState::empty(n);
+    z.add_features(k);
+    for i in 0..n {
+        for j in 0..k {
+            if rng.bernoulli(0.3) {
+                z.set(i, j, 1);
+            }
+        }
+    }
+    let a = Mat::from_fn(k, d, |_, _| rng.normal());
+    let mut x = z.to_mat().matmul(&a);
+    for v in x.as_mut_slice().iter_mut() {
+        *v += 0.5 * rng.normal();
+    }
+    (x, z)
+}
+
+fn main() {
+    let d = 24;
+    println!("## T-S4 — σ-MH proposal cost, old vs ratio-reparameterised (D={d})\n");
+    println!("{}", header());
+    let budget = Duration::from_millis(600);
+    let lg = LinGauss::new(0.5, 1.0);
+    // a realistic σ_X proposal: same Z, different ridge ratio
+    let prop = LinGauss::new(0.55, 1.0);
+
+    let mut entries: Vec<String> = Vec::new();
+    for &(n, k) in &[(500usize, 10usize), (500, 40), (5000, 10), (5000, 40)] {
+        let (x, z) = problem(n, k, d);
+        let cache = CollapsedCache::new(&x, &z.to_mat(), lg.ratio());
+
+        // old path: exactly what mh_sigmas did per proposal — materialise
+        // Z and recompute the collapsed loglik over the full data
+        let r_old = bench(&format!("old     full recompute n={n} k={k}"), 1, budget, 5, || {
+            let zm = z.to_mat();
+            black_box(prop.collapsed_loglik(&x, &zm));
+        });
+        println!("{}", r_old.row());
+
+        // new path: factorise from cached ZᵀZ/G — no N factor
+        let r_new = bench(&format!("ratio   loglik_at_ratio n={n} k={k}"), 1, budget, 5, || {
+            black_box(cache.loglik_at_ratio(&prop).expect("PD").loglik);
+        });
+        println!("{}", r_new.row());
+
+        let old_us = r_old.per_iter.mean * 1e6;
+        let new_us = r_new.per_iter.mean * 1e6;
+        entries.push(format!(
+            "    {{\"n\": {n}, \"k\": {k}, \"old_us\": {old_us:.3}, \
+             \"ratio_us\": {new_us:.3}, \"speedup\": {:.1}}}",
+            old_us / new_us
+        ));
+    }
+
+    // machine-readable datapoint for the perf trajectory: proposal cost
+    // at fixed K must be ~flat in N on the ratio path
+    let json = format!(
+        "{{\n  \"bench\": \"collapsed_sigma\",\n  \"d\": {d},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    match std::fs::write("BENCH_collapsed.json", &json) {
+        Ok(()) => println!("\nσ-MH proposal costs → BENCH_collapsed.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_collapsed.json: {e}"),
+    }
+    println!("(ratio rows should be ~identical across n at fixed k)");
+}

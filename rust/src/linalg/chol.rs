@@ -43,6 +43,12 @@ impl Cholesky {
         &self.l
     }
 
+    /// Consume the factorisation, yielding the lower factor (the seed of
+    /// an updatable [`crate::linalg::UCholesky`]).
+    pub fn into_factor(self) -> Mat {
+        self.l
+    }
+
     /// log |A| = 2 Σ log L_ii.
     pub fn logdet(&self) -> f64 {
         (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0

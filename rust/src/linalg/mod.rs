@@ -2,13 +2,17 @@
 //!
 //! * [`Mat`] — row-major f64 matrix with the ops the samplers need.
 //! * [`Cholesky`] — SPD factorisation, solves, log-determinant.
+//! * [`UCholesky`] — rank-1 up/down-datable lower factor; exact `log|M|`
+//!   for the collapsed cache without summed determinant-lemma drift.
 //! * [`sm_update`] / [`det_lemma_delta`] — Sherman–Morrison rank-1 updates
 //!   that make the collapsed Gibbs sweep O(K²) per bit flip.
 
 mod chol;
 mod matrix;
 mod sherman;
+mod ucholesky;
 
 pub use chol::Cholesky;
 pub use matrix::Mat;
 pub use sherman::{det_lemma_delta, sm_update, symmetrize};
+pub use ucholesky::UCholesky;

@@ -1,0 +1,253 @@
+//! Rank-1 up/down-datable Cholesky factor.
+//!
+//! The collapsed cache keeps `M = ZᵀZ + r·I` in two forms: the
+//! Sherman–Morrison inverse (O(K²) candidate evaluations) and this lower
+//! factor L with `L Lᵀ = M`. The factor gives an **exact** `log|M|`
+//! (2 Σ ln L_ii) after any number of row removals/insertions — unlike a
+//! running sum of matrix-determinant-lemma deltas, whose error compounds
+//! over a long sweep — and it is what [`crate::model::CollapsedCache`]
+//! swaps wholesale when a σ-MH acceptance changes the ridge.
+//!
+//! `update` is the classic Givens-rotation scheme (LINPACK `dchud`);
+//! `downdate` uses hyperbolic rotations (`dchdd`) and reports failure when
+//! the downdated matrix stops being positive definite, the same signal the
+//! Sherman–Morrison denominator gives. Both are O(K²).
+
+use super::chol::Cholesky;
+use super::matrix::Mat;
+
+/// Lower-triangular factor L with `L Lᵀ = M`, maintained under rank-1
+/// updates (`M ± v vᵀ`) without refactorisation.
+#[derive(Clone, Debug)]
+pub struct UCholesky {
+    l: Mat,
+}
+
+impl UCholesky {
+    /// Factorise a symmetric positive-definite matrix (O(K³) seed; all
+    /// subsequent maintenance is O(K²)). `None` if not PD.
+    pub fn factorize(m: &Mat) -> Option<Self> {
+        Cholesky::new(m).map(Self::from_cholesky)
+    }
+
+    /// Adopt an already-computed factorisation.
+    pub fn from_cholesky(ch: Cholesky) -> Self {
+        Self { l: ch.into_factor() }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.l.rows()
+    }
+
+    pub fn factor(&self) -> &Mat {
+        &self.l
+    }
+
+    /// log |M| = 2 Σ ln L_ii — exact for the factor as maintained, no
+    /// accumulated delta terms.
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// L ← chol(L Lᵀ + v vᵀ) via Givens rotations, O(K²). Always succeeds
+    /// for finite inputs (adding v vᵀ keeps M PD); returns `false` only if
+    /// a non-finite pivot appears (caller should refactorise).
+    pub fn update(&mut self, v: &[f64]) -> bool {
+        let n = self.l.rows();
+        debug_assert_eq!(v.len(), n);
+        let mut x = v.to_vec();
+        for k in 0..n {
+            if x[k] == 0.0 {
+                continue; // identity rotation — binary Z rows are sparse
+            }
+            let lkk = self.l[(k, k)];
+            let r = lkk.hypot(x[k]);
+            if !(r > 0.0) || !r.is_finite() {
+                return false;
+            }
+            let c = r / lkk;
+            let s = x[k] / lkk;
+            self.l[(k, k)] = r;
+            for i in k + 1..n {
+                let lik = (self.l[(i, k)] + s * x[i]) / c;
+                x[i] = c * x[i] - s * lik;
+                self.l[(i, k)] = lik;
+            }
+        }
+        true
+    }
+
+    /// L ← chol(L Lᵀ − v vᵀ) via hyperbolic rotations, O(K²). Returns
+    /// `false` if the downdate leaves M non-PD to working precision; the
+    /// factor may then be partially rotated and the caller MUST rebuild
+    /// (the collapsed cache falls back to `refresh`, exactly as it does
+    /// when the Sherman–Morrison denominator goes non-positive).
+    pub fn downdate(&mut self, v: &[f64]) -> bool {
+        let n = self.l.rows();
+        debug_assert_eq!(v.len(), n);
+        let mut x = v.to_vec();
+        for k in 0..n {
+            if x[k] == 0.0 {
+                continue;
+            }
+            let lkk = self.l[(k, k)];
+            let r2 = (lkk - x[k]) * (lkk + x[k]);
+            if !(r2 > 0.0) || !r2.is_finite() {
+                return false;
+            }
+            let r = r2.sqrt();
+            let c = r / lkk;
+            let s = x[k] / lkk;
+            self.l[(k, k)] = r;
+            for i in k + 1..n {
+                let lik = (self.l[(i, k)] - s * x[i]) / c;
+                x[i] = c * x[i] - s * lik;
+                self.l[(i, k)] = lik;
+            }
+        }
+        true
+    }
+
+    /// Append `j` new dimensions decoupled from the existing ones with
+    /// diagonal entry `diag` (i.e. M grows block-diagonally by `diag·I_j`).
+    /// This is exactly what happens when brand-new singleton features are
+    /// added to a cache whose current Z holds them as all-zero columns:
+    /// M′ = [[M, 0], [0, r·I_j]], so L′ = [[L, 0], [0, √r·I_j]]. O(K²).
+    pub fn grow(&mut self, j: usize, diag: f64) {
+        if j == 0 {
+            return;
+        }
+        debug_assert!(diag > 0.0);
+        let k = self.l.rows();
+        let mut l = Mat::zeros(k + j, k + j);
+        l.paste(&self.l);
+        let root = diag.sqrt();
+        for i in k..k + j {
+            l[(i, i)] = root;
+        }
+        self.l = l;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let b = Mat::from_fn(n + 3, n, |_, _| rng.normal());
+        let mut a = b.gram();
+        a.add_diag(0.75);
+        a
+    }
+
+    fn rank1(m: &Mat, v: &[f64], s: f64) -> Mat {
+        let n = m.rows();
+        Mat::from_fn(n, n, |i, j| m[(i, j)] + s * v[i] * v[j])
+    }
+
+    #[test]
+    fn update_matches_refactorisation() {
+        let mut rng = Pcg64::new(1);
+        let a = random_spd(7, 2);
+        let mut uc = UCholesky::factorize(&a).unwrap();
+        let v: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        assert!(uc.update(&v));
+        let fresh = Cholesky::new(&rank1(&a, &v, 1.0)).unwrap();
+        assert!(uc.factor().max_abs_diff(fresh.factor()) < 1e-10);
+        assert!((uc.logdet() - fresh.logdet()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn downdate_matches_refactorisation() {
+        let a = random_spd(6, 3);
+        let mut uc = UCholesky::factorize(&a).unwrap();
+        // a row actually "inside" M so the downdate stays PD
+        let v = vec![0.5, 0.0, 0.5, 0.5, 0.0, 0.5];
+        assert!(uc.downdate(&v));
+        let fresh = Cholesky::new(&rank1(&a, &v, -1.0)).unwrap();
+        assert!(uc.factor().max_abs_diff(fresh.factor()) < 1e-10);
+        assert!((uc.logdet() - fresh.logdet()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn downdate_update_roundtrips() {
+        let a = random_spd(5, 4);
+        let v = vec![1.0, 0.0, 1.0, 1.0, 0.0]; // binary like a Z row
+        let uc0 = UCholesky::factorize(&a).unwrap();
+        let mut uc = uc0.clone();
+        assert!(uc.downdate(&v));
+        assert!(uc.update(&v));
+        assert!(uc.factor().max_abs_diff(uc0.factor()) < 1e-9);
+    }
+
+    #[test]
+    fn singular_downdate_reports_failure() {
+        // M = I, remove e_0 e_0ᵀ entirely ⇒ zero pivot ⇒ not PD
+        let mut uc = UCholesky::factorize(&Mat::eye(2)).unwrap();
+        assert!(!uc.downdate(&[1.0, 0.0]));
+    }
+
+    #[test]
+    fn grow_appends_decoupled_block() {
+        let a = random_spd(4, 5);
+        let mut uc = UCholesky::factorize(&a).unwrap();
+        let before = uc.logdet();
+        uc.grow(3, 2.5);
+        assert_eq!(uc.dim(), 7);
+        assert!((uc.logdet() - (before + 3.0 * 2.5f64.ln())).abs() < 1e-12);
+        // the grown factor reproduces the block-diagonal matrix
+        let big = Mat::from_fn(7, 7, |i, j| {
+            if i < 4 && j < 4 {
+                a[(i, j)]
+            } else if i == j {
+                2.5
+            } else {
+                0.0
+            }
+        });
+        let recon = uc.factor().matmul(&uc.factor().transpose());
+        assert!(recon.max_abs_diff(&big) < 1e-10);
+    }
+
+    #[test]
+    fn long_update_chain_keeps_exact_logdet() {
+        // the whole point: after many up/downdates the factor's logdet
+        // still matches a fresh factorisation to near machine precision
+        let mut rng = Pcg64::new(6);
+        let k = 12;
+        let n = 60;
+        let mut rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..k).map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 }).collect())
+            .collect();
+        let gram = |rows: &Vec<Vec<f64>>| {
+            let mut g = Mat::zeros(k, k);
+            g.add_diag(0.3);
+            for r in rows {
+                for i in 0..k {
+                    for j in 0..k {
+                        g[(i, j)] += r[i] * r[j];
+                    }
+                }
+            }
+            g
+        };
+        let mut uc = UCholesky::factorize(&gram(&rows)).unwrap();
+        for step in 0..2000 {
+            let i = (step * 7) % n;
+            assert!(uc.downdate(&rows[i].clone()));
+            let flip = (step * 3) % k;
+            rows[i][flip] = 1.0 - rows[i][flip];
+            assert!(uc.update(&rows[i].clone()));
+        }
+        let fresh = Cholesky::new(&gram(&rows)).unwrap();
+        assert!(
+            (uc.logdet() - fresh.logdet()).abs() < 1e-9,
+            "factor logdet drifted: {} vs {}",
+            uc.logdet(),
+            fresh.logdet()
+        );
+    }
+}

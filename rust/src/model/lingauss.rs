@@ -9,7 +9,7 @@
 //!   `G = E Eᵀ` under rank-1 row removal / insertion so each Gibbs bit
 //!   flip costs O(K² + KD) instead of a refactorisation.
 
-use crate::linalg::{det_lemma_delta, sm_update, symmetrize, Cholesky, Mat};
+use crate::linalg::{sm_update, symmetrize, Cholesky, Mat, UCholesky};
 use crate::rng::Pcg64;
 
 pub const LN_2PI: f64 = 1.837_877_066_409_345_5;
@@ -127,11 +127,20 @@ pub fn collapsed_loglik_terms(
 /// Incremental collapsed-likelihood cache over (Z, X).
 ///
 /// Maintains, for the *current* Z:
-///   `ztz = ZᵀZ`, `minv = (ZᵀZ + ratio·I)⁻¹`, `logdet = log|M|`,
+///   `ztz = ZᵀZ`, `minv = (ZᵀZ + ratio·I)⁻¹`, `chol` = lower factor of M,
+///   `logdet = log|M|` (from the factor — exact, no summed-delta drift),
 ///   `e = ZᵀX`, `g = E Eᵀ`, `tr_xx = ‖X‖²`, `tr_quad = tr(M⁻¹ G)`.
 ///
 /// The Gibbs sweep uses `remove_row` / `candidate_loglik` / `insert_row`;
-/// drift from long SM chains is bounded by periodic `refresh`.
+/// drift from long SM chains is bounded by periodic `refresh`. Once the
+/// cache is warm, **no Z-side operation touches X or Z again**:
+/// structural growth ([`Self::append_empty_features`]), compaction
+/// ([`Self::retain_features`]) and σ ridge changes
+/// ([`Self::loglik_at_ratio`] / [`Self::adopt`]) all work off the cached
+/// sufficient statistics — at most O(K³ + K²D), never O(N·…). The two
+/// deliberate N paths are `refresh` (drift fallback) and
+/// [`Self::reset_data`] (the data matrix itself changed — E must be
+/// recomputed at O(NKD), the inherent cost of new data).
 #[derive(Clone, Debug)]
 pub struct CollapsedCache {
     pub ztz: Mat,
@@ -140,10 +149,25 @@ pub struct CollapsedCache {
     pub e: Mat,
     pub g: Mat,
     pub tr_xx: f64,
+    chol: UCholesky,
     n: usize,
     d: usize,
     ratio: f64,
     updates: usize,
+}
+
+/// A collapsed likelihood evaluated at a *different* ridge ratio than the
+/// cache's, together with the freshly factorised M′ so a σ-MH acceptance
+/// can [`CollapsedCache::adopt`] it without any O(N·…) rebuild. Holds
+/// only the factor — the Sherman–Morrison inverse is built lazily in
+/// `adopt`, so a *rejected* proposal never pays the explicit inverse.
+#[derive(Clone, Debug)]
+pub struct RatioEval {
+    /// Collapsed log P(X | Z) under the proposal's (σ_X, σ_A).
+    pub loglik: f64,
+    ratio: f64,
+    chol: Cholesky,
+    logdet: f64,
 }
 
 impl CollapsedCache {
@@ -154,13 +178,16 @@ impl CollapsedCache {
         let ch = Cholesky::new(&m).expect("M PD");
         let e = z.t_matmul(x);
         let g = e.matmul(&e.transpose());
+        let minv = ch.inverse();
+        let logdet = ch.logdet();
         Self {
             ztz,
-            minv: ch.inverse(),
-            logdet: ch.logdet(),
+            minv,
+            logdet,
             e,
             g,
             tr_xx: x.frob2(),
+            chol: UCholesky::from_cholesky(ch),
             n: x.rows(),
             d: x.cols(),
             ratio,
@@ -183,16 +210,17 @@ impl CollapsedCache {
     }
 
     /// Remove observation row (z_row, x_row) from all statistics.
-    /// Returns false if the downdate is singular (caller should refresh).
+    /// Returns false if the downdate is singular — the cache may then be
+    /// partially mutated and the caller MUST `refresh` (every caller
+    /// already does).
     pub fn remove_row(&mut self, z_row: &[f64], x_row: &[f64]) -> bool {
-        let delta = det_lemma_delta(&self.minv, z_row, -1.0);
-        if !delta.is_finite() {
+        if !self.chol.downdate(z_row) {
             return false;
         }
         if sm_update(&mut self.minv, z_row, -1.0).is_none() {
             return false;
         }
-        self.logdet += delta;
+        self.logdet = self.chol.logdet();
         self.rank1_gram(z_row, -1.0);
         self.rank1_e(z_row, x_row, -1.0);
         self.maybe_symmetrize();
@@ -200,24 +228,41 @@ impl CollapsedCache {
     }
 
     /// Insert observation row (z_row, x_row) into all statistics.
-    pub fn insert_row(&mut self, z_row: &[f64], x_row: &[f64]) {
-        let delta = det_lemma_delta(&self.minv, z_row, 1.0);
-        sm_update(&mut self.minv, z_row, 1.0).expect("insert never singular");
-        self.logdet += delta;
+    /// Returns false if accumulated drift has made the rank-1 update
+    /// numerically singular — the cache may then be partially mutated and
+    /// the caller MUST `refresh`, exactly as for [`Self::remove_row`].
+    #[must_use]
+    pub fn insert_row(&mut self, z_row: &[f64], x_row: &[f64]) -> bool {
+        if sm_update(&mut self.minv, z_row, 1.0).is_none() {
+            return false;
+        }
+        if !self.chol.update(z_row) {
+            return false;
+        }
+        self.logdet = self.chol.logdet();
         self.rank1_gram(z_row, 1.0);
         self.rank1_e(z_row, x_row, 1.0);
         self.maybe_symmetrize();
+        true
     }
 
     /// Collapsed log P(X | Z′) where Z′ = current Z (with some row already
     /// removed) plus candidate row `z_row` holding observation `x_row`.
     /// O(K² + KD); does not mutate the cache.
+    ///
+    /// Returns `NaN` if drift has pushed the Sherman–Morrison denominator
+    /// `1 + z′ᵀM⁻¹z′` non-positive or non-finite — callers check
+    /// finiteness and refresh-and-retry rather than feeding a silent NaN
+    /// into the categorical draw.
     pub fn candidate_loglik(&self, z_row: &[f64], x_row: &[f64], lg: &LinGauss) -> f64 {
         let k = self.k();
         // w = M⁻¹ z′
         let w = self.minv.matvec(z_row);
         let ztw: f64 = z_row.iter().zip(&w).map(|(a, b)| a * b).sum();
         let denom = 1.0 + ztw;
+        if !(denom > 0.0) || !denom.is_finite() {
+            return f64::NAN;
+        }
         let logdet_new = self.logdet + denom.ln();
         // c = E x′ᵀ  (K), s = x′·x′
         let mut c = vec![0.0; k];
@@ -297,7 +342,9 @@ impl CollapsedCache {
             }
         }
         m.add_diag(self.ratio);
-        let ch = Cholesky::new(&m).expect("augmented M PD");
+        let Some(ch) = Cholesky::new(&m) else {
+            return f64::NAN; // ztz drifted non-PD — caller refreshes
+        };
         // E″ = [E + z′ᵀ x′ ; rows of x′]
         let mut e = Mat::zeros(kj, self.d);
         for i in 0..k {
@@ -340,6 +387,11 @@ impl CollapsedCache {
         let w = self.minv.matvec(z_row);
         let ztw: f64 = z_row.iter().zip(&w).map(|(a, b)| a * b).sum();
         let denom = 1.0 + ztw;
+        if !(denom > 0.0) || !denom.is_finite() {
+            // poisoned SM denominator: return NaN weights so the sweep
+            // can refresh-and-retry instead of drawing from garbage
+            return vec![f64::NAN; jmax + 1];
+        }
         let logdet1 = self.logdet + denom.ln();
         // c = E x′ᵀ, s = x′·x′  (as in candidate_loglik)
         let mut c = vec![0.0; k];
@@ -395,6 +447,9 @@ impl CollapsedCache {
     pub fn predictive_loglik(&self, z_row: &[f64], x_row: &[f64], lg: &LinGauss) -> f64 {
         let w = self.minv.matvec(z_row);
         let ztw: f64 = z_row.iter().zip(&w).map(|(a, b)| a * b).sum();
+        if !(1.0 + ztw > 0.0) || !ztw.is_finite() {
+            return f64::NAN; // drift poisoned 1 + zᵀM⁻¹z — caller refreshes
+        }
         let var = lg.sigma_x * lg.sigma_x * (1.0 + ztw);
         let d = self.d;
         let mut rss = 0.0;
@@ -411,12 +466,151 @@ impl CollapsedCache {
         -0.5 * d as f64 * (LN_2PI + var.ln()) - rss / (2.0 * var)
     }
 
-    /// Full rebuild (drift control / after structural changes / after a
-    /// σ update changed the ridge). Callers MUST pass the current
-    /// `lg.ratio()` — the cache's M = ZᵀZ + ratio·I is only consistent
-    /// with likelihood evaluations whose `LinGauss` has the same ratio.
+    /// Full rebuild (drift control / fallback after a singular rank-1
+    /// update). Callers MUST pass the current `lg.ratio()` — the cache's
+    /// M = ZᵀZ + ratio·I is only consistent with likelihood evaluations
+    /// whose `LinGauss` has the same ratio. Together with
+    /// [`Self::reset_data`] (new data ⇒ inherent O(NKD)) this is the
+    /// only O(N·…) path; the Z-side warm-cache operations below never
+    /// need it.
     pub fn refresh(&mut self, x: &Mat, z: &Mat, ratio: f64) {
         *self = Self::new(x, z, ratio);
+    }
+
+    /// Collapsed log P(X | Z) under a *proposal* `lg` whose ridge ratio
+    /// r′ differs from the cache's: factorise M′ = ZᵀZ + r′·I from the
+    /// **cached** ZᵀZ and take tr(M′⁻¹G) = ‖L′⁻¹E‖²_F from the cached E
+    /// — O(K³ + K²D), no N factor, no `z.to_mat()`. Returns the
+    /// evaluation plus the fresh M′ factor; a σ-MH acceptance hands it
+    /// to [`Self::adopt`] so even acceptance costs nothing N-dependent.
+    /// Rejection discards it — rejection is free.
+    ///
+    /// `None` if M′ fails to factorise (cannot happen for finite ZᵀZ and
+    /// r′ > 0; the caller treats it as a rejected proposal).
+    pub fn loglik_at_ratio(&self, lg: &LinGauss) -> Option<RatioEval> {
+        let ratio = lg.ratio();
+        let mut m = self.ztz.clone();
+        m.add_diag(ratio);
+        let ch = Cholesky::new(&m)?;
+        let logdet = ch.logdet();
+        // tr(M′⁻¹G) = tr(M′⁻¹EEᵀ) = ‖L′⁻¹E‖²_F — forward substitutions
+        // only (O(K²D)); the explicit O(K³) inverse is deferred to
+        // `adopt`, so rejected proposals never pay it.
+        let k = self.k();
+        let mut col = vec![0.0; k];
+        let mut tr_quad = 0.0;
+        for j in 0..self.d {
+            for (i, c) in col.iter_mut().enumerate() {
+                *c = self.e[(i, j)];
+            }
+            let y = ch.forward(&col);
+            tr_quad += y.iter().map(|v| v * v).sum::<f64>();
+        }
+        let loglik = collapsed_loglik_terms(
+            self.n, self.d, k, lg.sigma_x, lg.sigma_a,
+            logdet, self.tr_xx, tr_quad,
+        );
+        Some(RatioEval { loglik, ratio, chol: ch, logdet })
+    }
+
+    /// Adopt the M′ machinery of an accepted [`Self::loglik_at_ratio`]
+    /// evaluation: the cache now lives at the proposal's ridge. The
+    /// O(K³) inverse is built here — acceptance-only — from the factor
+    /// the proposal already paid for. Also a drift reset for the M side,
+    /// since M′ came from the exact ZᵀZ.
+    pub fn adopt(&mut self, eval: RatioEval) {
+        debug_assert_eq!(eval.chol.factor().rows(), self.k(), "adopt across resize");
+        self.minv = eval.chol.inverse();
+        self.chol = UCholesky::from_cholesky(eval.chol);
+        self.logdet = eval.logdet;
+        self.ratio = eval.ratio;
+    }
+
+    /// Append `j` brand-new feature columns that are empty in the cached
+    /// Z (the row that will hold them is inserted afterwards via
+    /// [`Self::insert_row`]). All statistics extend exactly:
+    /// ZᵀZ and G grow block-diagonally by zeros, E by zero rows,
+    /// M by r·I_j — so M⁻¹ gains a (1/r)·I_j block and the factor a
+    /// √r·I_j block. O((K+j)² + jD) copying; no X or Z access.
+    pub fn append_empty_features(&mut self, j: usize) {
+        if j == 0 {
+            return;
+        }
+        let k = self.k();
+        let kj = k + j;
+        let mut ztz = Mat::zeros(kj, kj);
+        ztz.paste(&self.ztz);
+        self.ztz = ztz;
+        let mut minv = Mat::zeros(kj, kj);
+        minv.paste(&self.minv);
+        for i in k..kj {
+            minv[(i, i)] = 1.0 / self.ratio;
+        }
+        self.minv = minv;
+        let mut g = Mat::zeros(kj, kj);
+        g.paste(&self.g);
+        self.g = g;
+        let mut e = Mat::zeros(kj, self.d);
+        e.paste(&self.e);
+        self.e = e;
+        self.chol.grow(j, self.ratio);
+        self.logdet = self.chol.logdet();
+    }
+
+    /// Drop every feature column not listed in `keep` (ascending original
+    /// indices — the order [`crate::model::state::FeatureState::compact`]
+    /// returns). Dropped columns must be empty in the cached Z, so the
+    /// compacted ZᵀZ/E/G are exactly the retained submatrices; M is then
+    /// refactorised from the (exact) compacted ZᵀZ — O(K³ + K²D), no N
+    /// factor, and a free drift reset for the M machinery. Returns false
+    /// if the refactorisation fails (caller refreshes).
+    #[must_use]
+    pub fn retain_features(&mut self, keep: &[usize]) -> bool {
+        let kk = keep.len();
+        debug_assert!(keep.windows(2).all(|w| w[0] < w[1]));
+        let ztz = Mat::from_fn(kk, kk, |i, j| self.ztz[(keep[i], keep[j])]);
+        let mut m = ztz.clone();
+        m.add_diag(self.ratio);
+        let Some(ch) = Cholesky::new(&m) else {
+            return false;
+        };
+        let e = Mat::from_fn(kk, self.d, |i, j| self.e[(keep[i], j)]);
+        let g = Mat::from_fn(kk, kk, |i, j| self.g[(keep[i], keep[j])]);
+        self.e = e;
+        self.g = g;
+        self.ztz = ztz;
+        self.minv = ch.inverse();
+        self.logdet = ch.logdet();
+        self.chol = UCholesky::from_cholesky(ch);
+        true
+    }
+
+    /// The borrowed data matrix changed under an unchanged Z (the tail
+    /// sampler's situation: instantiated sweeps rewrote the residuals
+    /// between sub-iterations). Recompute the X-side statistics
+    /// (E = ZᵀX, G = EEᵀ, ‖X‖²) in O(NKD + K²D) and refactorise the M
+    /// machinery from the exact cached ZᵀZ (O(K³) — trivial next to the
+    /// E recompute). The refactorisation makes a carried cache exactly
+    /// as drift-free as the full per-sweep rebuild it replaces, while
+    /// still skipping the O(NK²) gram. Returns false if the
+    /// refactorisation fails (caller rebuilds from scratch).
+    #[must_use]
+    pub fn reset_data(&mut self, x: &Mat, z: &Mat) -> bool {
+        debug_assert_eq!(x.rows(), self.n, "data row count changed");
+        debug_assert_eq!(x.cols(), self.d, "data dim changed");
+        debug_assert_eq!(z.cols(), self.k(), "Z changed shape — refresh instead");
+        let mut m = self.ztz.clone();
+        m.add_diag(self.ratio);
+        let Some(ch) = Cholesky::new(&m) else {
+            return false;
+        };
+        self.e = z.t_matmul(x);
+        self.g = self.e.matmul(&self.e.transpose());
+        self.tr_xx = x.frob2();
+        self.minv = ch.inverse();
+        self.logdet = ch.logdet();
+        self.chol = UCholesky::from_cholesky(ch);
+        true
     }
 
     #[inline]
@@ -516,7 +710,7 @@ mod tests {
         let zr = z.row(7).to_vec();
         let xr = x.row(7).to_vec();
         assert!(cache.remove_row(&zr, &xr));
-        cache.insert_row(&zr, &xr);
+        assert!(cache.insert_row(&zr, &xr));
         assert!((cache.loglik(&lg) - before).abs() < 1e-7);
     }
 
@@ -569,7 +763,7 @@ mod tests {
             if rng.bernoulli(0.5) {
                 znew[kflip] = 1.0 - znew[kflip];
             }
-            cache.insert_row(&znew, &xr);
+            assert!(cache.insert_row(&znew, &xr));
             for (j, &v) in znew.iter().enumerate() {
                 zdyn[(i, j)] = v;
             }
@@ -686,6 +880,120 @@ mod tests {
         let want = with - without;
         let got = cache.predictive_loglik(&zc, &xr, &lg);
         assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn loglik_at_ratio_matches_oracle() {
+        let (x, z, _) = problem(35, 5, 6, 22);
+        let lg0 = LinGauss::new(0.5, 1.1);
+        let cache = CollapsedCache::new(&x, &z, lg0.ratio());
+        // evaluate at a different ridge than the cache was built with
+        let prop = LinGauss::new(0.8, 0.9);
+        let eval = cache.loglik_at_ratio(&prop).unwrap();
+        let want = prop.collapsed_loglik(&x, &z);
+        assert!(
+            (eval.loglik - want).abs() < 1e-9 * want.abs().max(1.0),
+            "{} vs {}",
+            eval.loglik,
+            want
+        );
+    }
+
+    #[test]
+    fn adopt_makes_cache_live_at_new_ratio() {
+        let (x, z, _) = problem(30, 4, 5, 23);
+        let lg0 = LinGauss::new(0.5, 1.1);
+        let mut cache = CollapsedCache::new(&x, &z, lg0.ratio());
+        let prop = LinGauss::new(0.7, 1.3);
+        let eval = cache.loglik_at_ratio(&prop).unwrap();
+        cache.adopt(eval);
+        assert_eq!(cache.ratio(), prop.ratio());
+        // the adopted cache must behave exactly like a fresh one at the
+        // proposal's ratio, including under further rank-1 edits
+        let fresh = CollapsedCache::new(&x, &z, prop.ratio());
+        assert!((cache.loglik(&prop) - fresh.loglik(&prop)).abs() < 1e-8);
+        let zr = z.row(3).to_vec();
+        let xr = x.row(3).to_vec();
+        assert!(cache.remove_row(&zr, &xr));
+        let mut zc = zr.clone();
+        zc[1] = 1.0 - zc[1];
+        let got = cache.candidate_loglik(&zc, &xr, &prop);
+        let mut z2 = z.clone();
+        z2[(3, 1)] = zc[1];
+        let want = prop.collapsed_loglik(&x, &z2);
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn append_empty_then_insert_matches_fresh() {
+        // grow-by-singletons without touching X or Z: remove a row,
+        // append j empty columns, insert the row with the new bits set —
+        // must equal a from-scratch cache on the grown Z.
+        let (x, z, lg) = problem(25, 3, 5, 24);
+        let row = 6;
+        for j_new in 1..=3usize {
+            let mut cache = CollapsedCache::new(&x, &z, lg.ratio());
+            let zr = z.row(row).to_vec();
+            let xr = x.row(row).to_vec();
+            assert!(cache.remove_row(&zr, &xr));
+            cache.append_empty_features(j_new);
+            let mut z_ext = zr.clone();
+            z_ext.extend(std::iter::repeat(1.0).take(j_new));
+            assert!(cache.insert_row(&z_ext, &xr));
+            let mut z2 = Mat::zeros(25, 3 + j_new);
+            z2.paste(&z);
+            for t in 0..j_new {
+                z2[(row, 3 + t)] = 1.0;
+            }
+            let want = lg.collapsed_loglik(&x, &z2);
+            let got = cache.loglik(&lg);
+            assert!((got - want).abs() < 1e-6, "j={j_new}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn retain_features_drops_empty_columns_exactly() {
+        // build Z with two columns we then empty out through the cache,
+        // compact, and compare against a fresh cache on the submatrix
+        let (x, z, lg) = problem(20, 5, 4, 25);
+        let mut zdyn = z.clone();
+        let mut cache = CollapsedCache::new(&x, &zdyn, lg.ratio());
+        for dead in [1usize, 3] {
+            for i in 0..20 {
+                if zdyn[(i, dead)] != 0.0 {
+                    let zr: Vec<f64> = (0..5).map(|j| zdyn[(i, j)]).collect();
+                    let xr = x.row(i).to_vec();
+                    assert!(cache.remove_row(&zr, &xr));
+                    zdyn[(i, dead)] = 0.0;
+                    let zr2: Vec<f64> = (0..5).map(|j| zdyn[(i, j)]).collect();
+                    assert!(cache.insert_row(&zr2, &xr));
+                }
+            }
+        }
+        let keep = [0usize, 2, 4];
+        assert!(cache.retain_features(&keep));
+        let zsub = Mat::from_fn(20, 3, |i, j| zdyn[(i, keep[j])]);
+        let want = lg.collapsed_loglik(&x, &zsub);
+        let got = cache.loglik(&lg);
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        // and the compacted cache keeps working under rank-1 edits
+        let zr = zsub.row(2).to_vec();
+        let xr = x.row(2).to_vec();
+        assert!(cache.remove_row(&zr, &xr));
+        assert!(cache.insert_row(&zr, &xr));
+        assert!((cache.loglik(&lg) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_data_tracks_new_x_same_z() {
+        let (x, z, lg) = problem(30, 4, 6, 26);
+        let mut cache = CollapsedCache::new(&x, &z, lg.ratio());
+        // the "residuals" change between tail sweeps, Z does not
+        let mut rng = Pcg64::new(27);
+        let x2 = Mat::from_fn(30, 6, |_, _| rng.normal());
+        assert!(cache.reset_data(&x2, &z));
+        let want = lg.collapsed_loglik(&x2, &z);
+        assert!((cache.loglik(&lg) - want).abs() < 1e-7);
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod lingauss;
 pub mod missing;
 pub mod state;
 
-pub use lingauss::{CollapsedCache, LinGauss};
+pub use lingauss::{CollapsedCache, LinGauss, RatioEval};
 pub use state::FeatureState;
 
 /// Full global model state shared between samplers and the coordinator:

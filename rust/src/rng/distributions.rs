@@ -134,6 +134,13 @@ impl Pcg64 {
     /// overflow-safe; used by the collapsed k_new step).
     pub fn categorical_log(&mut self, logw: &[f64]) -> usize {
         debug_assert!(!logw.is_empty());
+        // −∞ means "impossible" and is skipped below; NaN means an
+        // upstream numerical failure the caller should have caught
+        // (the collapsed sweeps refresh-and-retry before drawing)
+        debug_assert!(
+            logw.iter().all(|w| !w.is_nan()),
+            "categorical_log: NaN log-weight in {logw:?}"
+        );
         let mut best = 0;
         let mut best_v = f64::NEG_INFINITY;
         for (i, &lw) in logw.iter().enumerate() {

@@ -130,9 +130,7 @@ impl CollapsedGibbs {
             .map(|j| self.z.m()[j] - self.z.get(row, j) as usize)
             .collect();
         if !self.cache.remove_row(&z_orig, &x_row) {
-            self.cache.refresh(&self.x, &self.z.to_mat(), self.lg.ratio());
-            let ok = self.cache.remove_row(&z_orig, &x_row);
-            debug_assert!(ok, "remove after refresh must succeed");
+            self.rebuild_cache_excluding(row, &x_row);
         }
         let mut z_cur = z_orig.clone();
         for j in 0..k {
@@ -146,28 +144,19 @@ impl CollapsedGibbs {
             }
             let prior_logit =
                 (m_minus[j] as f64).ln() - ((n - m_minus[j]) as f64).ln();
-            let dll = match self.mode {
-                Mode::Exact => {
-                    let mut z1 = z_cur.clone();
-                    z1[j] = 1.0;
-                    let mut z0 = z_cur;
-                    z0[j] = 0.0;
-                    let ll1 = self.cache.candidate_loglik(&z1, &x_row, &self.lg);
-                    let ll0 = self.cache.candidate_loglik(&z0, &x_row, &self.lg);
-                    z_cur = z1; // reuse allocation; bit set below
-                    ll1 - ll0
-                }
-                Mode::Predictive => {
-                    let mut z1 = z_cur.clone();
-                    z1[j] = 1.0;
-                    let mut z0 = z_cur;
-                    z0[j] = 0.0;
-                    let ll1 = self.cache.predictive_loglik(&z1, &x_row, &self.lg);
-                    let ll0 = self.cache.predictive_loglik(&z0, &x_row, &self.lg);
-                    z_cur = z1;
-                    ll1 - ll0
-                }
-            };
+            let mut z1 = z_cur.clone();
+            z1[j] = 1.0;
+            let mut z0 = z_cur;
+            z0[j] = 0.0;
+            let mut dll = self.pair_dll(&z1, &z0, &x_row);
+            if !dll.is_finite() {
+                // drift poisoned a Sherman–Morrison denominator: rebuild
+                // from exact statistics (row excluded) and retry once
+                self.rebuild_cache_excluding(row, &x_row);
+                dll = self.pair_dll(&z1, &z0, &x_row);
+                debug_assert!(dll.is_finite(), "fresh cache gave NaN weight");
+            }
+            z_cur = z1; // reuse allocation; bit set below
             let logit = prior_logit + dll;
             let u = rng.uniform();
             let bit = if (u / (1.0 - u)).ln() < logit { 1.0 } else { 0.0 };
@@ -181,8 +170,42 @@ impl CollapsedGibbs {
         }
     }
 
+    /// Rebuild the cache from exact statistics with `row` excluded — the
+    /// sweep's recovery path when a rank-1 update or candidate weight
+    /// degenerates. Correct ONLY while `row`'s resampled bits have not
+    /// yet been committed to `self.z` (commits happen at the end of
+    /// [`Self::propose_new_features`]), so `row_f64(row)` matches what
+    /// the cache held; every call site sits before that commit.
+    fn rebuild_cache_excluding(&mut self, row: usize, x_row: &[f64]) {
+        self.cache.refresh(&self.x, &self.z.to_mat(), self.lg.ratio());
+        if self.z.k() > 0 {
+            let z_orig = self.z.row_f64(row);
+            let ok = self.cache.remove_row(&z_orig, x_row);
+            debug_assert!(ok, "remove after refresh must succeed");
+        }
+        self.rows_since_refresh = 0;
+    }
+
+    /// Mode-dispatched Δloglik of setting bit j (z1) vs clearing it (z0).
+    /// NaN when the cache's SM denominator has drifted non-positive — the
+    /// caller refreshes and retries.
+    fn pair_dll(&self, z1: &[f64], z0: &[f64], x_row: &[f64]) -> f64 {
+        match self.mode {
+            Mode::Exact => {
+                self.cache.candidate_loglik(z1, x_row, &self.lg)
+                    - self.cache.candidate_loglik(z0, x_row, &self.lg)
+            }
+            Mode::Predictive => {
+                self.cache.predictive_loglik(z1, x_row, &self.lg)
+                    - self.cache.predictive_loglik(z0, x_row, &self.lg)
+            }
+        }
+    }
+
     /// Truncated-exact K_new step for `row`, then re-insert the row into
-    /// the cache (with the grown Z if k_new > 0).
+    /// the cache (with the grown Z if k_new > 0). Growth extends the
+    /// cached statistics in place ([`CollapsedCache::append_empty_features`])
+    /// — no O(N·…) rebuild.
     fn propose_new_features(&mut self, row: usize, z_cur: &[f64], rng: &mut Pcg64) {
         let n = self.x.rows();
         let x_row: Vec<f64> = self.x.row(row).to_vec();
@@ -195,6 +218,13 @@ impl CollapsedGibbs {
         let mut logw = self
             .cache
             .candidate_loglik_aug_batch(z_cur, &x_row, kmax, &self.lg);
+        if logw.iter().any(|w| w.is_nan()) {
+            // poisoned denominator: rebuild (row excluded) and retry once
+            self.rebuild_cache_excluding(row, &x_row);
+            logw = self
+                .cache
+                .candidate_loglik_aug_batch(z_cur, &x_row, kmax, &self.lg);
+        }
         for (j, lw) in logw.iter_mut().enumerate() {
             *lw += ibp::log_poisson_pmf(j, lambda);
         }
@@ -208,20 +238,29 @@ impl CollapsedGibbs {
             for j in 0..k_new {
                 self.z.set(row, first + j, 1);
             }
-            // cache dimensions changed: rebuild including this row
-            self.cache.refresh(&self.x, &self.z.to_mat(), self.lg.ratio());
-            self.rows_since_refresh = 0;
-        } else if self.z.k() > 0 {
+            // the new columns are empty in the cached Z (this row is
+            // excluded): extend the statistics block-diagonally, then a
+            // plain rank-1 insert of the grown row — O(K² + KD)
+            self.cache.append_empty_features(k_new);
+        }
+        if self.z.k() > 0 {
             let z_row = self.z.row_f64(row);
-            self.cache.insert_row(&z_row, &x_row);
+            if !self.cache.insert_row(&z_row, &x_row) {
+                // singular rank-1 insert: rebuild from scratch (row included)
+                self.cache.refresh(&self.x, &self.z.to_mat(), self.lg.ratio());
+                self.rows_since_refresh = 0;
+            }
         }
     }
 
-    /// Drop empty columns (and rebuild the cache if any died).
+    /// Drop empty columns. The cache compacts its own statistics
+    /// ([`CollapsedCache::retain_features`]) — the retained submatrices
+    /// are exact because dead columns contribute zeros — so no O(N·…)
+    /// rebuild happens here either.
     fn cleanup_empty(&mut self) {
         let before = self.z.k();
-        self.z.compact();
-        if self.z.k() != before {
+        let keep = self.z.compact();
+        if self.z.k() != before && !self.cache.retain_features(&keep) {
             self.cache.refresh(&self.x, &self.z.to_mat(), self.lg.ratio());
             self.rows_since_refresh = 0;
         }
@@ -229,6 +268,12 @@ impl CollapsedGibbs {
 
     /// Random-walk MH on (log σ_X, log σ_A) against the collapsed
     /// marginal (A integrated out ⇒ no conjugate update exists).
+    ///
+    /// Proposals are evaluated through the ratio-reparameterised cache
+    /// path ([`CollapsedCache::loglik_at_ratio`]): M′ = ZᵀZ + r′·I is
+    /// factorised from the cached sufficient statistics in O(K³), so a
+    /// proposal never touches X or Z — rejection is free, and acceptance
+    /// adopts the just-computed factor instead of rebuilding at O(NK²).
     fn mh_sigmas(&mut self, rng: &mut Pcg64) {
         for which in 0..2 {
             let cur = self.cache.loglik(&self.lg) + self.log_sigma_prior(&self.lg);
@@ -239,24 +284,22 @@ impl CollapsedGibbs {
             } else {
                 prop.sigma_a = (prop.sigma_a.ln() + step).exp();
             }
-            // ratio changes through the cache only via σ's (Z unchanged) —
-            // but M depends on ratio, so recompute the collapsed loglik
-            // with the proposal's ratio from scratch statistics.
-            let prop_ll = if (prop.ratio() - self.lg.ratio()).abs() < 1e-15 {
-                self.cache.loglik(&prop)
-            } else {
-                prop.collapsed_loglik(&self.x, &self.z.to_mat())
-            } + self.log_sigma_prior(&prop);
             self.sigma_proposals += 1;
+            // the proposal changed the ridge ratio (and possibly σ_X's
+            // normalisation): evaluate from the cached ZᵀZ/G — no N work.
             // log-scale proposal is symmetric in log-space; include the
             // Jacobian via the implicit prior on log σ (flat) — we put the
             // InvGamma prior on σ² and add its Jacobian below.
-            if (prop_ll - cur) > rng.uniform().ln() {
-                self.lg = prop;
-                self.cache.refresh(&self.x, &self.z.to_mat(), self.lg.ratio());
-                self.rows_since_refresh = 0;
-                self.sigma_accepts += 1;
+            let u = rng.uniform(); // drawn unconditionally: fixed draw count
+            if let Some(eval) = self.cache.loglik_at_ratio(&prop) {
+                let prop_ll = eval.loglik + self.log_sigma_prior(&prop);
+                if (prop_ll - cur) > u.ln() {
+                    self.lg = prop;
+                    self.cache.adopt(eval);
+                    self.sigma_accepts += 1;
+                }
             }
+            // else: M′ failed to factorise (degenerate proposal) — reject
         }
         // adapt towards ~40% acceptance during early iterations
         if self.iter < 100 && self.sigma_proposals >= 20 {

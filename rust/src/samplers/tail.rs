@@ -36,10 +36,14 @@ pub enum Proposal {
 ///
 /// The proposer owns only the tail *assignments*; the residual matrix is
 /// **borrowed per sweep** (`sweep(&resid, …)`). The instantiated-feature
-/// sweeps rewrite the residual between sub-iterations, so the collapsed
-/// cache is rebuilt from the borrowed matrix at the start of every sweep
-/// — exactly what the old owned-residual API recomputed, minus the B × D
-/// clone the hot loop used to pay per sub-iteration.
+/// sweeps rewrite the residual between sub-iterations, so at the start of
+/// every sweep the cache's X-side statistics (E = Z*ᵀR, G, ‖R‖²) are
+/// recomputed from the borrowed matrix — but Z*ᵀZ* depends only on the
+/// tail assignments the proposer owns, so it **persists across sweeps**
+/// and M⁻¹/L/log|M| are refactorised from it exactly
+/// ([`CollapsedCache::reset_data`], O(K³) and a free drift reset),
+/// dropping the per-sweep O(BK²) gram rebuild the old code paid on top
+/// of the unavoidable O(BKD) for E.
 ///
 /// # Examples
 ///
@@ -72,10 +76,17 @@ pub enum Proposal {
 pub struct TailProposer {
     /// Shard rows B (shape contract for every borrowed residual).
     rows: usize,
-    /// Shard-local tail assignments (B × K*).
-    pub z_tail: FeatureState,
+    /// Shard-local tail assignments (B × K*). Private on purpose: the
+    /// carried `cache`'s Z-side statistics are only valid because every
+    /// mutation goes through tracked operations in [`Self::sweep`] /
+    /// [`Self::take_tail`] — direct writes would silently stale them.
+    z_tail: FeatureState,
     lg: LinGauss,
     pub proposal: Proposal,
+    /// Collapsed machinery carried across sweeps; the Z-side statistics
+    /// stay valid because every change to `z_tail` goes through tracked
+    /// cache operations. `None` until the first sweep / after `take_tail`.
+    cache: Option<CollapsedCache>,
 }
 
 impl TailProposer {
@@ -83,7 +94,13 @@ impl TailProposer {
     /// `FeatureState::empty(b)` on first use). Cheap: no cache is built
     /// until a residual is seen in [`Self::sweep`].
     pub fn new(z_tail: FeatureState, lg: LinGauss) -> Self {
-        Self { rows: z_tail.n(), z_tail, lg, proposal: Proposal::default() }
+        Self {
+            rows: z_tail.n(),
+            z_tail,
+            lg,
+            proposal: Proposal::default(),
+            cache: None,
+        }
     }
 
     pub fn with_proposal(mut self, proposal: Proposal) -> Self {
@@ -113,10 +130,22 @@ impl TailProposer {
         assert_eq!(resid.rows(), self.rows, "residual shape changed");
         let b = self.rows;
         // the instantiated sweeps rewrote the residual since the last
-        // call, so the collapsed state is rebuilt from scratch (what the
-        // owned-residual API did by reconstructing the whole proposer)
-        let mut cache =
-            CollapsedCache::new(resid, &self.z_tail.to_mat(), self.lg.ratio());
+        // call: recompute the X-side statistics (E, G, ‖R‖²) and let
+        // reset_data refactorise M from the exact cached Z*ᵀZ* — the
+        // carried cache is as drift-free as a full rebuild, minus the
+        // O(BK²) gram
+        let mut carried = None;
+        if let Some(mut c) = self.cache.take() {
+            if c.k() == self.z_tail.k()
+                && c.ratio() == self.lg.ratio()
+                && c.reset_data(resid, &self.z_tail.to_mat())
+            {
+                carried = Some(c);
+            }
+        }
+        let mut cache = carried.unwrap_or_else(|| {
+            CollapsedCache::new(resid, &self.z_tail.to_mat(), self.lg.ratio())
+        });
         // §Perf L3-2: the Poisson(α/N) pmf is row-invariant — precompute
         // it once per sweep instead of paying ln_gamma per (row, j).
         let lambda = alpha / n_global as f64;
@@ -130,9 +159,15 @@ impl TailProposer {
             );
         }
         // tail columns that died stay dead — drop them now so the
-        // promotion payload is minimal (the cache dies with this sweep,
-        // so no refresh is needed after compaction).
-        self.z_tail.compact();
+        // promotion payload is minimal. The cache compacts its own
+        // statistics (dead columns contribute exact zeros) and is kept
+        // for the next sub-iteration's sweep.
+        let before = self.z_tail.k();
+        let keep = self.z_tail.compact();
+        if self.z_tail.k() != before && !cache.retain_features(&keep) {
+            cache.refresh(resid, &self.z_tail.to_mat(), self.lg.ratio());
+        }
+        self.cache = Some(cache);
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -155,9 +190,7 @@ impl TailProposer {
                 .map(|j| self.z_tail.m()[j] - self.z_tail.get(row, j) as usize)
                 .collect();
             if !cache.remove_row(&z_cur, &x_row) {
-                cache.refresh(resid, &self.z_tail.to_mat(), self.lg.ratio());
-                let ok = cache.remove_row(&z_cur, &x_row);
-                debug_assert!(ok);
+                self.rebuild_cache_excluding(cache, resid, row, &x_row);
             }
             for j in 0..k {
                 if m_minus[j] == 0 {
@@ -170,9 +203,17 @@ impl TailProposer {
                 z1[j] = 1.0;
                 let mut z0 = z_cur;
                 z0[j] = 0.0;
-                let ll1 = cache.candidate_loglik(&z1, &x_row, &self.lg);
-                let ll0 = cache.candidate_loglik(&z0, &x_row, &self.lg);
-                let logit = prior_logit + ll1 - ll0;
+                let mut dll = cache.candidate_loglik(&z1, &x_row, &self.lg)
+                    - cache.candidate_loglik(&z0, &x_row, &self.lg);
+                if !dll.is_finite() {
+                    // drift poisoned the SM denominator: rebuild from
+                    // exact statistics (row excluded) and retry once
+                    self.rebuild_cache_excluding(cache, resid, row, &x_row);
+                    dll = cache.candidate_loglik(&z1, &x_row, &self.lg)
+                        - cache.candidate_loglik(&z0, &x_row, &self.lg);
+                    debug_assert!(dll.is_finite(), "fresh cache gave NaN weight");
+                }
+                let logit = prior_logit + dll;
                 let u = rng.uniform();
                 z_cur = if (u / (1.0 - u)).ln() < logit { z1 } else { z0 };
             }
@@ -180,8 +221,13 @@ impl TailProposer {
         // K_new ~ P(j) ∝ Poisson(j; α/N) · P(R | Z* ∪ j singletons)
         // (batched Schur-complement evaluation — §Perf L3-3)
         let kmax = kmax_new.min(k_budget.saturating_sub(self.z_tail.k()));
-        let logw =
+        let mut logw =
             cache.candidate_loglik_aug_batch(&z_cur, &x_row, kmax, &self.lg);
+        if logw.iter().any(|w| w.is_nan()) {
+            // poisoned denominator: rebuild (row excluded) and retry once
+            self.rebuild_cache_excluding(cache, resid, row, &x_row);
+            logw = cache.candidate_loglik_aug_batch(&z_cur, &x_row, kmax, &self.lg);
+        }
         let k_new = match self.proposal {
             Proposal::TruncatedExact => {
                 let weighted: Vec<f64> = logw
@@ -215,15 +261,42 @@ impl TailProposer {
             for j in 0..k_new {
                 self.z_tail.set(row, first + j, 1);
             }
-            cache.refresh(resid, &self.z_tail.to_mat(), self.lg.ratio());
-        } else if self.z_tail.k() > 0 {
+            // new columns are empty in the cached Z* (this row is
+            // excluded): block-extend the statistics — no O(B·…) rebuild
+            cache.append_empty_features(k_new);
+        }
+        if self.z_tail.k() > 0 {
             let z_row = self.z_tail.row_f64(row);
-            cache.insert_row(&z_row, &x_row);
+            if !cache.insert_row(&z_row, &x_row) {
+                cache.refresh(resid, &self.z_tail.to_mat(), self.lg.ratio());
+            }
+        }
+    }
+
+    /// Rebuild `cache` from exact statistics with `row` excluded — the
+    /// sweep's recovery path when a rank-1 update or candidate weight
+    /// degenerates. Correct ONLY while `row`'s resampled bits have not
+    /// yet been committed to `z_tail` (commits happen at the end of
+    /// [`Self::update_row`]), so `row_f64(row)` matches what the cache
+    /// held; every call site sits before that commit.
+    fn rebuild_cache_excluding(
+        &self,
+        cache: &mut CollapsedCache,
+        resid: &Mat,
+        row: usize,
+        x_row: &[f64],
+    ) {
+        cache.refresh(resid, &self.z_tail.to_mat(), self.lg.ratio());
+        if self.z_tail.k() > 0 {
+            let z_orig = self.z_tail.row_f64(row);
+            let ok = cache.remove_row(&z_orig, x_row);
+            debug_assert!(ok, "remove after refresh must succeed");
         }
     }
 
     /// Hand the tail assignments to the master for promotion and reset.
     pub fn take_tail(&mut self) -> FeatureState {
+        self.cache = None; // the machinery belonged to the departing Z*
         std::mem::replace(&mut self.z_tail, FeatureState::empty(self.rows))
     }
 }

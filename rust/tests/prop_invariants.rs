@@ -176,7 +176,9 @@ fn prop_collapsed_cache_tracks_fresh_rebuild() {
             if g.bool(0.6) {
                 z.set(row, j, 1 - z.get(row, j));
             }
-            cache.insert_row(&z.row_f64(row), &xr);
+            if !cache.insert_row(&z.row_f64(row), &xr) {
+                cache.refresh(&x, &z.to_mat(), lg.ratio());
+            }
         }
         let got = cache.loglik(&lg);
         let want = lg.collapsed_loglik(&x, &z.to_mat());
