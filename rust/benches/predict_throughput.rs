@@ -14,6 +14,7 @@ use pibp::bench::{bench, header};
 use pibp::linalg::Mat;
 use pibp::model::missing::Mask;
 use pibp::model::state::FeatureState;
+use pibp::parallel::ParallelCtx;
 use pibp::rng::Pcg64;
 use pibp::serve::{PosteriorSample, PredictEngine};
 
@@ -89,6 +90,34 @@ fn main() {
         results.push((s_count, imp, ll, rec));
     }
 
+    // ---- per-sample fan-out scaling: the same S=8 query batch across
+    //      T ∈ {1, 2, 4, 8} lanes, persistent pool vs scoped respawn.
+    //      Answers are byte-identical at every point (the fan-out merges
+    //      per-sample buffers in sample order); only wall-clock moves. ----
+    println!();
+    let fan_s = 8usize;
+    let (x, samples) = problem(q, k, d, fan_s);
+    let mut mrng = Pcg64::new(3);
+    let mask = Mask::random(q, d, 0.3, &mut mrng);
+    let mut t_results: Vec<(usize, f64, f64)> = Vec::new();
+    for &t in &[1usize, 2, 4, 8] {
+        let rate_for = |label: &str, ctx: ParallelCtx| {
+            let engine = PredictEngine::with_ctx(&samples, sweeps, ctx);
+            let r = bench(&format!("{label} batch S={fan_s} T={t}"), 1, budget, 3, || {
+                let _ = engine.impute(&x, &mask, 7);
+                let _ = engine.heldout_loglik(&x, 7);
+                let _ = engine.reconstruct(&x, 7);
+            });
+            let rate = (3 * q) as f64 / r.per_iter.mean;
+            println!("{}  [{rate:.1} rows/s]", r.row());
+            rate
+        };
+        let pooled = rate_for("pooled ", ParallelCtx::pooled(t));
+        let scoped = rate_for("scoped ", ParallelCtx::scoped(t));
+        println!("        pool/respawn at T={t}: {:.3}×", pooled / scoped);
+        t_results.push((t, pooled, scoped));
+    }
+
     // machine-readable trajectory point for the perf log
     let entries: Vec<String> = results
         .iter()
@@ -99,11 +128,24 @@ fn main() {
             )
         })
         .collect();
+    let t_entries: Vec<String> = t_results
+        .iter()
+        .map(|(t, pooled, scoped)| {
+            format!(
+                "    {{\"threads\": {t}, \"pooled_rows_per_s\": {pooled:.1}, \
+                 \"scoped_rows_per_s\": {scoped:.1}, \
+                 \"pooled_over_scoped\": {:.4}}}",
+                pooled / scoped
+            )
+        })
+        .collect();
     let json = format!(
         "{{\n  \"bench\": \"predict_throughput\",\n  \"rows\": {q},\n  \
          \"k\": {k},\n  \"d\": {d},\n  \"sweeps\": {sweeps},\n  \
-         \"results\": [\n{}\n  ]\n}}\n",
-        entries.join(",\n")
+         \"results\": [\n{}\n  ],\n  \"fanout_samples\": {fan_s},\n  \
+         \"thread_results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n"),
+        t_entries.join(",\n")
     );
     // cargo runs bench binaries with cwd = the package dir (rust/), so
     // anchor the output at the workspace root where CI expects it

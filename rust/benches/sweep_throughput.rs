@@ -11,7 +11,7 @@ use pibp::bench::{bench, header, human_time};
 use pibp::linalg::Mat;
 use pibp::model::state::FeatureState;
 use pibp::model::LinGauss;
-use pibp::parallel::{par_sweep_rows, ExecConfig, DEFAULT_BLOCK_ROWS};
+use pibp::parallel::{par_sweep_rows, ExecConfig, ParallelCtx, DEFAULT_BLOCK_ROWS};
 use pibp::rng::Pcg64;
 use pibp::runtime::{Engine, Ops};
 use pibp::samplers::collapsed::{CollapsedGibbs, Mode};
@@ -68,31 +68,46 @@ fn main() {
         }
     }
 
-    // ---- intra-worker thread scaling: the same sweep through the
-    //      deterministic executor, T ∈ {1, 2, 4, 8} (identical chains —
-    //      only wall-clock moves; rates flatten past the physical cores) ----
+    // ---- intra-worker thread scaling: the same sweep through the two
+    //      deterministic schedulers, T ∈ {1, 2, 4, 8} — persistent pool
+    //      (production) vs scoped respawn (PR-2 behaviour). Identical
+    //      chains; only wall-clock moves. The pooled/scoped ratio is the
+    //      respawn overhead the pool eliminates. ----
     println!();
     let (tb, tk) = (1024usize, 16usize);
-    let mut t_results: Vec<(usize, f64)> = Vec::new();
+    let mut t_results: Vec<(usize, f64, f64)> = Vec::new();
     for &t in &[1usize, 2, 4, 8] {
-        let (x, z0, a, logit) = problem(tb, tk, d);
-        let mut z = z0.clone();
-        let mut rng = Pcg64::new(4).split(1000);
-        let mut resid = residuals(&x, &z, &a, 0..tb);
-        let exec = ExecConfig::with_threads(t);
-        let r = bench(&format!("par     sweep b={tb} k={tk} T={t}"), 1, budget, 5, || {
-            par_sweep_rows(&mut z, &mut resid, &a, &logit, 2.0, 0..tb, tk,
-                           &exec, &mut rng);
-        });
-        let rate = tb as f64 / r.per_iter.mean;
-        println!("{}  [{} rows/s]", r.row(), fmt_rate(rate));
-        t_results.push((t, rate));
+        let rate_for = |label: &str, ctx: ParallelCtx| {
+            let (x, z0, a, logit) = problem(tb, tk, d);
+            let mut z = z0.clone();
+            let mut rng = Pcg64::new(4).split(1000);
+            let mut resid = residuals(&x, &z, &a, 0..tb);
+            let exec = ExecConfig::with_ctx(ctx);
+            let r = bench(&format!("{label} sweep b={tb} k={tk} T={t}"), 1,
+                          budget, 5, || {
+                par_sweep_rows(&mut z, &mut resid, &a, &logit, 2.0, 0..tb, tk,
+                               &exec, &mut rng);
+            });
+            let rate = tb as f64 / r.per_iter.mean;
+            println!("{}  [{} rows/s]", r.row(), fmt_rate(rate));
+            rate
+        };
+        let pooled = rate_for("pooled ", ParallelCtx::pooled(t));
+        let scoped = rate_for("scoped ", ParallelCtx::scoped(t));
+        println!("        pool/respawn at T={t}: {:.3}×", pooled / scoped);
+        t_results.push((t, pooled, scoped));
     }
-    // machine-readable trajectory point (rows/sec per T) for the perf log
+    // machine-readable trajectory point (rows/sec per T, both schedulers
+    // + the pool-vs-respawn delta) for the perf log
     let entries: Vec<String> = t_results
         .iter()
-        .map(|(t, rate)| {
-            format!("    {{\"threads\": {t}, \"rows_per_s\": {rate:.1}}}")
+        .map(|(t, pooled, scoped)| {
+            format!(
+                "    {{\"threads\": {t}, \"pooled_rows_per_s\": {pooled:.1}, \
+                 \"scoped_rows_per_s\": {scoped:.1}, \
+                 \"pooled_over_scoped\": {:.4}}}",
+                pooled / scoped
+            )
         })
         .collect();
     let json = format!(
@@ -101,9 +116,14 @@ fn main() {
          \"results\": [\n{}\n  ]\n}}\n",
         entries.join(",\n")
     );
-    match std::fs::write("BENCH_sweep.json", &json) {
-        Ok(()) => println!("\nthread-scaling results → BENCH_sweep.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_sweep.json: {e}"),
+    // cargo runs bench binaries with cwd = the package dir (rust/), so
+    // anchor the output at the workspace root where CI expects it
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_sweep.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nthread-scaling results → {}", out.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", out.display()),
     }
 
     // collapsed sweep for contrast (one full Gibbs iteration over rows)

@@ -205,7 +205,10 @@ impl RunConfig {
             "sampler" => self.sampler = SamplerKind::parse(value)?,
             "backend" => self.backend = Backend::parse(value)?,
             "processors" => self.processors = uint()?,
-            "threads_per_worker" => self.threads_per_worker = uint()?,
+            // clamped, not rejected: T is a pure scheduling knob, so
+            // `--threads 0` from any entry point (JSON, --set, CLI flags)
+            // means "run inline", exactly like T=1 — see crate::parallel
+            "threads_per_worker" => self.threads_per_worker = uint()?.max(1),
             "sub_iters" => self.sub_iters = uint()?,
             "iters" => self.iters = uint()?,
             "seed" => self.seed = value.parse()?,
@@ -241,9 +244,10 @@ impl RunConfig {
         if self.processors == 0 {
             bail!("processors must be ≥ 1");
         }
-        if self.threads_per_worker == 0 {
-            bail!("threads_per_worker must be ≥ 1");
-        }
+        // threads_per_worker needs no validation: `apply` clamps 0 to 1,
+        // and every executor entry point (ParallelCtx / ExecConfig /
+        // ThreadPool constructors) clamps again, so a hand-built 0 simply
+        // runs inline.
         if self.n < self.processors {
             bail!("need at least one row per processor");
         }
@@ -415,9 +419,21 @@ mod tests {
         assert!(c.validate().is_err());
         c.processors = 2000;
         assert!(c.validate().is_err());
-        c = RunConfig::default();
+    }
+
+    #[test]
+    fn threads_zero_clamps_to_inline_everywhere() {
+        // config entry point: --set threads_per_worker=0 / JSON 0 → 1
+        let mut c = RunConfig::default();
+        c.apply("threads_per_worker", "0").unwrap();
+        assert_eq!(c.threads_per_worker, 1);
+        // a hand-built 0 is tolerated by validate (executors clamp too)
         c.threads_per_worker = 0;
-        assert!(c.validate().is_err());
+        assert!(c.validate().is_ok());
+        // executor entry points
+        assert_eq!(crate::parallel::ExecConfig::with_threads(0).threads(), 1);
+        assert_eq!(crate::parallel::ParallelCtx::pooled(0).threads(), 1);
+        assert_eq!(crate::parallel::ThreadPool::new(0).threads(), 1);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::config::{Backend, CommModel};
 use crate::linalg::Mat;
 use crate::model::state::FeatureState;
 use crate::model::{ibp, GlobalParams, LinGauss};
+use crate::parallel::ParallelCtx;
 use crate::rng::Pcg64;
 use crate::runtime::{Engine, Ops};
 use crate::samplers::hybrid::make_shards;
@@ -147,7 +148,15 @@ impl Coordinator {
                 id,
                 n_global: n,
                 sub_iters: cfg.sub_iters,
-                threads: cfg.threads_per_worker.max(1),
+                // each native worker owns a persistent pool for its shard
+                // sweeps, spawned here once and reused for the whole run
+                // (T ≤ 1, including a pathological 0, degrades to inline).
+                // PJRT workers sweep inside the kernel and never touch the
+                // native executor — don't spawn idle pool threads for them.
+                ctx: match cfg.backend {
+                    Backend::Native => ParallelCtx::pooled(cfg.threads_per_worker),
+                    Backend::Pjrt => ParallelCtx::inline(),
+                },
                 kmax_new: cfg.opts.kmax_new,
                 k_cap: cfg.opts.k_cap,
                 seed: cfg.seed,
@@ -221,6 +230,46 @@ impl Coordinator {
         self.last_merged.as_ref()
     }
 
+    /// Receive exactly one message from every worker and decode it —
+    /// the shared gather protocol of [`Self::step`], [`Self::gather_z`]
+    /// and [`Self::snapshot`]. Every failure mode is a contextual `Err`,
+    /// never a panic or a hang: a dead channel, a message from an
+    /// unknown or duplicate worker id, a zero-length frame (the worker
+    /// abort sentinel — a failing worker ships it precisely so this loop
+    /// errors instead of blocking forever at P > 1), and a decode error.
+    fn recv_from_all<T>(
+        &self,
+        what: &str,
+        mut decode: impl FnMut(usize, &[u8]) -> Result<T>,
+    ) -> Result<Vec<T>> {
+        let mut out: Vec<Option<T>> =
+            (0..self.cfg.processors).map(|_| None).collect();
+        for _ in 0..self.cfg.processors {
+            let (id, buf) = self
+                .from_workers
+                .recv()
+                .with_context(|| format!("worker died during {what}"))?;
+            if id >= out.len() {
+                bail!("{what}: message from unknown worker id {id} (P={})",
+                      out.len());
+            }
+            if buf.is_empty() {
+                bail!("{what}: worker {id} aborted with a fatal error \
+                       (see its stderr log)");
+            }
+            if out[id].is_some() {
+                bail!("{what}: duplicate message from worker {id}");
+            }
+            out[id] = Some(decode(id, &buf)?);
+        }
+        out.into_iter()
+            .enumerate()
+            .map(|(p, t)| {
+                t.with_context(|| format!("{what}: no message from worker {p}"))
+            })
+            .collect()
+    }
+
     /// One global iteration.
     pub fn step(&mut self) -> Result<IterRecord> {
         let wall_start = Instant::now();
@@ -250,20 +299,13 @@ impl Coordinator {
             tx.send(msg.clone()).context("worker channel closed")?;
         }
         // ---- gather ----
-        let mut summaries: Vec<Option<Summary>> =
-            (0..self.cfg.processors).map(|_| None).collect();
-        for _ in 0..self.cfg.processors {
-            let (id, buf) = self
-                .from_workers
-                .recv()
-                .context("worker died mid-iteration")?;
-            timing.gather_bytes.push(buf.len());
-            let s = Summary::decode(&buf)?;
-            timing.worker_busy_s[id] = s.busy_s;
-            summaries[id] = Some(s);
-        }
         let summaries: Vec<Summary> =
-            summaries.into_iter().map(Option::unwrap).collect();
+            self.recv_from_all("iteration gather", |id, buf| {
+                timing.gather_bytes.push(buf.len());
+                let s = Summary::decode(buf)?;
+                timing.worker_busy_s[id] = s.busy_s;
+                Ok(s)
+            })?;
 
         // ---- master global step ----
         let mstart = Instant::now();
@@ -443,47 +485,30 @@ impl Coordinator {
     /// keep/promote instruction is applied at the next Run — so the master
     /// applies that same instruction here, using its stored copy of the
     /// promoted tail bits for the new columns.
+    ///
+    /// Every inconsistency (a worker that sent no report, a short or
+    /// mis-shaped report, promoted tail bits that were never stored) is a
+    /// contextual `Err`, never a panic: checkpointing and `pibp predict`
+    /// fail cleanly instead of aborting the process.
     pub fn gather_z(&mut self) -> Result<FeatureState> {
         let msg = ToWorker::SendZ.encode();
         for tx in &self.to_workers {
             tx.send(msg.clone()).context("worker channel closed")?;
         }
-        let mut reports: Vec<Option<ZReport>> =
-            (0..self.cfg.processors).map(|_| None).collect();
-        for _ in 0..self.cfg.processors {
-            let (id, buf) = self.from_workers.recv().context("worker died")?;
-            reports[id] = Some(ZReport::decode(&buf)?);
-        }
-        let k_star = self.next_k_star as usize;
-        let base = self.next_keep.len();
-        let mut global = FeatureState::empty(self.n);
-        global.add_features(base + k_star);
-        let mut row0 = 0usize;
-        for (p, rep) in reports.iter().enumerate() {
-            let z = &rep.as_ref().unwrap().z;
-            for (new_j, &old_j) in self.next_keep.iter().enumerate() {
-                for i in 0..z.n() {
-                    if z.get(i, old_j as usize) == 1 {
-                        global.set(row0 + i, new_j, 1);
-                    }
-                }
-            }
-            if p == self.next_tail_owner as usize && k_star > 0 {
-                let tail = self
-                    .pending_tail_bits
-                    .as_ref()
-                    .expect("tail bits stored at promotion");
-                for i in 0..tail.n() {
-                    for j in 0..k_star {
-                        if tail.get(i, j) == 1 {
-                            global.set(row0 + i, base + j, 1);
-                        }
-                    }
-                }
-            }
-            row0 += self.shard_sizes[p];
-        }
-        Ok(global)
+        let reports: Vec<Option<ZReport>> = self
+            .recv_from_all("Z gather", |_, buf| ZReport::decode(buf))?
+            .into_iter()
+            .map(Some)
+            .collect();
+        assemble_global_z(
+            self.n,
+            &self.shard_sizes,
+            &reports,
+            &self.next_keep,
+            self.next_k_star as usize,
+            self.next_tail_owner as usize,
+            self.pending_tail_bits.as_ref(),
+        )
     }
 
     /// Capture the complete chain state at the current iteration
@@ -499,15 +524,10 @@ impl Coordinator {
         for tx in &self.to_workers {
             tx.send(msg.clone()).context("worker channel closed")?;
         }
-        let mut workers: Vec<Option<WorkerSnapshot>> =
-            (0..self.cfg.processors).map(|_| None).collect();
-        for _ in 0..self.cfg.processors {
-            let (id, buf) = self
-                .from_workers
-                .recv()
-                .context("worker died during snapshot")?;
-            workers[id] = Some(WorkerSnapshot::decode(&buf)?);
-        }
+        let workers: Vec<WorkerSnapshot> =
+            self.recv_from_all("state snapshot", |_, buf| {
+                WorkerSnapshot::decode(buf)
+            })?;
         Ok(CoordinatorSnapshot {
             iter: self.iter as u64,
             master: MasterSnapshot {
@@ -528,7 +548,7 @@ impl Coordinator {
                 clock_iterations: self.clock.iterations as u64,
                 clock_comm_bytes: self.clock.total_comm_bytes as u64,
             },
-            workers: workers.into_iter().map(Option::unwrap).collect(),
+            workers,
         })
     }
 
@@ -611,5 +631,183 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Assemble the global N × (|keep| + k_star) feature matrix from per-shard
+/// Z reports plus the master's pending structural instruction — the pure
+/// core of [`Coordinator::gather_z`], factored out so its failure modes
+/// (missing report, short report, stale keep index, absent tail bits) are
+/// unit-testable without live worker threads.
+fn assemble_global_z(
+    n: usize,
+    shard_sizes: &[usize],
+    reports: &[Option<ZReport>],
+    keep: &[u32],
+    k_star: usize,
+    tail_owner: usize,
+    tail_bits: Option<&FeatureState>,
+) -> Result<FeatureState> {
+    let base = keep.len();
+    let mut global = FeatureState::empty(n);
+    global.add_features(base + k_star);
+    let mut row0 = 0usize;
+    for (p, rep) in reports.iter().enumerate() {
+        let z = &rep
+            .as_ref()
+            .with_context(|| format!("gather_z: worker {p} sent no Z report"))?
+            .z;
+        if z.n() != shard_sizes[p] {
+            bail!(
+                "gather_z: worker {p} reported {} rows, its shard has {}",
+                z.n(),
+                shard_sizes[p]
+            );
+        }
+        for (new_j, &old_j) in keep.iter().enumerate() {
+            if old_j as usize >= z.k() {
+                bail!(
+                    "gather_z: keep instruction references column {old_j} but \
+                     worker {p}'s Z has only {} columns",
+                    z.k()
+                );
+            }
+            for i in 0..z.n() {
+                if z.get(i, old_j as usize) == 1 {
+                    global.set(row0 + i, new_j, 1);
+                }
+            }
+        }
+        if p == tail_owner && k_star > 0 {
+            let tail = tail_bits.with_context(|| {
+                format!(
+                    "gather_z: {k_star} promoted tail feature(s) pending on \
+                     worker {p} but no tail bits were stored at promotion"
+                )
+            })?;
+            if tail.n() != shard_sizes[p] || tail.k() < k_star {
+                bail!(
+                    "gather_z: stored tail bits are {}×{}, want {}×≥{k_star}",
+                    tail.n(),
+                    tail.k(),
+                    shard_sizes[p]
+                );
+            }
+            for i in 0..tail.n() {
+                for j in 0..k_star {
+                    if tail.get(i, j) == 1 {
+                        global.set(row0 + i, base + j, 1);
+                    }
+                }
+            }
+        }
+        row0 += shard_sizes[p];
+    }
+    Ok(global)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(n: usize, k: usize, pattern: &[(usize, usize)]) -> FeatureState {
+        let mut st = FeatureState::empty(n);
+        st.add_features(k);
+        for &(i, j) in pattern {
+            st.set(i, j, 1);
+        }
+        st
+    }
+
+    fn report(worker: u32, z: FeatureState) -> Option<ZReport> {
+        Some(ZReport { worker, z })
+    }
+
+    #[test]
+    fn assemble_reorders_keeps_and_appends_tail() {
+        // two shards of 2 rows; keep = [2, 0] reorders; one promoted tail
+        // column owned by worker 1
+        let reports = vec![
+            report(0, bits(2, 3, &[(0, 0), (1, 2)])),
+            report(1, bits(2, 3, &[(0, 2), (1, 1)])),
+        ];
+        let tail = bits(2, 1, &[(1, 0)]);
+        let z = assemble_global_z(4, &[2, 2], &reports, &[2, 0], 1, 1,
+                                  Some(&tail))
+            .unwrap();
+        assert_eq!(z.k(), 3);
+        // old col 2 → new col 0: rows 1 (shard 0) and 2 (shard 1)
+        assert_eq!(z.get(1, 0), 1);
+        assert_eq!(z.get(2, 0), 1);
+        // old col 0 → new col 1: row 0
+        assert_eq!(z.get(0, 1), 1);
+        // tail bit: local row 1 of shard 1 ⇒ global row 3, col 2
+        assert_eq!(z.get(3, 2), 1);
+        assert_eq!(z.m(), &[2, 1, 1]);
+        assert!(z.check_invariants());
+    }
+
+    #[test]
+    fn assemble_errors_on_missing_report() {
+        let reports = vec![report(0, bits(2, 1, &[(0, 0)])), None];
+        let err = assemble_global_z(4, &[2, 2], &reports, &[0], 0, 0, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("worker 1"), "unexpected error: {err}");
+        assert!(err.contains("no Z report"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn assemble_errors_on_short_report() {
+        // worker 1 reports a 1-row Z for a 2-row shard
+        let reports = vec![
+            report(0, bits(2, 1, &[(0, 0)])),
+            report(1, bits(1, 1, &[(0, 0)])),
+        ];
+        let err = assemble_global_z(4, &[2, 2], &reports, &[0], 0, 0, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("worker 1 reported 1 rows"), "got: {err}");
+    }
+
+    #[test]
+    fn assemble_errors_on_stale_keep_index() {
+        let reports = vec![report(0, bits(2, 1, &[(0, 0)]))];
+        let err = assemble_global_z(2, &[2], &reports, &[3], 0, 0, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("column 3"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn assemble_errors_on_absent_tail_bits() {
+        let reports = vec![report(0, bits(2, 1, &[(0, 0)]))];
+        let err = assemble_global_z(2, &[2], &reports, &[0], 2, 0, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no tail bits were stored"), "got: {err}");
+    }
+
+    #[test]
+    fn assemble_errors_on_misshapen_tail_bits() {
+        let reports = vec![report(0, bits(2, 1, &[(0, 0)]))];
+        let tail = bits(1, 1, &[(0, 0)]); // 1 row, shard has 2
+        let err = assemble_global_z(2, &[2], &reports, &[0], 1, 0, Some(&tail))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stored tail bits"), "got: {err}");
+    }
+
+    #[test]
+    fn assemble_with_no_promotion_ignores_tail_state() {
+        // k_star = 0: tail bits (even stale ones) are irrelevant
+        let reports = vec![report(0, bits(2, 2, &[(0, 1)]))];
+        let stale = bits(2, 4, &[(0, 0)]);
+        let z = assemble_global_z(2, &[2], &reports, &[1, 0], 0, 0,
+                                  Some(&stale))
+            .unwrap();
+        assert_eq!(z.k(), 2);
+        assert_eq!(z.get(0, 0), 1);
+        assert_eq!(z.m(), &[1, 0]);
     }
 }

@@ -11,13 +11,13 @@ use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::Backend;
 use crate::linalg::Mat;
 use crate::model::state::FeatureState;
 use crate::model::LinGauss;
-use crate::parallel::{par_sweep_rows, ExecConfig};
+use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
 use crate::rng::Pcg64;
 use crate::runtime::{Engine, Ops};
 use crate::samplers::tail::TailProposer;
@@ -32,9 +32,11 @@ pub struct WorkerConfig {
     pub id: usize,
     pub n_global: usize,
     pub sub_iters: usize,
-    /// Intra-worker sweep threads T (native backend). Results are
-    /// bit-identical for every value — see [`crate::parallel`].
-    pub threads: usize,
+    /// Intra-worker sweep execution context (native backend): a handle to
+    /// this worker's persistent thread pool, created once at spawn and
+    /// reused by every sweep. Results are bit-identical for every lane
+    /// count and scheduling mode — see [`crate::parallel`].
+    pub ctx: ParallelCtx,
     pub kmax_new: usize,
     pub k_cap: usize,
     pub seed: u64,
@@ -50,9 +52,16 @@ pub fn run_worker(
     rx: Receiver<Vec<u8>>,
     tx: Sender<(usize, Vec<u8>)>,
 ) {
+    let abort_tx = tx.clone();
     if let Err(e) = worker_loop(&cfg, x, rx, tx) {
-        // A worker failing is fatal for the run; surface loudly.
+        // A worker failing is fatal for the run; surface loudly AND tell
+        // the master. At P > 1 the other workers keep the channel open,
+        // so merely dying would leave the master's gather recv blocked
+        // forever — the empty frame below is the abort sentinel every
+        // master recv loop turns into a contextual error (no valid
+        // Summary / ZReport / snapshot encoding is zero-length).
         eprintln!("[pibp worker {}] fatal: {e:#}", cfg.id);
+        abort_tx.send((cfg.id, Vec::new())).ok();
     }
 }
 
@@ -76,6 +85,9 @@ fn worker_loop(
         Backend::Native => None,
     };
     let tr_xx = x.frob2();
+    // one executor for the worker's lifetime: the pool behind cfg.ctx is
+    // spawned once (at coordinator construction) and serves every sweep
+    let exec = ExecConfig::with_ctx(cfg.ctx.clone());
 
     while let Ok(buf) = rx.recv() {
         match ToWorker::decode(&buf)? {
@@ -102,13 +114,15 @@ fn worker_loop(
                 rng = Pcg64::from_state(snap.rng);
                 z = snap.z;
                 last_tail = snap.last_tail;
-                // empty ack keeps the master's recv loop lockstep
-                tx.send((cfg.id, Vec::new())).ok();
+                // one-byte ack keeps the master's recv loop lockstep
+                // (deliberately non-empty: a zero-length frame is the
+                // worker-abort sentinel)
+                tx.send((cfg.id, vec![0xA5])).ok();
             }
             ToWorker::Run(b) => {
                 let summary =
                     run_iteration(cfg, &x, &mut z, &mut last_tail, &b, tr_xx,
-                                  engine.as_ref(), &mut rng)?;
+                                  engine.as_ref(), &exec, &mut rng)?;
                 tx.send((cfg.id, summary.encode())).ok();
             }
         }
@@ -127,12 +141,13 @@ fn run_iteration(
     b: &Broadcast,
     tr_xx: f64,
     engine: Option<&Engine>,
+    exec: &ExecConfig,
     rng: &mut Pcg64,
 ) -> Result<Summary> {
     let me = cfg.id as u32;
     // ---- structural update: global compaction + tail promotion +
     //      demotion of shard-local junk back into p′'s tail ----
-    let tail_init = apply_structure(z, b, me, last_tail.take());
+    let tail_init = apply_structure(z, b, me, last_tail.take())?;
 
     let start = Instant::now();
     let k_plus = z.k();
@@ -152,7 +167,6 @@ fn run_iteration(
     // construction is cheap (no cache until a sweep) — the proposer just
     // carries the tail bits across the L sub-iterations
     let mut tp = TailProposer::new(tail_init, lg);
-    let exec = ExecConfig::with_threads(cfg.threads);
     // native path keeps the residual incrementally; PJRT recomputes it
     // inside the kernel (one MXU matmul per sweep)
     let mut resid = if engine.is_none() && k_plus > 0 {
@@ -171,7 +185,7 @@ fn run_iteration(
                 None => {
                     par_sweep_rows(
                         z, &mut resid, &b.a, &prior_logit, inv2s2,
-                        0..x.rows(), k_plus, &exec, rng,
+                        0..x.rows(), k_plus, exec, rng,
                     );
                 }
             }
@@ -225,18 +239,31 @@ fn run_iteration(
 /// Retain `keep` columns, then append `k_star` promoted columns (bits only
 /// on the previous p′). Demoted columns are dropped from Z; on this
 /// iteration's p′ their bits seed the returned tail state.
+///
+/// A broadcast that is structurally inconsistent with this worker's state
+/// (promotion instruction without stored tail bits, or a tail of the
+/// wrong width) is an `Err`, not a panic: the worker loop surfaces it and
+/// the master's next `recv` reports the dead worker instead of the whole
+/// process aborting.
 fn apply_structure(
     z: &mut FeatureState,
     b: &Broadcast,
     me: u32,
     last_tail: Option<FeatureState>,
-) -> FeatureState {
+) -> Result<FeatureState> {
     // column selection in the previous local space
     let rows = z.n();
     let old = std::mem::replace(z, FeatureState::empty(rows));
     let mut next = FeatureState::empty(rows);
     next.add_features(b.keep.len() + b.k_star as usize);
     for (new_j, &old_j) in b.keep.iter().enumerate() {
+        if old_j as usize >= old.k() {
+            bail!(
+                "worker {me}: broadcast keeps column {old_j} but local Z has \
+                 only {} columns",
+                old.k()
+            );
+        }
         for i in 0..rows {
             if old.get(i, old_j as usize) == 1 {
                 next.set(i, new_j, 1);
@@ -244,8 +271,21 @@ fn apply_structure(
         }
     }
     if b.k_star > 0 && b.tail_owner == me {
-        let tail = last_tail.expect("tail owner must have tail bits");
-        assert_eq!(tail.k(), b.k_star as usize, "tail/k_star mismatch");
+        let Some(tail) = last_tail else {
+            bail!(
+                "worker {me}: broadcast promotes k_star={} tail features but \
+                 this worker holds no tail bits from the previous iteration",
+                b.k_star
+            );
+        };
+        if tail.k() != b.k_star as usize {
+            bail!(
+                "worker {me}: broadcast promotes k_star={} but the stored \
+                 tail has {} features",
+                b.k_star,
+                tail.k()
+            );
+        }
         let base = b.keep.len();
         for i in 0..rows {
             for j in 0..tail.k() {
@@ -262,6 +302,13 @@ fn apply_structure(
     if b.p_prime == me && !b.demote.is_empty() {
         tail_init.add_features(b.demote.len());
         for (tj, &old_j) in b.demote.iter().enumerate() {
+            if old_j as usize >= old.k() {
+                bail!(
+                    "worker {me}: broadcast demotes column {old_j} but local \
+                     Z has only {} columns",
+                    old.k()
+                );
+            }
             for i in 0..rows {
                 if old.get(i, old_j as usize) == 1 {
                     tail_init.set(i, tj, 1);
@@ -279,7 +326,7 @@ fn apply_structure(
         );
     }
     *z = next;
-    tail_init
+    Ok(tail_init)
 }
 
 /// `[Z⁺ | Z*]` as one FeatureState (for suff-stats).
@@ -334,7 +381,7 @@ mod tests {
         let mut z = bits(4, &[(0, 0), (1, 1), (2, 2), (3, 1)]);
         let mut b = bcast(vec![0, 2], 0, 9);
         b.demote = vec![1];
-        let tail = apply_structure(&mut z, &b, 0, None);
+        let tail = apply_structure(&mut z, &b, 0, None).unwrap();
         assert_eq!(z.k(), 2);
         assert_eq!(z.get(0, 0), 1);
         assert_eq!(z.get(2, 1), 1);
@@ -351,7 +398,7 @@ mod tests {
         let mut b = bcast(vec![0], 0, 9);
         b.demote = vec![1];
         b.p_prime = 2;
-        let tail = apply_structure(&mut z, &b, 5, None);
+        let tail = apply_structure(&mut z, &b, 5, None).unwrap();
         assert_eq!(z.k(), 1);
         assert_eq!(tail.k(), 0);
     }
@@ -359,7 +406,7 @@ mod tests {
     #[test]
     fn apply_structure_keeps_and_reorders() {
         let mut z = bits(3, &[(0, 0), (1, 1), (2, 2)]);
-        apply_structure(&mut z, &bcast(vec![2, 0], 0, 9), 5, None);
+        apply_structure(&mut z, &bcast(vec![2, 0], 0, 9), 5, None).unwrap();
         assert_eq!(z.k(), 2);
         assert_eq!(z.get(2, 0), 1); // old col 2 → new col 0
         assert_eq!(z.get(0, 1), 1); // old col 0 → new col 1
@@ -371,7 +418,7 @@ mod tests {
     fn apply_structure_promotes_tail_on_owner() {
         let mut z = bits(3, &[(0, 0)]);
         let tail = bits(3, &[(1, 0), (2, 1)]);
-        apply_structure(&mut z, &bcast(vec![0], 2, 7), 7, Some(tail));
+        apply_structure(&mut z, &bcast(vec![0], 2, 7), 7, Some(tail)).unwrap();
         assert_eq!(z.k(), 3);
         assert_eq!(z.get(1, 1), 1);
         assert_eq!(z.get(2, 2), 1);
@@ -381,9 +428,60 @@ mod tests {
     #[test]
     fn apply_structure_zero_columns_on_non_owner() {
         let mut z = bits(3, &[(0, 0)]);
-        apply_structure(&mut z, &bcast(vec![0], 2, 7), 3, None);
+        apply_structure(&mut z, &bcast(vec![0], 2, 7), 3, None).unwrap();
         assert_eq!(z.k(), 3);
         assert_eq!(z.m(), &[1, 0, 0]);
+    }
+
+    #[test]
+    fn worker_aborts_with_empty_sentinel_on_fatal_error() {
+        use std::sync::mpsc::channel;
+        let cfg = WorkerConfig {
+            id: 3,
+            n_global: 4,
+            sub_iters: 1,
+            ctx: ParallelCtx::inline(),
+            kmax_new: 2,
+            k_cap: 8,
+            seed: 0,
+            backend: Backend::Native,
+            artifacts_dir: std::path::PathBuf::from("artifacts"),
+        };
+        let x = Mat::from_fn(4, 3, |i, j| (i + j) as f64);
+        let (to_worker, rx) = channel::<Vec<u8>>();
+        let (tx, from_worker) = channel::<(usize, Vec<u8>)>();
+        let h = std::thread::spawn(move || run_worker(cfg, x, rx, tx));
+        // bytes the wire decoder rejects → worker_loop errors → the
+        // worker must ship the zero-length abort sentinel (so a P > 1
+        // master errors out of its gather instead of hanging) and exit
+        to_worker.send(vec![0xFF, 0xEE, 0xDD]).unwrap();
+        let (id, buf) = from_worker.recv().unwrap();
+        assert_eq!(id, 3);
+        assert!(buf.is_empty(), "abort sentinel must be the empty frame");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn apply_structure_rejects_inconsistent_broadcasts() {
+        // promotion instruction with no stored tail bits → Err, not panic
+        let mut z = bits(3, &[(0, 0)]);
+        let err = apply_structure(&mut z, &bcast(vec![0], 2, 7), 7, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no tail bits"), "unexpected error: {err}");
+        // stored tail of the wrong width → Err
+        let mut z = bits(3, &[(0, 0)]);
+        let tail = bits(3, &[(1, 0)]); // 1 feature, broadcast says 2
+        let err = apply_structure(&mut z, &bcast(vec![0], 2, 7), 7, Some(tail))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("k_star=2"), "unexpected error: {err}");
+        // keep referencing a column the local Z does not have → Err
+        let mut z = bits(3, &[(0, 0)]);
+        let err = apply_structure(&mut z, &bcast(vec![5], 0, 9), 1, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("column 5"), "unexpected error: {err}");
     }
 
     #[test]

@@ -13,9 +13,11 @@
 //! Architecture (see DESIGN.md):
 //! * [`coordinator`] — the parallel runtime (master/worker threads +
 //!   metered channels standing in for MPI).
-//! * [`parallel`] — deterministic intra-worker fork-join executor: each
-//!   worker's row sweep runs as fixed-size blocks on T threads with one
-//!   RNG substream per block, bit-identical for every T.
+//! * [`parallel`] — deterministic fork-join substrate: row sweeps run as
+//!   fixed-size blocks with one RNG substream per block, scheduled onto a
+//!   **persistent thread pool** (spawned once per owner, reused every
+//!   sweep) through a cloneable [`parallel::ParallelCtx`] handle —
+//!   bit-identical for every thread count and scheduling mode.
 //! * [`samplers`] — collapsed / uncollapsed / accelerated baselines and the
 //!   serial hybrid reference.
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas kernels
@@ -26,7 +28,9 @@
 //!   bit-identical to one that never stopped.
 //! * [`serve`] — the posterior as a durable, queryable artifact: a
 //!   thinned sample reservoir plus a batched prediction engine
-//!   (reconstruction / imputation / held-out log-likelihood).
+//!   (reconstruction / imputation / held-out log-likelihood), fanned out
+//!   per posterior sample across the pool with sample-ordered merges —
+//!   byte-identical answers at every thread count.
 //! * substrates: [`rng`], [`linalg`], [`data`], [`model`], [`metrics`],
 //!   [`viz`], [`cli`], [`config`], [`propcheck`], [`bench`].
 

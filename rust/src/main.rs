@@ -62,7 +62,7 @@ fn spec() -> Cli {
                     flag("missing", "fraction of entries hidden for the imputation query", "0.25"),
                     flag("sweeps", "Gibbs sweeps per posterior sample for latent inference", "3"),
                     flag("seed", "query RNG seed (per-sample streams derive from it)", "0"),
-                    flag("threads", "sweep threads for full-row queries (never changes results)", "1"),
+                    flag("threads", "posterior-sample fan-out threads (persistent pool; never changes results)", "1"),
                 ],
             },
             CommandSpec {

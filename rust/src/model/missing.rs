@@ -140,8 +140,9 @@ pub fn reconstruct(x: &Mat, mask: &Mask, z: &FeatureState, a: &Mat) -> Mat {
 /// In-place variant of [`reconstruct`]: overwrites `out` (same shape as
 /// `x`) without allocating, summing active rows of `A` directly instead
 /// of materialising a dense Z and a dense Z·A. The prediction hot loop
-/// (`serve::PredictEngine::impute`) reuses one buffer across all S
-/// posterior samples, so averaging costs O(1) allocations, not O(S).
+/// (`serve::PredictEngine::impute`) writes each fanned-out posterior
+/// sample's reconstruction into that sample's private buffer through
+/// this, so the per-sample cost is one buffer, not a dense Z·A chain.
 pub fn reconstruct_into(out: &mut Mat, x: &Mat, mask: &Mask, z: &FeatureState, a: &Mat) {
     assert_eq!(out.rows(), x.rows(), "reconstruct_into: row mismatch");
     assert_eq!(out.cols(), x.cols(), "reconstruct_into: col mismatch");

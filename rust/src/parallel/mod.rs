@@ -3,24 +3,28 @@
 //! The paper's argument for the P-worker coordinator — rows of Z are
 //! conditionally independent given the instantiated features (π, A) —
 //! applies equally *inside* one worker's uncollapsed sweep. This module
-//! exploits it with zero approximation: a fork-join executor over
-//! [`std::thread::scope`] (the offline image has no rayon) that
+//! exploits it with zero approximation:
 //!
-//! 1. partitions the row range into fixed-size blocks
+//! 1. partition the row range into fixed-size blocks
 //!    ([`BlockPlan`], [`DEFAULT_BLOCK_ROWS`] rows each — the layout
 //!    depends only on the range, never on the thread count);
-//! 2. derives one RNG substream per block with the repo's split
+//! 2. derive one RNG substream per block with the repo's split
 //!    discipline (`worker_rng.split(BLOCK_TAG_BASE + b)`, mirroring the
 //!    coordinator's `root.split(1000 + p)` worker layout);
-//! 3. runs [`sweep_block`] kernels on T threads against disjoint
-//!    `&mut` row slices of Z and the residual matrix;
-//! 4. merges per-block scratch (flip counts, column-count deltas) in
+//! 3. run [`sweep_block`] kernels against disjoint `&mut` row slices of
+//!    Z and the residual matrix, scheduled by a [`ParallelCtx`]: inline,
+//!    on a **persistent thread pool** ([`ThreadPool`], the production
+//!    path — workers are spawned once and reused for every sweep), or on
+//!    per-call scoped threads (the pre-pool behaviour, kept for
+//!    benchmarks and scheduling cross-checks);
+//! 4. merge per-block scratch (flip counts, column-count deltas) in
 //!    block order.
 //!
 //! Because every block's writes and draws are self-contained, the output
-//! is **bit-identical for every T, including T = 1** — which is what lets
-//! the serial hybrid oracle (always T = 1) pin multi-threaded coordinator
-//! runs chain-for-chain (`rust/tests/thread_equivalence.rs`).
+//! is **bit-identical for every thread count and scheduling mode,
+//! including T = 1** — which is what lets the serial hybrid oracle
+//! (always T = 1) pin multi-threaded coordinator runs chain-for-chain
+//! (`rust/tests/thread_equivalence.rs`).
 //!
 //! ## Parent-stream contract
 //!
@@ -33,8 +37,10 @@
 //! the same worker stream) aligned across thread counts.
 
 mod blocks;
+mod pool;
 
 pub use blocks::{BlockPlan, BLOCK_TAG_BASE, DEFAULT_BLOCK_ROWS};
+pub use pool::{ParallelCtx, ThreadPool};
 
 use std::ops::Range;
 
@@ -43,27 +49,38 @@ use crate::model::state::FeatureState;
 use crate::rng::Pcg64;
 use crate::samplers::uncollapsed::sweep_block;
 
-/// Executor knobs. `threads` is a *scheduling* choice only — it never
-/// affects results; `block_rows` is part of the RNG draw-order contract
-/// (changing it changes the chain, like changing the seed would).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Executor knobs. `ctx` is a *scheduling* choice only — it never affects
+/// results; `block_rows` is part of the RNG draw-order contract (changing
+/// it changes the chain, like changing the seed would).
+#[derive(Clone, Debug)]
 pub struct ExecConfig {
-    /// Worker threads T for the fork-join (1 = run inline, no spawns).
-    pub threads: usize,
+    /// How block tasks are scheduled (inline / persistent pool / scoped).
+    pub ctx: ParallelCtx,
     /// Rows per block (fixed; the last block of a range may be ragged).
     pub block_rows: usize,
 }
 
 impl Default for ExecConfig {
     fn default() -> Self {
-        Self { threads: 1, block_rows: DEFAULT_BLOCK_ROWS }
+        Self { ctx: ParallelCtx::inline(), block_rows: DEFAULT_BLOCK_ROWS }
     }
 }
 
 impl ExecConfig {
-    /// Production config: T threads over [`DEFAULT_BLOCK_ROWS`]-row blocks.
+    /// Production config: a persistent pool of `threads` lanes (clamped
+    /// to ≥ 1; 0 and 1 run inline) over [`DEFAULT_BLOCK_ROWS`]-row blocks.
     pub fn with_threads(threads: usize) -> Self {
-        Self { threads: threads.max(1), ..Self::default() }
+        Self { ctx: ParallelCtx::pooled(threads), ..Self::default() }
+    }
+
+    /// Wrap an existing context (e.g. a pool handle shared by the owner).
+    pub fn with_ctx(ctx: ParallelCtx) -> Self {
+        Self { ctx, ..Self::default() }
+    }
+
+    /// Execution lanes the context schedules onto (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.ctx.threads()
     }
 }
 
@@ -87,7 +104,7 @@ impl BlockTask<'_> {
 }
 
 /// One uncollapsed Gibbs sweep of `z[rows]` over columns `0..k_limit`,
-/// executed as fixed-size row blocks on up to `exec.threads` threads.
+/// executed as fixed-size row blocks through `exec.ctx`'s lanes.
 /// `resid` must hold X − Z A on entry for the swept rows and is kept
 /// consistent. Returns the total number of flips.
 ///
@@ -95,7 +112,7 @@ impl BlockTask<'_> {
 /// for the RNG discipline: draws come from per-block substreams
 /// (`rng.split(BLOCK_TAG_BASE + b)` after advancing `rng` once) instead
 /// of the caller's stream directly, so the result is a pure function of
-/// the inputs — independent of `exec.threads`.
+/// the inputs — independent of the context's lane count and mode.
 #[allow(clippy::too_many_arguments)]
 pub fn par_sweep_rows(
     z: &mut FeatureState,
@@ -143,26 +160,12 @@ pub fn par_sweep_rows(
         }
         debug_assert_eq!(tasks.len(), plan.len());
 
-        let t = exec.threads.max(1).min(tasks.len());
-        if t <= 1 {
-            for task in &mut tasks {
-                task.run(stride, d, a, prior_logit, inv2s2, k_limit);
-            }
-        } else {
-            // contiguous chunks of blocks per thread: which thread runs a
-            // block is irrelevant to the output (disjoint writes, private
-            // RNG), so plain chunking is as good as stealing and cheaper.
-            let per = tasks.len().div_ceil(t);
-            std::thread::scope(|s| {
-                for group in tasks.chunks_mut(per) {
-                    s.spawn(move || {
-                        for task in group {
-                            task.run(stride, d, a, prior_logit, inv2s2, k_limit);
-                        }
-                    });
-                }
-            });
-        }
+        // schedule the blocks — inline, persistent pool, or scoped
+        // respawn; which lane runs a block is irrelevant to the output
+        // (disjoint writes, private RNG), so this never changes a bit
+        exec.ctx.run(&mut tasks, |task| {
+            task.run(stride, d, a, prior_logit, inv2s2, k_limit);
+        });
 
         // merge per-block scratch in block order
         for task in &tasks {
@@ -205,18 +208,24 @@ mod tests {
         (x, z, a, logit)
     }
 
-    fn run_once(threads: usize, block_rows: usize, rows: Range<usize>,
-                k_limit: usize, seed: u64)
-                -> (FeatureState, Mat, usize, u64) {
+    fn run_once_ctx(ctx: ParallelCtx, block_rows: usize, rows: Range<usize>,
+                    k_limit: usize, seed: u64)
+                    -> (FeatureState, Mat, usize, u64) {
         let (x, mut z, a, logit) = problem(101, 5, 7, seed);
         let mut resid = residuals(&x, &z, &a, 0..x.rows());
         let mut rng = Pcg64::new(99).split(1000);
-        let exec = ExecConfig { threads, block_rows };
+        let exec = ExecConfig { ctx, block_rows };
         let flips = par_sweep_rows(
             &mut z, &mut resid, &a, &logit, 1.7, rows, k_limit, &exec, &mut rng,
         );
         // the parent stream's post-state is part of the contract
         (z, resid, flips, rng.next_u64())
+    }
+
+    fn run_once(threads: usize, block_rows: usize, rows: Range<usize>,
+                k_limit: usize, seed: u64)
+                -> (FeatureState, Mat, usize, u64) {
+        run_once_ctx(ParallelCtx::pooled(threads), block_rows, rows, k_limit, seed)
     }
 
     #[test]
@@ -236,6 +245,53 @@ mod tests {
     }
 
     #[test]
+    fn pool_scoped_and_inline_schedulers_agree_bitwise() {
+        // same sweep through all three scheduling modes — the persistent
+        // pool must be invisible next to the PR-2 respawn executor and
+        // the serial path
+        let base = run_once_ctx(ParallelCtx::inline(), 16, 0..101, 5, 21);
+        for ctx in [
+            ParallelCtx::pooled(2),
+            ParallelCtx::pooled(4),
+            ParallelCtx::scoped(2),
+            ParallelCtx::scoped(4),
+        ] {
+            let tag = format!("{ctx:?}");
+            let got = run_once_ctx(ctx, 16, 0..101, 5, 21);
+            assert_eq!(got.0, base.0, "Z diverged under {tag}");
+            assert!(got.1.max_abs_diff(&base.1) == 0.0, "resid diverged under {tag}");
+            assert_eq!(got.2, base.2, "flips diverged under {tag}");
+            assert_eq!(got.3, base.3, "parent RNG diverged under {tag}");
+        }
+        assert!(base.2 > 0, "sweep never flipped a bit");
+    }
+
+    #[test]
+    fn one_pool_serves_many_sweeps() {
+        // the persistent pool is reused across sweep calls (the whole
+        // point); repeated sweeps must match a fresh-context replay
+        let (x, mut z, a, logit) = problem(67, 4, 9, 8);
+        let mut resid = residuals(&x, &z, &a, 0..67);
+        let mut rng = Pcg64::new(5).split(1002);
+        let exec = ExecConfig::with_threads(4);
+        for _ in 0..5 {
+            par_sweep_rows(&mut z, &mut resid, &a, &logit, 2.0, 0..67, 4,
+                           &exec, &mut rng);
+        }
+        let (x2, mut z2, a2, logit2) = problem(67, 4, 9, 8);
+        let mut resid2 = residuals(&x2, &z2, &a2, 0..67);
+        let mut rng2 = Pcg64::new(5).split(1002);
+        for _ in 0..5 {
+            // fresh single-use context per sweep — same bits
+            let exec1 = ExecConfig::with_threads(2);
+            par_sweep_rows(&mut z2, &mut resid2, &a2, &logit2, 2.0, 0..67, 4,
+                           &exec1, &mut rng2);
+        }
+        assert_eq!(z, z2);
+        assert!(resid.max_abs_diff(&resid2) == 0.0);
+    }
+
+    #[test]
     fn sub_ranges_only_touch_their_rows() {
         let full = run_once(3, 8, 20..60, 5, 4);
         let (x, z0, a, _) = problem(101, 5, 7, 4);
@@ -252,7 +308,7 @@ mod tests {
         let (x, mut z, a, logit) = problem(67, 4, 9, 8);
         let mut resid = residuals(&x, &z, &a, 0..67);
         let mut rng = Pcg64::new(5).split(1002);
-        let exec = ExecConfig { threads: 4, block_rows: 8 };
+        let exec = ExecConfig { ctx: ParallelCtx::pooled(4), block_rows: 8 };
         for _ in 0..3 {
             par_sweep_rows(&mut z, &mut resid, &a, &logit, 2.0, 0..67, 4,
                            &exec, &mut rng);

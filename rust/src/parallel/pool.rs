@@ -1,0 +1,478 @@
+//! Persistent deterministic thread pool + the [`ParallelCtx`] handle.
+//!
+//! PR 2's executor re-spawned `std::thread::scope` threads on **every**
+//! sweep call — measurable overhead once shards exceed ~10⁵ rows (tens of
+//! µs of spawn/join per sub-iteration, × L × iterations). This module
+//! replaces the respawn with T long-lived workers created once and reused
+//! for every fork-join until the owner drops the handle.
+//!
+//! Determinism is unaffected by construction: the executor's contract
+//! (`crate::parallel` module docs) puts all RNG and merge ordering in the
+//! *task structure* (fixed blocks, per-block substreams, index-ordered
+//! merges), never in the schedule. Which thread runs a task — a pooled
+//! worker, a freshly scoped thread, or the caller inline — cannot change a
+//! bit of output. That is what lets the pool be adopted with zero change
+//! to any chain, checkpoint, or serving result.
+//!
+//! ## Channel protocol
+//!
+//! Each pool worker owns one `std::sync::mpsc` channel of erased closures:
+//!
+//! ```text
+//! caller                               worker w (×(T−1), long-lived)
+//!   │  split work into ≤ T chunks        │
+//!   │  Job = closure + completion latch  │
+//!   ├── senders[w].send(Job) ──────────► │  recv() → catch_unwind(job)
+//!   │  (chunk 0 runs on the caller)      │  → latch.done()
+//!   │  latch.wait() ◄──────────────────── (last done() notifies)
+//!   │  re-raise any task panic           │  recv() blocks for next call
+//!   ▼                                    ▼
+//! return                              channel dropped ⇒ worker exits
+//! ```
+//!
+//! The caller always executes the first chunk itself (T threads of work
+//! from T−1 spawned workers + itself) and **blocks on the latch before
+//! returning**. That wait is the soundness argument for lending the
+//! workers non-`'static` borrows, exactly as in `std::thread::scope`: no
+//! job can outlive the stack frame that owns the borrowed data. A panic
+//! inside a job is caught (the long-lived worker survives), recorded on
+//! the latch, and re-raised on the caller after every sibling finished.
+//!
+//! [`ParallelCtx`] is the cheap, cloneable handle threaded through
+//! `WorkerConfig` / `HybridConfig` / `ExecConfig`: inline (T = 1), pooled
+//! (persistent workers), or scoped (PR-2 respawn semantics, kept for
+//! pool-vs-respawn benchmarks and as a scheduling cross-check in tests —
+//! all three produce identical bits by the contract above).
+
+use std::any::Any;
+use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of pool work: an erased closure. Jobs handed to the pool are
+/// lifetime-erased to `'static` (see the `SAFETY` note in
+/// [`ThreadPool::run_scoped`]); the latch wait keeps that honest.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fork-join task that may borrow from the caller's stack.
+pub(crate) type Task<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// Countdown latch: the caller waits until every dispatched job has run
+/// (or panicked — the first panic's payload is stashed on the latch and
+/// re-raised verbatim after the join, never swallowed and never left to
+/// kill a long-lived worker).
+struct Latch {
+    remaining: Mutex<usize>,
+    all_done: Condvar,
+    /// First panic payload from a pooled job, resumed on the caller so
+    /// the original message/file/line survive (as they would under
+    /// scoped or inline execution).
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Self {
+            remaining: Mutex::new(count),
+            all_done: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+
+    fn done(&self) {
+        let mut r = self.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        *r -= 1;
+        if *r == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        while *r > 0 {
+            r = self.all_done.wait(r).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// T − 1 long-lived worker threads plus the caller: a persistent
+/// fork-join arena. Dropping the pool disconnects the channels and joins
+/// every worker.
+pub struct ThreadPool {
+    /// One SPSC job channel per worker. Guarded so the pool handle is
+    /// `Sync` (`mpsc::Sender` is `Send` but not `Sync`); dispatch holds
+    /// the lock only while pushing the ≤ T−1 jobs of one fork-join.
+    senders: Mutex<Vec<Sender<Job>>>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool of `threads.max(1)` total execution lanes
+    /// (`threads − 1` OS threads; the caller is the last lane). If the OS
+    /// refuses a spawn, the pool degrades to the lanes it got — results
+    /// are identical at any width, so this only costs wall-clock.
+    pub fn new(threads: usize) -> Self {
+        let want = threads.max(1);
+        let mut senders = Vec::with_capacity(want.saturating_sub(1));
+        let mut handles = Vec::with_capacity(want.saturating_sub(1));
+        for w in 0..want - 1 {
+            let (tx, rx) = channel::<Job>();
+            match std::thread::Builder::new()
+                .name(format!("pibp-pool-{w}"))
+                .spawn(move || {
+                    // jobs carry their own unwind guard; recv Err = pool drop
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                }) {
+                Ok(h) => {
+                    senders.push(tx);
+                    handles.push(h);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[pibp pool] could not spawn worker {w} ({e}); \
+                         continuing with {} lanes",
+                        senders.len() + 1
+                    );
+                    break;
+                }
+            }
+        }
+        let threads = senders.len() + 1;
+        Self { senders: Mutex::new(senders), handles, threads }
+    }
+
+    /// Total execution lanes (spawned workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `tasks` to completion across the pool, returning only after
+    /// every task finished. Tasks may borrow from the caller's stack; a
+    /// panic in any task is re-raised here once all siblings are done.
+    pub(crate) fn run_scoped<'env>(&self, tasks: Vec<Task<'env>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let mut it = tasks.into_iter();
+        let first = it.next().expect("n >= 1");
+        if n == 1 || self.threads <= 1 {
+            first();
+            for task in it {
+                task();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(n - 1));
+        {
+            let senders = self.senders.lock().unwrap_or_else(|e| e.into_inner());
+            for (w, task) in it.enumerate() {
+                let latch = Arc::clone(&latch);
+                let job: Task<'_> = Box::new(move || {
+                    if let Err(payload) = catch_unwind(AssertUnwindSafe(task)) {
+                        let mut slot =
+                            latch.panic.lock().unwrap_or_else(|e| e.into_inner());
+                        slot.get_or_insert(payload);
+                    }
+                    latch.done();
+                });
+                // SAFETY: `job` borrows only data outliving this call
+                // (`'env`) plus the Arc'd latch. `latch.wait()` below does
+                // not return until the job has run to completion (`done`
+                // fires even on panic, via the catch_unwind above), so no
+                // borrow escapes this stack frame — the same argument that
+                // makes `std::thread::scope` sound, with the latch playing
+                // the role of the scope join.
+                let job: Job = unsafe { std::mem::transmute::<Task<'_>, Task<'static>>(job) };
+                if let Err(back) = senders[w % senders.len()].send(job) {
+                    // worker gone (cannot normally happen before drop):
+                    // run the job inline — it still counts down the latch
+                    (back.0)();
+                }
+            }
+        }
+        let caller = catch_unwind(AssertUnwindSafe(first));
+        latch.wait();
+        // caller-chunk panic wins (its payload is already unwinding this
+        // stack); otherwise re-raise the first pooled payload verbatim
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        let pooled_panic =
+            latch.panic.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(payload) = pooled_panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // disconnect every channel → workers' recv() errors → they exit
+        self.senders.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ThreadPool({} lanes)", self.threads)
+    }
+}
+
+/// How fork-join work is scheduled. Purely a wall-clock choice: every
+/// mode produces bit-identical results (the executor contract keeps all
+/// RNG and merge order in the task structure, not the schedule).
+#[derive(Clone)]
+enum CtxInner {
+    /// Run tasks sequentially on the caller (T = 1).
+    Inline,
+    /// Persistent workers, created once, reused every call.
+    Pool(Arc<ThreadPool>),
+    /// PR-2 semantics: fresh `std::thread::scope` threads per call. Kept
+    /// for pool-vs-respawn benchmarks and scheduling cross-checks.
+    Scoped(usize),
+}
+
+/// Cheap, cloneable handle to an execution strategy — the object threaded
+/// through `WorkerConfig` / `HybridConfig` / `ExecConfig` so every sweep
+/// site (coordinator worker, serial oracle, held-out evaluator, posterior
+/// serving) shares one persistent-pool substrate.
+///
+/// All constructors clamp `threads ≤ 1` (including 0) to inline
+/// execution, so a `--threads 0` arriving from any entry point degrades
+/// to the serial path instead of panicking or dividing by zero.
+#[derive(Clone)]
+pub struct ParallelCtx(CtxInner);
+
+impl ParallelCtx {
+    /// Sequential execution on the caller's thread.
+    pub fn inline() -> Self {
+        Self(CtxInner::Inline)
+    }
+
+    /// A persistent pool of `threads` lanes (`threads ≤ 1` ⇒ inline; the
+    /// pool spawns `threads − 1` OS threads and lives until the last
+    /// clone of this handle drops).
+    pub fn pooled(threads: usize) -> Self {
+        if threads <= 1 {
+            Self(CtxInner::Inline)
+        } else {
+            Self(CtxInner::Pool(Arc::new(ThreadPool::new(threads))))
+        }
+    }
+
+    /// Fresh scoped threads on every call (the PR-2 respawn behaviour;
+    /// `threads ≤ 1` ⇒ inline). Same bits, more spawn/join overhead —
+    /// benchmarked against the pool in `benches/sweep_throughput.rs`.
+    pub fn scoped(threads: usize) -> Self {
+        if threads <= 1 {
+            Self(CtxInner::Inline)
+        } else {
+            Self(CtxInner::Scoped(threads))
+        }
+    }
+
+    /// Execution lanes this context schedules onto (≥ 1).
+    pub fn threads(&self) -> usize {
+        match &self.0 {
+            CtxInner::Inline => 1,
+            CtxInner::Pool(p) => p.threads(),
+            CtxInner::Scoped(t) => *t,
+        }
+    }
+
+    /// True when this context owns a persistent pool.
+    pub fn is_pooled(&self) -> bool {
+        matches!(self.0, CtxInner::Pool(_))
+    }
+
+    /// Run `f` once per item, scheduling contiguous chunks of `items`
+    /// across the context's lanes and returning when all are done.
+    ///
+    /// The chunk layout depends only on `items.len()` and the lane count
+    /// of this context — and since `f` must be deterministic per item
+    /// (all our tasks are: private RNG, disjoint writes), the overall
+    /// effect is a pure function of `items`, independent of scheduling
+    /// mode and completion order.
+    pub fn run<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(&mut T) + Sync,
+    {
+        let t = self.threads().min(items.len()).max(1);
+        if t <= 1 {
+            for item in items.iter_mut() {
+                f(item);
+            }
+            return;
+        }
+        let per = items.len().div_ceil(t);
+        match &self.0 {
+            // Inline reports threads() == 1, so it always took the
+            // sequential early return above
+            CtxInner::Inline => unreachable!("inline context has one lane"),
+            CtxInner::Pool(pool) => {
+                let f = &f;
+                let tasks: Vec<Task<'_>> = items
+                    .chunks_mut(per)
+                    .map(|chunk| {
+                        Box::new(move || {
+                            for item in chunk {
+                                f(item);
+                            }
+                        }) as Task<'_>
+                    })
+                    .collect();
+                pool.run_scoped(tasks);
+            }
+            CtxInner::Scoped(_) => {
+                let f = &f;
+                std::thread::scope(|s| {
+                    for chunk in items.chunks_mut(per) {
+                        s.spawn(move || {
+                            for item in chunk {
+                                f(item);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+    }
+}
+
+impl fmt::Debug for ParallelCtx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.0 {
+            CtxInner::Inline => write!(f, "ParallelCtx::Inline"),
+            CtxInner::Pool(p) => write!(f, "ParallelCtx::Pool({} lanes)", p.threads()),
+            CtxInner::Scoped(t) => write!(f, "ParallelCtx::Scoped({t})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// A deterministic per-item computation with real work in it.
+    fn work(seed: &mut (u64, u64)) {
+        let mut rng = Pcg64::new(seed.0);
+        let mut acc = 0u64;
+        for _ in 0..50 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        seed.1 = acc;
+    }
+
+    #[test]
+    fn all_modes_produce_identical_results() {
+        let base: Vec<(u64, u64)> = (0..23).map(|i| (i as u64, 0)).collect();
+        let run = |ctx: &ParallelCtx| {
+            let mut items = base.clone();
+            ctx.run(&mut items, work);
+            items
+        };
+        let want = run(&ParallelCtx::inline());
+        assert!(want.iter().all(|&(_, v)| v != 0));
+        for ctx in [
+            ParallelCtx::pooled(2),
+            ParallelCtx::pooled(4),
+            ParallelCtx::pooled(7),
+            ParallelCtx::scoped(3),
+        ] {
+            assert_eq!(run(&ctx), want, "{ctx:?} diverged from inline");
+        }
+    }
+
+    #[test]
+    fn pool_persists_across_many_calls() {
+        let ctx = ParallelCtx::pooled(4);
+        assert!(ctx.is_pooled());
+        for round in 0..100 {
+            let mut items: Vec<(u64, u64)> = (0..5).map(|i| (round + i, 0)).collect();
+            ctx.run(&mut items, work);
+            assert!(items.iter().all(|&(_, v)| v != 0), "round {round}");
+        }
+    }
+
+    #[test]
+    fn zero_and_one_threads_clamp_to_inline() {
+        assert_eq!(ParallelCtx::pooled(0).threads(), 1);
+        assert_eq!(ParallelCtx::pooled(1).threads(), 1);
+        assert_eq!(ParallelCtx::scoped(0).threads(), 1);
+        assert!(!ParallelCtx::pooled(0).is_pooled());
+        assert_eq!(ThreadPool::new(0).threads(), 1);
+        // and an inline-clamped context still runs everything
+        let mut items = vec![(3u64, 0u64); 4];
+        ParallelCtx::pooled(0).run(&mut items, work);
+        assert!(items.iter().all(|&(_, v)| v != 0));
+    }
+
+    #[test]
+    fn more_items_than_lanes_all_complete() {
+        let ctx = ParallelCtx::pooled(3);
+        let mut hits = vec![0u32; 100];
+        ctx.run(&mut hits, |h| *h += 1);
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn empty_and_single_item_are_fine() {
+        let ctx = ParallelCtx::pooled(4);
+        let mut empty: Vec<u32> = vec![];
+        ctx.run(&mut empty, |_| unreachable!());
+        let mut one = vec![7u32];
+        ctx.run(&mut one, |v| *v *= 3);
+        assert_eq!(one, vec![21]);
+    }
+
+    #[test]
+    fn task_panic_is_reraised_and_pool_survives() {
+        let ctx = ParallelCtx::pooled(4);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut items = vec![0u32, 1, 2, 3, 4, 5, 6, 7];
+            ctx.run(&mut items, |v| {
+                if *v == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        let payload = match res {
+            Err(p) => p,
+            Ok(()) => panic!("task panic was swallowed"),
+        };
+        // the ORIGINAL payload must survive the pool (same observability
+        // as scoped/inline execution), not a generic re-panic
+        assert_eq!(payload.downcast_ref::<&str>().copied(), Some("boom"));
+        // the long-lived workers caught the unwind and are still serving
+        let mut items = vec![(1u64, 0u64); 8];
+        ctx.run(&mut items, work);
+        assert!(items.iter().all(|&(_, v)| v != 0));
+    }
+
+    #[test]
+    fn caller_chunk_panic_still_joins_siblings() {
+        // chunk 0 runs on the caller; its panic must not return before the
+        // pooled siblings finish (they borrow `items` from this frame)
+        let ctx = ParallelCtx::pooled(4);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut items = vec![0u32; 8];
+            ctx.run(&mut items, |v| {
+                if *v == 0 {
+                    panic!("caller-side boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+    }
+}

@@ -166,6 +166,9 @@ fn setup_run(cfg: &RunConfig) -> Result<RunSetup> {
         train,
         lg: LinGauss::new(cfg.sigma_x, cfg.sigma_a),
         eval_rng: Pcg64::new(cfg.seed).split(7777),
+        // the evaluator owns its persistent sweep pool for the whole run
+        // (spawned here once, reused by every scheduled evaluation); the
+        // coordinator workers each spawn their own at Coordinator::new
         evaluator: HeldoutEval::new(test.x, cfg.eval_sweeps)
             .with_threads(cfg.threads_per_worker),
         trace,

@@ -12,7 +12,7 @@
 use crate::linalg::Mat;
 use crate::model::state::FeatureState;
 use crate::model::GlobalParams;
-use crate::parallel::{par_sweep_rows, ExecConfig};
+use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
 use crate::rng::Pcg64;
 use crate::samplers::uncollapsed::residuals;
 
@@ -37,10 +37,18 @@ impl HeldoutEval {
         }
     }
 
-    /// Run the held-out sweeps on `threads` threads (same results, less
-    /// wall-clock).
+    /// Run the held-out sweeps on a persistent pool of `threads` lanes
+    /// (same results, less wall-clock; the pool is spawned once here and
+    /// reused by every `evaluate` call — `threads ≤ 1` runs inline).
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.exec.threads = threads.max(1);
+        self.exec = ExecConfig::with_threads(threads);
+        self
+    }
+
+    /// Like [`Self::with_threads`], but scheduling onto a caller-supplied
+    /// context (e.g. a pool shared with other sweep sites).
+    pub fn with_ctx(mut self, ctx: ParallelCtx) -> Self {
+        self.exec = ExecConfig::with_ctx(ctx);
         self
     }
 

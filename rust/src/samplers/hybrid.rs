@@ -50,7 +50,7 @@ use std::ops::Range;
 use crate::linalg::Mat;
 use crate::model::state::FeatureState;
 use crate::model::{ibp, GlobalParams, LinGauss};
-use crate::parallel::{par_sweep_rows, ExecConfig};
+use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
 use crate::rng::Pcg64;
 use crate::samplers::tail::TailProposer;
 use crate::samplers::uncollapsed::residuals;
@@ -67,6 +67,11 @@ pub struct HybridConfig {
     /// [`crate::parallel`]); this only changes how the serial oracle's
     /// simulated workers schedule their blocks.
     pub threads_per_worker: usize,
+    /// Optional pre-built execution context. `None` (the default) builds
+    /// a persistent pool of `threads_per_worker` lanes at construction;
+    /// tests pass e.g. [`ParallelCtx::scoped`] to cross-check scheduling
+    /// modes — the chain is bit-identical either way.
+    pub ctx: Option<ParallelCtx>,
     pub opts: SamplerOptions,
 }
 
@@ -76,6 +81,7 @@ impl Default for HybridConfig {
             processors: 1,
             sub_iters: 5,
             threads_per_worker: 1,
+            ctx: None,
             opts: SamplerOptions::default(),
         }
     }
@@ -130,6 +136,9 @@ pub struct HybridSampler {
     worker_rngs: Vec<Pcg64>,
     /// ‖X‖², fixed for the run (the σ_X conditional's tr XᵀX term).
     tr_xx: f64,
+    /// Persistent executor: the pool (if any) is spawned once here and
+    /// reused by every simulated worker's sweep in every iteration.
+    exec: ExecConfig,
     iter: usize,
 }
 
@@ -162,6 +171,11 @@ impl HybridSampler {
         // conditional sees bit-identical input at any P (a global frob2
         // groups the additions differently and rounds differently).
         let tr_xx = x_shards.iter().fold(0.0f64, |acc, xp| acc + xp.frob2());
+        let exec = ExecConfig::with_ctx(
+            cfg.ctx
+                .clone()
+                .unwrap_or_else(|| ParallelCtx::pooled(cfg.threads_per_worker)),
+        );
         Self {
             x,
             z,
@@ -175,6 +189,7 @@ impl HybridSampler {
             master_rng,
             worker_rngs,
             tr_xx,
+            exec,
             iter: 0,
         }
     }
@@ -194,7 +209,6 @@ impl HybridSampler {
             })
             .collect();
 
-        let exec = ExecConfig::with_threads(self.cfg.threads_per_worker);
         let shard_pp = self.shards[self.p_prime].clone();
         let b = shard_pp.len();
         let carried = self
@@ -213,7 +227,7 @@ impl HybridSampler {
                 if k_plus > 0 {
                     par_sweep_rows(
                         &mut self.z, &mut self.resid, &self.params.a,
-                        &prior_logit, inv2s2, shard, k_plus, &exec,
+                        &prior_logit, inv2s2, shard, k_plus, &self.exec,
                         &mut self.worker_rngs[p],
                     );
                 }
@@ -418,8 +432,8 @@ mod tests {
             HybridConfig {
                 processors: 1,
                 sub_iters: 5,
-                threads_per_worker: 1,
                 opts: SamplerOptions { sample_sigmas: false, ..Default::default() },
+                ..Default::default()
             },
             2,
         );
@@ -460,8 +474,8 @@ mod tests {
                 HybridConfig {
                     processors: p,
                     sub_iters: 5,
-                    threads_per_worker: 1,
                     opts: SamplerOptions { sample_sigmas: false, ..Default::default() },
+                    ..Default::default()
                 },
                 seed,
             );

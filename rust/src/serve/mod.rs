@@ -14,11 +14,13 @@
 //!   stored samples: posterior-mean **reconstruction** of query rows,
 //!   **missing-entry imputation** (reusing `model::missing`), and
 //!   held-out per-row predictive **log-likelihood** (log-mean-exp across
-//!   samples). Per-sample latent inference for fully observed rows runs
-//!   through the deterministic `crate::parallel` executor, so query
-//!   results are bit-identical for every thread count; each sample draws
-//!   from its own derived stream (`Pcg64::new(seed).split(9000 + s)`), so
-//!   they are also independent of sample evaluation order.
+//!   samples). Posterior samples are embarrassingly parallel, so the
+//!   engine fans the **samples** out across a persistent
+//!   [`crate::parallel::ThreadPool`]: sample `s` infers its latents on
+//!   its own derived stream (`Pcg64::new(seed).split(9000 + s)`) into a
+//!   private per-sample buffer, and the buffers are merged in sample
+//!   order — so every query result is byte-identical for every thread
+//!   count and every task completion ("arrival") order.
 //!
 //! This mirrors how Dubey et al. (distributed collapsed BNP) and Zhang et
 //! al. (accelerated non-conjugate sampling) use fitted BNP models: not as
@@ -29,7 +31,7 @@ use crate::linalg::Mat;
 use crate::model::missing::{masked_sweep, reconstruct_into, Mask};
 use crate::model::state::FeatureState;
 use crate::model::LinGauss;
-use crate::parallel::{par_sweep_rows, ExecConfig};
+use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
 use crate::rng::Pcg64;
 use crate::samplers::uncollapsed::residuals;
 
@@ -123,13 +125,26 @@ impl SampleReservoir {
     /// with the same stride-doubling rule until the kept set fits; 0
     /// stops future recording but keeps what was already collected (so
     /// later checkpoints don't lose data).
+    ///
+    /// The stride doubling is capped: if it can no longer thin the kept
+    /// set (pathological iteration values — e.g. duplicate `iter: 0`
+    /// samples, which every stride divides — or a stride about to
+    /// overflow `u64`), the oldest samples are dropped directly instead
+    /// of doubling forever.
     pub fn set_capacity(&mut self, cap: usize) {
         self.cap = cap;
         if cap > 0 {
             while self.samples.len() > cap {
-                self.stride *= 2;
-                let stride = self.stride;
-                self.samples.retain(|t| t.iter % stride == 0);
+                let Some(next) = self.stride.checked_mul(2) else {
+                    // stride exhausted (63 doublings): thinning by
+                    // divisibility cannot shrink this set — keep the
+                    // newest `cap` samples and stop
+                    let excess = self.samples.len() - cap;
+                    self.samples.drain(..excess);
+                    break;
+                };
+                self.stride = next;
+                self.samples.retain(|t| t.iter % next == 0);
             }
         }
     }
@@ -137,16 +152,23 @@ impl SampleReservoir {
     /// Record a sample taken at a `wants`-approved iteration. When the
     /// reservoir is full, every other kept sample is dropped and the
     /// stride doubles — capacity is never exceeded and the kept set stays
-    /// evenly spaced over the whole chain.
+    /// evenly spaced over the whole chain. The doubling is capped exactly
+    /// as in [`Self::set_capacity`].
     pub fn record(&mut self, s: PosteriorSample) {
         if !self.wants(s.iter) {
             return;
         }
         while self.samples.len() >= self.cap {
-            self.stride *= 2;
-            let stride = self.stride;
-            self.samples.retain(|t| t.iter % stride == 0);
-            if s.iter % stride != 0 {
+            let Some(next) = self.stride.checked_mul(2) else {
+                // cannot thin by stride any further — make room by
+                // dropping the oldest kept sample(s)
+                let excess = self.samples.len() + 1 - self.cap;
+                self.samples.drain(..excess);
+                break;
+            };
+            self.stride = next;
+            self.samples.retain(|t| t.iter % next == 0);
+            if s.iter % next != 0 {
                 return;
             }
         }
@@ -175,18 +197,37 @@ pub fn log_mean_exp(vals: &[f64]) -> f64 {
 }
 
 /// Batched prediction over a set of posterior samples.
+///
+/// Queries fan the *samples* out across `threads` lanes of a persistent
+/// pool (samples are embarrassingly parallel); each sample's latent
+/// inference runs serially inside its task on the sample's own derived
+/// stream, and per-sample buffers are merged in sample order. Results are
+/// therefore byte-identical for every `threads` value, scheduling mode,
+/// and task completion order.
 pub struct PredictEngine<'a> {
     samples: &'a [PosteriorSample],
     /// Gibbs sweeps used to infer each query row's latent z per sample.
     sweeps: usize,
-    exec: ExecConfig,
+    /// Per-sample fan-out context (persistent pool when `threads > 1`).
+    ctx: ParallelCtx,
+    /// Within-sample sweep executor: inline — sample-level parallelism
+    /// already saturates the lanes, and nesting pools would oversubscribe.
+    /// Bit-wise this is indistinguishable from any other choice (the
+    /// executor contract makes sweeps T-invariant).
+    sweep_exec: ExecConfig,
 }
 
 impl<'a> PredictEngine<'a> {
-    /// `threads` parallelises the per-sample full-row sweeps through the
-    /// deterministic executor — results are identical for every value.
+    /// `threads` parallelises queries *across posterior samples* through
+    /// a persistent pool — results are identical for every value
+    /// (`threads ≤ 1`, including 0, runs inline).
     pub fn new(samples: &'a [PosteriorSample], sweeps: usize, threads: usize) -> Self {
-        Self { samples, sweeps, exec: ExecConfig::with_threads(threads) }
+        Self::with_ctx(samples, sweeps, ParallelCtx::pooled(threads))
+    }
+
+    /// Like [`Self::new`], but scheduling onto a caller-supplied context.
+    pub fn with_ctx(samples: &'a [PosteriorSample], sweeps: usize, ctx: ParallelCtx) -> Self {
+        Self { samples, sweeps, ctx, sweep_exec: ExecConfig::default() }
     }
 
     pub fn len(&self) -> usize {
@@ -201,12 +242,70 @@ impl<'a> PredictEngine<'a> {
         Pcg64::new(seed).split(QUERY_TAG_BASE + s as u64)
     }
 
+    /// Run `f(s, sample)` for every posterior sample — possibly in
+    /// parallel, each task on its own lane — and return the results
+    /// **indexed by sample**, so downstream merges in sample order are
+    /// independent of which task finished first.
+    fn for_each_sample<R, F>(&self, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, &PosteriorSample) -> R + Sync,
+    {
+        let mut slots: Vec<(usize, Option<R>)> =
+            (0..self.samples.len()).map(|s| (s, None)).collect();
+        self.ctx.run(&mut slots, |slot| {
+            slot.1 = Some(f(slot.0, &self.samples[slot.0]));
+        });
+        slots
+            .into_iter()
+            .map(|(_, r)| r.expect("ctx.run visits every sample slot"))
+            .collect()
+    }
+
+    /// Matrix-valued fan-out with bounded memory: `f(s, sample, out)`
+    /// fills a zeroed per-sample n×d buffer, and buffers are summed into
+    /// the accumulator **in strict sample order** — but samples are
+    /// processed in contiguous waves of at most `ctx.threads()` tasks, so
+    /// peak memory is O(T · n · d), not O(S · n · d), while the addition
+    /// order (and therefore every output byte) is identical to a serial
+    /// sample-by-sample loop.
+    fn accumulate_samples<F>(&self, n: usize, d: usize, f: F) -> Mat
+    where
+        F: Fn(usize, &PosteriorSample, &mut Mat) + Sync,
+    {
+        let mut acc = Mat::zeros(n, d);
+        let wave = self.ctx.threads().max(1);
+        // the T wave buffers are allocated once and reused (re-zeroed)
+        // across waves — O(T) allocations for the whole query, like the
+        // pre-fan-out single reused scratch matrix
+        let mut slots: Vec<(usize, Mat)> = Vec::with_capacity(wave);
+        for start in (0..self.samples.len()).step_by(wave) {
+            let end = (start + wave).min(self.samples.len());
+            slots.truncate(end - start);
+            while slots.len() < end - start {
+                slots.push((0, Mat::zeros(n, d)));
+            }
+            for (i, slot) in slots.iter_mut().enumerate() {
+                slot.0 = start + i;
+                slot.1.as_mut_slice().fill(0.0);
+            }
+            self.ctx.run(&mut slots, |slot| {
+                f(slot.0, &self.samples[slot.0], &mut slot.1);
+            });
+            for (_, part) in &slots {
+                acc.add_assign(part);
+            }
+        }
+        acc
+    }
+
     /// Infer latent assignments for the query rows under one sample.
-    /// `mask: None` means fully observed rows, swept through the PR-2
-    /// parallel executor (bit-identical for every T); `Some(mask)` sweeps
-    /// only over the observed entries (`masked_sweep`, for imputation).
-    /// Both paths share every other piece of the inference setup so they
-    /// cannot drift apart.
+    /// `mask: None` means fully observed rows, swept through the
+    /// deterministic block executor; `Some(mask)` sweeps only over the
+    /// observed entries (`masked_sweep`, for imputation). Both paths share
+    /// every other piece of the inference setup so they cannot drift
+    /// apart. Called from per-sample fan-out tasks, so it takes no `&mut`
+    /// engine state.
     fn infer_z(
         &self,
         ps: &PosteriorSample,
@@ -232,7 +331,7 @@ impl<'a> PredictEngine<'a> {
                     for _ in 0..self.sweeps {
                         par_sweep_rows(
                             &mut z, &mut resid, &ps.a, &logit, inv2s2, 0..n, k,
-                            &self.exec, rng,
+                            &self.sweep_exec, rng,
                         );
                     }
                 }
@@ -242,16 +341,17 @@ impl<'a> PredictEngine<'a> {
     }
 
     /// Posterior-mean denoising reconstruction of fully observed query
-    /// rows: mean over samples of Z_q A.
+    /// rows: mean over samples of Z_q A. Samples fan out in parallel
+    /// waves, each into its own buffer; buffers merge in sample order
+    /// ([`Self::accumulate_samples`] — O(T) live buffers).
     pub fn reconstruct(&self, x: &Mat, seed: u64) -> Mat {
         assert!(!self.samples.is_empty(), "predict: no posterior samples");
         let (n, d) = (x.rows(), x.cols());
-        let mut acc = Mat::zeros(n, d);
-        for (s, ps) in self.samples.iter().enumerate() {
+        let mut acc = self.accumulate_samples(n, d, |s, ps, part| {
             let mut rng = Self::sample_rng(seed, s);
             let z = self.infer_z(ps, x, None, &mut rng);
             for i in 0..n {
-                let row = acc.row_mut(i);
+                let row = part.row_mut(i);
                 for k in 0..ps.k() {
                     if z.get(i, k) == 1 {
                         for (t, &v) in row.iter_mut().zip(ps.a.row(k)) {
@@ -260,42 +360,38 @@ impl<'a> PredictEngine<'a> {
                     }
                 }
             }
-        }
+        });
         acc.scale(1.0 / self.samples.len() as f64);
         acc
     }
 
-    /// Batched missing-entry imputation: for each sample, infer the query
-    /// rows' z from the *observed* entries only (`masked_sweep`), then
-    /// average the per-sample reconstructions. Observed entries pass
-    /// through unchanged; missing entries get the posterior-mean fill.
-    ///
-    /// The hot loop reuses one scratch matrix through
-    /// [`reconstruct_into`], so averaging S samples costs two allocations
-    /// total instead of 2·S.
+    /// Batched missing-entry imputation: for each sample (in parallel
+    /// waves), infer the query rows' z from the *observed* entries only
+    /// (`masked_sweep`) and reconstruct into that sample's private buffer
+    /// ([`reconstruct_into`]); the buffers are averaged in sample order
+    /// ([`Self::accumulate_samples`] — O(T) live buffers). Observed
+    /// entries pass through unchanged; missing entries get the
+    /// posterior-mean fill.
     pub fn impute(&self, x: &Mat, mask: &Mask, seed: u64) -> Mat {
         assert!(!self.samples.is_empty(), "predict: no posterior samples");
         let (n, d) = (x.rows(), x.cols());
-        let mut acc = Mat::zeros(n, d);
-        let mut recon = Mat::zeros(n, d); // reused across all S samples
-        for (s, ps) in self.samples.iter().enumerate() {
+        let mut acc = self.accumulate_samples(n, d, |s, ps, recon| {
             let mut rng = Self::sample_rng(seed, s);
             let z = self.infer_z(ps, x, Some(mask), &mut rng);
-            reconstruct_into(&mut recon, x, mask, &z, &ps.a);
-            acc.add_assign(&recon);
-        }
+            reconstruct_into(recon, x, mask, &z, &ps.a);
+        });
         acc.scale(1.0 / self.samples.len() as f64);
         acc
     }
 
     /// Held-out predictive joint log-likelihood per query row:
     /// `log (1/S) Σ_s P(x_i | z_i^s, A^s, σ^s) P(z_i^s | π^s)` with z_i^s
-    /// inferred per sample from the full row.
+    /// inferred per sample from the full row — samples in parallel, the
+    /// per-row log-mean-exp combining them in sample order.
     pub fn heldout_loglik(&self, x: &Mat, seed: u64) -> HeldoutPredict {
         assert!(!self.samples.is_empty(), "predict: no posterior samples");
         let n = x.rows();
-        let mut per_sample: Vec<Vec<f64>> = Vec::with_capacity(self.samples.len());
-        for (s, ps) in self.samples.iter().enumerate() {
+        let per_sample: Vec<Vec<f64>> = self.for_each_sample(|s, ps| {
             let mut rng = Self::sample_rng(seed, s);
             let z = self.infer_z(ps, x, None, &mut rng);
             let lg = LinGauss::new(ps.sigma_x, ps.sigma_a);
@@ -309,8 +405,8 @@ impl<'a> PredictEngine<'a> {
                 }
                 rows.push(ll);
             }
-            per_sample.push(rows);
-        }
+            rows
+        });
         let mut per_row = Vec::with_capacity(n);
         let mut vals = vec![0.0f64; per_sample.len()];
         for i in 0..n {
@@ -420,6 +516,46 @@ mod tests {
         r.set_capacity(0);
         assert!(!r.wants(16));
         assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn set_capacity_shrink_to_one_and_zero() {
+        // dense reservoir: iters 1..=8 at stride 1
+        let mut r = SampleReservoir::new(8);
+        for iter in 1..=8u64 {
+            r.record(mk_sample(iter));
+        }
+        assert_eq!(r.len(), 8);
+        // shrink to 1: stride doubles 1→2→4→8, survivor is iter 8
+        r.set_capacity(1);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.samples()[0].iter, 8);
+        assert_eq!(r.stride(), 8);
+        // shrink to 0: keeps the collected sample, stops recording
+        r.set_capacity(0);
+        assert_eq!(r.len(), 1);
+        assert!(!r.wants(16));
+        r.record(mk_sample(16));
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn pathological_iters_cannot_overflow_stride() {
+        // iter 0 divides every stride, so the doubling loop alone could
+        // never thin this set — the cap on doubling must kick in instead
+        // of overflowing u64 (shrink path)
+        let mut r = SampleReservoir::from_parts(
+            4,
+            1,
+            vec![mk_sample(0), mk_sample(0), mk_sample(0)],
+        );
+        r.set_capacity(1);
+        assert_eq!(r.len(), 1, "shrink-to-1 did not terminate at capacity");
+        // record path: a full reservoir of iter-0 samples plus another
+        // iter-0 offer must also terminate, at ≤ capacity
+        let mut r = SampleReservoir::from_parts(2, 1, vec![mk_sample(0), mk_sample(0)]);
+        r.record(mk_sample(0));
+        assert!(r.len() <= 2, "record overflowed capacity: {}", r.len());
     }
 
     #[test]

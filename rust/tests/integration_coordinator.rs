@@ -64,8 +64,8 @@ fn parallel_matches_serial_oracle_distributionally() {
         HybridConfig {
             processors: 2,
             sub_iters: 5,
-            threads_per_worker: 1,
             opts: SamplerOptions::default(),
+            ..Default::default()
         },
         4,
     );

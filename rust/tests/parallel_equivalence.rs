@@ -58,8 +58,8 @@ fn p1_coordinator_reproduces_serial_hybrid_chain_exactly() {
         HybridConfig {
             processors: 1,
             sub_iters: 5,
-            threads_per_worker: 1,
             opts: opts_no_demote(),
+            ..Default::default()
         },
         seed,
     );

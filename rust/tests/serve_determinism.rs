@@ -1,0 +1,147 @@
+//! Byte-level determinism of the posterior-serving fan-out.
+//!
+//! `PredictEngine` fans queries out across posterior samples: each sample
+//! infers on its own derived stream (`split(9000 + s)`) into a private
+//! buffer, and buffers merge **in sample order** — never in completion
+//! order. Consequently every query result must be byte-identical
+//!
+//! * for every thread count T (pool widths 1, 2, 4),
+//! * for every scheduling substrate (inline / persistent pool / scoped
+//!   respawn — the latter two shuffle which OS thread finishes first), and
+//! * across repeated runs on the same warm pool (arrival order is
+//!   nondeterministic at the OS level; the answers must not be).
+
+use pibp::linalg::Mat;
+use pibp::model::missing::Mask;
+use pibp::model::state::FeatureState;
+use pibp::parallel::ParallelCtx;
+use pibp::rng::Pcg64;
+use pibp::serve::{PosteriorSample, PredictEngine};
+
+/// Planted model + S jittered posterior samples around its truth.
+fn planted(n: usize, k: usize, d: usize, s_count: usize, seed: u64)
+           -> (Mat, Vec<PosteriorSample>) {
+    let mut rng = Pcg64::new(seed);
+    let mut z = FeatureState::empty(n);
+    z.add_features(k);
+    for i in 0..n {
+        for j in 0..k {
+            if rng.bernoulli(0.5) {
+                z.set(i, j, 1);
+            }
+        }
+    }
+    let a = Mat::from_fn(k, d, |_, _| 2.0 * rng.normal());
+    let mut x = z.to_mat().matmul(&a);
+    for v in x.as_mut_slice().iter_mut() {
+        *v += 0.15 * rng.normal();
+    }
+    let samples = (0..s_count)
+        .map(|s| {
+            let mut a_s = a.clone();
+            for v in a_s.as_mut_slice().iter_mut() {
+                *v += 0.03 * rng.normal();
+            }
+            PosteriorSample {
+                iter: s as u64 + 1,
+                z: z.clone(),
+                a: a_s,
+                pi: vec![0.5; k],
+                sigma_x: 0.2,
+                sigma_a: 1.0,
+                alpha: 1.0,
+            }
+        })
+        .collect();
+    (x, samples)
+}
+
+fn mat_bits(m: &Mat) -> Vec<u64> {
+    m.as_slice().iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn predict_engine_is_byte_identical_for_every_thread_count() {
+    // 7 samples ⇒ ragged chunking at T = 2 and 4; 30 rows of queries
+    let (x, samples) = planted(30, 3, 12, 7, 1);
+    let mut mrng = Pcg64::new(2);
+    let mask = Mask::random(30, 12, 0.3, &mut mrng);
+    let seed = 11u64;
+
+    let base_engine = PredictEngine::new(&samples, 3, 1);
+    let imp = mat_bits(&base_engine.impute(&x, &mask, seed));
+    let rec = mat_bits(&base_engine.reconstruct(&x, seed));
+    let ll = base_engine.heldout_loglik(&x, seed);
+    let ll_bits: Vec<u64> = ll.per_row.iter().map(|v| v.to_bits()).collect();
+
+    for t in [1usize, 2, 4] {
+        let engine = PredictEngine::new(&samples, 3, t);
+        assert_eq!(
+            mat_bits(&engine.impute(&x, &mask, seed)),
+            imp,
+            "imputation bytes diverged at T={t}"
+        );
+        assert_eq!(
+            mat_bits(&engine.reconstruct(&x, seed)),
+            rec,
+            "reconstruction bytes diverged at T={t}"
+        );
+        let got = engine.heldout_loglik(&x, seed);
+        assert_eq!(got.total.to_bits(), ll.total.to_bits(),
+                   "heldout total diverged at T={t}");
+        let got_bits: Vec<u64> = got.per_row.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, ll_bits, "heldout per-row diverged at T={t}");
+    }
+}
+
+#[test]
+fn predict_engine_is_invariant_to_scheduling_and_arrival_order() {
+    let (x, samples) = planted(24, 3, 10, 6, 5);
+    let mut mrng = Pcg64::new(6);
+    let mask = Mask::random(24, 10, 0.25, &mut mrng);
+    let seed = 7u64;
+
+    let inline = PredictEngine::with_ctx(&samples, 3, ParallelCtx::inline());
+    let imp = mat_bits(&inline.impute(&x, &mask, seed));
+    let rec = mat_bits(&inline.reconstruct(&x, seed));
+    let ll_total = inline.heldout_loglik(&x, seed).total.to_bits();
+
+    // one warm pool, queried repeatedly: OS scheduling shuffles which
+    // sample task lands ("arrives") first on every call, yet the merged
+    // bytes must never move — likewise for scoped respawn, whose thread
+    // set is fresh (and differently interleaved) on every call
+    let pooled = PredictEngine::with_ctx(&samples, 3, ParallelCtx::pooled(4));
+    let scoped = PredictEngine::with_ctx(&samples, 3, ParallelCtx::scoped(3));
+    for round in 0..3 {
+        for (name, engine) in [("pooled", &pooled), ("scoped", &scoped)] {
+            assert_eq!(
+                mat_bits(&engine.impute(&x, &mask, seed)),
+                imp,
+                "{name} imputation bytes moved (round {round})"
+            );
+            assert_eq!(
+                mat_bits(&engine.reconstruct(&x, seed)),
+                rec,
+                "{name} reconstruction bytes moved (round {round})"
+            );
+            assert_eq!(
+                engine.heldout_loglik(&x, seed).total.to_bits(),
+                ll_total,
+                "{name} heldout total moved (round {round})"
+            );
+        }
+    }
+}
+
+#[test]
+fn zero_threads_clamps_to_inline_and_matches() {
+    let (x, samples) = planted(12, 2, 8, 3, 9);
+    let seed = 3u64;
+    let t0 = PredictEngine::new(&samples, 2, 0);
+    let t1 = PredictEngine::new(&samples, 2, 1);
+    assert_eq!(
+        mat_bits(&t0.reconstruct(&x, seed)),
+        mat_bits(&t1.reconstruct(&x, seed)),
+        "--threads 0 must behave exactly like inline"
+    );
+}

@@ -7,6 +7,13 @@
 //! hybrid oracle for that P, bit-for-bit, and any two T values must agree
 //! with each other even in configurations the oracle does not model
 //! (demotion on).
+//!
+//! Since the pool refactor the grid also pins **pool vs scoped-respawn**:
+//! coordinator workers schedule their sweeps on persistent
+//! [`pibp::parallel::ThreadPool`]s, while the oracle here is run on the
+//! legacy per-call `std::thread::scope` executor (`ParallelCtx::scoped`).
+//! Chain equality across the whole (P, T) grid is therefore also
+//! bit-exactness of the two scheduling substrates.
 
 use std::path::Path;
 
@@ -15,6 +22,7 @@ use pibp::coordinator::{Coordinator, CoordinatorConfig};
 use pibp::data::cambridge::{generate, CambridgeConfig};
 use pibp::linalg::Mat;
 use pibp::model::LinGauss;
+use pibp::parallel::ParallelCtx;
 use pibp::samplers::hybrid::{HybridConfig, HybridSampler};
 use pibp::samplers::SamplerOptions;
 
@@ -61,7 +69,9 @@ fn pt_grid_reproduces_serial_oracle_chain_exactly() {
     let seed = 17u64;
 
     for p in [1usize, 4] {
-        // ---- reference chain: the serial hybrid oracle for this P ----
+        // ---- reference chain: the serial hybrid oracle for this P,
+        //      deliberately on the legacy scoped-respawn executor so the
+        //      grid below pins pool-vs-scoped bit-exactness too ----
         let mut serial = HybridSampler::new(
             ds.x.clone(),
             LinGauss::new(0.5, 1.0),
@@ -69,8 +79,9 @@ fn pt_grid_reproduces_serial_oracle_chain_exactly() {
             HybridConfig {
                 processors: p,
                 sub_iters: 5,
-                threads_per_worker: 1,
+                ctx: Some(ParallelCtx::scoped(2)),
                 opts: opts_no_demote(),
+                ..Default::default()
             },
             seed,
         );
@@ -88,8 +99,8 @@ fn pt_grid_reproduces_serial_oracle_chain_exactly() {
         }
         assert!(serial.k() > 0, "P={p}: chain never instantiated a feature");
 
-        // ---- every T must reproduce it bit-for-bit ----
-        for t in [1usize, 4] {
+        // ---- every pooled T must reproduce it bit-for-bit ----
+        for t in [1usize, 2, 4] {
             let mut coord =
                 Coordinator::new(&ds.x, coord_cfg(p, t, seed, opts_no_demote()))
                     .unwrap();
@@ -156,8 +167,10 @@ fn thread_count_is_invisible_even_with_demotion_on() {
         (trace, coord.gather_z().unwrap())
     };
     let (trace1, z1) = run(1);
-    let (trace4, z4) = run(4);
-    assert_eq!(trace1, trace4, "T changed the chain under demotion");
-    assert_eq!(z1, z4, "T changed the gathered Z under demotion");
+    for t in [2usize, 4] {
+        let (trace_t, z_t) = run(t);
+        assert_eq!(trace1, trace_t, "T={t} changed the chain under demotion");
+        assert_eq!(z1, z_t, "T={t} changed the gathered Z under demotion");
+    }
     assert!(z1.k() > 0, "chain never instantiated a feature");
 }
