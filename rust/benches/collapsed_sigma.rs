@@ -13,24 +13,9 @@ use pibp::bench::{bench, header};
 use pibp::linalg::Mat;
 use pibp::model::state::FeatureState;
 use pibp::model::{CollapsedCache, LinGauss};
-use pibp::rng::Pcg64;
 
 fn problem(n: usize, k: usize, d: usize) -> (Mat, FeatureState) {
-    let mut rng = Pcg64::new(1);
-    let mut z = FeatureState::empty(n);
-    z.add_features(k);
-    for i in 0..n {
-        for j in 0..k {
-            if rng.bernoulli(0.3) {
-                z.set(i, j, 1);
-            }
-        }
-    }
-    let a = Mat::from_fn(k, d, |_, _| rng.normal());
-    let mut x = z.to_mat().matmul(&a);
-    for v in x.as_mut_slice().iter_mut() {
-        *v += 0.5 * rng.normal();
-    }
+    let (x, z, _) = pibp::testutil::planted_with(n, k, d, 1, 0.3, 1.0, 0.5);
     (x, z)
 }
 

@@ -1,0 +1,113 @@
+//! T-S5 — packed (u64-word, popcount) vs scalar (byte-per-bit) Z
+//! kernels: the gram/suffstat rebuild (`FeatureState::gram` +
+//! `t_matmul`) and the full uncollapsed sweep (`par_sweep_rows`), over
+//! K ∈ {16, 64, 256} and T ∈ {1, 4}. Both kernels produce bit-identical
+//! chains (`rust/tests/packed_equivalence.rs`); this bench records what
+//! the packed layout buys in wall-clock, machine-readably in
+//! `BENCH_pack.json`.
+
+use std::hint::black_box;
+use std::time::Duration;
+
+use pibp::bench::{bench, header};
+use pibp::linalg::Mat;
+use pibp::model::state::{FeatureState, Kernel};
+use pibp::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
+use pibp::rng::Pcg64;
+use pibp::samplers::uncollapsed::residuals;
+use pibp::testutil::planted_with;
+
+fn states(n: usize, k: usize, d: usize) -> (Mat, FeatureState, FeatureState, Mat) {
+    let (x, scalar, a) = planted_with(n, k, d, 1, 0.3, 1.0, 0.5);
+    let mut packed = scalar.clone();
+    packed.set_kernel(Kernel::Packed);
+    (x, scalar, packed, a)
+}
+
+fn main() {
+    let full = std::env::var("PIBP_BENCH_FULL").is_ok();
+    let (n, d) = if full { (4096usize, 36usize) } else { (1024, 36) };
+    let budget = Duration::from_millis(600);
+    println!("## T-S5 — packed vs scalar Z kernels (N={n}, D={d})\n");
+    println!("{}", header());
+
+    let mut entries: Vec<String> = Vec::new();
+    for &k in &[16usize, 64, 256] {
+        let (x, scalar, packed, a) = states(n, k, d);
+
+        // ---- gram + ZᵀX rebuild: the CollapsedCache / master-merge path ----
+        let r_gs = bench(&format!("gram+ztx scalar k={k}"), 1, budget, 5, || {
+            black_box(scalar.gram());
+            black_box(scalar.t_matmul(&x));
+        });
+        println!("{}", r_gs.row());
+        let r_gp = bench(&format!("gram+ztx packed k={k}"), 1, budget, 5, || {
+            black_box(packed.gram());
+            black_box(packed.t_matmul(&x));
+        });
+        println!("{}", r_gp.row());
+        let gram_speedup = r_gs.per_iter.mean / r_gp.per_iter.mean;
+        println!("        packed-over-scalar gram: {gram_speedup:.2}×");
+
+        // ---- full uncollapsed sweep: the worker hot path ----
+        let logit = vec![0.0f64; k];
+        let mut sweeps: Vec<String> = Vec::new();
+        for &t in &[1usize, 4] {
+            let rate = |z0: &FeatureState, kernel: Kernel| {
+                let mut z = z0.clone();
+                let mut resid = residuals(&x, &z, &a, 0..n);
+                let exec = ExecConfig {
+                    ctx: if t <= 1 { ParallelCtx::inline() } else { ParallelCtx::pooled(t) },
+                    kernel,
+                    ..ExecConfig::default()
+                };
+                let mut rng = Pcg64::new(2).split(1000);
+                let r = bench(
+                    &format!("sweep {} k={k} T={t}", kernel.name()),
+                    1,
+                    budget,
+                    5,
+                    || {
+                        par_sweep_rows(
+                            &mut z, &mut resid, &a, &logit, 2.0, 0..n, k, &exec, &mut rng,
+                        );
+                    },
+                );
+                println!("{}", r.row());
+                n as f64 / r.per_iter.mean
+            };
+            let rs = rate(&scalar, Kernel::Scalar);
+            let rp = rate(&packed, Kernel::Packed);
+            println!("        packed-over-scalar sweep T={t}: {:.2}×", rp / rs);
+            sweeps.push(format!(
+                "        {{\"threads\": {t}, \"scalar_rows_per_s\": {rs:.1}, \
+                 \"packed_rows_per_s\": {rp:.1}, \"packed_over_scalar\": {:.4}}}",
+                rp / rs
+            ));
+        }
+
+        entries.push(format!(
+            "    {{\"k\": {k}, \"gram_scalar_us\": {:.3}, \"gram_packed_us\": {:.3}, \
+             \"gram_packed_over_scalar\": {gram_speedup:.4},\n      \"sweeps\": [\n{}\n      ]}}",
+            r_gs.per_iter.mean * 1e6,
+            r_gp.per_iter.mean * 1e6,
+            sweeps.join(",\n")
+        ));
+    }
+
+    // machine-readable packed-over-scalar deltas for the perf trajectory
+    let json = format!(
+        "{{\n  \"bench\": \"packed_gram\",\n  \"n\": {n},\n  \"d\": {d},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    // cargo runs bench binaries with cwd = the package dir (rust/), so
+    // anchor the output at the workspace root where CI expects it
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_pack.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\npacked-kernel deltas → {}", out.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", out.display()),
+    }
+}

@@ -9,6 +9,7 @@
 use pibp::config::{Backend, CommModel};
 use pibp::coordinator::{Coordinator, CoordinatorConfig};
 use pibp::data::cambridge::{generate, CambridgeConfig};
+use pibp::model::state::Kernel;
 use pibp::model::LinGauss;
 use pibp::samplers::SamplerOptions;
 
@@ -30,6 +31,7 @@ fn main() {
             processors: p,
             sub_iters: 5,
             threads_per_worker: 1,
+            kernel: Kernel::Scalar,
             seed: 42,
             lg: LinGauss::new(0.5, 1.0),
             alpha: 1.0,

@@ -19,21 +19,7 @@ use pibp::samplers::uncollapsed::{residuals, sweep_rows};
 use pibp::samplers::SamplerOptions;
 
 fn problem(b: usize, k: usize, d: usize) -> (Mat, FeatureState, Mat, Vec<f64>) {
-    let mut rng = Pcg64::new(1);
-    let mut z = FeatureState::empty(b);
-    z.add_features(k);
-    for i in 0..b {
-        for j in 0..k {
-            if rng.bernoulli(0.3) {
-                z.set(i, j, 1);
-            }
-        }
-    }
-    let a = Mat::from_fn(k, d, |_, _| rng.normal());
-    let mut x = z.to_mat().matmul(&a);
-    for v in x.as_mut_slice().iter_mut() {
-        *v += 0.5 * rng.normal();
-    }
+    let (x, z, a) = pibp::testutil::planted_with(b, k, d, 1, 0.3, 1.0, 0.5);
     (x, z, a, vec![0.0; k])
 }
 

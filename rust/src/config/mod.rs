@@ -9,6 +9,8 @@ use anyhow::{bail, Context, Result};
 
 pub use json::Json;
 
+pub use crate::model::state::Kernel;
+
 /// Which sampler drives the run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SamplerKind {
@@ -103,6 +105,10 @@ pub struct RunConfig {
     /// Intra-worker sweep threads T (deterministic fork-join; identical
     /// chains for every value — see `crate::parallel`).
     pub threads_per_worker: usize,
+    /// Z storage kernel: `scalar` (one byte per bit) or `packed` (u64
+    /// words, popcount gram). Like T, bit-invariant — the chain is
+    /// identical for either value, so resume may switch it freely.
+    pub kernel: Kernel,
     pub sub_iters: usize,
     pub iters: usize,
     pub seed: u64,
@@ -144,6 +150,7 @@ impl Default for RunConfig {
             backend: Backend::Native,
             processors: 1,
             threads_per_worker: 1,
+            kernel: Kernel::Scalar,
             sub_iters: 5,
             iters: 1000,
             seed: 0,
@@ -209,6 +216,7 @@ impl RunConfig {
             // `--threads 0` from any entry point (JSON, --set, CLI flags)
             // means "run inline", exactly like T=1 — see crate::parallel
             "threads_per_worker" => self.threads_per_worker = uint()?.max(1),
+            "kernel" => self.kernel = Kernel::parse(value)?,
             "sub_iters" => self.sub_iters = uint()?,
             "iters" => self.iters = uint()?,
             "seed" => self.seed = value.parse()?,
@@ -280,6 +288,7 @@ impl RunConfig {
         format!(
             "dataset={}\nn={}\nk_true={}\ndim={}\ndata_sigma_x={}\n\
              sampler={}\nbackend={}\nprocessors={}\nthreads_per_worker={}\n\
+             kernel={}\n\
              sub_iters={}\niters={}\nseed={}\nalpha={}\nsigma_x={}\n\
              sigma_a={}\nsample_hypers={}\nheldout_frac={}\neval_every={}\n\
              eval_sweeps={}\nkmax_new={}\nk_cap={}\nartifacts_dir={}\n\
@@ -295,6 +304,7 @@ impl RunConfig {
             self.backend.name(),
             self.processors,
             self.threads_per_worker,
+            self.kernel.name(),
             self.sub_iters,
             self.iters,
             self.seed,
@@ -340,7 +350,9 @@ impl RunConfig {
     /// identity/shape, sampler, backend, P, L, seed, priors, hyper
     /// sampling, held-out split and evaluation schedule, and the tail
     /// proposal caps. Deliberately *excluded*: `threads_per_worker` (T is
-    /// bit-invariant by the `crate::parallel` contract), `iters` (resume
+    /// bit-invariant by the `crate::parallel` contract), `kernel` (packed
+    /// and scalar Z storage produce bit-identical chains, so resume may
+    /// switch reprs), `iters` (resume
     /// extends the horizon), checkpoint/serving knobs, output/artifact
     /// paths, and the comm model (virtual-time accounting only). `pibp
     /// resume` refuses a checkpoint whose fingerprint differs from the
@@ -459,7 +471,9 @@ mod tests {
         c.apply("checkpoint_path", "out/state.pibp").unwrap();
         c.apply("keep_samples", "16").unwrap();
         c.apply("trace_thin", "4").unwrap();
+        c.apply("kernel", "packed").unwrap();
         let back = RunConfig::from_canonical(&c.canonical()).unwrap();
+        assert_eq!(back.kernel, Kernel::Packed);
         assert_eq!(back.processors, 5);
         assert_eq!(back.dataset, "synth");
         assert_eq!(back.seed, 99);
@@ -489,6 +503,8 @@ mod tests {
         c.checkpoint_every = 10;
         c.keep_samples = 32;
         c.out_dir = "elsewhere".into();
+        // the storage kernel is bit-invariant, so resume may switch it
+        c.kernel = Kernel::Packed;
         assert_eq!(c.fingerprint(), base.fingerprint());
         // chain-relevant keys MUST change it
         let mut c = base.clone();

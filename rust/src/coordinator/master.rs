@@ -19,7 +19,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{Backend, CommModel};
 use crate::linalg::Mat;
-use crate::model::state::FeatureState;
+use crate::model::state::{FeatureState, Kernel};
 use crate::model::{ibp, GlobalParams, LinGauss};
 use crate::parallel::ParallelCtx;
 use crate::rng::Pcg64;
@@ -47,6 +47,10 @@ pub struct CoordinatorConfig {
     pub backend: Backend,
     pub artifacts_dir: PathBuf,
     pub comm: CommModel,
+    /// Worker Z storage kernel (scalar bytes / packed u64 words). Like
+    /// `threads_per_worker`, bit-invariant: the chain is identical for
+    /// either value (see `rust/tests/packed_equivalence.rs`).
+    pub kernel: Kernel,
 }
 
 impl Default for CoordinatorConfig {
@@ -62,6 +66,7 @@ impl Default for CoordinatorConfig {
             backend: Backend::Native,
             artifacts_dir: PathBuf::from("artifacts"),
             comm: CommModel::default(),
+            kernel: Kernel::Scalar,
         }
     }
 }
@@ -157,6 +162,7 @@ impl Coordinator {
                     Backend::Native => ParallelCtx::pooled(cfg.threads_per_worker),
                     Backend::Pjrt => ParallelCtx::inline(),
                 },
+                kernel: cfg.kernel,
                 kmax_new: cfg.opts.kmax_new,
                 k_cap: cfg.opts.k_cap,
                 seed: cfg.seed,

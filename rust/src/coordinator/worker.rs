@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Backend;
 use crate::linalg::Mat;
-use crate::model::state::FeatureState;
+use crate::model::state::{FeatureState, Kernel};
 use crate::model::LinGauss;
 use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
 use crate::rng::Pcg64;
@@ -37,6 +37,11 @@ pub struct WorkerConfig {
     /// reused by every sweep. Results are bit-identical for every lane
     /// count and scheduling mode — see [`crate::parallel`].
     pub ctx: ParallelCtx,
+    /// Z storage kernel (scalar bytes / packed u64 words). Bit-invariant:
+    /// the packed sweep and suff-stat kernels mirror the scalar ones
+    /// exactly, and the wire/checkpoint encoding is repr-agnostic, so a
+    /// worker produces the same chain under either value.
+    pub kernel: Kernel,
     pub kmax_new: usize,
     pub k_cap: usize,
     pub seed: u64,
@@ -73,7 +78,7 @@ fn worker_loop(
 ) -> Result<()> {
     let b_rows = x.rows();
     let mut rng = Pcg64::new(cfg.seed).split(1000 + cfg.id as u64);
-    let mut z = FeatureState::empty(b_rows);
+    let mut z = FeatureState::empty_with(b_rows, cfg.kernel);
     // tail bits discovered last iteration, kept until the master's
     // promotion instruction arrives in the next broadcast
     let mut last_tail: Option<FeatureState> = None;
@@ -87,7 +92,7 @@ fn worker_loop(
     let tr_xx = x.frob2();
     // one executor for the worker's lifetime: the pool behind cfg.ctx is
     // spawned once (at coordinator construction) and serves every sweep
-    let exec = ExecConfig::with_ctx(cfg.ctx.clone());
+    let exec = ExecConfig::with_ctx(cfg.ctx.clone()).with_kernel(cfg.kernel);
 
     while let Ok(buf) = rx.recv() {
         match ToWorker::decode(&buf)? {
@@ -113,7 +118,15 @@ fn worker_loop(
                 debug_assert_eq!(snap.z.n(), b_rows, "snapshot shard mismatch");
                 rng = Pcg64::from_state(snap.rng);
                 z = snap.z;
+                // snapshots decode repr-agnostically; adopt this worker's
+                // configured kernel (bit-invariant), so a scalar-written
+                // checkpoint resumes cleanly under the packed kernel and
+                // vice versa
+                z.set_kernel(cfg.kernel);
                 last_tail = snap.last_tail;
+                if let Some(t) = last_tail.as_mut() {
+                    t.set_kernel(cfg.kernel);
+                }
                 // one-byte ack keeps the master's recv loop lockstep
                 // (deliberately non-empty: a zero-length frame is the
                 // worker-abort sentinel)
@@ -210,10 +223,9 @@ fn run_iteration(
     let combined = combine(z, if i_am_p_prime { Some(&tail_carry) } else { None });
     let (ztz, ztx) = match engine {
         Some(eng) => Ops::new(eng).suffstats(&combined, x)?,
-        None => {
-            let zm = combined.to_mat();
-            (zm.gram(), zm.t_matmul(x))
-        }
+        // popcount gram / sparse ZᵀX under the packed kernel — bit-equal
+        // to the dense products the scalar path computes
+        None => (combined.gram(), combined.t_matmul(x)),
     };
     let m_local: Vec<u64> = z.m().iter().map(|&m| m as u64).collect();
     let busy_s = start.elapsed().as_secs_f64();
@@ -251,10 +263,12 @@ fn apply_structure(
     me: u32,
     last_tail: Option<FeatureState>,
 ) -> Result<FeatureState> {
-    // column selection in the previous local space
+    // column selection in the previous local space; the rebuilt state
+    // keeps the worker's storage kernel
     let rows = z.n();
-    let old = std::mem::replace(z, FeatureState::empty(rows));
-    let mut next = FeatureState::empty(rows);
+    let kernel = z.kernel();
+    let old = std::mem::replace(z, FeatureState::empty_with(rows, kernel));
+    let mut next = FeatureState::empty_with(rows, kernel);
     next.add_features(b.keep.len() + b.k_star as usize);
     for (new_j, &old_j) in b.keep.iter().enumerate() {
         if old_j as usize >= old.k() {
@@ -298,7 +312,7 @@ fn apply_structure(
     // demotion: this iteration's p′ harvests the demoted columns' bits
     // into its initial tail; everyone else just dropped them (their local
     // counts are zero — the master only demotes shard-local features).
-    let mut tail_init = FeatureState::empty(rows);
+    let mut tail_init = FeatureState::empty_with(rows, kernel);
     if b.p_prime == me && !b.demote.is_empty() {
         tail_init.add_features(b.demote.len());
         for (tj, &old_j) in b.demote.iter().enumerate() {
@@ -441,6 +455,7 @@ mod tests {
             n_global: 4,
             sub_iters: 1,
             ctx: ParallelCtx::inline(),
+            kernel: Kernel::Scalar,
             kmax_new: 2,
             k_cap: 8,
             seed: 0,

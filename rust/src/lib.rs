@@ -50,4 +50,5 @@ pub mod runner;
 pub mod samplers;
 pub mod serve;
 pub mod snapshot;
+pub mod testutil;
 pub mod viz;

@@ -236,7 +236,9 @@ fn cmd_predict(p: &Parsed) -> Result<()> {
         samples.last().map_or(0, |s| s.iter),
         ckpt.reservoir.stride(),
     );
-    let engine = PredictEngine::new(samples, sweeps, threads);
+    // honour the run's configured Z kernel (bit-invariant; --set
+    // kernel=packed on the original run carries through the checkpoint)
+    let engine = PredictEngine::new(samples, sweeps, threads).with_kernel(cfg.kernel);
 
     // ---- imputation: hide a fraction of entries, fill, score vs truth ----
     let mask = Mask::random(q, d, missing, &mut Pcg64::new(seed).split(4242));

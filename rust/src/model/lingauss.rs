@@ -10,6 +10,7 @@
 //!   flip costs O(K² + KD) instead of a refactorisation.
 
 use crate::linalg::{sm_update, symmetrize, Cholesky, Mat, UCholesky};
+use crate::model::state::FeatureState;
 use crate::rng::Pcg64;
 
 pub const LN_2PI: f64 = 1.837_877_066_409_345_5;
@@ -172,11 +173,24 @@ pub struct RatioEval {
 
 impl CollapsedCache {
     pub fn new(x: &Mat, z: &Mat, ratio: f64) -> Self {
-        let ztz = z.gram();
+        Self::from_stats(z.gram(), z.t_matmul(x), x, ratio)
+    }
+
+    /// Build directly from a [`FeatureState`] — under the packed kernel
+    /// the gram is popcount-over-AND and E = ZᵀX a sparse accumulation,
+    /// both bit-identical to the dense path (integer counts < 2⁵³ and
+    /// identical summation order), so caches built either way agree to
+    /// the last bit. Never densifies Z.
+    pub fn from_state(x: &Mat, z: &FeatureState, ratio: f64) -> Self {
+        Self::from_stats(z.gram(), z.t_matmul(x), x, ratio)
+    }
+
+    /// Shared constructor core: `ztz = ZᵀZ`, `e = ZᵀX` already computed
+    /// by either the dense or the packed kernel.
+    fn from_stats(ztz: Mat, e: Mat, x: &Mat, ratio: f64) -> Self {
         let mut m = ztz.clone();
         m.add_diag(ratio);
         let ch = Cholesky::new(&m).expect("M PD");
-        let e = z.t_matmul(x);
         let g = e.matmul(&e.transpose());
         let minv = ch.inverse();
         let logdet = ch.logdet();
@@ -477,6 +491,12 @@ impl CollapsedCache {
         *self = Self::new(x, z, ratio);
     }
 
+    /// [`Self::refresh`] from a [`FeatureState`] — bit-identical to the
+    /// dense rebuild for either kernel, without densifying Z.
+    pub fn refresh_from_state(&mut self, x: &Mat, z: &FeatureState, ratio: f64) {
+        *self = Self::from_state(x, z, ratio);
+    }
+
     /// Collapsed log P(X | Z) under a *proposal* `lg` whose ridge ratio
     /// r′ differs from the cache's: factorise M′ = ZᵀZ + r′·I from the
     /// **cached** ZᵀZ and take tr(M′⁻¹G) = ‖L′⁻¹E‖²_F from the cached E
@@ -596,15 +616,28 @@ impl CollapsedCache {
     /// refactorisation fails (caller rebuilds from scratch).
     #[must_use]
     pub fn reset_data(&mut self, x: &Mat, z: &Mat) -> bool {
+        debug_assert_eq!(z.cols(), self.k(), "Z changed shape — refresh instead");
+        self.reset_data_with(x, z.t_matmul(x))
+    }
+
+    /// [`Self::reset_data`] from a [`FeatureState`] — the packed E = ZᵀX
+    /// accumulates in the same row order as the dense kernel, so the
+    /// refreshed statistics are bit-identical either way.
+    #[must_use]
+    pub fn reset_data_from_state(&mut self, x: &Mat, z: &FeatureState) -> bool {
+        debug_assert_eq!(z.k(), self.k(), "Z changed shape — refresh instead");
+        self.reset_data_with(x, z.t_matmul(x))
+    }
+
+    fn reset_data_with(&mut self, x: &Mat, e: Mat) -> bool {
         debug_assert_eq!(x.rows(), self.n, "data row count changed");
         debug_assert_eq!(x.cols(), self.d, "data dim changed");
-        debug_assert_eq!(z.cols(), self.k(), "Z changed shape — refresh instead");
         let mut m = self.ztz.clone();
         m.add_diag(self.ratio);
         let Some(ch) = Cholesky::new(&m) else {
             return false;
         };
-        self.e = z.t_matmul(x);
+        self.e = e;
         self.g = self.e.matmul(&self.e.transpose());
         self.tr_xx = x.frob2();
         self.minv = ch.inverse();
@@ -671,17 +704,40 @@ impl CollapsedCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::state::Kernel;
     use crate::rng::Pcg64;
+    use crate::testutil::collapsed_problem as problem;
 
-    fn problem(n: usize, k: usize, d: usize, seed: u64) -> (Mat, Mat, LinGauss) {
-        let mut rng = Pcg64::new(seed);
-        let z = Mat::from_fn(n, k, |_, _| if rng.bernoulli(0.4) { 1.0 } else { 0.0 });
-        let a = Mat::from_fn(k, d, |_, _| rng.normal());
-        let mut x = z.matmul(&a);
-        for v in x.as_mut_slice().iter_mut() {
-            *v += 0.3 * rng.normal();
+    #[test]
+    fn from_state_matches_dense_constructor_bitwise() {
+        let (x, z, lg) = problem(30, 5, 7, 3);
+        let mut st = FeatureState::from_mat(&z);
+        for kernel in [Kernel::Scalar, Kernel::Packed] {
+            st.set_kernel(kernel);
+            let dense = CollapsedCache::new(&x, &z, lg.ratio());
+            let from_st = CollapsedCache::from_state(&x, &st, lg.ratio());
+            assert!(dense.ztz.max_abs_diff(&from_st.ztz) == 0.0, "{kernel:?} ztz");
+            assert!(dense.e.max_abs_diff(&from_st.e) == 0.0, "{kernel:?} e");
+            assert!(dense.g.max_abs_diff(&from_st.g) == 0.0, "{kernel:?} g");
+            assert!(dense.minv.max_abs_diff(&from_st.minv) == 0.0, "{kernel:?} minv");
+            assert_eq!(dense.loglik(&lg).to_bits(), from_st.loglik(&lg).to_bits());
+
+            // and the reset_data path: perturb X, both refresh routes agree
+            let mut x2 = x.clone();
+            for v in x2.as_mut_slice().iter_mut() {
+                *v *= 1.25;
+            }
+            let mut a = dense.clone();
+            let mut b = from_st.clone();
+            assert!(a.reset_data(&x2, &z));
+            assert!(b.reset_data_from_state(&x2, &st));
+            assert!(a.e.max_abs_diff(&b.e) == 0.0, "{kernel:?} reset e");
+            assert_eq!(a.loglik(&lg).to_bits(), b.loglik(&lg).to_bits());
+
+            let mut c = dense.clone();
+            c.refresh_from_state(&x2, &st, lg.ratio());
+            assert!(a.e.max_abs_diff(&c.e) == 0.0, "{kernel:?} refresh e");
         }
-        (x, z, LinGauss::new(0.5, 1.1))
     }
 
     #[test]

@@ -185,24 +185,32 @@ pub fn missing_mse(truth: &Mat, recon: &Mat, mask: &Mask) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::state::Kernel;
+    use crate::testutil::planted;
 
-    fn planted(n: usize, k: usize, d: usize, seed: u64) -> (Mat, FeatureState, Mat) {
-        let mut rng = Pcg64::new(seed);
-        let mut z = FeatureState::empty(n);
-        z.add_features(k);
-        for i in 0..n {
-            for j in 0..k {
-                if rng.bernoulli(0.5) {
-                    z.set(i, j, 1);
-                }
-            }
+    #[test]
+    fn masked_sweep_is_kernel_invariant() {
+        // masked_sweep goes through get/set only — the packed state must
+        // produce the same bits and consume the same RNG stream
+        let (x, _, a) = planted(30, 3, 12, 11);
+        let mut rng = Pcg64::new(12);
+        let mask = Mask::random(30, 12, 0.4, &mut rng);
+        let logit = vec![0.0; 3];
+        let mut runs = vec![];
+        for kernel in [Kernel::Scalar, Kernel::Packed] {
+            let mut z = FeatureState::empty_with(30, kernel);
+            z.add_features(3);
+            let mut rng = Pcg64::new(13);
+            let flips: usize = (0..3)
+                .map(|_| masked_sweep(&x, &mask, &mut z, &a, &logit, 1.0 / 0.02, &mut rng))
+                .sum();
+            runs.push((z, flips, rng.next_u64()));
         }
-        let a = Mat::from_fn(k, d, |_, _| 2.0 * rng.normal());
-        let mut x = z.to_mat().matmul(&a);
-        for v in x.as_mut_slice().iter_mut() {
-            *v += 0.1 * rng.normal();
-        }
-        (x, z, a)
+        assert_eq!(runs[0].0, runs[1].0, "Z diverged across kernels");
+        assert_eq!(runs[0].1, runs[1].1, "flips diverged across kernels");
+        assert_eq!(runs[0].2, runs[1].2, "RNG diverged across kernels");
+        assert!(runs[0].1 > 0);
+        assert!(runs[1].0.is_packed() && runs[1].0.check_invariants());
     }
 
     #[test]

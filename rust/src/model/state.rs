@@ -4,26 +4,110 @@
 //! Every sampler and the coordinator share this representation. Invariant
 //! (property-tested): `m[k] == Σ_n z[n][k]` at all times, and no column
 //! with `m[k] == 0` survives `compact()`.
+//!
+//! Z is binary, so two physical layouts are supported behind one API
+//! ([`Kernel`]): the original one-byte-per-entry rows (`Repr::Bytes`,
+//! stride K) and a bit-packed layout (`Repr::Words`) that packs each
+//! row's K⁺ bits into `⌈K/64⌉` `u64` words. Packed rows make ZᵀZ a
+//! popcount-over-AND, m_k a column popcount, and cut the sweep kernels'
+//! cache traffic ~8×. Both layouts are **bit-equivalent by construction**:
+//! every f64 the samplers consume (gram entries, ZᵀX sums, residual
+//! updates) is accumulated in the same order from the same values, so a
+//! chain run packed is identical to one run scalar — the differential
+//! harness in `rust/tests/packed_equivalence.rs` pins this.
+//!
+//! Packed-layout rules (see docs/ARCHITECTURE.md § Packed Z layout):
+//! * row stride is `words_per_row() = ⌈K/64⌉` words, row-major;
+//! * bits at positions ≥ K in a row's tail word are **always zero**
+//!   (checked by [`FeatureState::check_invariants`]) — growth by
+//!   `add_features` inside the same word count is then just a K bump;
+//! * `compact()` rebuilds rows by gathering kept columns into freshly
+//!   zeroed words, re-establishing the tail invariant.
 
 use crate::linalg::Mat;
 
-#[derive(Clone, Debug, PartialEq)]
+/// Which Z kernel family a component should run: the scalar byte-per-bit
+/// representation (`Scalar`, the default and the oracle in every
+/// differential test) or the bit-packed `u64` representation (`Packed`).
+/// A pure performance knob: chains are bit-identical under either, so it
+/// is excluded from the checkpoint fingerprint like the thread count.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Kernel {
+    #[default]
+    Scalar,
+    Packed,
+}
+
+impl Kernel {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "scalar" => Ok(Kernel::Scalar),
+            "packed" => Ok(Kernel::Packed),
+            other => anyhow::bail!("unknown kernel '{other}' (scalar|packed)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Packed => "packed",
+        }
+    }
+}
+
+/// Physical bit storage. Both variants are row-major; `Bytes` has stride
+/// K (one byte per entry), `Words` has stride `⌈K/64⌉` (64 entries per
+/// word, bit j of word w covering column `64w + j`).
+#[derive(Clone, Debug)]
+enum Repr {
+    Bytes(Vec<u8>),
+    Words(Vec<u64>),
+}
+
+#[derive(Clone, Debug)]
 pub struct FeatureState {
     n: usize,
-    /// Row-major bits: z[n * k_cap + k] — stored flat.
-    z: Vec<u8>,
+    /// Row-major bits in one of the two layouts.
+    repr: Repr,
     /// Active column count.
     k: usize,
     /// Column sums m_k.
     m: Vec<usize>,
 }
 
+/// Words needed for one packed row of `k` columns.
+#[inline]
+fn wpr_for(k: usize) -> usize {
+    k.div_ceil(64)
+}
+
+/// Mask of valid bits in the tail word of a `k`-column packed row
+/// (all-ones when K is a multiple of 64).
+#[inline]
+fn tail_mask(k: usize) -> u64 {
+    if k % 64 == 0 {
+        !0u64
+    } else {
+        (1u64 << (k % 64)) - 1
+    }
+}
+
 impl FeatureState {
     pub fn empty(n: usize) -> Self {
-        Self { n, z: vec![], k: 0, m: vec![] }
+        Self::empty_with(n, Kernel::Scalar)
     }
 
-    /// Build from a dense 0/1 matrix.
+    /// Empty state in the given layout.
+    pub fn empty_with(n: usize, kernel: Kernel) -> Self {
+        let repr = match kernel {
+            Kernel::Scalar => Repr::Bytes(vec![]),
+            Kernel::Packed => Repr::Words(vec![]),
+        };
+        Self { n, repr, k: 0, m: vec![] }
+    }
+
+    /// Build from a dense 0/1 matrix (scalar layout; call
+    /// [`Self::set_kernel`] to pack).
     pub fn from_mat(z: &Mat) -> Self {
         let (n, k) = (z.rows(), z.cols());
         let mut bits = vec![0u8; n * k];
@@ -38,7 +122,55 @@ impl FeatureState {
                 }
             }
         }
-        Self { n, z: bits, k, m }
+        Self { n, repr: Repr::Bytes(bits), k, m }
+    }
+
+    /// Which layout this state currently uses.
+    #[inline]
+    pub fn kernel(&self) -> Kernel {
+        match self.repr {
+            Repr::Bytes(_) => Kernel::Scalar,
+            Repr::Words(_) => Kernel::Packed,
+        }
+    }
+
+    #[inline]
+    pub fn is_packed(&self) -> bool {
+        matches!(self.repr, Repr::Words(_))
+    }
+
+    /// Convert in place to the requested layout (no-op when already
+    /// there). Purely a storage change: the logical Z is untouched, so
+    /// this is safe at any point of a chain — checkpoints restored under
+    /// the other kernel continue bit-identically.
+    pub fn set_kernel(&mut self, kernel: Kernel) {
+        match (&self.repr, kernel) {
+            (Repr::Bytes(_), Kernel::Scalar) | (Repr::Words(_), Kernel::Packed) => {}
+            (Repr::Bytes(bytes), Kernel::Packed) => {
+                let wpr = wpr_for(self.k);
+                let mut words = vec![0u64; self.n * wpr];
+                for i in 0..self.n {
+                    for j in 0..self.k {
+                        if bytes[i * self.k + j] == 1 {
+                            words[i * wpr + j / 64] |= 1u64 << (j % 64);
+                        }
+                    }
+                }
+                self.repr = Repr::Words(words);
+            }
+            (Repr::Words(words), Kernel::Scalar) => {
+                let wpr = wpr_for(self.k);
+                let mut bytes = vec![0u8; self.n * self.k];
+                for i in 0..self.n {
+                    for j in 0..self.k {
+                        if words[i * wpr + j / 64] >> (j % 64) & 1 == 1 {
+                            bytes[i * self.k + j] = 1;
+                        }
+                    }
+                }
+                self.repr = Repr::Bytes(bytes);
+            }
+        }
     }
 
     #[inline]
@@ -51,21 +183,37 @@ impl FeatureState {
         self.k
     }
 
+    /// Packed row stride in words (`⌈K/64⌉`; meaningful for either
+    /// layout — it is what [`Self::rows_words_mut`] slices by).
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        wpr_for(self.k)
+    }
+
     #[inline]
     pub fn get(&self, row: usize, col: usize) -> u8 {
         debug_assert!(row < self.n && col < self.k);
-        self.z[row * self.k + col]
+        match &self.repr {
+            Repr::Bytes(z) => z[row * self.k + col],
+            Repr::Words(w) => {
+                (w[row * wpr_for(self.k) + col / 64] >> (col % 64) & 1) as u8
+            }
+        }
     }
 
     /// Set a bit, keeping `m` consistent.
     pub fn set(&mut self, row: usize, col: usize, v: u8) {
         debug_assert!(v <= 1);
-        let idx = row * self.k + col;
-        let old = self.z[idx];
+        let old = self.get(row, col);
         if old == v {
             return;
         }
-        self.z[idx] = v;
+        match &mut self.repr {
+            Repr::Bytes(z) => z[row * self.k + col] = v,
+            Repr::Words(w) => {
+                w[row * wpr_for(self.k) + col / 64] ^= 1u64 << (col % 64)
+            }
+        }
         if v == 1 {
             self.m[col] += 1;
         } else {
@@ -83,18 +231,53 @@ impl FeatureState {
         (0..self.k).map(|j| self.get(row, j) as f64).collect()
     }
 
+    /// Scalar-layout row view (one byte per entry). Panics on a packed
+    /// state — use [`Self::row_words`] or [`Self::get`] there.
     pub fn row_bits(&self, row: usize) -> &[u8] {
-        &self.z[row * self.k..(row + 1) * self.k]
+        match &self.repr {
+            Repr::Bytes(z) => &z[row * self.k..(row + 1) * self.k],
+            Repr::Words(_) => panic!("row_bits on a packed state"),
+        }
+    }
+
+    /// Packed-layout row view (`words_per_row()` words). Panics on a
+    /// scalar state.
+    pub fn row_words(&self, row: usize) -> &[u64] {
+        match &self.repr {
+            Repr::Words(w) => {
+                let wpr = wpr_for(self.k);
+                &w[row * wpr..(row + 1) * wpr]
+            }
+            Repr::Bytes(_) => panic!("row_words on a scalar state"),
+        }
     }
 
     /// Raw mutable bit access for a contiguous row range (row-major with
     /// stride [`Self::k`]) — the parallel executor's entry point for
-    /// carving disjoint per-block views. The column counts `m` are **not**
-    /// maintained through this view: after mutating, the caller must
-    /// restore the invariant with [`Self::apply_m_delta`].
+    /// carving disjoint per-block views of a **scalar** state (panics on
+    /// packed; see [`Self::rows_words_mut`]). The column counts `m` are
+    /// **not** maintained through this view: after mutating, the caller
+    /// must restore the invariant with [`Self::apply_m_delta`].
     pub fn rows_bits_mut(&mut self, rows: std::ops::Range<usize>) -> &mut [u8] {
         debug_assert!(rows.start <= rows.end && rows.end <= self.n);
-        &mut self.z[rows.start * self.k..rows.end * self.k]
+        match &mut self.repr {
+            Repr::Bytes(z) => &mut z[rows.start * self.k..rows.end * self.k],
+            Repr::Words(_) => panic!("rows_bits_mut on a packed state"),
+        }
+    }
+
+    /// Packed twin of [`Self::rows_bits_mut`]: raw mutable word access
+    /// for a contiguous row range (row-major, stride
+    /// [`Self::words_per_row`]). Callers must keep the tail-word
+    /// invariant (no bits ≥ K) and restore `m` via
+    /// [`Self::apply_m_delta`]. Panics on a scalar state.
+    pub fn rows_words_mut(&mut self, rows: std::ops::Range<usize>) -> &mut [u64] {
+        debug_assert!(rows.start <= rows.end && rows.end <= self.n);
+        let wpr = wpr_for(self.k);
+        match &mut self.repr {
+            Repr::Words(w) => &mut w[rows.start * wpr..rows.end * wpr],
+            Repr::Bytes(_) => panic!("rows_words_mut on a scalar state"),
+        }
     }
 
     /// Fold per-column count changes from raw-bit mutation (see
@@ -118,12 +301,29 @@ impl FeatureState {
             return self.k;
         }
         let new_k = self.k + count;
-        let mut z = vec![0u8; self.n * new_k];
-        for i in 0..self.n {
-            z[i * new_k..i * new_k + self.k]
-                .copy_from_slice(&self.z[i * self.k..(i + 1) * self.k]);
+        match &mut self.repr {
+            Repr::Bytes(z) => {
+                let mut nz = vec![0u8; self.n * new_k];
+                for i in 0..self.n {
+                    nz[i * new_k..i * new_k + self.k]
+                        .copy_from_slice(&z[i * self.k..(i + 1) * self.k]);
+                }
+                *z = nz;
+            }
+            Repr::Words(w) => {
+                let (wpr, new_wpr) = (wpr_for(self.k), wpr_for(new_k));
+                if new_wpr != wpr {
+                    let mut nw = vec![0u64; self.n * new_wpr];
+                    for i in 0..self.n {
+                        nw[i * new_wpr..i * new_wpr + wpr]
+                            .copy_from_slice(&w[i * wpr..(i + 1) * wpr]);
+                    }
+                    *w = nw;
+                }
+                // same word count: the tail invariant means the new
+                // columns' bits are already zero — only K moves
+            }
         }
-        self.z = z;
         let first = self.k;
         self.k = new_k;
         self.m.resize(new_k, 0);
@@ -138,14 +338,34 @@ impl FeatureState {
             return keep;
         }
         let new_k = keep.len();
-        let mut z = vec![0u8; self.n * new_k];
-        for i in 0..self.n {
-            for (jj, &j) in keep.iter().enumerate() {
-                z[i * new_k + jj] = self.z[i * self.k + j];
+        match &mut self.repr {
+            Repr::Bytes(z) => {
+                let mut nz = vec![0u8; self.n * new_k];
+                for i in 0..self.n {
+                    for (jj, &j) in keep.iter().enumerate() {
+                        nz[i * new_k + jj] = z[i * self.k + j];
+                    }
+                }
+                *z = nz;
+            }
+            Repr::Words(w) => {
+                // gather kept columns into freshly zeroed words — the
+                // tail invariant holds by construction
+                let (wpr, new_wpr) = (wpr_for(self.k), wpr_for(new_k));
+                let mut nw = vec![0u64; self.n * new_wpr];
+                for i in 0..self.n {
+                    let row = &w[i * wpr..(i + 1) * wpr];
+                    let nrow = &mut nw[i * new_wpr..(i + 1) * new_wpr];
+                    for (jj, &j) in keep.iter().enumerate() {
+                        if row[j / 64] >> (j % 64) & 1 == 1 {
+                            nrow[jj / 64] |= 1u64 << (jj % 64);
+                        }
+                    }
+                }
+                *w = nw;
             }
         }
         self.m = keep.iter().map(|&j| self.m[j]).collect();
-        self.z = z;
         self.k = new_k;
         keep
     }
@@ -167,20 +387,155 @@ impl FeatureState {
         })
     }
 
-    /// Recompute `m` from scratch (test/debug helper).
+    /// ZᵀZ over all rows. See [`Self::gram_range`] for the kernel split.
+    pub fn gram(&self) -> Mat {
+        self.gram_range(0..self.n)
+    }
+
+    /// ZᵀZ restricted to a row range (K × K). Scalar states materialise
+    /// the dense sub-block and use [`Mat::gram`] — exactly the
+    /// computation every call site used to spell out. Packed states build
+    /// per-column bitsets over the range and take popcounts of ANDed word
+    /// pairs. Every entry is an integer co-occurrence count (< 2^53)
+    /// accumulated from non-negative integer steps, so the two paths
+    /// produce **bit-identical** f64s regardless of summation order.
+    pub fn gram_range(&self, rows: std::ops::Range<usize>) -> Mat {
+        debug_assert!(rows.start <= rows.end && rows.end <= self.n);
+        match &self.repr {
+            Repr::Bytes(_) => {
+                let start = rows.start;
+                Mat::from_fn(rows.len(), self.k, |i, j| {
+                    self.get(start + i, j) as f64
+                })
+                .gram()
+            }
+            Repr::Words(w) => {
+                let k = self.k;
+                let nr = rows.len();
+                let cw = wpr_for(nr); // words per column bitset
+                let wpr = wpr_for(k);
+                // transpose the range into column bitsets
+                let mut cols = vec![0u64; k * cw];
+                for (ri, i) in rows.enumerate() {
+                    let cbit = 1u64 << (ri % 64);
+                    let cword = ri / 64;
+                    for (wi, &word) in w[i * wpr..(i + 1) * wpr].iter().enumerate() {
+                        let mut word = word;
+                        while word != 0 {
+                            let j = wi * 64 + word.trailing_zeros() as usize;
+                            cols[j * cw + cword] |= cbit;
+                            word &= word - 1;
+                        }
+                    }
+                }
+                let mut out = Mat::zeros(k, k);
+                for i in 0..k {
+                    let ci = &cols[i * cw..(i + 1) * cw];
+                    for j in i..k {
+                        let cj = &cols[j * cw..(j + 1) * cw];
+                        let c: u64 = ci
+                            .iter()
+                            .zip(cj)
+                            .map(|(a, b)| (a & b).count_ones() as u64)
+                            .sum();
+                        out[(i, j)] = c as f64;
+                        out[(j, i)] = c as f64;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// ZᵀX over all rows (K × D); `x` must have N rows.
+    pub fn t_matmul(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.n, "t_matmul outer dim");
+        self.t_matmul_range(0..self.n, x)
+    }
+
+    /// ZᵀX restricted to a row range; `x` holds exactly the range's rows
+    /// (shard-local indexing, as the master's per-shard gram assembly
+    /// uses). Scalar states go through the dense sub-block +
+    /// [`Mat::t_matmul`]; packed states enumerate set bits per row in
+    /// ascending order. [`Mat::t_matmul`] skips zero entries and walks
+    /// rows ascending, so per output cell both paths add the same x
+    /// values in the same order (and `1.0 * x == x` bitwise) — the
+    /// results are bit-identical.
+    pub fn t_matmul_range(&self, rows: std::ops::Range<usize>, x: &Mat) -> Mat {
+        debug_assert!(rows.start <= rows.end && rows.end <= self.n);
+        assert_eq!(x.rows(), rows.len(), "t_matmul_range rows");
+        match &self.repr {
+            Repr::Bytes(_) => {
+                let start = rows.start;
+                Mat::from_fn(rows.len(), self.k, |i, j| {
+                    self.get(start + i, j) as f64
+                })
+                .t_matmul(x)
+            }
+            Repr::Words(w) => {
+                let wpr = wpr_for(self.k);
+                let mut out = Mat::zeros(self.k, x.cols());
+                for (ri, i) in rows.enumerate() {
+                    let xrow = x.row(ri);
+                    for (wi, &word) in w[i * wpr..(i + 1) * wpr].iter().enumerate() {
+                        let mut word = word;
+                        while word != 0 {
+                            let j = wi * 64 + word.trailing_zeros() as usize;
+                            let orow = out.row_mut(j);
+                            for (o, &b) in orow.iter_mut().zip(xrow) {
+                                *o += b;
+                            }
+                            word &= word - 1;
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Recompute `m` from scratch (test/debug helper). The packed path is
+    /// the column-popcount the layout was built for.
     pub fn recount(&self) -> Vec<usize> {
         let mut m = vec![0usize; self.k];
-        for i in 0..self.n {
-            for j in 0..self.k {
-                m[j] += self.z[i * self.k + j] as usize;
+        match &self.repr {
+            Repr::Bytes(z) => {
+                for i in 0..self.n {
+                    for j in 0..self.k {
+                        m[j] += z[i * self.k + j] as usize;
+                    }
+                }
+            }
+            Repr::Words(w) => {
+                let wpr = wpr_for(self.k);
+                for i in 0..self.n {
+                    for (wi, &word) in w[i * wpr..(i + 1) * wpr].iter().enumerate() {
+                        let mut word = word;
+                        while word != 0 {
+                            m[wi * 64 + word.trailing_zeros() as usize] += 1;
+                            word &= word - 1;
+                        }
+                    }
+                }
             }
         }
         m
     }
 
-    /// Check the m-consistency invariant.
+    /// Check the m-consistency invariant (and, packed, the tail-word
+    /// masking + storage-size invariants).
     pub fn check_invariants(&self) -> bool {
-        self.m == self.recount() && self.z.len() == self.n * self.k
+        let storage_ok = match &self.repr {
+            Repr::Bytes(z) => z.len() == self.n * self.k,
+            Repr::Words(w) => {
+                let wpr = wpr_for(self.k);
+                let mask = tail_mask(self.k);
+                w.len() == self.n * wpr
+                    && (wpr == 0
+                        || (0..self.n).all(|i| w[i * wpr + wpr - 1] & !mask == 0))
+            }
+        };
+        storage_ok && self.m == self.recount()
     }
 
     /// Histogram of identical columns (for the lof-prior K_h! term),
@@ -193,6 +548,24 @@ impl FeatureState {
             *counts.entry(col).or_insert(0) += 1;
         }
         counts.into_values().collect()
+    }
+}
+
+/// Logical equality: same shape, counts, and bits — regardless of layout
+/// (a packed state equals its scalar twin). Same-layout comparisons take
+/// the raw-storage fast path, which is valid for `Words` because tail
+/// bits are invariantly zero.
+impl PartialEq for FeatureState {
+    fn eq(&self, other: &Self) -> bool {
+        if self.n != other.n || self.k != other.k || self.m != other.m {
+            return false;
+        }
+        match (&self.repr, &other.repr) {
+            (Repr::Bytes(a), Repr::Bytes(b)) => a == b,
+            (Repr::Words(a), Repr::Words(b)) => a == b,
+            _ => (0..self.n)
+                .all(|i| (0..self.k).all(|j| self.get(i, j) == other.get(i, j))),
+        }
     }
 }
 
@@ -216,18 +589,36 @@ mod tests {
     }
 
     #[test]
-    fn compact_drops_empty_and_returns_mapping() {
-        let mut st = FeatureState::empty(3);
-        st.add_features(4);
-        st.set(0, 1, 1);
-        st.set(2, 3, 1);
-        let keep = st.compact();
-        assert_eq!(keep, vec![1, 3]);
-        assert_eq!(st.k(), 2);
-        assert_eq!(st.m(), &[1, 1]);
-        assert_eq!(st.get(0, 0), 1);
-        assert_eq!(st.get(2, 1), 1);
+    fn set_maintains_counts_packed() {
+        let mut st = FeatureState::empty_with(4, Kernel::Packed);
+        assert!(st.is_packed());
+        st.add_features(3);
+        st.set(0, 0, 1);
+        st.set(1, 0, 1);
+        st.set(2, 2, 1);
+        assert_eq!(st.m(), &[2, 0, 1]);
+        st.set(0, 0, 0);
+        assert_eq!(st.m(), &[1, 0, 1]);
+        st.set(0, 0, 0); // idempotent
+        assert_eq!(st.m(), &[1, 0, 1]);
         assert!(st.check_invariants());
+    }
+
+    #[test]
+    fn compact_drops_empty_and_returns_mapping() {
+        for kernel in [Kernel::Scalar, Kernel::Packed] {
+            let mut st = FeatureState::empty_with(3, kernel);
+            st.add_features(4);
+            st.set(0, 1, 1);
+            st.set(2, 3, 1);
+            let keep = st.compact();
+            assert_eq!(keep, vec![1, 3]);
+            assert_eq!(st.k(), 2);
+            assert_eq!(st.m(), &[1, 1]);
+            assert_eq!(st.get(0, 0), 1);
+            assert_eq!(st.get(2, 1), 1);
+            assert!(st.check_invariants());
+        }
     }
 
     #[test]
@@ -292,6 +683,28 @@ mod tests {
     }
 
     #[test]
+    fn raw_words_roundtrip_with_m_delta() {
+        let mut st = FeatureState::empty_with(5, Kernel::Packed);
+        st.add_features(3);
+        st.set(0, 0, 1);
+        st.set(4, 2, 1);
+        let mut delta = [0i64; 3];
+        {
+            let words = st.rows_words_mut(1..4);
+            assert_eq!(words.len(), 3); // 3 rows × 1 word
+            words[0] |= 1 << 0; // (1, 0)
+            delta[0] += 1;
+            words[2] |= 1 << 1; // (3, 1)
+            delta[1] += 1;
+        }
+        st.apply_m_delta(&delta);
+        assert_eq!(st.m(), &[2, 1, 1]);
+        assert!(st.check_invariants());
+        assert_eq!(st.get(1, 0), 1);
+        assert_eq!(st.get(3, 1), 1);
+    }
+
+    #[test]
     fn column_histogram_groups_identical() {
         let m = Mat::from_vec(3, 3, vec![
             1.0, 1.0, 0.0,
@@ -302,5 +715,111 @@ mod tests {
         let mut h = st.column_histogram();
         h.sort_unstable();
         assert_eq!(h, vec![1, 2]);
+    }
+
+    /// Scalar/packed conversions roundtrip and compare equal across
+    /// layouts, including K values straddling word boundaries.
+    #[test]
+    fn kernel_conversion_roundtrips() {
+        use crate::rng::Pcg64;
+        for k in [1usize, 7, 63, 64, 65, 130] {
+            let mut rng = Pcg64::new(k as u64);
+            let mut st = FeatureState::empty(9);
+            st.add_features(k);
+            for i in 0..9 {
+                for j in 0..k {
+                    if rng.bernoulli(0.3) {
+                        st.set(i, j, 1);
+                    }
+                }
+            }
+            let mut packed = st.clone();
+            packed.set_kernel(Kernel::Packed);
+            assert!(packed.is_packed());
+            assert!(packed.check_invariants(), "K={k} tail invariant");
+            assert_eq!(packed, st, "K={k} cross-layout equality");
+            let mut back = packed.clone();
+            back.set_kernel(Kernel::Scalar);
+            assert_eq!(back, st, "K={k} roundtrip");
+            assert_eq!(back.row_bits(3), st.row_bits(3));
+        }
+    }
+
+    /// Packed `add_features` within the same word count must not
+    /// resurrect stale bits (the tail invariant earns its keep here).
+    #[test]
+    fn packed_growth_keeps_new_columns_zero() {
+        let mut st = FeatureState::empty_with(3, Kernel::Packed);
+        st.add_features(5);
+        for i in 0..3 {
+            st.set(i, 4, 1);
+        }
+        // drop the only occupied column, then grow back within one word
+        for i in 0..3 {
+            st.set(i, 4, 0);
+        }
+        let first = st.add_features(10);
+        assert_eq!(first, 5);
+        assert_eq!(st.k(), 15);
+        assert!(st.m().iter().all(|&m| m == 0));
+        assert!(st.check_invariants());
+        // growth across a word boundary
+        let first = st.add_features(80);
+        assert_eq!(first, 15);
+        assert_eq!(st.k(), 95);
+        assert_eq!(st.words_per_row(), 2);
+        assert!(st.check_invariants());
+    }
+
+    /// gram / t_matmul agree bit-for-bit between the packed kernels and
+    /// the dense scalar computation, on full ranges and sub-ranges.
+    #[test]
+    fn packed_gram_and_t_matmul_match_dense() {
+        use crate::rng::Pcg64;
+        for (n, k, d, seed) in [(40usize, 5usize, 7usize, 1u64), (30, 66, 3, 2)] {
+            let mut rng = Pcg64::new(seed);
+            let mut st = FeatureState::empty(n);
+            st.add_features(k);
+            for i in 0..n {
+                for j in 0..k {
+                    if rng.bernoulli(0.35) {
+                        st.set(i, j, 1);
+                    }
+                }
+            }
+            let x = Mat::from_fn(n, d, |_, _| rng.normal());
+            let mut packed = st.clone();
+            packed.set_kernel(Kernel::Packed);
+
+            let want_g = st.to_mat().gram();
+            assert!(st.gram().max_abs_diff(&want_g) == 0.0);
+            assert!(packed.gram().max_abs_diff(&want_g) == 0.0);
+
+            let want_t = st.to_mat().t_matmul(&x);
+            assert!(st.t_matmul(&x).max_abs_diff(&want_t) == 0.0);
+            assert!(packed.t_matmul(&x).max_abs_diff(&want_t) == 0.0);
+
+            // sub-range with shard-local x, as the master's merge uses
+            let range = (n / 4)..(3 * n / 4);
+            let xp = Mat::from_fn(range.len(), d, |i, j| x[(range.start + i, j)]);
+            let zp = Mat::from_fn(range.len(), k, |i, j| {
+                st.get(range.start + i, j) as f64
+            });
+            let want_gr = zp.gram();
+            let want_tr = zp.t_matmul(&xp);
+            assert!(st.gram_range(range.clone()).max_abs_diff(&want_gr) == 0.0);
+            assert!(packed.gram_range(range.clone()).max_abs_diff(&want_gr) == 0.0);
+            assert!(st.t_matmul_range(range.clone(), &xp).max_abs_diff(&want_tr) == 0.0);
+            assert!(packed.t_matmul_range(range, &xp).max_abs_diff(&want_tr) == 0.0);
+        }
+    }
+
+    #[test]
+    fn kernel_parse_and_name() {
+        assert_eq!(Kernel::parse("scalar").unwrap(), Kernel::Scalar);
+        assert_eq!(Kernel::parse("packed").unwrap(), Kernel::Packed);
+        assert!(Kernel::parse("simd").is_err());
+        assert_eq!(Kernel::Packed.name(), "packed");
+        assert_eq!(Kernel::default(), Kernel::Scalar);
     }
 }

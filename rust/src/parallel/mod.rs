@@ -45,24 +45,37 @@ pub use pool::{ParallelCtx, ThreadPool};
 use std::ops::Range;
 
 use crate::linalg::Mat;
-use crate::model::state::FeatureState;
+use crate::model::state::{FeatureState, Kernel};
 use crate::rng::Pcg64;
-use crate::samplers::uncollapsed::sweep_block;
+use crate::samplers::uncollapsed::{sweep_block, sweep_block_packed};
 
 /// Executor knobs. `ctx` is a *scheduling* choice only — it never affects
 /// results; `block_rows` is part of the RNG draw-order contract (changing
-/// it changes the chain, like changing the seed would).
+/// it changes the chain, like changing the seed would); `kernel` selects
+/// the Z storage/kernel family the owner builds its states with
+/// (scalar bytes vs packed `u64` words) — like `ctx`, it never changes a
+/// bit of output, only how fast the bits are produced.
 #[derive(Clone, Debug)]
 pub struct ExecConfig {
     /// How block tasks are scheduled (inline / persistent pool / scoped).
     pub ctx: ParallelCtx,
     /// Rows per block (fixed; the last block of a range may be ragged).
     pub block_rows: usize,
+    /// Which Z kernel family states owned by this executor's call sites
+    /// use. [`par_sweep_rows`] itself dispatches on the *state's* actual
+    /// layout (so a state of either kind always sweeps correctly); this
+    /// field is how owners (workers, evaluators, the serve engine) decide
+    /// which layout to build or convert their states into.
+    pub kernel: Kernel,
 }
 
 impl Default for ExecConfig {
     fn default() -> Self {
-        Self { ctx: ParallelCtx::inline(), block_rows: DEFAULT_BLOCK_ROWS }
+        Self {
+            ctx: ParallelCtx::inline(),
+            block_rows: DEFAULT_BLOCK_ROWS,
+            kernel: Kernel::Scalar,
+        }
     }
 }
 
@@ -78,15 +91,27 @@ impl ExecConfig {
         Self { ctx, ..Self::default() }
     }
 
+    /// Select the Z kernel family (builder-style).
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
     /// Execution lanes the context schedules onto (≥ 1).
     pub fn threads(&self) -> usize {
         self.ctx.threads()
     }
 }
 
+/// One block's disjoint Z view, in whichever layout the state uses.
+enum ZChunk<'a> {
+    Bytes(&'a mut [u8]),
+    Words(&'a mut [u64]),
+}
+
 /// One block's work packet: disjoint views plus private scratch.
 struct BlockTask<'a> {
-    zbits: &'a mut [u8],
+    z: ZChunk<'a>,
     resid: &'a mut [f64],
     rng: Pcg64,
     m_delta: Vec<i64>,
@@ -94,12 +119,20 @@ struct BlockTask<'a> {
 }
 
 impl BlockTask<'_> {
+    /// `stride` is the row stride of the Z view: K for bytes,
+    /// `words_per_row` for words.
     fn run(&mut self, stride: usize, d: usize, a: &Mat, prior_logit: &[f64],
            inv2s2: f64, k_limit: usize) {
-        self.flips = sweep_block(
-            self.zbits, stride, self.resid, d, a, prior_logit, inv2s2,
-            k_limit, &mut self.rng, &mut self.m_delta,
-        );
+        self.flips = match &mut self.z {
+            ZChunk::Bytes(zb) => sweep_block(
+                zb, stride, self.resid, d, a, prior_logit, inv2s2,
+                k_limit, &mut self.rng, &mut self.m_delta,
+            ),
+            ZChunk::Words(zw) => sweep_block_packed(
+                zw, stride, self.resid, d, a, prior_logit, inv2s2,
+                k_limit, &mut self.rng, &mut self.m_delta,
+            ),
+        };
     }
 }
 
@@ -128,9 +161,13 @@ pub fn par_sweep_rows(
     // Parent-stream contract (module docs): exactly one draw per call,
     // before any early return, so consumption never depends on the data.
     rng.next_u64();
-    let stride = z.k();
+    // row stride of the raw Z view: K bytes or ⌈K/64⌉ words — the block
+    // kernels are dispatched on the state's actual layout, so states of
+    // either kind sweep identically regardless of `exec.kernel`
+    let packed = z.is_packed();
+    let stride = if packed { z.words_per_row() } else { z.k() };
     let d = resid.cols();
-    debug_assert!(k_limit <= stride && k_limit <= a.rows());
+    debug_assert!(k_limit <= z.k() && k_limit <= a.rows());
     debug_assert!(rows.end <= z.n() && rows.end <= resid.rows());
     let plan = BlockPlan::new(rows.clone(), exec.block_rows.max(1));
     if plan.is_empty() || k_limit == 0 || d == 0 {
@@ -144,19 +181,35 @@ pub fn par_sweep_rows(
         // fixed-size (ragged tail), so chunks_mut reproduces the plan's
         // boundaries exactly
         let block_rows = exec.block_rows.max(1);
-        let zchunks = z.rows_bits_mut(rows.clone()).chunks_mut(block_rows * stride);
         let rchunks = resid.as_mut_slice()[rows.start * d..rows.end * d]
             .chunks_mut(block_rows * d);
         let mut tasks: Vec<BlockTask> = Vec::with_capacity(plan.len());
-        for (b, (zb, rb)) in zchunks.zip(rchunks).enumerate() {
-            debug_assert_eq!(zb.len() / stride, plan.block(b).len());
-            tasks.push(BlockTask {
-                zbits: zb,
-                resid: rb,
-                rng: rng.split(BlockPlan::tag(b)),
-                m_delta: vec![0i64; k_limit],
-                flips: 0,
-            });
+        if packed {
+            let zchunks =
+                z.rows_words_mut(rows.clone()).chunks_mut(block_rows * stride);
+            for (b, (zw, rb)) in zchunks.zip(rchunks).enumerate() {
+                debug_assert_eq!(zw.len() / stride, plan.block(b).len());
+                tasks.push(BlockTask {
+                    z: ZChunk::Words(zw),
+                    resid: rb,
+                    rng: rng.split(BlockPlan::tag(b)),
+                    m_delta: vec![0i64; k_limit],
+                    flips: 0,
+                });
+            }
+        } else {
+            let zchunks =
+                z.rows_bits_mut(rows.clone()).chunks_mut(block_rows * stride);
+            for (b, (zb, rb)) in zchunks.zip(rchunks).enumerate() {
+                debug_assert_eq!(zb.len() / stride, plan.block(b).len());
+                tasks.push(BlockTask {
+                    z: ZChunk::Bytes(zb),
+                    resid: rb,
+                    rng: rng.split(BlockPlan::tag(b)),
+                    m_delta: vec![0i64; k_limit],
+                    flips: 0,
+                });
+            }
         }
         debug_assert_eq!(tasks.len(), plan.len());
 
@@ -183,43 +236,27 @@ pub fn par_sweep_rows(
 mod tests {
     use super::*;
     use crate::samplers::uncollapsed::residuals;
+    use crate::testutil::sweep_problem as problem;
 
-    /// Planted problem: X = Z_true A + noise, Z warm-started at random.
-    fn problem(n: usize, k: usize, d: usize, seed: u64)
-               -> (Mat, FeatureState, Mat, Vec<f64>) {
-        let mut rng = Pcg64::new(seed);
-        let mut z = FeatureState::empty(n);
-        z.add_features(k);
-        for i in 0..n {
-            for j in 0..k {
-                if rng.bernoulli(0.4) {
-                    z.set(i, j, 1);
-                }
-            }
-        }
-        // weak loadings + noise keep the per-bit logits small, so sweeps
-        // keep flipping bits — the determinism assertions stay meaningful
-        let a = Mat::from_fn(k, d, |_, _| 0.5 * rng.normal());
-        let mut x = z.to_mat().matmul(&a);
-        for v in x.as_mut_slice().iter_mut() {
-            *v += 0.4 * rng.normal();
-        }
-        let logit: Vec<f64> = (0..k).map(|j| 0.2 * (j as f64) - 0.4).collect();
-        (x, z, a, logit)
-    }
-
-    fn run_once_ctx(ctx: ParallelCtx, block_rows: usize, rows: Range<usize>,
-                    k_limit: usize, seed: u64)
-                    -> (FeatureState, Mat, usize, u64) {
+    fn run_once_kernel(ctx: ParallelCtx, block_rows: usize, rows: Range<usize>,
+                       k_limit: usize, seed: u64, kernel: Kernel)
+                       -> (FeatureState, Mat, usize, u64) {
         let (x, mut z, a, logit) = problem(101, 5, 7, seed);
+        z.set_kernel(kernel);
         let mut resid = residuals(&x, &z, &a, 0..x.rows());
         let mut rng = Pcg64::new(99).split(1000);
-        let exec = ExecConfig { ctx, block_rows };
+        let exec = ExecConfig { ctx, block_rows, kernel };
         let flips = par_sweep_rows(
             &mut z, &mut resid, &a, &logit, 1.7, rows, k_limit, &exec, &mut rng,
         );
         // the parent stream's post-state is part of the contract
         (z, resid, flips, rng.next_u64())
+    }
+
+    fn run_once_ctx(ctx: ParallelCtx, block_rows: usize, rows: Range<usize>,
+                    k_limit: usize, seed: u64)
+                    -> (FeatureState, Mat, usize, u64) {
+        run_once_kernel(ctx, block_rows, rows, k_limit, seed, Kernel::Scalar)
     }
 
     fn run_once(threads: usize, block_rows: usize, rows: Range<usize>,
@@ -308,7 +345,11 @@ mod tests {
         let (x, mut z, a, logit) = problem(67, 4, 9, 8);
         let mut resid = residuals(&x, &z, &a, 0..67);
         let mut rng = Pcg64::new(5).split(1002);
-        let exec = ExecConfig { ctx: ParallelCtx::pooled(4), block_rows: 8 };
+        let exec = ExecConfig {
+            ctx: ParallelCtx::pooled(4),
+            block_rows: 8,
+            kernel: Kernel::Scalar,
+        };
         for _ in 0..3 {
             par_sweep_rows(&mut z, &mut resid, &a, &logit, 2.0, 0..67, 4,
                            &exec, &mut rng);
@@ -374,6 +415,59 @@ mod tests {
         assert_eq!(states[0], states[1]);
         assert_eq!(z.k(), 0);
         assert!(resid.max_abs_diff(&resid0) == 0.0);
+    }
+
+    #[test]
+    fn packed_kernel_matches_scalar_bitwise_across_threads() {
+        // the packed word kernel must be invisible: same Z bits, same
+        // residual bytes, same flip count, same parent RNG post-state —
+        // for ragged blocks, sub-ranges, k_limits, and every thread count
+        for (rows, k_limit, seed) in
+            [(0..101, 5, 3), (20..60, 5, 4), (0..101, 3, 6), (50..51, 5, 9)]
+        {
+            let base = run_once_kernel(ParallelCtx::pooled(1), 16,
+                                       rows.clone(), k_limit, seed,
+                                       Kernel::Scalar);
+            for t in [1usize, 2, 4] {
+                let got = run_once_kernel(ParallelCtx::pooled(t), 16,
+                                          rows.clone(), k_limit, seed,
+                                          Kernel::Packed);
+                assert!(got.0.is_packed());
+                assert_eq!(got.0, base.0, "Z diverged (packed, T={t})");
+                assert!(got.1.max_abs_diff(&base.1) == 0.0,
+                        "resid diverged (packed, T={t})");
+                assert_eq!(got.2, base.2, "flips diverged (packed, T={t})");
+                assert_eq!(got.3, base.3, "parent RNG diverged (packed, T={t})");
+                assert!(got.0.check_invariants());
+            }
+            assert!(base.2 > 0, "sweep never flipped a bit");
+        }
+    }
+
+    #[test]
+    fn packed_kernel_handles_multi_word_rows() {
+        // K = 70 spans two words per row; tail-word masking must hold
+        // through an actual parallel sweep
+        let (x, mut z, a, logit) = problem(53, 70, 6, 17);
+        z.set_kernel(Kernel::Packed);
+        let mut resid = residuals(&x, &z, &a, 0..53);
+        let mut rng = Pcg64::new(99).split(1000);
+        let exec = ExecConfig::with_threads(4).with_kernel(Kernel::Packed);
+        let flips = par_sweep_rows(&mut z, &mut resid, &a, &logit, 1.7,
+                                   0..53, 70, &exec, &mut rng);
+
+        let (x2, mut z2, a2, logit2) = problem(53, 70, 6, 17);
+        let mut resid2 = residuals(&x2, &z2, &a2, 0..53);
+        let mut rng2 = Pcg64::new(99).split(1000);
+        let exec2 = ExecConfig::with_threads(1);
+        let flips2 = par_sweep_rows(&mut z2, &mut resid2, &a2, &logit2, 1.7,
+                                    0..53, 70, &exec2, &mut rng2);
+        assert_eq!(z, z2);
+        assert!(resid.max_abs_diff(&resid2) == 0.0);
+        assert_eq!(flips, flips2);
+        assert_eq!(rng.next_u64(), rng2.next_u64());
+        assert!(flips > 0);
+        assert!(z.check_invariants());
     }
 
     #[test]

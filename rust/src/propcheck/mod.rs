@@ -40,8 +40,12 @@ impl Gen {
         self.rng.bernoulli(p)
     }
 
-    /// Pick one of the options.
+    /// Pick one of the options. Panics (in every build profile) on an
+    /// empty slice — `Pcg64::below(0)` only `debug_assert`s, which would
+    /// otherwise let a release-mode property index out of bounds with a
+    /// far less useful message.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "propcheck: choose from empty slice");
         &xs[self.rng.below(xs.len() as u64) as usize]
     }
 }
@@ -49,7 +53,7 @@ impl Gen {
 /// Run `cases` random cases of `prop`. Panics (with the seed and the
 /// property's message) on the first failure, after attempting 4 smaller
 /// replays of the same seed to report the smallest reproduction found.
-pub fn run<F>(name: &str, cases: u64, mut prop: F)
+pub fn run<F>(name: &str, cases: u64, prop: F)
 where
     F: FnMut(&mut Gen) -> Result<(), String>,
 {
@@ -57,6 +61,16 @@ where
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0x9e3779b9u64);
+    run_with_base(name, cases, base, prop)
+}
+
+/// [`run`] with an explicit base seed — what `PIBP_PROP_SEED` resolves
+/// to. Call this directly to replay a printed failure without touching
+/// the (process-global) environment.
+pub fn run_with_base<F>(name: &str, cases: u64, base: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
     for case in 0..cases {
         let seed = base.wrapping_add(case);
         let mut g = Gen { rng: Pcg64::new(seed), size: 1.0, seed };
@@ -127,5 +141,79 @@ mod tests {
         let mut g1 = Gen { rng: Pcg64::new(42), size: 1.0, seed: 42 };
         let mut g2 = Gen { rng: Pcg64::new(42), size: 1.0, seed: 42 };
         assert_eq!(g1.usize_in(0, 1000), g2.usize_in(0, 1000));
+    }
+
+    /// Run `f`, catch its panic, return the panic payload as a string.
+    fn panic_message<F: FnOnce()>(f: F) -> String {
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+            .expect_err("expected the property run to panic");
+        err.downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("panic payload was not a string")
+    }
+
+    #[test]
+    fn printed_seed_replays_the_failure() {
+        // a sparse failure: only a few of 200 cases trip it
+        let prop = |g: &mut Gen| {
+            let n = g.usize_in(0, 1000);
+            if n >= 900 { Err(format!("n={n}")) } else { Ok(()) }
+        };
+        let msg = panic_message(|| run_with_base("sparse", 200, 7, prop));
+        assert!(msg.contains("replay with PIBP_PROP_SEED="), "msg={msg}");
+        let seed: u64 = msg
+            .split("PIBP_PROP_SEED=")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .and_then(|s| s.parse().ok())
+            .expect("no seed in panic message");
+        // replaying with that seed as base must fail on case 0
+        let replay = panic_message(|| run_with_base("sparse", 1, seed, prop));
+        assert!(replay.contains("case 0"), "replay did not fail immediately: {replay}");
+        assert!(replay.contains(&format!("seed {seed}")), "replay={replay}");
+    }
+
+    #[test]
+    fn shrink_replays_reduce_usize_in_sizes() {
+        // an always-failing property records what each replay generated:
+        // the shrink ladder must walk size 1.0 → 0.5 → 0.25 → 0.1 → 0.05,
+        // and usize_in must respect each scaled span
+        let mut seen: Vec<(f64, usize)> = Vec::new();
+        let msg = panic_message(|| {
+            run_with_base("always", 1, 3, |g| {
+                let n = g.usize_in(0, 1000);
+                seen.push((g.size, n));
+                Err(format!("n={n}"))
+            })
+        });
+        let sizes: Vec<f64> = seen.iter().map(|&(s, _)| s).collect();
+        assert_eq!(sizes, vec![1.0, 0.5, 0.25, 0.1, 0.05]);
+        for &(size, n) in &seen {
+            let cap = ((1000.0 * size) as usize).max(1);
+            assert!(n <= cap, "size {size} produced n={n} > cap {cap}");
+        }
+        assert!(msg.contains("smallest failing size 0.05"), "msg={msg}");
+    }
+
+    #[test]
+    fn zero_span_bounds_hold_at_every_size() {
+        for &size in &[1.0, 0.5, 0.05] {
+            let mut g = Gen { rng: Pcg64::new(9), size, seed: 9 };
+            assert_eq!(g.usize_in(5, 5), 5);
+            assert_eq!(g.usize_in(0, 0), 0);
+            assert_eq!(g.f64_in(2.0, 2.0), 2.0);
+            // span 1 at the smallest size must still reach both endpoints
+            // eventually, and never exceed them
+            let v = g.usize_in(4, 5);
+            assert!((4..=5).contains(&v));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "choose from empty slice")]
+    fn choose_from_empty_slice_panics() {
+        let mut g = Gen { rng: Pcg64::new(1), size: 1.0, seed: 1 };
+        let _ = g.choose::<u8>(&[]);
     }
 }

@@ -170,7 +170,8 @@ fn setup_run(cfg: &RunConfig) -> Result<RunSetup> {
         // (spawned here once, reused by every scheduled evaluation); the
         // coordinator workers each spawn their own at Coordinator::new
         evaluator: HeldoutEval::new(test.x, cfg.eval_sweeps)
-            .with_threads(cfg.threads_per_worker),
+            .with_threads(cfg.threads_per_worker)
+            .with_kernel(cfg.kernel),
         trace,
     })
 }
@@ -189,6 +190,7 @@ fn run_hybrid(
         processors: cfg.processors,
         sub_iters: cfg.sub_iters,
         threads_per_worker: cfg.threads_per_worker,
+        kernel: cfg.kernel,
         seed: cfg.seed,
         lg,
         alpha: cfg.alpha,

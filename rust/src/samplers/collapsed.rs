@@ -345,15 +345,11 @@ mod tests {
     use super::*;
     use crate::data::cambridge::{generate, CambridgeConfig};
 
+    /// [`crate::testutil::planted`] with a configurable noise level; the
+    /// collapsed API is Mat-based, so Z is densified.
     fn planted(n: usize, k: usize, d: usize, sigma: f64, seed: u64) -> (Mat, Mat) {
-        let mut rng = Pcg64::new(seed);
-        let z = Mat::from_fn(n, k, |_, _| if rng.bernoulli(0.5) { 1.0 } else { 0.0 });
-        let a = Mat::from_fn(k, d, |_, _| 2.0 * rng.normal());
-        let mut x = z.matmul(&a);
-        for v in x.as_mut_slice().iter_mut() {
-            *v += sigma * rng.normal();
-        }
-        (x, z)
+        let (x, z, _) = crate::testutil::planted_with(n, k, d, seed, 0.5, 2.0, sigma);
+        (x, z.to_mat())
     }
 
     /// Binary-glyph planted data, Cambridge-style SNR. (With extreme SNR

@@ -10,7 +10,7 @@
 //! directly comparable.
 
 use crate::linalg::Mat;
-use crate::model::state::FeatureState;
+use crate::model::state::{FeatureState, Kernel};
 use crate::model::GlobalParams;
 use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
 use crate::rng::Pcg64;
@@ -40,15 +40,23 @@ impl HeldoutEval {
     /// Run the held-out sweeps on a persistent pool of `threads` lanes
     /// (same results, less wall-clock; the pool is spawned once here and
     /// reused by every `evaluate` call — `threads ≤ 1` runs inline).
-    pub fn with_threads(mut self, threads: usize) -> Self {
-        self.exec = ExecConfig::with_threads(threads);
-        self
+    /// Mutates only the context, preserving a previously chosen kernel.
+    pub fn with_threads(self, threads: usize) -> Self {
+        self.with_ctx(ParallelCtx::pooled(threads))
     }
 
     /// Like [`Self::with_threads`], but scheduling onto a caller-supplied
     /// context (e.g. a pool shared with other sweep sites).
     pub fn with_ctx(mut self, ctx: ParallelCtx) -> Self {
-        self.exec = ExecConfig::with_ctx(ctx);
+        self.exec.ctx = ctx;
+        self
+    }
+
+    /// Select the Z storage kernel for the held-out sweeps. Bit-invariant
+    /// — the evaluation trace is identical for either value.
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        self.exec.kernel = kernel;
+        self.z_test.set_kernel(kernel);
         self
     }
 
@@ -68,6 +76,8 @@ impl HeldoutEval {
             );
         }
         self.z_test = z;
+        // snapshots decode repr-agnostically; adopt the configured kernel
+        self.z_test.set_kernel(self.exec.kernel);
         Ok(())
     }
 
@@ -88,7 +98,7 @@ impl HeldoutEval {
         if self.z_test.k() < k {
             self.z_test.add_features(k - self.z_test.k());
         } else if self.z_test.k() > k {
-            self.z_test = FeatureState::empty(n);
+            self.z_test = FeatureState::empty_with(n, self.exec.kernel);
             self.z_test.add_features(k);
         }
         let prior_logit: Vec<f64> = params
@@ -183,6 +193,32 @@ mod tests {
         let b = ev.evaluate(&params5, &mut rng);
         let c = ev.evaluate(&params2, &mut rng);
         assert!(a.is_finite() && b.is_finite() && c.is_finite());
+    }
+
+    #[test]
+    fn packed_kernel_evaluation_is_bit_identical() {
+        // held-out traces are part of the chain contract: the packed
+        // kernel must reproduce the scalar trace bit-for-bit, warm starts
+        // and K changes included — in any builder order
+        let (params4, x, _) = planted_params(4, 16, 4);
+        let (params2, _, _) = planted_params(2, 16, 5);
+        let run = |ev: HeldoutEval| {
+            let mut ev = ev;
+            let mut rng = Pcg64::new(5);
+            let mut out = vec![];
+            for p in [&params4, &params4, &params2] {
+                out.push(ev.evaluate(p, &mut rng).to_bits());
+            }
+            out
+        };
+        let scalar = run(HeldoutEval::new(x.clone(), 2).with_threads(2));
+        let packed =
+            run(HeldoutEval::new(x.clone(), 2).with_kernel(Kernel::Packed).with_threads(2));
+        assert_eq!(scalar, packed);
+        // kernel applied after the ctx must behave the same
+        let packed2 =
+            run(HeldoutEval::new(x, 2).with_threads(2).with_kernel(Kernel::Packed));
+        assert_eq!(scalar, packed2);
     }
 
     #[test]

@@ -48,7 +48,7 @@
 use std::ops::Range;
 
 use crate::linalg::Mat;
-use crate::model::state::FeatureState;
+use crate::model::state::{FeatureState, Kernel};
 use crate::model::{ibp, GlobalParams, LinGauss};
 use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
 use crate::rng::Pcg64;
@@ -72,6 +72,10 @@ pub struct HybridConfig {
     /// tests pass e.g. [`ParallelCtx::scoped`] to cross-check scheduling
     /// modes — the chain is bit-identical either way.
     pub ctx: Option<ParallelCtx>,
+    /// Z storage kernel (scalar bytes or packed u64 words). The chain is
+    /// bit-identical for either value — the packed sweep/gram kernels are
+    /// exact mirrors (see `rust/tests/packed_equivalence.rs`).
+    pub kernel: Kernel,
     pub opts: SamplerOptions,
 }
 
@@ -82,6 +86,7 @@ impl Default for HybridConfig {
             sub_iters: 5,
             threads_per_worker: 1,
             ctx: None,
+            kernel: Kernel::Scalar,
             opts: SamplerOptions::default(),
         }
     }
@@ -156,7 +161,7 @@ impl HybridSampler {
         let p_prime = master_rng.below(cfg.processors as u64) as usize;
         // start from the empty feature set: the tail sampler on p′
         // bootstraps the first features, exactly as the algorithm states.
-        let z = FeatureState::empty(n);
+        let z = FeatureState::empty_with(n, cfg.kernel);
         let params = GlobalParams { a: Mat::zeros(0, x.cols()), pi: vec![], lg, alpha };
         let resid = x.clone();
         // Per-shard copies of X, fixed for the run: reused every master
@@ -175,7 +180,8 @@ impl HybridSampler {
             cfg.ctx
                 .clone()
                 .unwrap_or_else(|| ParallelCtx::pooled(cfg.threads_per_worker)),
-        );
+        )
+        .with_kernel(cfg.kernel);
         Self {
             x,
             z,
@@ -214,7 +220,7 @@ impl HybridSampler {
         let carried = self
             .tail_state
             .take()
-            .unwrap_or_else(|| FeatureState::empty(b));
+            .unwrap_or_else(|| FeatureState::empty_with(b, self.cfg.kernel));
         let mut tp = TailProposer::new(carried, self.params.lg);
         // reusable view of p′'s residual rows (refreshed per sub-iteration)
         let mut local_resid = Mat::zeros(b, self.x.cols());
@@ -298,11 +304,8 @@ impl HybridSampler {
             let mut ztz = Mat::zeros(k, k);
             let mut ztx = Mat::zeros(k, d);
             for (sh, xp) in self.shards.iter().zip(&self.x_shards) {
-                let zp = Mat::from_fn(sh.len(), k, |i, j| {
-                    self.z.get(sh.start + i, j) as f64
-                });
-                ztz.add_assign(&zp.gram());
-                ztx.add_assign(&zp.t_matmul(xp));
+                ztz.add_assign(&self.z.gram_range(sh.clone()));
+                ztx.add_assign(&self.z.t_matmul_range(sh.clone(), xp));
             }
             self.params.a =
                 self.params.lg.apost_sample(&ztz, &ztx, &mut self.master_rng);
@@ -512,6 +515,41 @@ mod tests {
         }
         let mean = sx.iter().sum::<f64>() / sx.len() as f64;
         assert!((mean - 0.5).abs() < 0.15, "sigma_x≈{mean}, truth 0.5");
+    }
+
+    #[test]
+    fn packed_kernel_reproduces_scalar_chain_exactly() {
+        // full hybrid chain (sweeps, tail proposals, promotion,
+        // compaction, global draws) must be bit-identical under the
+        // packed Z kernel, including at P > 1 / T > 1
+        let (ds, _) = generate(&CambridgeConfig { n: 60, seed: 10, ..Default::default() });
+        let run = |kernel: Kernel| {
+            let mut s = HybridSampler::new(
+                ds.x.clone(), LinGauss::new(0.5, 1.0), 1.0,
+                HybridConfig {
+                    processors: 2,
+                    threads_per_worker: 2,
+                    kernel,
+                    ..Default::default()
+                },
+                11,
+            );
+            let trace: Vec<_> = (0..10)
+                .map(|_| {
+                    let st = s.step();
+                    (st.k, st.alpha.to_bits(), st.sigma_x.to_bits(),
+                     st.sigma_a.to_bits(), st.train_joint.to_bits())
+                })
+                .collect();
+            (trace, s.z.clone(), s.params.a.clone())
+        };
+        let scalar = run(Kernel::Scalar);
+        let packed = run(Kernel::Packed);
+        assert_eq!(scalar.0, packed.0, "iteration trace diverged");
+        assert_eq!(scalar.1, packed.1, "final Z diverged");
+        assert!(scalar.2.max_abs_diff(&packed.2) == 0.0, "final A diverged");
+        assert!(packed.1.is_packed() && packed.1.check_invariants());
+        assert!(scalar.0.last().unwrap().0 > 0, "chain never grew features");
     }
 
     #[test]

@@ -138,13 +138,13 @@ impl TailProposer {
         if let Some(mut c) = self.cache.take() {
             if c.k() == self.z_tail.k()
                 && c.ratio() == self.lg.ratio()
-                && c.reset_data(resid, &self.z_tail.to_mat())
+                && c.reset_data_from_state(resid, &self.z_tail)
             {
                 carried = Some(c);
             }
         }
         let mut cache = carried.unwrap_or_else(|| {
-            CollapsedCache::new(resid, &self.z_tail.to_mat(), self.lg.ratio())
+            CollapsedCache::from_state(resid, &self.z_tail, self.lg.ratio())
         });
         // §Perf L3-2: the Poisson(α/N) pmf is row-invariant — precompute
         // it once per sweep instead of paying ln_gamma per (row, j).
@@ -165,7 +165,7 @@ impl TailProposer {
         let before = self.z_tail.k();
         let keep = self.z_tail.compact();
         if self.z_tail.k() != before && !cache.retain_features(&keep) {
-            cache.refresh(resid, &self.z_tail.to_mat(), self.lg.ratio());
+            cache.refresh_from_state(resid, &self.z_tail, self.lg.ratio());
         }
         self.cache = Some(cache);
     }
@@ -268,7 +268,7 @@ impl TailProposer {
         if self.z_tail.k() > 0 {
             let z_row = self.z_tail.row_f64(row);
             if !cache.insert_row(&z_row, &x_row) {
-                cache.refresh(resid, &self.z_tail.to_mat(), self.lg.ratio());
+                cache.refresh_from_state(resid, &self.z_tail, self.lg.ratio());
             }
         }
     }
@@ -286,7 +286,7 @@ impl TailProposer {
         row: usize,
         x_row: &[f64],
     ) {
-        cache.refresh(resid, &self.z_tail.to_mat(), self.lg.ratio());
+        cache.refresh_from_state(resid, &self.z_tail, self.lg.ratio());
         if self.z_tail.k() > 0 {
             let z_orig = self.z_tail.row_f64(row);
             let ok = cache.remove_row(&z_orig, x_row);

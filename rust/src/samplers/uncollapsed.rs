@@ -97,6 +97,78 @@ pub fn sweep_block(
     flips
 }
 
+/// Packed twin of [`sweep_block`]: the same Gibbs sweep over a row block
+/// whose Z bits live in `u64` words (row stride `words_per_row` =
+/// ⌈K/64⌉; see [`FeatureState::rows_words_mut`]).
+///
+/// **Bit-identical to the scalar kernel by construction**: the f64 inner
+/// products over D, the uniform draw per (row, column), the flip test and
+/// the residual update are copied verbatim — only how z_old is read and
+/// z_new written differs, and those are exact bit operations. The
+/// differential suite `rust/tests/packed_equivalence.rs` pins Z bits,
+/// residual bytes and flip counts against [`sweep_block`] across a seed
+/// grid.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_block_packed(
+    zwords: &mut [u64],
+    words_per_row: usize,
+    resid: &mut [f64],
+    d: usize,
+    a: &Mat,
+    prior_logit: &[f64],
+    inv2s2: f64,
+    k_limit: usize,
+    rng: &mut Pcg64,
+    m_delta: &mut [i64],
+) -> usize {
+    if k_limit == 0 || d == 0 {
+        return 0;
+    }
+    debug_assert!(k_limit <= words_per_row * 64 && k_limit <= a.rows());
+    debug_assert!(k_limit <= m_delta.len());
+    let b = resid.len() / d;
+    debug_assert_eq!(resid.len(), b * d);
+    debug_assert_eq!(zwords.len(), b * words_per_row);
+    let mut flips = 0;
+    for n in 0..b {
+        let zrow = &mut zwords[n * words_per_row..(n + 1) * words_per_row];
+        let rrow = &mut resid[n * d..(n + 1) * d];
+        for k in 0..k_limit {
+            let (wi, bit) = (k / 64, 1u64 << (k % 64));
+            let z_old = u8::from(zrow[wi] & bit != 0);
+            let arow = a.row(k);
+            let mut r0_dot_a = 0.0;
+            let mut a_dot_a = 0.0;
+            if z_old == 1 {
+                for j in 0..d {
+                    let aj = arow[j];
+                    r0_dot_a += (rrow[j] + aj) * aj;
+                    a_dot_a += aj * aj;
+                }
+            } else {
+                for j in 0..d {
+                    let aj = arow[j];
+                    r0_dot_a += rrow[j] * aj;
+                    a_dot_a += aj * aj;
+                }
+            }
+            let logit = prior_logit[k] + (2.0 * r0_dot_a - a_dot_a) * inv2s2;
+            let u = rng.uniform();
+            let z_new = if (u / (1.0 - u)).ln() < logit { 1u8 } else { 0u8 };
+            if z_new != z_old {
+                flips += 1;
+                let sign = z_old as f64 - z_new as f64;
+                for j in 0..d {
+                    rrow[j] += sign * arow[j];
+                }
+                zrow[wi] ^= bit;
+                m_delta[k] += if z_new == 1 { 1 } else { -1 };
+            }
+        }
+    }
+    flips
+}
+
 /// One *serial* Gibbs sweep of `z[rows]` over columns `0..k_limit`: the
 /// whole range as a single block on the caller's RNG stream (one uniform
 /// per (row, column), row-major order). `resid` must hold X − Z A on
@@ -123,20 +195,37 @@ pub fn sweep_rows(
     debug_assert_eq!(resid.rows(), x.rows());
     debug_assert!(k_limit <= z.k() && k_limit <= a.rows());
     let d = x.cols();
-    let stride = z.k();
     let mut m_delta = vec![0i64; k_limit];
-    let flips = sweep_block(
-        z.rows_bits_mut(rows.clone()),
-        stride,
-        &mut resid.as_mut_slice()[rows.start * d..rows.end * d],
-        d,
-        a,
-        prior_logit,
-        inv2s2,
-        k_limit,
-        rng,
-        &mut m_delta,
-    );
+    let rslice = &mut resid.as_mut_slice()[rows.start * d..rows.end * d];
+    let flips = if z.is_packed() {
+        let wpr = z.words_per_row();
+        sweep_block_packed(
+            z.rows_words_mut(rows.clone()),
+            wpr,
+            rslice,
+            d,
+            a,
+            prior_logit,
+            inv2s2,
+            k_limit,
+            rng,
+            &mut m_delta,
+        )
+    } else {
+        let stride = z.k();
+        sweep_block(
+            z.rows_bits_mut(rows.clone()),
+            stride,
+            rslice,
+            d,
+            a,
+            prior_logit,
+            inv2s2,
+            k_limit,
+            rng,
+            &mut m_delta,
+        )
+    };
     z.apply_m_delta(&m_delta);
     flips
 }
@@ -234,10 +323,10 @@ impl UncollapsedGibbs {
             .iter()
             .map(|&mk| rng.beta(ak + mk as f64, 1.0 + (n - mk) as f64))
             .collect();
-        // A | X, Z
-        let zm = self.z.to_mat();
-        let ztz = zm.gram();
-        let ztx = zm.t_matmul(&self.x);
+        // A | X, Z (kernel-dispatched suffstats: popcount gram when Z is
+        // packed, the dense path otherwise — bit-identical either way)
+        let ztz = self.z.gram();
+        let ztx = self.z.t_matmul(&self.x);
         self.params.a = self.params.lg.apost_sample(&ztz, &ztx, rng);
         self.resid = residuals(&self.x, &self.z, &self.params.a, 0..n);
         if self.opts.sample_sigmas {
@@ -280,25 +369,7 @@ impl UncollapsedGibbs {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn planted(n: usize, k: usize, d: usize, seed: u64) -> (Mat, FeatureState, Mat) {
-        let mut rng = Pcg64::new(seed);
-        let mut z = FeatureState::empty(n);
-        z.add_features(k);
-        for i in 0..n {
-            for j in 0..k {
-                if rng.bernoulli(0.5) {
-                    z.set(i, j, 1);
-                }
-            }
-        }
-        let a = Mat::from_fn(k, d, |_, _| 2.0 * rng.normal());
-        let mut x = z.to_mat().matmul(&a);
-        for v in x.as_mut_slice().iter_mut() {
-            *v += 0.1 * rng.normal();
-        }
-        (x, z, a)
-    }
+    use crate::testutil::planted;
 
     #[test]
     fn residuals_match_definition() {
@@ -364,6 +435,50 @@ mod tests {
         assert!(z.m().iter().all(|&m| m == 10));
         sweep_rows(&x, &mut z, &mut resid, &a, &[-1e9; 3], 0.0, 0..10, 3, &mut rng);
         assert!(z.m().iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn packed_sweep_block_matches_scalar_bitwise() {
+        use crate::model::state::Kernel;
+        let d = 6usize;
+        for k in [5usize, 64, 70] {
+            let (x, z0, a) = planted(25, k, d, 14 + k as u64);
+            let logit: Vec<f64> = (0..k).map(|j| 0.1 * j as f64 - 0.2).collect();
+
+            let mut zs = z0.clone();
+            let mut rs = residuals(&x, &zs, &a, 0..25);
+            let mut rng_s = Pcg64::new(7);
+            let mut md_s = vec![0i64; k];
+            let flips_s = sweep_block(
+                zs.rows_bits_mut(0..25), k, rs.as_mut_slice(), d, &a, &logit,
+                1.3, k, &mut rng_s, &mut md_s,
+            );
+            zs.apply_m_delta(&md_s);
+
+            let mut zp = z0.clone();
+            zp.set_kernel(Kernel::Packed);
+            let wpr = zp.words_per_row();
+            let mut rp = residuals(&x, &zp, &a, 0..25);
+            let mut rng_p = Pcg64::new(7);
+            let mut md_p = vec![0i64; k];
+            let flips_p = sweep_block_packed(
+                zp.rows_words_mut(0..25), wpr, rp.as_mut_slice(), d, &a, &logit,
+                1.3, k, &mut rng_p, &mut md_p,
+            );
+            zp.apply_m_delta(&md_p);
+
+            assert_eq!(flips_s, flips_p, "K={k}: flip counts diverged");
+            assert_eq!(md_s, md_p, "K={k}: m_delta diverged");
+            assert_eq!(zs, zp, "K={k}: Z bits diverged");
+            assert!(rs.max_abs_diff(&rp) == 0.0, "K={k}: residuals diverged");
+            assert_eq!(
+                rng_s.next_u64(),
+                rng_p.next_u64(),
+                "K={k}: RNG consumption diverged"
+            );
+            assert!(flips_s > 0, "K={k}: sweep never flipped a bit");
+            assert!(zp.check_invariants());
+        }
     }
 
     #[test]

@@ -29,7 +29,7 @@
 
 use crate::linalg::Mat;
 use crate::model::missing::{masked_sweep, reconstruct_into, Mask};
-use crate::model::state::FeatureState;
+use crate::model::state::{FeatureState, Kernel};
 use crate::model::LinGauss;
 use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
 use crate::rng::Pcg64;
@@ -230,6 +230,14 @@ impl<'a> PredictEngine<'a> {
         Self { samples, sweeps, ctx, sweep_exec: ExecConfig::default() }
     }
 
+    /// Select the Z storage kernel for per-sample latent inference.
+    /// Bit-invariant: answers are byte-identical for either value (the
+    /// packed sweep kernel mirrors the scalar one exactly).
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        self.sweep_exec.kernel = kernel;
+        self
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -315,7 +323,7 @@ impl<'a> PredictEngine<'a> {
     ) -> FeatureState {
         let n = x.rows();
         let k = ps.k();
-        let mut z = FeatureState::empty(n);
+        let mut z = FeatureState::empty_with(n, self.sweep_exec.kernel);
         z.add_features(k);
         if k > 0 {
             let logit = ps.prior_logit();
@@ -597,6 +605,25 @@ mod tests {
         let l2 = e2.heldout_loglik(&x, 7);
         assert_eq!(l1.total.to_bits(), l2.total.to_bits());
         for (a, b) in l1.per_row.iter().zip(&l2.per_row) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn queries_are_kernel_invariant() {
+        // packed per-sample latent inference must answer every query
+        // byte-identically to the scalar kernel, at any thread count
+        let (x, samples) = planted(40, 3, 12, 4, 1);
+        let mut mrng = Pcg64::new(2);
+        let mask = Mask::random(40, 12, 0.3, &mut mrng);
+        let scalar = PredictEngine::new(&samples, 3, 2);
+        let packed = PredictEngine::new(&samples, 3, 4).with_kernel(Kernel::Packed);
+        assert!(scalar.reconstruct(&x, 7).max_abs_diff(&packed.reconstruct(&x, 7)) == 0.0);
+        assert!(scalar.impute(&x, &mask, 7).max_abs_diff(&packed.impute(&x, &mask, 7)) == 0.0);
+        let ls = scalar.heldout_loglik(&x, 7);
+        let lp = packed.heldout_loglik(&x, 7);
+        assert_eq!(ls.total.to_bits(), lp.total.to_bits());
+        for (a, b) in ls.per_row.iter().zip(&lp.per_row) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
     }

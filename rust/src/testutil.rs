@@ -1,0 +1,143 @@
+//! Shared planted-data fixtures for tests and benches.
+//!
+//! Every in-module and integration suite used to carry its own copy of a
+//! `problem(n, k, d, seed)` builder; they differed only in the Bernoulli
+//! density of the planted Z, the scale of the loadings A, and the noise
+//! level. One parameterised core lives here now, with named wrappers
+//! reproducing each historical parameterisation **draw-for-draw** (the
+//! RNG consumption order is part of the fixtures' contract: row-major
+//! Bernoulli bits for Z, then A entries, then one noise draw per X
+//! entry), so every numeric threshold in the migrated tests still sees
+//! the exact same data.
+
+use crate::linalg::Mat;
+use crate::model::state::FeatureState;
+use crate::model::LinGauss;
+use crate::rng::Pcg64;
+
+/// Planted linear-Gaussian problem: Z ~ Bernoulli(`density`) (row-major
+/// draws), A = `a_scale`·N(0,1) entries, X = Z A + `noise`·N(0,1).
+pub fn planted_with(
+    n: usize,
+    k: usize,
+    d: usize,
+    seed: u64,
+    density: f64,
+    a_scale: f64,
+    noise: f64,
+) -> (Mat, FeatureState, Mat) {
+    let mut rng = Pcg64::new(seed);
+    let mut z = FeatureState::empty(n);
+    z.add_features(k);
+    for i in 0..n {
+        for j in 0..k {
+            if rng.bernoulli(density) {
+                z.set(i, j, 1);
+            }
+        }
+    }
+    let a = Mat::from_fn(k, d, |_, _| a_scale * rng.normal());
+    let mut x = z.to_mat().matmul(&a);
+    for v in x.as_mut_slice().iter_mut() {
+        *v += noise * rng.normal();
+    }
+    (x, z, a)
+}
+
+/// The strong-signal fixture (`model/missing.rs`, `samplers/uncollapsed.rs`
+/// historical `planted`): dense features, large loadings, small noise.
+pub fn planted(n: usize, k: usize, d: usize, seed: u64) -> (Mat, FeatureState, Mat) {
+    planted_with(n, k, d, seed, 0.5, 2.0, 0.1)
+}
+
+/// The weak-signal sweep fixture (`parallel/mod.rs` historical
+/// `problem`): small logits keep bits flipping so determinism assertions
+/// stay meaningful. Returns per-feature prior logits too.
+pub fn sweep_problem(
+    n: usize,
+    k: usize,
+    d: usize,
+    seed: u64,
+) -> (Mat, FeatureState, Mat, Vec<f64>) {
+    let (x, z, a) = planted_with(n, k, d, seed, 0.4, 0.5, 0.4);
+    let logit: Vec<f64> = (0..k).map(|j| 0.2 * (j as f64) - 0.4).collect();
+    (x, z, a, logit)
+}
+
+/// The collapsed-model fixture (`model/lingauss.rs` historical
+/// `problem`): returns Z dense (the collapsed API is Mat-based) and the
+/// repo-standard LinGauss(0.5, 1.1).
+pub fn collapsed_problem(n: usize, k: usize, d: usize, seed: u64) -> (Mat, Mat, LinGauss) {
+    let (x, z, _) = planted_with(n, k, d, seed, 0.4, 1.0, 0.3);
+    (x, z.to_mat(), LinGauss::new(0.5, 1.1))
+}
+
+/// The cache-drift stress fixture (`rust/tests/collapsed_cache_drift.rs`
+/// historical `problem`): slightly denser Z than [`collapsed_problem`].
+pub fn drift_problem(n: usize, k: usize, d: usize, seed: u64) -> (Mat, Mat, LinGauss) {
+    let (x, z, _) = planted_with(n, k, d, seed, 0.45, 1.0, 0.3);
+    (x, z.to_mat(), LinGauss::new(0.5, 1.1))
+}
+
+/// The runtime-integration fixture (`rust/tests/integration_runtime.rs`
+/// historical `problem`): adds per-feature π draws and LinGauss(0.4, 1.1).
+/// Note the π draws come *after* the noise draws, matching the original.
+pub fn runtime_problem(
+    b: usize,
+    k: usize,
+    d: usize,
+    seed: u64,
+) -> (Mat, FeatureState, Mat, Vec<f64>, LinGauss) {
+    let mut rng = Pcg64::new(seed);
+    let mut z = FeatureState::empty(b);
+    z.add_features(k);
+    for i in 0..b {
+        for j in 0..k {
+            if rng.bernoulli(0.4) {
+                z.set(i, j, 1);
+            }
+        }
+    }
+    let a = Mat::from_fn(k, d, |_, _| rng.normal());
+    let mut x = z.to_mat().matmul(&a);
+    for v in x.as_mut_slice().iter_mut() {
+        *v += 0.4 * rng.normal();
+    }
+    let pi: Vec<f64> = (0..k).map(|_| rng.uniform().clamp(0.05, 0.95)).collect();
+    (x, z, a, pi, LinGauss::new(0.4, 1.1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The wrappers must reproduce the historical builders draw-for-draw;
+    /// spot-check the invariants the migrated suites rely on.
+    #[test]
+    fn fixtures_are_deterministic_and_consistent() {
+        let (x, z, a) = planted(12, 3, 5, 7);
+        let (x2, z2, a2) = planted(12, 3, 5, 7);
+        assert!(x.max_abs_diff(&x2) == 0.0);
+        assert_eq!(z, z2);
+        assert!(a.max_abs_diff(&a2) == 0.0);
+        assert!(z.check_invariants());
+        assert_eq!(x.rows(), 12);
+        assert_eq!(a.rows(), 3);
+
+        let (_, _, _, logit) = sweep_problem(10, 4, 3, 1);
+        assert_eq!(logit.len(), 4);
+        assert!((logit[0] + 0.4).abs() < 1e-12);
+
+        let (x, zm, lg) = collapsed_problem(15, 4, 6, 2);
+        assert_eq!(zm.rows(), 15);
+        assert_eq!(zm.cols(), 4);
+        assert_eq!(x.cols(), 6);
+        assert_eq!(lg.sigma_x, 0.5);
+
+        let (_, z, _, pi, lg) = runtime_problem(9, 5, 4, 3);
+        assert_eq!(z.k(), 5);
+        assert_eq!(pi.len(), 5);
+        assert!(pi.iter().all(|&p| (0.05..=0.95).contains(&p)));
+        assert_eq!(lg.sigma_x, 0.4);
+    }
+}

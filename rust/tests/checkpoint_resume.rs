@@ -10,6 +10,7 @@ use pibp::config::{Backend, CommModel, RunConfig, SamplerKind};
 use pibp::coordinator::{Coordinator, CoordinatorConfig};
 use pibp::data::cambridge::{generate, CambridgeConfig};
 use pibp::model::missing::{missing_mse, Mask};
+use pibp::model::state::Kernel;
 use pibp::model::LinGauss;
 use pibp::rng::Pcg64;
 use pibp::runner;
@@ -28,6 +29,7 @@ fn coord_cfg(p: usize, t: usize, seed: u64) -> CoordinatorConfig {
         processors: p,
         sub_iters: 5,
         threads_per_worker: t,
+        kernel: Kernel::Scalar,
         seed,
         lg: LinGauss::new(0.5, 1.0),
         alpha: 1.0,
@@ -251,12 +253,82 @@ fn resume_rejects_chain_relevant_overrides() {
     let err = runner::resume(&ckpt, &noop, |_| {}).unwrap_err().to_string();
     assert!(err.contains("already"), "unexpected error: {err}");
 
-    // benign overrides (threads) are fine
+    // benign overrides (threads, storage kernel) are fine
     let ok = vec![
         ("iters".to_string(), "6".to_string()),
         ("threads_per_worker".to_string(), "2".to_string()),
+        ("kernel".to_string(), "packed".to_string()),
     ];
     runner::resume(&ckpt, &ok, |_| {}).unwrap();
+}
+
+/// The storage kernel is bit-invariant, so a checkpoint written under one
+/// kernel must restore and continue bit-exactly under the other — pinned
+/// against an uninterrupted scalar reference in both directions.
+#[test]
+fn resume_swaps_kernel_bit_exactly() {
+    let (p, t) = (2usize, 2usize);
+    let dir = tmp_dir("kernel_swap");
+
+    // uninterrupted scalar reference chain
+    let full = runner::run(&run_cfg(p, t, &dir), |_| {}).unwrap();
+    assert!(full.final_k > 0, "reference chain never grew a feature");
+
+    for (write_kernel, resume_kernel) in
+        [(Kernel::Scalar, "packed"), (Kernel::Packed, "scalar")]
+    {
+        let tag = format!("{}→{}", write_kernel.name(), resume_kernel);
+        let ckpt = dir.join(format!("swap_{}.pibp", write_kernel.name()));
+        let mut part = run_cfg(p, t, &dir);
+        part.kernel = write_kernel;
+        part.iters = 5;
+        part.checkpoint_every = 5;
+        part.checkpoint_path = ckpt.to_string_lossy().into_owned();
+        runner::run(&part, |_| {}).unwrap();
+
+        let overrides = vec![
+            ("iters".to_string(), "10".to_string()),
+            ("kernel".to_string(), resume_kernel.to_string()),
+        ];
+        let (_, resumed) = runner::resume(&ckpt, &overrides, |_| {}).unwrap();
+
+        let (fa, ra) = (&full.final_params, &resumed.final_params);
+        assert_eq!(fa.k(), ra.k(), "{tag}: K diverged");
+        assert_eq!(fa.alpha.to_bits(), ra.alpha.to_bits(), "{tag}: alpha diverged");
+        assert_eq!(
+            fa.lg.sigma_x.to_bits(),
+            ra.lg.sigma_x.to_bits(),
+            "{tag}: sigma_x diverged"
+        );
+        assert_eq!(
+            fa.lg.sigma_a.to_bits(),
+            ra.lg.sigma_a.to_bits(),
+            "{tag}: sigma_a diverged"
+        );
+        let pi_f: Vec<u64> = fa.pi.iter().map(|v| v.to_bits()).collect();
+        let pi_r: Vec<u64> = ra.pi.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(pi_f, pi_r, "{tag}: π diverged");
+        assert!(fa.a.max_abs_diff(&ra.a) == 0.0, "{tag}: loadings A diverged");
+        assert_eq!(
+            full.reservoir.samples(),
+            resumed.reservoir.samples(),
+            "{tag}: reservoir samples diverged"
+        );
+        assert_eq!(
+            full.trace.points.len(),
+            resumed.trace.points.len(),
+            "{tag}: trace lengths diverged"
+        );
+        for (pf, pr) in full.trace.points.iter().zip(&resumed.trace.points) {
+            assert_eq!(pf.k, pr.k, "{tag}: trace K at iter {} diverged", pf.iter);
+            assert_eq!(
+                pf.heldout.to_bits(),
+                pr.heldout.to_bits(),
+                "{tag}: held-out metric at iter {} diverged",
+                pf.iter
+            );
+        }
+    }
 }
 
 /// Acceptance: `pibp predict`-style queries answered from a *loaded*

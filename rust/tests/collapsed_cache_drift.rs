@@ -9,20 +9,10 @@
 //!    (relative) across a grid of (σ_X, σ_A), so σ proposals never need
 //!    to touch X or Z.
 
-use pibp::linalg::{det_lemma_delta, Cholesky, Mat};
+use pibp::linalg::{det_lemma_delta, Cholesky};
 use pibp::model::{CollapsedCache, LinGauss};
 use pibp::rng::Pcg64;
-
-fn problem(n: usize, k: usize, d: usize, seed: u64) -> (Mat, Mat, LinGauss) {
-    let mut rng = Pcg64::new(seed);
-    let z = Mat::from_fn(n, k, |_, _| if rng.bernoulli(0.45) { 1.0 } else { 0.0 });
-    let a = Mat::from_fn(k, d, |_, _| rng.normal());
-    let mut x = z.matmul(&a);
-    for v in x.as_mut_slice().iter_mut() {
-        *v += 0.3 * rng.normal();
-    }
-    (x, z, LinGauss::new(0.5, 1.1))
-}
+use pibp::testutil::drift_problem as problem;
 
 /// Thousands of remove/flip/insert cycles at K≈20: the cache's factor-based
 /// logdet must stay within 1e-8 of a fresh factorisation. A shadow

@@ -7,6 +7,7 @@ use std::path::Path;
 use pibp::config::{Backend, CommModel};
 use pibp::coordinator::{Coordinator, CoordinatorConfig};
 use pibp::data::cambridge::{generate, CambridgeConfig};
+use pibp::model::state::Kernel;
 use pibp::model::LinGauss;
 use pibp::rng::Pcg64;
 use pibp::samplers::eval::HeldoutEval;
@@ -22,6 +23,7 @@ fn cfg(p: usize, seed: u64) -> CoordinatorConfig {
         processors: p,
         sub_iters: 5,
         threads_per_worker: 1,
+        kernel: Kernel::Scalar,
         seed,
         lg: LinGauss::new(0.5, 1.0),
         alpha: 1.0,

@@ -9,39 +9,14 @@ use std::path::Path;
 
 use pibp::linalg::Mat;
 use pibp::model::state::FeatureState;
-use pibp::model::LinGauss;
 use pibp::rng::Pcg64;
 use pibp::runtime::{Engine, Ops};
 use pibp::samplers::uncollapsed::residuals;
+use pibp::testutil::runtime_problem as problem;
 
 fn engine() -> Option<Engine> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     Engine::load(&dir).ok()
-}
-
-fn problem(
-    b: usize,
-    k: usize,
-    d: usize,
-    seed: u64,
-) -> (Mat, FeatureState, Mat, Vec<f64>, LinGauss) {
-    let mut rng = Pcg64::new(seed);
-    let mut z = FeatureState::empty(b);
-    z.add_features(k);
-    for i in 0..b {
-        for j in 0..k {
-            if rng.bernoulli(0.4) {
-                z.set(i, j, 1);
-            }
-        }
-    }
-    let a = Mat::from_fn(k, d, |_, _| rng.normal());
-    let mut x = z.to_mat().matmul(&a);
-    for v in x.as_mut_slice().iter_mut() {
-        *v += 0.4 * rng.normal();
-    }
-    let pi: Vec<f64> = (0..k).map(|_| rng.uniform().clamp(0.05, 0.95)).collect();
-    (x, z, a, pi, LinGauss::new(0.4, 1.1))
 }
 
 #[test]

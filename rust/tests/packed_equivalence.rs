@@ -1,0 +1,241 @@
+//! Differential harness pinning the packed (u64-word, popcount) Z
+//! kernel to the scalar (byte-per-bit) one.
+//!
+//! Two layers:
+//! 1. propcheck suites driving random op sequences through a packed and
+//!    a scalar [`FeatureState`] in lockstep, asserting bit-equality of
+//!    the bits, the column counts, and the popcount gram against a
+//!    dense ZᵀZ after every step;
+//! 2. full-sweep differential cases pinning `par_sweep_rows` on packed
+//!    states against scalar — Z bits, residual bytes, flip counts and
+//!    the parent RNG stream — over a seed × K × T grid.
+
+use pibp::linalg::Mat;
+use pibp::model::state::{FeatureState, Kernel};
+use pibp::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
+use pibp::propcheck::{self, Gen};
+use pibp::rng::Pcg64;
+use pibp::samplers::uncollapsed::residuals;
+use pibp::testutil::sweep_problem;
+
+fn mat_bits(m: &Mat) -> Vec<u64> {
+    m.as_slice().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Every cross-repr invariant the pair must satisfy after each op.
+fn assert_lockstep(scalar: &FeatureState, packed: &FeatureState, ctx: &str) -> Result<(), String> {
+    if !scalar.check_invariants() {
+        return Err(format!("{ctx}: scalar invariants broken"));
+    }
+    if !packed.check_invariants() {
+        return Err(format!("{ctx}: packed invariants broken"));
+    }
+    if packed.k() > 0 && !packed.is_packed() {
+        return Err(format!("{ctx}: packed state silently became scalar"));
+    }
+    if scalar != packed {
+        return Err(format!("{ctx}: Z bits diverged (k={})", scalar.k()));
+    }
+    if scalar.m() != packed.m() {
+        return Err(format!("{ctx}: column counts diverged"));
+    }
+    // popcount gram must be bit-identical to the dense ZᵀZ of either repr
+    let dense = scalar.to_mat().gram();
+    if mat_bits(&packed.gram()) != mat_bits(&dense) {
+        return Err(format!("{ctx}: packed gram != dense ZᵀZ"));
+    }
+    if mat_bits(&scalar.gram()) != mat_bits(&dense) {
+        return Err(format!("{ctx}: scalar gram != dense ZᵀZ"));
+    }
+    Ok(())
+}
+
+/// Flip bit (i, j) through the raw storage (not `set`), returning the
+/// m-delta the caller owes `apply_m_delta` — the sweep kernels' access
+/// pattern, exercised here against both layouts.
+fn raw_flip(st: &mut FeatureState, i: usize, j: usize) -> i64 {
+    let was_set = st.get(i, j) == 1;
+    if st.is_packed() {
+        let words = st.rows_words_mut(i..i + 1);
+        words[j / 64] ^= 1u64 << (j % 64);
+    } else {
+        let bits = st.rows_bits_mut(i..i + 1);
+        bits[j] ^= 1;
+    }
+    if was_set {
+        -1
+    } else {
+        1
+    }
+}
+
+#[test]
+fn random_op_sequences_stay_bit_identical() {
+    propcheck::run("packed/scalar op lockstep", 200, |g: &mut Gen| {
+        let n = g.usize_in(1, 16);
+        // spans 0, sub-word, exact-word and multi-word feature counts
+        let k0 = g.usize_in(0, 80);
+        let mut scalar = FeatureState::empty(n);
+        let mut packed = FeatureState::empty_with(n, Kernel::Packed);
+        scalar.add_features(k0);
+        packed.add_features(k0);
+        assert_lockstep(&scalar, &packed, "init")?;
+        let ops = g.usize_in(1, 30);
+        for step in 0..ops {
+            let k = scalar.k();
+            match *g.choose(&["set", "get", "row", "add", "compact", "raw", "tmm"]) {
+                "set" if k > 0 => {
+                    let (i, j) = (g.usize_in(0, n - 1), g.usize_in(0, k - 1));
+                    let v = u8::from(g.bool(0.5));
+                    scalar.set(i, j, v);
+                    packed.set(i, j, v);
+                }
+                "get" if k > 0 => {
+                    let (i, j) = (g.usize_in(0, n - 1), g.usize_in(0, k - 1));
+                    if scalar.get(i, j) != packed.get(i, j) {
+                        return Err(format!("step {step}: get({i},{j}) diverged"));
+                    }
+                }
+                "row" if k > 0 => {
+                    let i = g.usize_in(0, n - 1);
+                    if scalar.row_f64(i) != packed.row_f64(i) {
+                        return Err(format!("step {step}: row_f64({i}) diverged"));
+                    }
+                }
+                "add" => {
+                    let grow = g.usize_in(0, 9);
+                    let ks = scalar.add_features(grow);
+                    let kp = packed.add_features(grow);
+                    if ks != kp {
+                        return Err(format!("step {step}: add_features returned {ks} vs {kp}"));
+                    }
+                }
+                "compact" => {
+                    let keep_s = scalar.compact();
+                    let keep_p = packed.compact();
+                    if keep_s != keep_p {
+                        return Err(format!("step {step}: compact keep lists diverged"));
+                    }
+                }
+                "raw" if k > 0 => {
+                    // raw-storage flip + apply_m_delta: the sweep kernels'
+                    // write path
+                    let (i, j) = (g.usize_in(0, n - 1), g.usize_in(0, k - 1));
+                    let mut delta = vec![0i64; k];
+                    delta[j] = raw_flip(&mut scalar, i, j);
+                    let dp = raw_flip(&mut packed, i, j);
+                    if delta[j] != dp {
+                        return Err(format!("step {step}: raw flip deltas diverged"));
+                    }
+                    scalar.apply_m_delta(&delta);
+                    packed.apply_m_delta(&delta);
+                    if scalar.recount() != *scalar.m() || packed.recount() != *packed.m() {
+                        return Err(format!("step {step}: m drifted from recount"));
+                    }
+                }
+                "tmm" => {
+                    let d = g.usize_in(1, 4);
+                    let mut vals = vec![0.0f64; n * d];
+                    for v in vals.iter_mut() {
+                        *v = g.f64_in(-2.0, 2.0);
+                    }
+                    let x = Mat::from_fn(n, d, |i, j| vals[i * d + j]);
+                    let dense = scalar.to_mat().t_matmul(&x);
+                    if mat_bits(&packed.t_matmul(&x)) != mat_bits(&dense)
+                        || mat_bits(&scalar.t_matmul(&x)) != mat_bits(&dense)
+                    {
+                        return Err(format!("step {step}: t_matmul != dense ZᵀX"));
+                    }
+                }
+                _ => {} // op not applicable at k == 0
+            }
+            assert_lockstep(&scalar, &packed, &format!("step {step}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gram_matches_dense_on_random_matrices() {
+    propcheck::run("popcount gram vs dense ZᵀZ", 200, |g: &mut Gen| {
+        let n = g.usize_in(1, 24);
+        let k = g.usize_in(1, 130); // up to three words per row
+        let density = g.f64_in(0.05, 0.95);
+        let mut packed = FeatureState::empty_with(n, Kernel::Packed);
+        packed.add_features(k);
+        for i in 0..n {
+            for j in 0..k {
+                if g.bool(density) {
+                    packed.set(i, j, 1);
+                }
+            }
+        }
+        let mut scalar = packed.clone();
+        scalar.set_kernel(Kernel::Scalar);
+        assert_lockstep(&scalar, &packed, "built")?;
+        // range variants must agree with the dense slice too
+        let lo = g.usize_in(0, n - 1);
+        let hi = g.usize_in(lo, n);
+        let zm = packed.to_mat();
+        let dense_range =
+            Mat::from_fn(hi - lo, k, |i, j| zm.as_slice()[(lo + i) * k + j]).gram();
+        if mat_bits(&packed.gram_range(lo..hi)) != mat_bits(&dense_range) {
+            return Err(format!("gram_range({lo}..{hi}) != dense"));
+        }
+        if mat_bits(&scalar.gram_range(lo..hi)) != mat_bits(&dense_range) {
+            return Err(format!("scalar gram_range({lo}..{hi}) != dense"));
+        }
+        Ok(())
+    });
+}
+
+/// One full sweep on each kernel; returns everything the chain contract
+/// pins: final Z, residual bytes, flip count, and the parent RNG's next
+/// draw (stream position).
+fn sweep_once(
+    kernel: Kernel,
+    threads: usize,
+    n: usize,
+    k: usize,
+    d: usize,
+    seed: u64,
+) -> (FeatureState, Vec<u64>, usize, u64) {
+    let (x, mut z, a, logit) = sweep_problem(n, k, d, seed);
+    z.set_kernel(kernel);
+    let mut resid = residuals(&x, &z, &a, 0..n);
+    let exec = ExecConfig {
+        ctx: if threads <= 1 { ParallelCtx::inline() } else { ParallelCtx::pooled(threads) },
+        block_rows: 7, // ragged last block on purpose
+        kernel,
+    };
+    let mut rng = Pcg64::new(seed ^ 0xabcd);
+    let mut flips = 0;
+    for _ in 0..3 {
+        flips += par_sweep_rows(&mut z, &mut resid, &a, &logit, 2.0, 0..n, k, &exec, &mut rng);
+    }
+    (z, mat_bits(&resid), flips, rng.next_u64())
+}
+
+#[test]
+fn full_sweeps_match_scalar_over_seed_grid() {
+    // K spans sub-word, exact-word and multi-word rows; T spans inline
+    // and pooled scheduling. Scalar at T=1 is the pinned oracle.
+    for &(n, k, d) in &[(23usize, 5usize, 3usize), (16, 64, 4), (31, 70, 2)] {
+        for seed in 0..4u64 {
+            let (z0, r0, f0, s0) = sweep_once(Kernel::Scalar, 1, n, k, d, seed);
+            for &t in &[1usize, 2, 4] {
+                for &kernel in &[Kernel::Scalar, Kernel::Packed] {
+                    let (z, r, f, s) = sweep_once(kernel, t, n, k, d, seed);
+                    let tag = format!("n={n} k={k} seed={seed} T={t} {:?}", kernel);
+                    assert_eq!(z, z0, "Z diverged [{tag}]");
+                    assert_eq!(r, r0, "residual bytes diverged [{tag}]");
+                    assert_eq!(f, f0, "flip count diverged [{tag}]");
+                    assert_eq!(s, s0, "parent RNG stream diverged [{tag}]");
+                    if kernel == Kernel::Packed {
+                        assert!(z.is_packed(), "sweep changed the repr [{tag}]");
+                    }
+                }
+            }
+        }
+    }
+}

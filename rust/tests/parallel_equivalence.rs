@@ -20,15 +20,17 @@ use pibp::config::{Backend, CommModel};
 use pibp::coordinator::{Coordinator, CoordinatorConfig};
 use pibp::data::cambridge::{generate, CambridgeConfig};
 use pibp::linalg::Mat;
+use pibp::model::state::Kernel;
 use pibp::model::LinGauss;
 use pibp::samplers::hybrid::{make_shards, HybridConfig, HybridSampler};
 use pibp::samplers::SamplerOptions;
 
-fn coord_cfg(p: usize, seed: u64, opts: SamplerOptions) -> CoordinatorConfig {
+fn coord_cfg(p: usize, kernel: Kernel, seed: u64, opts: SamplerOptions) -> CoordinatorConfig {
     CoordinatorConfig {
         processors: p,
         sub_iters: 5,
         threads_per_worker: 1,
+        kernel,
         seed,
         lg: LinGauss::new(0.5, 1.0),
         alpha: 1.0,
@@ -50,7 +52,7 @@ fn p1_coordinator_reproduces_serial_hybrid_chain_exactly() {
     let (ds, _) = generate(&CambridgeConfig { n: 80, seed: 2, ..Default::default() });
     let seed = 42u64;
     let mut coord =
-        Coordinator::new(&ds.x, coord_cfg(1, seed, opts_no_demote())).unwrap();
+        Coordinator::new(&ds.x, coord_cfg(1, Kernel::Scalar, seed, opts_no_demote())).unwrap();
     let mut serial = HybridSampler::new(
         ds.x.clone(),
         LinGauss::new(0.5, 1.0),
@@ -64,9 +66,11 @@ fn p1_coordinator_reproduces_serial_hybrid_chain_exactly() {
         seed,
     );
 
+    let mut pins: Vec<(usize, u64, u64, u64)> = Vec::new();
     for it in 0..25 {
         let rec = coord.step().unwrap();
         let st = serial.step();
+        pins.push((st.k, st.alpha.to_bits(), st.sigma_x.to_bits(), st.sigma_a.to_bits()));
         assert_eq!(rec.k, st.k, "iter {it}: K⁺ diverged");
         assert_eq!(
             rec.alpha.to_bits(),
@@ -107,6 +111,18 @@ fn p1_coordinator_reproduces_serial_hybrid_chain_exactly() {
     assert!(serial.k() > 0, "chain never instantiated a feature");
     let z = coord.gather_z().unwrap();
     assert_eq!(z, serial.z, "gathered Z diverged from the serial oracle");
+
+    // ---- the packed kernel must reproduce the same (scalar-pinned)
+    //      oracle chain, same P=1 configuration ----
+    let mut packed =
+        Coordinator::new(&ds.x, coord_cfg(1, Kernel::Packed, seed, opts_no_demote())).unwrap();
+    for (it, pin) in pins.iter().enumerate() {
+        let rec = packed.step().unwrap();
+        let got = (rec.k, rec.alpha.to_bits(), rec.sigma_x.to_bits(), rec.sigma_a.to_bits());
+        assert_eq!(got, *pin, "packed iter {it}: chain diverged from the scalar oracle");
+    }
+    let zp = packed.gather_z().unwrap();
+    assert_eq!(zp, serial.z, "packed gathered Z diverged from the serial oracle");
 }
 
 #[test]
@@ -115,54 +131,58 @@ fn p4_merged_suffstats_match_serial_recomputation() {
     let p = 4usize;
     let (ds, _) = generate(&CambridgeConfig { n, seed: 5, ..Default::default() });
     // default options: demotion stays ON, so the merge/compaction paths
-    // the production coordinator runs are the ones being pinned.
-    let mut coord =
-        Coordinator::new(&ds.x, coord_cfg(p, 7, SamplerOptions::default())).unwrap();
-    let shards = make_shards(n, p);
-    let d = ds.x.cols();
+    // the production coordinator runs are the ones being pinned — on
+    // both Z kernels (the packed master assembles its gram from column
+    // popcounts; the recomputation below is always dense).
+    for kernel in [Kernel::Scalar, Kernel::Packed] {
+        let mut coord =
+            Coordinator::new(&ds.x, coord_cfg(p, kernel, 7, SamplerOptions::default())).unwrap();
+        let shards = make_shards(n, p);
+        let d = ds.x.cols();
 
-    let mut saw_features = false;
-    for it in 0..12 {
-        coord.step().unwrap();
-        let merged = coord.last_merged().expect("merged stats recorded").clone();
-        let z = coord.gather_z().unwrap();
-        let k = z.k();
-        assert_eq!(merged.m.len(), k, "iter {it}: m length");
-        assert_eq!(merged.m, z.m(), "iter {it}: merged m_k vs gathered Z");
-        assert_eq!(merged.ztz.rows(), k, "iter {it}: ZᵀZ shape");
-        assert_eq!(merged.ztx.rows(), k, "iter {it}: ZᵀX shape");
-        if k > 0 {
-            saw_features = true;
-        }
+        let mut saw_features = false;
+        for it in 0..12 {
+            coord.step().unwrap();
+            let merged = coord.last_merged().expect("merged stats recorded").clone();
+            let z = coord.gather_z().unwrap();
+            let k = z.k();
+            assert_eq!(merged.m.len(), k, "iter {it}: m length");
+            assert_eq!(merged.m, z.m(), "iter {it}: merged m_k vs gathered Z");
+            assert_eq!(merged.ztz.rows(), k, "iter {it}: ZᵀZ shape");
+            assert_eq!(merged.ztx.rows(), k, "iter {it}: ZᵀX shape");
+            if k > 0 {
+                saw_features = true;
+            }
 
-        // Serial recomputation, shard by shard in worker order — the same
-        // accumulation sequence the master's merge performs, so agreement
-        // must be bit-for-bit, not approximate.
-        let mut ztz = Mat::zeros(k, k);
-        let mut ztx = Mat::zeros(k, d);
-        let mut tr_xx = 0.0f64;
-        for sh in &shards {
-            let zp = Mat::from_fn(sh.len(), k, |i, j| z.get(sh.start + i, j) as f64);
-            let xp = Mat::from_fn(sh.len(), d, |i, j| ds.x[(sh.start + i, j)]);
-            ztz.add_assign(&zp.gram());
-            ztx.add_assign(&zp.t_matmul(&xp));
-            tr_xx += xp.frob2();
+            // Serial recomputation, shard by shard in worker order — the same
+            // accumulation sequence the master's merge performs, so agreement
+            // must be bit-for-bit, not approximate.
+            let mut ztz = Mat::zeros(k, k);
+            let mut ztx = Mat::zeros(k, d);
+            let mut tr_xx = 0.0f64;
+            for sh in &shards {
+                let zp = Mat::from_fn(sh.len(), k, |i, j| z.get(sh.start + i, j) as f64);
+                let xp = Mat::from_fn(sh.len(), d, |i, j| ds.x[(sh.start + i, j)]);
+                ztz.add_assign(&zp.gram());
+                ztx.add_assign(&zp.t_matmul(&xp));
+                tr_xx += xp.frob2();
+            }
+            assert!(
+                merged.ztz.max_abs_diff(&ztz) == 0.0,
+                "iter {it}: merged ZᵀZ != serial recomputation"
+            );
+            assert!(
+                merged.ztx.max_abs_diff(&ztx) == 0.0,
+                "iter {it}: merged ZᵀX != serial recomputation"
+            );
+            assert_eq!(
+                merged.tr_xx.to_bits(),
+                tr_xx.to_bits(),
+                "iter {it}: merged tr XᵀX != serial recomputation"
+            );
         }
-        assert!(
-            merged.ztz.max_abs_diff(&ztz) == 0.0,
-            "iter {it}: merged ZᵀZ != serial recomputation"
-        );
-        assert!(
-            merged.ztx.max_abs_diff(&ztx) == 0.0,
-            "iter {it}: merged ZᵀX != serial recomputation"
-        );
-        assert_eq!(
-            merged.tr_xx.to_bits(),
-            tr_xx.to_bits(),
-            "iter {it}: merged tr XᵀX != serial recomputation"
-        );
+        assert!(saw_features, "chain never instantiated a feature ({})", kernel.name());
     }
-    assert!(saw_features, "chain never instantiated a feature");
 }
 
 #[test]

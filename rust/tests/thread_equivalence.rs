@@ -21,6 +21,7 @@ use pibp::config::{Backend, CommModel};
 use pibp::coordinator::{Coordinator, CoordinatorConfig};
 use pibp::data::cambridge::{generate, CambridgeConfig};
 use pibp::linalg::Mat;
+use pibp::model::state::Kernel;
 use pibp::model::LinGauss;
 use pibp::parallel::ParallelCtx;
 use pibp::samplers::hybrid::{HybridConfig, HybridSampler};
@@ -28,11 +29,18 @@ use pibp::samplers::SamplerOptions;
 
 const ITERS: usize = 12;
 
-fn coord_cfg(p: usize, t: usize, seed: u64, opts: SamplerOptions) -> CoordinatorConfig {
+fn coord_cfg(
+    p: usize,
+    t: usize,
+    kernel: Kernel,
+    seed: u64,
+    opts: SamplerOptions,
+) -> CoordinatorConfig {
     CoordinatorConfig {
         processors: p,
         sub_iters: 5,
         threads_per_worker: t,
+        kernel,
         seed,
         lg: LinGauss::new(0.5, 1.0),
         alpha: 1.0,
@@ -99,44 +107,54 @@ fn pt_grid_reproduces_serial_oracle_chain_exactly() {
         }
         assert!(serial.k() > 0, "P={p}: chain never instantiated a feature");
 
-        // ---- every pooled T must reproduce it bit-for-bit ----
+        // ---- every pooled T, on either Z kernel, must reproduce the
+        //      scalar-pinned oracle bit-for-bit ----
         for t in [1usize, 2, 4] {
-            let mut coord =
-                Coordinator::new(&ds.x, coord_cfg(p, t, seed, opts_no_demote()))
-                    .unwrap();
-            for (it, pin) in pins.iter().enumerate() {
-                let rec = coord.step().unwrap();
-                assert_eq!(rec.k, pin.k, "P={p} T={t} iter {it}: K⁺ diverged");
+            for kernel in [Kernel::Scalar, Kernel::Packed] {
+                let kn = kernel.name();
+                let mut coord = Coordinator::new(
+                    &ds.x,
+                    coord_cfg(p, t, kernel, seed, opts_no_demote()),
+                )
+                .unwrap();
+                for (it, pin) in pins.iter().enumerate() {
+                    let rec = coord.step().unwrap();
+                    assert_eq!(rec.k, pin.k, "P={p} T={t} {kn} iter {it}: K⁺ diverged");
+                    assert_eq!(
+                        rec.alpha.to_bits(),
+                        pin.alpha,
+                        "P={p} T={t} {kn} iter {it}: alpha diverged"
+                    );
+                    assert_eq!(
+                        rec.sigma_x.to_bits(),
+                        pin.sigma_x,
+                        "P={p} T={t} {kn} iter {it}: sigma_x diverged"
+                    );
+                    assert_eq!(
+                        rec.sigma_a.to_bits(),
+                        pin.sigma_a,
+                        "P={p} T={t} {kn} iter {it}: sigma_a diverged"
+                    );
+                    let cp = coord.params();
+                    let pi_bits: Vec<u64> =
+                        cp.pi.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(pi_bits, pin.pi, "P={p} T={t} {kn} iter {it}: π diverged");
+                    assert_eq!(
+                        cp.a.rows(),
+                        pin.a.rows(),
+                        "P={p} T={t} {kn} iter {it}: A rows"
+                    );
+                    assert!(
+                        cp.a.max_abs_diff(&pin.a) == 0.0,
+                        "P={p} T={t} {kn} iter {it}: loadings A diverged"
+                    );
+                }
+                let z = coord.gather_z().unwrap();
                 assert_eq!(
-                    rec.alpha.to_bits(),
-                    pin.alpha,
-                    "P={p} T={t} iter {it}: alpha diverged"
-                );
-                assert_eq!(
-                    rec.sigma_x.to_bits(),
-                    pin.sigma_x,
-                    "P={p} T={t} iter {it}: sigma_x diverged"
-                );
-                assert_eq!(
-                    rec.sigma_a.to_bits(),
-                    pin.sigma_a,
-                    "P={p} T={t} iter {it}: sigma_a diverged"
-                );
-                let cp = coord.params();
-                let pi_bits: Vec<u64> =
-                    cp.pi.iter().map(|v| v.to_bits()).collect();
-                assert_eq!(pi_bits, pin.pi, "P={p} T={t} iter {it}: π diverged");
-                assert_eq!(cp.a.rows(), pin.a.rows(), "P={p} T={t} iter {it}: A rows");
-                assert!(
-                    cp.a.max_abs_diff(&pin.a) == 0.0,
-                    "P={p} T={t} iter {it}: loadings A diverged"
+                    z, serial.z,
+                    "P={p} T={t} {kn}: gathered Z diverged from the serial oracle"
                 );
             }
-            let z = coord.gather_z().unwrap();
-            assert_eq!(
-                z, serial.z,
-                "P={p} T={t}: gathered Z diverged from the serial oracle"
-            );
         }
     }
 }
@@ -148,10 +166,10 @@ fn thread_count_is_invisible_even_with_demotion_on() {
     // production options, chain-for-chain.
     let (ds, _) = generate(&CambridgeConfig { n: 150, seed: 9, ..Default::default() });
     let seed = 23u64;
-    let run = |t: usize| {
+    let run = |t: usize, kernel: Kernel| {
         let mut coord = Coordinator::new(
             &ds.x,
-            coord_cfg(3, t, seed, SamplerOptions::default()),
+            coord_cfg(3, t, kernel, seed, SamplerOptions::default()),
         )
         .unwrap();
         let mut trace = Vec::new();
@@ -166,11 +184,13 @@ fn thread_count_is_invisible_even_with_demotion_on() {
         }
         (trace, coord.gather_z().unwrap())
     };
-    let (trace1, z1) = run(1);
-    for t in [2usize, 4] {
-        let (trace_t, z_t) = run(t);
-        assert_eq!(trace1, trace_t, "T={t} changed the chain under demotion");
-        assert_eq!(z1, z_t, "T={t} changed the gathered Z under demotion");
+    let (trace1, z1) = run(1, Kernel::Scalar);
+    for (t, kernel) in [(2usize, Kernel::Scalar), (4, Kernel::Scalar), (1, Kernel::Packed), (4, Kernel::Packed)]
+    {
+        let kn = kernel.name();
+        let (trace_t, z_t) = run(t, kernel);
+        assert_eq!(trace1, trace_t, "T={t} {kn} changed the chain under demotion");
+        assert_eq!(z1, z_t, "T={t} {kn} changed the gathered Z under demotion");
     }
     assert!(z1.k() > 0, "chain never instantiated a feature");
 }
