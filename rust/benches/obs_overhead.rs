@@ -1,0 +1,110 @@
+//! T-S7 — observability overhead on the sweep hot loop: the same
+//! `par_sweep_rows` workload at obs ∈ {off, counters, full}, T ∈ {1, 4}.
+//!
+//! The obs layer's contract is "cannot perturb the chain, and costs
+//! (almost) nothing when you turn it on": probes are one relaxed atomic
+//! load when off, counters add relaxed atomic adds at aggregation points
+//! (never per row), and full mode adds `Instant::now()` span pairs at
+//! phase boundaries (per block dispatch, not per row). This bench pins
+//! the cost: full-mode overhead must stay under 5% of the off-mode sweep
+//! time (compared on medians), and the process exits non-zero if not —
+//! CI treats that as a failure.
+
+use std::time::Duration;
+
+use pibp::bench::{bench, header};
+use pibp::linalg::Mat;
+use pibp::model::state::FeatureState;
+use pibp::obs::{self, ObsLevel};
+use pibp::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
+use pibp::rng::Pcg64;
+use pibp::samplers::uncollapsed::residuals;
+
+const THRESHOLD: f64 = 0.05;
+
+fn problem(b: usize, k: usize, d: usize) -> (Mat, FeatureState, Mat, Vec<f64>) {
+    let (x, z, a) = pibp::testutil::planted_with(b, k, d, 1, 0.3, 1.0, 0.5);
+    (x, z, a, vec![0.0; k])
+}
+
+fn main() {
+    let (b, k, d) = (1024usize, 16usize, 36usize);
+    println!("## T-S7 — obs overhead on the sweep hot loop (b={b} k={k} d={d})\n");
+    println!("{}", header());
+    let budget = Duration::from_millis(800);
+
+    let mut entries: Vec<String> = Vec::new();
+    let mut max_full_overhead = f64::NEG_INFINITY;
+    for &t in &[1usize, 4] {
+        let mut medians = Vec::new();
+        for level in [ObsLevel::Off, ObsLevel::Counters, ObsLevel::Full] {
+            obs::set_level(level);
+            obs::reset();
+            let (x, z0, a, logit) = problem(b, k, d);
+            let mut z = z0.clone();
+            let mut rng = Pcg64::new(4).split(1000);
+            let mut resid = residuals(&x, &z, &a, 0..b);
+            let exec = ExecConfig::with_ctx(ParallelCtx::pooled(t));
+            let r = bench(
+                &format!("obs={:<8} sweep b={b} k={k} T={t}", level.name()),
+                1,
+                budget,
+                5,
+                || {
+                    par_sweep_rows(&mut z, &mut resid, &a, &logit, 2.0, 0..b, k,
+                                   &exec, &mut rng);
+                },
+            );
+            println!("{}", r.row());
+            medians.push(r.per_iter.median);
+        }
+        obs::set_level(ObsLevel::Off);
+        let (off, counters, full) = (medians[0], medians[1], medians[2]);
+        let counters_ov = counters / off - 1.0;
+        let full_ov = full / off - 1.0;
+        max_full_overhead = max_full_overhead.max(full_ov);
+        println!(
+            "        T={t}: counters {:+.2}%, full {:+.2}% vs off\n",
+            100.0 * counters_ov,
+            100.0 * full_ov
+        );
+        entries.push(format!(
+            "    {{\"threads\": {t}, \"off_s\": {off:.6e}, \
+             \"counters_s\": {counters:.6e}, \"full_s\": {full:.6e}, \
+             \"counters_overhead\": {counters_ov:.4}, \
+             \"full_overhead\": {full_ov:.4}}}"
+        ));
+    }
+
+    let ok = max_full_overhead < THRESHOLD;
+    let json = format!(
+        "{{\n  \"bench\": \"obs_overhead\",\n  \"b\": {b},\n  \"k\": {k},\n  \
+         \"d\": {d},\n  \"threshold\": {THRESHOLD},\n  \
+         \"max_full_overhead\": {max_full_overhead:.4},\n  \
+         \"full_under_threshold\": {ok},\n  \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    // cargo runs bench binaries with cwd = the package dir (rust/), so
+    // anchor the output at the workspace root where CI expects it
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_obs.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("obs overhead results → {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    if ok {
+        println!(
+            "PASS: full-mode overhead {:.2}% < {:.0}%",
+            100.0 * max_full_overhead,
+            100.0 * THRESHOLD
+        );
+    } else {
+        eprintln!(
+            "FAIL: full-mode obs overhead {:.2}% exceeds the {:.0}% budget",
+            100.0 * max_full_overhead,
+            100.0 * THRESHOLD
+        );
+        std::process::exit(1);
+    }
+}

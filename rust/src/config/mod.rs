@@ -10,6 +10,7 @@ use anyhow::{bail, Context, Result};
 pub use json::Json;
 
 pub use crate::model::state::Kernel;
+pub use crate::obs::ObsLevel;
 
 /// Which sampler drives the run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -136,6 +137,15 @@ pub struct RunConfig {
     /// Trace thinning stride: keep every k-th recorded evaluation point
     /// (1 = keep all) so long checkpointed chains bound trace memory.
     pub trace_thin: usize,
+    /// Runtime observability level (`crate::obs`): `off`, `counters`
+    /// (sampler-health counters + K⁺ trajectory) or `full` (adds phase
+    /// span timers). Provably non-perturbing — excluded from the resume
+    /// fingerprint like `threads_per_worker` and `kernel`, so a resumed
+    /// run may toggle it freely.
+    pub obs: ObsLevel,
+    /// Obs report path ("" = `<out_dir>/run_obs.json` when obs is on).
+    /// Flushed at the checkpoint cadence and at run end.
+    pub obs_out: String,
 }
 
 impl Default for RunConfig {
@@ -170,6 +180,8 @@ impl Default for RunConfig {
             checkpoint_path: String::new(),
             keep_samples: 0,
             trace_thin: 1,
+            obs: ObsLevel::Off,
+            obs_out: String::new(),
         }
     }
 }
@@ -243,6 +255,8 @@ impl RunConfig {
             "checkpoint_path" => self.checkpoint_path = value.into(),
             "keep_samples" => self.keep_samples = uint()?,
             "trace_thin" => self.trace_thin = uint()?,
+            "obs" => self.obs = ObsLevel::parse(value)?,
+            "obs_out" => self.obs_out = value.into(),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -294,7 +308,7 @@ impl RunConfig {
              eval_sweeps={}\nkmax_new={}\nk_cap={}\nartifacts_dir={}\n\
              out_dir={}\ncomm_latency_s={}\ncomm_bandwidth_gbps={}\n\
              checkpoint_every={}\ncheckpoint_path={}\nkeep_samples={}\n\
-             trace_thin={}\n",
+             trace_thin={}\nobs={}\nobs_out={}\n",
             self.dataset,
             self.n,
             self.k_true,
@@ -325,6 +339,8 @@ impl RunConfig {
             self.checkpoint_path,
             self.keep_samples,
             self.trace_thin,
+            self.obs.name(),
+            self.obs_out,
         )
     }
 
@@ -354,7 +370,10 @@ impl RunConfig {
     /// and scalar Z storage produce bit-identical chains, so resume may
     /// switch reprs), `iters` (resume
     /// extends the horizon), checkpoint/serving knobs, output/artifact
-    /// paths, and the comm model (virtual-time accounting only). `pibp
+    /// paths, the comm model (virtual-time accounting only), and the
+    /// `obs`/`obs_out` observability keys (observation never perturbs the
+    /// chain — `rust/tests/obs_equivalence.rs` — so resume may toggle it
+    /// mid-run at any checkpoint boundary). `pibp
     /// resume` refuses a checkpoint whose fingerprint differs from the
     /// resumed configuration's.
     pub fn fingerprint(&self) -> u64 {
@@ -472,8 +491,12 @@ mod tests {
         c.apply("keep_samples", "16").unwrap();
         c.apply("trace_thin", "4").unwrap();
         c.apply("kernel", "packed").unwrap();
+        c.apply("obs", "counters").unwrap();
+        c.apply("obs_out", "out/run_obs.json").unwrap();
         let back = RunConfig::from_canonical(&c.canonical()).unwrap();
         assert_eq!(back.kernel, Kernel::Packed);
+        assert_eq!(back.obs, ObsLevel::Counters);
+        assert_eq!(back.obs_out, "out/run_obs.json");
         assert_eq!(back.processors, 5);
         assert_eq!(back.dataset, "synth");
         assert_eq!(back.seed, 99);
@@ -505,6 +528,9 @@ mod tests {
         c.out_dir = "elsewhere".into();
         // the storage kernel is bit-invariant, so resume may switch it
         c.kernel = Kernel::Packed;
+        // observability never perturbs the chain, so resume may toggle it
+        c.obs = ObsLevel::Full;
+        c.obs_out = "elsewhere/run_obs.json".into();
         assert_eq!(c.fingerprint(), base.fingerprint());
         // chain-relevant keys MUST change it
         let mut c = base.clone();

@@ -21,6 +21,7 @@ use crate::config::{Backend, CommModel};
 use crate::linalg::Mat;
 use crate::model::state::{FeatureState, Kernel};
 use crate::model::{ibp, GlobalParams, LinGauss};
+use crate::obs;
 use crate::parallel::ParallelCtx;
 use crate::rng::Pcg64;
 use crate::runtime::{Engine, Ops};
@@ -251,10 +252,14 @@ impl Coordinator {
         let mut out: Vec<Option<T>> =
             (0..self.cfg.processors).map(|_| None).collect();
         for _ in 0..self.cfg.processors {
-            let (id, buf) = self
-                .from_workers
-                .recv()
-                .with_context(|| format!("worker died during {what}"))?;
+            // the span measures the master's blocking wait for this
+            // message — per worker, so stragglers show up in the p99
+            let recv = {
+                let _wait = obs::span(obs::Span::MasterGatherWait);
+                self.from_workers.recv()
+            };
+            let (id, buf) =
+                recv.with_context(|| format!("worker died during {what}"))?;
             if id >= out.len() {
                 bail!("{what}: message from unknown worker id {id} (P={})",
                       out.len());
@@ -279,6 +284,7 @@ impl Coordinator {
     /// One global iteration.
     pub fn step(&mut self) -> Result<IterRecord> {
         let wall_start = Instant::now();
+        let draws0 = self.rng.draw_count();
         let mut timing = IterTiming {
             worker_busy_s: vec![0.0; self.cfg.processors],
             master_busy_s: 0.0,
@@ -286,6 +292,7 @@ impl Coordinator {
             gather_bytes: Vec::with_capacity(self.cfg.processors),
         };
         // ---- broadcast ----
+        let bcast_span = obs::span(obs::Span::MasterBroadcast);
         let bcast = Broadcast {
             iter: self.iter as u32,
             a: self.params.a.clone(),
@@ -304,6 +311,7 @@ impl Coordinator {
             timing.bcast_bytes.push(msg.len());
             tx.send(msg.clone()).context("worker channel closed")?;
         }
+        drop(bcast_span);
         // ---- gather ----
         let summaries: Vec<Summary> =
             self.recv_from_all("iteration gather", |id, buf| {
@@ -319,6 +327,11 @@ impl Coordinator {
         timing.master_busy_s = mstart.elapsed().as_secs_f64();
 
         self.iter += 1;
+        obs::record_k(self.iter as u64, self.params.k() as u64);
+        obs::add(
+            obs::Counter::RngDrawsMaster,
+            self.rng.draw_count().wrapping_sub(draws0),
+        );
         let vtime_iter_s = self.clock.advance(&timing, &self.cfg.comm);
         Ok(IterRecord {
             iter: self.iter,
@@ -347,6 +360,7 @@ impl Coordinator {
         let k_ext = k_plus + k_star;
 
         // ---- merge suff stats into the extended column space ----
+        let merge_span = obs::span(obs::Span::MasterMerge);
         let mut ztz = Mat::zeros(k_ext, k_ext);
         let mut ztx = Mat::zeros(k_ext, self.d);
         let mut tr_xx = 0.0;
@@ -382,8 +396,10 @@ impl Coordinator {
                 m_ext[k_plus + j] = t.m()[j];
             }
         }
+        drop(merge_span);
 
         // ---- choose the NEXT p′ first: demotion needs to know it ----
+        let promote_span = obs::span(obs::Span::MasterPromote);
         let p_next = self.rng.below(self.cfg.processors as u64) as u32;
 
         // ---- demotion: small features living entirely inside p_next's
@@ -430,8 +446,18 @@ impl Coordinator {
             m: m_c.clone(),
             tr_xx,
         });
+        obs::add(obs::Counter::FeaturesPromoted, k_star as u64);
+        obs::add(obs::Counter::FeaturesDemoted, demote.len() as u64);
+        // dead features dropped at compaction: the instantiated columns
+        // that are neither kept nor demoted (their global m_k hit zero)
+        obs::add(
+            obs::Counter::FeaturesCompacted,
+            (k_plus - keep_old.len() - demote.len()) as u64,
+        );
+        drop(promote_span);
 
         // ---- sample globals ----
+        let apost_span = obs::span(obs::Span::MasterApost);
         if k_new > 0 {
             self.params.a = match &self.engine {
                 Some(eng) => Ops::new(eng).apost(
@@ -472,6 +498,7 @@ impl Coordinator {
         if self.cfg.opts.sample_alpha {
             self.params.alpha = ibp::sample_alpha(k_new, self.n, &mut self.rng);
         }
+        drop(apost_span);
         self.m_global = m_c;
 
         // ---- structural instruction for the next broadcast ----

@@ -17,6 +17,7 @@ use crate::config::Backend;
 use crate::linalg::Mat;
 use crate::model::state::{FeatureState, Kernel};
 use crate::model::LinGauss;
+use crate::obs;
 use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
 use crate::rng::Pcg64;
 use crate::runtime::{Engine, Ops};
@@ -158,6 +159,7 @@ fn run_iteration(
     rng: &mut Pcg64,
 ) -> Result<Summary> {
     let me = cfg.id as u32;
+    let draws0 = rng.draw_count();
     // ---- structural update: global compaction + tail promotion +
     //      demotion of shard-local junk back into p′'s tail ----
     let tail_init = apply_structure(z, b, me, last_tail.take())?;
@@ -190,6 +192,7 @@ fn run_iteration(
 
     for _l in 0..cfg.sub_iters {
         if k_plus > 0 {
+            let _sweep = obs::span(obs::Span::WorkerSweep);
             match engine {
                 Some(eng) => {
                     let ops = Ops::new(eng);
@@ -204,6 +207,7 @@ fn run_iteration(
             }
         }
         if i_am_p_prime {
+            let _tail = obs::span(obs::Span::WorkerTail);
             // the tail borrows the residual (== X when K⁺ = 0): nothing
             // is cloned in this hot loop any more
             tp.sweep(
@@ -219,6 +223,7 @@ fn run_iteration(
     let tail_carry = tp.take_tail();
 
     // ---- summary statistics over [K⁺ | K*_local] ----
+    let stats_span = obs::span(obs::Span::WorkerSuffstats);
     let k_star = if i_am_p_prime { tail_carry.k() } else { 0 };
     let combined = combine(z, if i_am_p_prime { Some(&tail_carry) } else { None });
     let (ztz, ztx) = match engine {
@@ -228,6 +233,11 @@ fn run_iteration(
         None => (combined.gram(), combined.t_matmul(x)),
     };
     let m_local: Vec<u64> = z.m().iter().map(|&m| m as u64).collect();
+    drop(stats_span);
+    obs::add(
+        obs::Counter::RngDrawsWorker,
+        rng.draw_count().wrapping_sub(draws0),
+    );
     let busy_s = start.elapsed().as_secs_f64();
     let tail = if i_am_p_prime && k_star > 0 {
         *last_tail = Some(tail_carry.clone());

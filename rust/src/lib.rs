@@ -31,6 +31,10 @@
 //!   (reconstruction / imputation / held-out log-likelihood), fanned out
 //!   per posterior sample across the pool with sample-ordered merges —
 //!   byte-identical answers at every thread count.
+//! * [`obs`] — zero-dependency runtime observability: phase-span
+//!   histograms, sampler-health counters and the per-run `run_obs.json`
+//!   report, runtime-toggled and provably non-perturbing (no RNG, no
+//!   ordering effects — `rust/tests/obs_equivalence.rs`).
 //! * substrates: [`rng`], [`linalg`], [`data`], [`model`], [`metrics`],
 //!   [`viz`], [`cli`], [`config`], [`propcheck`], [`bench`].
 
@@ -42,6 +46,7 @@ pub mod data;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod parallel;
 pub mod propcheck;
 pub mod rng;

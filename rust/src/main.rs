@@ -15,11 +15,13 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use pibp::cli::{flag, repeated, Cli, CommandSpec, Parsed};
-use pibp::config::{RunConfig, SamplerKind};
+use pibp::config::json::Json;
+use pibp::config::{ObsLevel, RunConfig, SamplerKind};
 use pibp::data::cambridge;
 use pibp::linalg::Mat;
 use pibp::metrics::Trace;
 use pibp::model::missing::{missing_mse, Mask};
+use pibp::obs;
 use pibp::rng::Pcg64;
 use pibp::runner;
 use pibp::runtime::Manifest;
@@ -38,6 +40,8 @@ fn spec() -> Cli {
                 flags: vec![
                     flag("config", "JSON config file ('' = defaults)", ""),
                     flag("threads", "intra-worker sweep threads T ('' = config value)", ""),
+                    flag("obs", "observability level: off|counters|full ('' = config value)", ""),
+                    flag("obs-out", "obs report path ('' = <out_dir>/run_obs.json)", ""),
                     repeated("set", "override, e.g. --set processors=5"),
                 ],
             },
@@ -48,6 +52,8 @@ fn spec() -> Cli {
                     flag("checkpoint", "checkpoint file written by a run with checkpoint_every",
                          "results/checkpoint.pibp"),
                     flag("threads", "intra-worker sweep threads T ('' = checkpointed value)", ""),
+                    flag("obs", "observability level: off|counters|full ('' = checkpointed value)", ""),
+                    flag("obs-out", "obs report path ('' = <out_dir>/run_obs.json)", ""),
                     repeated("set", "override, e.g. --set iters=2000 (chain-relevant keys must match)"),
                 ],
             },
@@ -63,6 +69,15 @@ fn spec() -> Cli {
                     flag("sweeps", "Gibbs sweeps per posterior sample for latent inference", "3"),
                     flag("seed", "query RNG seed (per-sample streams derive from it)", "0"),
                     flag("threads", "posterior-sample fan-out threads (persistent pool; never changes results)", "1"),
+                    flag("obs", "observability level: off|counters|full", "off"),
+                    flag("obs-out", "obs report path ('' = print only)", ""),
+                ],
+            },
+            CommandSpec {
+                name: "report",
+                about: "pretty-print a run_obs.json observability report",
+                flags: vec![
+                    flag("file", "obs report written by a run with --obs", "run_obs.json"),
                 ],
             },
             CommandSpec {
@@ -117,6 +132,7 @@ fn dispatch(p: &Parsed) -> Result<()> {
         "run" => cmd_run(p),
         "resume" => cmd_resume(p),
         "predict" => cmd_predict(p),
+        "report" => cmd_report(p),
         "fig1" => cmd_fig1(p),
         "fig2" => cmd_fig2(p),
         "info" => cmd_info(p),
@@ -129,10 +145,18 @@ fn cmd_run(p: &Parsed) -> Result<()> {
         Some("") | None => RunConfig::default(),
         Some(path) => RunConfig::from_file(Path::new(path))?,
     };
-    // --threads beats the config file; an explicit --set still beats both
+    // --threads/--obs beat the config file; an explicit --set beats all
     match p.get("threads") {
         Some("") | None => {}
         Some(t) => cfg.apply("threads_per_worker", t)?,
+    }
+    match p.get("obs") {
+        Some("") | None => {}
+        Some(v) => cfg.apply("obs", v)?,
+    }
+    match p.get("obs-out") {
+        Some("") | None => {}
+        Some(v) => cfg.apply("obs_out", v)?,
     }
     for kv in p.get_list("set") {
         let (k, v) = kv
@@ -164,6 +188,14 @@ fn cmd_resume(p: &Parsed) -> Result<()> {
         Some("") | None => {}
         Some(t) => overrides.push(("threads_per_worker".into(), t.into())),
     }
+    match p.get("obs") {
+        Some("") | None => {}
+        Some(v) => overrides.push(("obs".into(), v.into())),
+    }
+    match p.get("obs-out") {
+        Some("") | None => {}
+        Some(v) => overrides.push(("obs_out".into(), v.into())),
+    }
     for kv in p.get_list("set") {
         let (k, v) = kv
             .split_once('=')
@@ -186,6 +218,9 @@ fn cmd_resume(p: &Parsed) -> Result<()> {
 }
 
 fn cmd_predict(p: &Parsed) -> Result<()> {
+    let obs_level = ObsLevel::parse(p.get("obs").unwrap_or("off"))?;
+    obs::set_level(obs_level);
+    obs::reset();
     let ckpt_path = p.get("checkpoint").unwrap_or("results/checkpoint.pibp").to_string();
     let ckpt = Checkpoint::load(Path::new(&ckpt_path))?;
     let cfg = RunConfig::from_canonical(&ckpt.config_text)?;
@@ -280,6 +315,25 @@ fn cmd_predict(p: &Parsed) -> Result<()> {
         (3 * q) as f64 / (dt_imp + dt_ll + dt_rec).max(1e-9),
         samples.len(),
     );
+    if obs_level != ObsLevel::Off {
+        eprint!("{}", obs::RunReport::capture().render());
+        match p.get("obs-out") {
+            Some("") | None => {}
+            Some(path) => {
+                obs::RunReport::write(Path::new(path))?;
+                println!("obs report → {path}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_report(p: &Parsed) -> Result<()> {
+    let path = p.get("file").unwrap_or("run_obs.json");
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let doc = Json::parse(&text)?;
+    print!("{}", obs::render_json(&doc)?);
     Ok(())
 }
 
@@ -303,6 +357,10 @@ fn finish_run(cfg: &RunConfig, out: &runner::RunOutcome) -> Result<()> {
     if out.final_k > 0 {
         println!("\nposterior features (K={}):\n{}", out.final_k,
                  viz::render_features_ascii(&out.features));
+    }
+    if cfg.obs != ObsLevel::Off {
+        eprint!("{}", obs::RunReport::capture().render());
+        println!("obs report → {}", runner::obs_report_file(cfg).display());
     }
     Ok(())
 }

@@ -155,6 +155,25 @@ mod tests {
     }
 
     #[test]
+    fn plateau_and_time_to_on_empty_trace() {
+        let t = Trace::new("empty");
+        assert!(t.plateau(0.25).is_nan(), "empty plateau must be NaN");
+        assert!(t.plateau(0.0).is_nan());
+        assert_eq!(t.time_to(-100.0), None);
+        assert!(t.last().is_none());
+    }
+
+    #[test]
+    fn plateau_and_time_to_on_single_point_trace() {
+        let t = mk(1); // one point: heldout −100 at vtime 0
+        assert!((t.plateau(0.25) - (-100.0)).abs() < 1e-12);
+        // frac 0 still averages at least the final point, never 0/0
+        assert!((t.plateau(0.0) - (-100.0)).abs() < 1e-12);
+        assert_eq!(t.time_to(-100.0), Some(0.0));
+        assert_eq!(t.time_to(-99.0), None);
+    }
+
+    #[test]
     fn csv_roundtrippable_shape() {
         let t = mk(3);
         let csv = t.to_csv();

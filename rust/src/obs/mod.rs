@@ -1,0 +1,963 @@
+//! Zero-dependency runtime observability: phase spans, sampler-health
+//! counters, and a per-run report that **cannot perturb the chain**.
+//!
+//! Everything in this module is always compiled and runtime-toggled
+//! (`RunConfig::obs` / `--obs off|counters|full`). The non-perturbation
+//! contract — pinned by `rust/tests/obs_equivalence.rs` — is structural:
+//!
+//! * **no RNG** — nothing here ever touches a [`crate::rng::Pcg64`]; the
+//!   per-stream draw tallies read a passive counter the engine maintains
+//!   unconditionally;
+//! * **no ordering effects** — aggregation is a process-global table of
+//!   atomics (`Ordering::Relaxed`); instrumented sites only *add* to it,
+//!   they never branch sampler control flow on it, and no message,
+//!   checkpoint byte, or merge order depends on the level;
+//! * **no allocation on the hot path** — histograms are fixed arrays of
+//!   power-of-two buckets; the only locked structure (the K⁺ trajectory)
+//!   is touched once per global iteration on the master thread.
+//!
+//! Levels: `Off` (every probe is a load + branch), `Counters` (atomic
+//! counters + K⁺ trajectory), `Full` (adds span timers / histograms).
+//!
+//! The registry is process-global on purpose: probes live in layers with
+//! no configuration path (the thread pool, the collapsed cache fallbacks),
+//! and a run owns the process. Concurrent chains in one process (e.g.
+//! parallel tests) share the table — tallies may interleave, chains never
+//! can, because nothing reads the table back into sampler state.
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::json::Json;
+
+// ---------------------------------------------------------------------------
+// level
+// ---------------------------------------------------------------------------
+
+/// Runtime observability level (`--obs`, config key `obs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ObsLevel {
+    /// Probes compile to a relaxed load + untaken branch.
+    #[default]
+    Off,
+    /// Sampler-health counters and the K⁺ trajectory.
+    Counters,
+    /// Counters plus phase span timers (histograms).
+    Full,
+}
+
+impl ObsLevel {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(ObsLevel::Off),
+            "counters" => Ok(ObsLevel::Counters),
+            "full" => Ok(ObsLevel::Full),
+            other => bail!("unknown obs level '{other}' (off|counters|full)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ObsLevel::Off => "off",
+            ObsLevel::Counters => "counters",
+            ObsLevel::Full => "full",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// span & counter taxonomies
+// ---------------------------------------------------------------------------
+
+/// Phase spans (histogram slots). The table in docs/ARCHITECTURE.md
+/// §Observability maps each name to its instrumentation site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Span {
+    /// Worker: one uncollapsed `par_sweep_rows` call over the shard.
+    WorkerSweep,
+    /// Worker p′: one collapsed tail sub-iteration (`TailProposer::sweep`).
+    WorkerTail,
+    /// Worker: per-iteration suff-stat assembly (combine + gram + ZᵀX).
+    WorkerSuffstats,
+    /// Master: blocking wait for one worker's `Summary` in the gather.
+    MasterGatherWait,
+    /// Master: merge of the P summaries into the extended column space.
+    MasterMerge,
+    /// Master: promote/demote/compact bookkeeping of the global step.
+    MasterPromote,
+    /// Master: the A-posterior re-solve + π/σ/α draws.
+    MasterApost,
+    /// Master: encoding + sending one iteration's P broadcasts.
+    MasterBroadcast,
+    /// Pool: caller-side dispatch of one fork-join (send all chunks).
+    PoolDispatch,
+    /// Pool: a job's wait between enqueue and first instruction.
+    PoolQueueWait,
+    /// Pool: a lane's busy time executing one chunk.
+    PoolLaneBusy,
+    /// Serve: one `PredictEngine` query end-to-end (impute / reconstruct /
+    /// heldout-loglik).
+    ServeQuery,
+    /// Serve: samples per `accumulate_samples` wave (unit: count, not
+    /// seconds).
+    ServeWaveSize,
+    /// Serial collapsed sampler: one full row sweep (`CollapsedGibbs`).
+    CollapsedRowSweep,
+}
+
+/// What a span's histogram values mean.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unit {
+    /// Recorded in nanoseconds, reported in seconds.
+    Seconds,
+    /// Raw magnitudes (e.g. wave sizes).
+    Count,
+}
+
+pub const N_SPANS: usize = 14;
+
+impl Span {
+    pub const ALL: [Span; N_SPANS] = [
+        Span::WorkerSweep,
+        Span::WorkerTail,
+        Span::WorkerSuffstats,
+        Span::MasterGatherWait,
+        Span::MasterMerge,
+        Span::MasterPromote,
+        Span::MasterApost,
+        Span::MasterBroadcast,
+        Span::PoolDispatch,
+        Span::PoolQueueWait,
+        Span::PoolLaneBusy,
+        Span::ServeQuery,
+        Span::ServeWaveSize,
+        Span::CollapsedRowSweep,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Span::WorkerSweep => "worker.sweep",
+            Span::WorkerTail => "worker.tail",
+            Span::WorkerSuffstats => "worker.suffstats",
+            Span::MasterGatherWait => "master.gather_wait",
+            Span::MasterMerge => "master.merge",
+            Span::MasterPromote => "master.promote_compact",
+            Span::MasterApost => "master.apost_solve",
+            Span::MasterBroadcast => "master.broadcast",
+            Span::PoolDispatch => "pool.dispatch",
+            Span::PoolQueueWait => "pool.queue_wait",
+            Span::PoolLaneBusy => "pool.lane_busy",
+            Span::ServeQuery => "serve.query",
+            Span::ServeWaveSize => "serve.wave_size",
+            Span::CollapsedRowSweep => "collapsed.row_sweep",
+        }
+    }
+
+    pub fn unit(self) -> Unit {
+        match self {
+            Span::ServeWaveSize => Unit::Count,
+            _ => Unit::Seconds,
+        }
+    }
+
+    fn index(self) -> usize {
+        Span::ALL.iter().position(|s| *s == self).unwrap()
+    }
+}
+
+/// Sampler-health counters — events that previously vanished silently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// σ-MH proposals (collapsed sampler; 2 per `mh_sigmas` call).
+    SigmaMhProposed,
+    /// σ-MH acceptances.
+    SigmaMhAccepted,
+    /// Tail K_new Metropolis–Hastings proposals with j′ > 0.
+    TailMhProposed,
+    /// Tail K_new MH acceptances.
+    TailMhAccepted,
+    /// Successful `CollapsedCache` rank-1 row removes/inserts.
+    CacheRank1Ops,
+    /// Rank-1 update lost positive-definiteness (remove/insert/retain
+    /// returned false) → full refresh fallback. PR 4's silent slow path.
+    CacheSingularFallback,
+    /// Sherman–Morrison denominator went NaN → rebuild-and-retry. PR 4's
+    /// silent guard.
+    CacheNanRetry,
+    /// Tail features promoted into the instantiated set.
+    FeaturesPromoted,
+    /// Instantiated features demoted back to the collapsed tail.
+    FeaturesDemoted,
+    /// Dead (m_k = 0) features dropped at compaction.
+    FeaturesCompacted,
+    /// Engine draws on the master stream.
+    RngDrawsMaster,
+    /// Engine draws on worker streams (summed over P).
+    RngDrawsWorker,
+    /// Engine draws on per-block sweep substreams (summed over blocks).
+    RngDrawsBlock,
+    /// Engine draws on serve per-sample query streams.
+    RngDrawsServe,
+    /// `PredictEngine` queries answered.
+    ServeQueries,
+}
+
+pub const N_COUNTERS: usize = 15;
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::SigmaMhProposed,
+        Counter::SigmaMhAccepted,
+        Counter::TailMhProposed,
+        Counter::TailMhAccepted,
+        Counter::CacheRank1Ops,
+        Counter::CacheSingularFallback,
+        Counter::CacheNanRetry,
+        Counter::FeaturesPromoted,
+        Counter::FeaturesDemoted,
+        Counter::FeaturesCompacted,
+        Counter::RngDrawsMaster,
+        Counter::RngDrawsWorker,
+        Counter::RngDrawsBlock,
+        Counter::RngDrawsServe,
+        Counter::ServeQueries,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::SigmaMhProposed => "sigma_mh.proposed",
+            Counter::SigmaMhAccepted => "sigma_mh.accepted",
+            Counter::TailMhProposed => "tail_mh.proposed",
+            Counter::TailMhAccepted => "tail_mh.accepted",
+            Counter::CacheRank1Ops => "cache.rank1_ops",
+            Counter::CacheSingularFallback => "cache.singular_fallbacks",
+            Counter::CacheNanRetry => "cache.nan_retries",
+            Counter::FeaturesPromoted => "features.promoted",
+            Counter::FeaturesDemoted => "features.demoted",
+            Counter::FeaturesCompacted => "features.compacted",
+            Counter::RngDrawsMaster => "rng_draws.master",
+            Counter::RngDrawsWorker => "rng_draws.worker",
+            Counter::RngDrawsBlock => "rng_draws.block",
+            Counter::RngDrawsServe => "rng_draws.serve",
+            Counter::ServeQueries => "serve.queries",
+        }
+    }
+
+    fn index(self) -> usize {
+        Counter::ALL.iter().position(|c| *c == self).unwrap()
+    }
+}
+
+/// Once-per-run warning classes (satellite: surface silent degradation).
+/// Warnings fire at **every** obs level — numerical trouble should be
+/// visible without opting in — but at most once per class per run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Warn {
+    CacheSingular,
+    CacheNan,
+}
+
+pub const N_WARNS: usize = 2;
+
+impl Warn {
+    fn index(self) -> usize {
+        match self {
+            Warn::CacheSingular => 0,
+            Warn::CacheNan => 1,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// histogram
+// ---------------------------------------------------------------------------
+
+/// Power-of-two log-spaced buckets: bucket `i` covers `[2^i, 2^{i+1})`
+/// (nanoseconds for [`Unit::Seconds`] spans), `0` lands in bucket 0.
+pub const N_BUCKETS: usize = 64;
+
+/// Bucket index for a recorded value: `floor(log2(v))`, with 0 → 0.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (63 - v.leading_zeros()) as usize
+    }
+}
+
+struct Hist {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    total: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+// const-item trick: a `const` can be repeated into an array even though
+// `AtomicU64` is not `Copy` (each repetition re-evaluates the const).
+#[allow(clippy::declare_interior_mutable_const)]
+const ATOMIC_ZERO: AtomicU64 = AtomicU64::new(0);
+
+impl Hist {
+    const fn new() -> Self {
+        Self {
+            buckets: [ATOMIC_ZERO; N_BUCKETS],
+            count: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.total.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> HistSnap {
+        let mut buckets = [0u64; N_BUCKETS];
+        for (i, b) in self.buckets.iter().enumerate() {
+            buckets[i] = b.load(Ordering::Relaxed);
+        }
+        HistSnap {
+            count: self.count.load(Ordering::Relaxed),
+            total: self.total.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// A plain-data histogram snapshot (what `RunReport` carries).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnap {
+    pub count: u64,
+    pub total: u64,
+    pub min: u64,
+    pub max: u64,
+    pub buckets: [u64; N_BUCKETS],
+}
+
+impl HistSnap {
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.total as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate: walk the buckets to the one where the
+    /// cumulative count crosses `q·count` and return its geometric
+    /// midpoint `2^i · √2` (exact min/max clamp the ends).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let mid = (1u64 << i) as f64 * std::f64::consts::SQRT_2;
+                return mid.clamp(self.min as f64, self.max as f64);
+            }
+        }
+        self.max as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the global registry
+// ---------------------------------------------------------------------------
+
+struct Registry {
+    level: AtomicU8,
+    counters: [AtomicU64; N_COUNTERS],
+    hists: [Hist; N_SPANS],
+    warned: [AtomicBool; N_WARNS],
+    /// (iter, K⁺) trajectory; master-thread only, once per global step.
+    k_series: Mutex<Series>,
+}
+
+/// Deterministic bounded series: keep every `stride`-th offered point,
+/// doubling the stride when the buffer fills (same discipline as
+/// `serve::SampleReservoir` — no RNG).
+struct Series {
+    points: Vec<(u64, u64)>,
+    stride: u64,
+    offered: u64,
+}
+
+const SERIES_CAP: usize = 2048;
+
+impl Series {
+    const fn new() -> Self {
+        Self { points: Vec::new(), stride: 1, offered: 0 }
+    }
+
+    fn push(&mut self, iter: u64, k: u64) {
+        if self.offered % self.stride == 0 {
+            if self.points.len() == SERIES_CAP {
+                // kept points sit at multiples of the old stride in offer
+                // order; keeping the even-indexed half leaves exactly the
+                // multiples of the doubled stride
+                let mut i = 0usize;
+                self.points.retain(|_| {
+                    let keep = i % 2 == 0;
+                    i += 1;
+                    keep
+                });
+                self.stride *= 2;
+            }
+            if self.offered % self.stride == 0 {
+                self.points.push((iter, k));
+            }
+        }
+        self.offered += 1;
+    }
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ATOMIC_FALSE: AtomicBool = AtomicBool::new(false);
+#[allow(clippy::declare_interior_mutable_const)]
+const HIST_NEW: Hist = Hist::new();
+
+static REG: Registry = Registry {
+    level: AtomicU8::new(0),
+    counters: [ATOMIC_ZERO; N_COUNTERS],
+    hists: [HIST_NEW; N_SPANS],
+    warned: [ATOMIC_FALSE; N_WARNS],
+    k_series: Mutex::new(Series::new()),
+};
+
+/// Set the process-wide level (runner does this from `RunConfig::obs`).
+pub fn set_level(level: ObsLevel) {
+    REG.level.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> ObsLevel {
+    match REG.level.load(Ordering::Relaxed) {
+        0 => ObsLevel::Off,
+        1 => ObsLevel::Counters,
+        _ => ObsLevel::Full,
+    }
+}
+
+/// Are counters live? (`Counters` or `Full`.)
+#[inline]
+pub fn counting() -> bool {
+    REG.level.load(Ordering::Relaxed) >= 1
+}
+
+/// Are span timers live? (`Full` only.)
+#[inline]
+pub fn timing() -> bool {
+    REG.level.load(Ordering::Relaxed) >= 2
+}
+
+/// Zero every counter, histogram, warning latch, and the K⁺ trajectory
+/// (the level is left alone). Called at run start so each run segment
+/// reports its own numbers.
+pub fn reset() {
+    for c in &REG.counters {
+        c.store(0, Ordering::Relaxed);
+    }
+    for h in &REG.hists {
+        h.reset();
+    }
+    for w in &REG.warned {
+        w.store(false, Ordering::Relaxed);
+    }
+    let mut s = REG.k_series.lock().unwrap();
+    *s = Series::new();
+}
+
+#[inline]
+pub fn inc(c: Counter) {
+    add(c, 1);
+}
+
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    if counting() {
+        REG.counters[c.index()].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Record a raw histogram value (wave sizes etc.); `Full` only.
+#[inline]
+pub fn record_value(s: Span, v: u64) {
+    if timing() {
+        REG.hists[s.index()].record(v);
+    }
+}
+
+/// Record an already-measured duration into a span's histogram.
+#[inline]
+pub fn record_ns(s: Span, ns: u64) {
+    if timing() {
+        REG.hists[s.index()].record(ns);
+    }
+}
+
+/// Record the K⁺ trajectory point for a global iteration (master thread,
+/// once per step; `Counters` and up).
+pub fn record_k(iter: u64, k: u64) {
+    if counting() {
+        REG.k_series.lock().unwrap().push(iter, k);
+    }
+}
+
+/// Emit `msg` on stderr at most once per run per class, and always bump
+/// the matching counter logic at the call site. Fires at every obs level.
+pub fn warn_once(w: Warn, msg: &str) {
+    if !REG.warned[w.index()].swap(true, Ordering::Relaxed) {
+        eprintln!("pibp: warning: {msg} (further occurrences this run are counted, not printed; see --obs)");
+    }
+}
+
+/// Crate-internal test gate: lib unit tests that flip the process-global
+/// obs level (directly, or through `runner::run`, which sets it from the
+/// config) serialise on this so concurrently running tests cannot stomp
+/// each other's level mid-assertion. Production code never takes it.
+#[cfg(test)]
+pub(crate) fn test_level_gate() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// RAII span timer: measures from construction to drop when the level is
+/// `Full`, otherwise a no-op (one relaxed load). Dropping records into
+/// the span's histogram — never anything else, so instrumented scopes
+/// are observationally identical to uninstrumented ones.
+pub struct SpanGuard {
+    live: Option<(Span, Instant)>,
+}
+
+#[inline]
+pub fn span(s: Span) -> SpanGuard {
+    SpanGuard { live: if timing() { Some((s, Instant::now())) } else { None } }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((s, t0)) = self.live.take() {
+            let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            REG.hists[s.index()].record(ns);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// report
+// ---------------------------------------------------------------------------
+
+const REPORT_VERSION: u64 = 1;
+
+/// A plain-data capture of the registry: what `run_obs.json` serialises
+/// and `pibp report` / the end-of-run table render.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub level: ObsLevel,
+    /// (span, snapshot) for every span, empty ones included.
+    pub spans: Vec<(Span, HistSnap)>,
+    /// (counter, value) for every counter.
+    pub counters: Vec<(Counter, u64)>,
+    /// Thinned (iter, K⁺) trajectory.
+    pub k_trajectory: Vec<(u64, u64)>,
+}
+
+impl RunReport {
+    /// Snapshot the live registry.
+    pub fn capture() -> Self {
+        let spans = Span::ALL
+            .iter()
+            .map(|&s| (s, REG.hists[s.index()].snapshot()))
+            .collect();
+        let counters = Counter::ALL
+            .iter()
+            .map(|&c| (c, REG.counters[c.index()].load(Ordering::Relaxed)))
+            .collect();
+        let k_trajectory = REG.k_series.lock().unwrap().points.clone();
+        Self { level: level(), spans, counters, k_trajectory }
+    }
+
+    /// `run_obs.json` schema (see docs/ARCHITECTURE.md §Observability):
+    /// summary statistics only — raw buckets stay in-process.
+    pub fn to_json(&self) -> Json {
+        let spans = Json::Obj(
+            self.spans
+                .iter()
+                .map(|(s, h)| {
+                    let scale = match s.unit() {
+                        Unit::Seconds => 1e-9,
+                        Unit::Count => 1.0,
+                    };
+                    let stat = |v: f64| if v.is_finite() { v } else { 0.0 };
+                    (
+                        s.name().to_string(),
+                        Json::obj(vec![
+                            ("unit", Json::Str(match s.unit() {
+                                Unit::Seconds => "seconds".into(),
+                                Unit::Count => "count".into(),
+                            })),
+                            ("count", Json::Num(h.count as f64)),
+                            ("total", Json::Num(stat(h.total as f64 * scale))),
+                            (
+                                "min",
+                                Json::Num(if h.is_empty() {
+                                    0.0
+                                } else {
+                                    h.min as f64 * scale
+                                }),
+                            ),
+                            ("max", Json::Num(h.max as f64 * scale)),
+                            ("mean", Json::Num(stat(h.mean() * scale))),
+                            ("p50", Json::Num(stat(h.quantile(0.50) * scale))),
+                            ("p99", Json::Num(stat(h.quantile(0.99) * scale))),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(c, v)| (c.name().to_string(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        let k_iters: Vec<f64> = self.k_trajectory.iter().map(|(i, _)| *i as f64).collect();
+        let k_vals: Vec<f64> = self.k_trajectory.iter().map(|(_, k)| *k as f64).collect();
+        Json::obj(vec![
+            ("version", Json::Num(REPORT_VERSION as f64)),
+            ("level", Json::Str(self.level.name().into())),
+            ("spans", spans),
+            ("counters", counters),
+            (
+                "k_trajectory",
+                Json::obj(vec![
+                    ("iters", Json::arr_f64(&k_iters)),
+                    ("k", Json::arr_f64(&k_vals)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Capture the registry and write `run_obs.json` (atomic-ish: plain
+    /// write — the file is diagnostic, not durable state).
+    pub fn write(path: &Path) -> Result<()> {
+        let report = RunReport::capture();
+        std::fs::write(path, format!("{}\n", report.to_json()))
+            .with_context(|| format!("writing obs report {}", path.display()))
+    }
+
+    /// Render the human-readable end-of-run table.
+    pub fn render(&self) -> String {
+        render_json(&self.to_json()).expect("self-produced report renders")
+    }
+}
+
+fn fmt_quantity(v: f64, unit: &str) -> String {
+    if !v.is_finite() {
+        return "-".into();
+    }
+    if unit == "seconds" {
+        if v >= 1.0 {
+            format!("{v:.3}s")
+        } else if v >= 1e-3 {
+            format!("{:.3}ms", v * 1e3)
+        } else if v >= 1e-6 {
+            format!("{:.3}µs", v * 1e6)
+        } else {
+            format!("{:.0}ns", v * 1e9)
+        }
+    } else if v.fract() == 0.0 {
+        format!("{}", v as u64)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+/// Pretty-print a parsed `run_obs.json` (the `pibp report` command and
+/// the end-of-run table share this renderer). Fails on a file that is
+/// missing the schema's required keys — which is exactly the validation
+/// the CI smoke wants.
+pub fn render_json(doc: &Json) -> Result<String> {
+    let version = doc
+        .get("version")
+        .and_then(|v| v.as_usize())
+        .context("obs report: missing 'version'")?;
+    if version as u64 != REPORT_VERSION {
+        bail!("obs report: unsupported version {version}");
+    }
+    let level = doc
+        .get("level")
+        .and_then(|v| v.as_str())
+        .context("obs report: missing 'level'")?;
+    let spans = match doc.get("spans").context("obs report: missing 'spans'")? {
+        Json::Obj(m) => m,
+        _ => bail!("obs report: 'spans' is not an object"),
+    };
+    let counters = match doc.get("counters").context("obs report: missing 'counters'")? {
+        Json::Obj(m) => m,
+        _ => bail!("obs report: 'counters' is not an object"),
+    };
+
+    let mut out = String::new();
+    let _ = writeln!(out, "obs report (level={level})");
+    let _ = writeln!(
+        out,
+        "  {:<24} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "span", "count", "total", "mean", "p50", "p99", "max"
+    );
+    for (name, h) in spans {
+        let count = h.get("count").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if count == 0.0 {
+            continue;
+        }
+        let unit = h.get("unit").and_then(|v| v.as_str()).unwrap_or("seconds");
+        let g = |k: &str| h.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        let _ = writeln!(
+            out,
+            "  {:<24} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
+            name,
+            count as u64,
+            fmt_quantity(g("total"), unit),
+            fmt_quantity(g("mean"), unit),
+            fmt_quantity(g("p50"), unit),
+            fmt_quantity(g("p99"), unit),
+            fmt_quantity(g("max"), unit),
+        );
+    }
+    let _ = writeln!(out, "  {:<24} {:>10}", "counter", "value");
+    for (name, v) in counters {
+        let v = v.as_f64().unwrap_or(0.0);
+        if v == 0.0 {
+            continue;
+        }
+        let _ = writeln!(out, "  {:<24} {:>10}", name, v as u64);
+    }
+    // derived health rates, when the raw numbers are present
+    let rate = |num: &str, den: &str| -> Option<f64> {
+        let n = counters.get(num)?.as_f64()?;
+        let d = counters.get(den)?.as_f64()?;
+        if d > 0.0 {
+            Some(n / d)
+        } else {
+            None
+        }
+    };
+    if let Some(r) = rate("sigma_mh.accepted", "sigma_mh.proposed") {
+        let _ = writeln!(out, "  {:<24} {:>9.1}%", "sigma_mh accept rate", 100.0 * r);
+    }
+    if let Some(r) = rate("tail_mh.accepted", "tail_mh.proposed") {
+        let _ = writeln!(out, "  {:<24} {:>9.1}%", "tail_mh accept rate", 100.0 * r);
+    }
+    if let Some(kt) = doc.get("k_trajectory") {
+        let ks = kt.get("k").and_then(|v| v.as_arr()).unwrap_or(&[]);
+        if let (Some(first), Some(last)) = (ks.first(), ks.last()) {
+            let kmax = ks.iter().filter_map(|v| v.as_f64()).fold(0.0f64, f64::max);
+            let _ = writeln!(
+                out,
+                "  {:<24} {} -> {} (max {})",
+                "K+ trajectory",
+                first.as_f64().unwrap_or(0.0) as u64,
+                last.as_f64().unwrap_or(0.0) as u64,
+                kmax as u64,
+            );
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        for k in 1..63u32 {
+            let p = 1u64 << k;
+            assert_eq!(bucket_index(p - 1), (k - 1) as usize, "2^{k}-1");
+            assert_eq!(bucket_index(p), k as usize, "2^{k}");
+            assert_eq!(bucket_index(p + 1), k as usize, "2^{k}+1");
+        }
+        assert_eq!(bucket_index(u64::MAX), 63);
+    }
+
+    #[test]
+    fn hist_empty_and_single_point() {
+        let h = Hist::new();
+        let empty = h.snapshot();
+        assert!(empty.is_empty());
+        assert!(empty.mean().is_nan());
+        assert!(empty.quantile(0.5).is_nan());
+        h.record(1000);
+        let one = h.snapshot();
+        assert_eq!(one.count, 1);
+        assert_eq!((one.min, one.max, one.total), (1000, 1000, 1000));
+        // single point: every quantile collapses to it (clamped by
+        // min/max, so the bucket-midpoint estimate is exact here)
+        assert_eq!(one.quantile(0.5), 1000.0);
+        assert_eq!(one.quantile(0.99), 1000.0);
+    }
+
+    #[test]
+    fn hist_quantiles_are_monotone_and_bounded() {
+        let h = Hist::new();
+        for i in 1..=1000u64 {
+            h.record(i * i); // values 1..1e6, log-spread
+        }
+        let s = h.snapshot();
+        let p50 = s.quantile(0.5);
+        let p99 = s.quantile(0.99);
+        assert!(p50 <= p99, "p50={p50} p99={p99}");
+        assert!(p50 >= s.min as f64 && p99 <= s.max as f64);
+        // factor-2 buckets: the p50 estimate is within 2x of the true
+        // median (500² = 250000)
+        assert!(p50 >= 125_000.0 && p50 <= 500_000.0, "p50={p50}");
+    }
+
+    #[test]
+    fn levels_gate_counters_and_spans() {
+        let _g = test_level_gate();
+        let prev = level();
+        set_level(ObsLevel::Off);
+        reset();
+        inc(Counter::ServeQueries);
+        record_ns(Span::ServeQuery, 100);
+        {
+            let _s = span(Span::WorkerSweep);
+        }
+        let r = RunReport::capture();
+        assert!(r.counters.iter().all(|(_, v)| *v == 0));
+        assert!(r.spans.iter().all(|(_, h)| h.is_empty()));
+
+        set_level(ObsLevel::Counters);
+        inc(Counter::ServeQueries);
+        record_ns(Span::ServeQuery, 100);
+        let r = RunReport::capture();
+        // >= : other tests in this binary may legitimately count too while
+        // the level is up — the registry is process-global by design
+        assert!(counter_of(&r, Counter::ServeQueries) >= 1);
+        assert!(r.spans.iter().all(|(_, h)| h.is_empty()), "counters level must not time");
+
+        set_level(ObsLevel::Full);
+        record_ns(Span::ServeQuery, 100);
+        {
+            let _s = span(Span::WorkerSweep);
+        }
+        let r = RunReport::capture();
+        assert!(span_of(&r, Span::ServeQuery).count >= 1);
+        assert!(span_of(&r, Span::WorkerSweep).count >= 1);
+
+        reset();
+        set_level(prev);
+    }
+
+    fn counter_of(r: &RunReport, c: Counter) -> u64 {
+        r.counters.iter().find(|(x, _)| *x == c).unwrap().1
+    }
+
+    fn span_of(r: &RunReport, s: Span) -> HistSnap {
+        r.spans.iter().find(|(x, _)| *x == s).unwrap().1.clone()
+    }
+
+    #[test]
+    fn report_json_roundtrips_and_renders() {
+        let _g = test_level_gate();
+        let prev = level();
+        set_level(ObsLevel::Full);
+        reset();
+        add(Counter::SigmaMhProposed, 10);
+        add(Counter::SigmaMhAccepted, 3);
+        record_ns(Span::MasterMerge, 2_000_000);
+        record_value(Span::ServeWaveSize, 4);
+        record_k(0, 5);
+        record_k(1, 7);
+        let r = RunReport::capture();
+        let text = r.to_json().to_string();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("version").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(doc.get("level").unwrap().as_str().unwrap(), "full");
+        let rendered = render_json(&doc).unwrap();
+        assert!(rendered.contains("master.merge"), "{rendered}");
+        assert!(rendered.contains("sigma_mh accept rate"), "{rendered}");
+        assert!(rendered.contains("K+ trajectory"), "{rendered}");
+        // required-key validation is what the CI smoke relies on
+        assert!(render_json(&Json::obj(vec![("version", Json::Num(1.0))])).is_err());
+        reset();
+        set_level(prev);
+    }
+
+    #[test]
+    fn warn_once_sets_the_latch() {
+        // stderr can't be captured portably; pin the latch semantics:
+        // after any number of calls the latch is set, so no further call
+        // can print again until the next reset().
+        warn_once(Warn::CacheNan, "test warning (expected once in test output)");
+        warn_once(Warn::CacheNan, "MUST NOT PRINT");
+        assert!(REG.warned[Warn::CacheNan.index()].load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn series_thins_deterministically() {
+        let mut s = Series::new();
+        for i in 0..10_000u64 {
+            s.push(i, i % 7);
+        }
+        assert!(s.points.len() <= SERIES_CAP);
+        assert!(s.points.len() > SERIES_CAP / 4, "over-thinned: {}", s.points.len());
+        // surviving iters are exactly the multiples of the final stride
+        for (it, _) in &s.points {
+            assert_eq!(it % s.stride, 0);
+        }
+        // deterministic: same input, same output
+        let mut s2 = Series::new();
+        for i in 0..10_000u64 {
+            s2.push(i, i % 7);
+        }
+        assert_eq!(s.points, s2.points);
+    }
+
+    #[test]
+    fn obs_level_parses() {
+        assert_eq!(ObsLevel::parse("off").unwrap(), ObsLevel::Off);
+        assert_eq!(ObsLevel::parse("counters").unwrap(), ObsLevel::Counters);
+        assert_eq!(ObsLevel::parse("full").unwrap(), ObsLevel::Full);
+        assert!(ObsLevel::parse("verbose").is_err());
+        for l in [ObsLevel::Off, ObsLevel::Counters, ObsLevel::Full] {
+            assert_eq!(ObsLevel::parse(l.name()).unwrap(), l);
+        }
+    }
+}

@@ -46,6 +46,7 @@ use std::ops::Range;
 
 use crate::linalg::Mat;
 use crate::model::state::{FeatureState, Kernel};
+use crate::obs;
 use crate::rng::Pcg64;
 use crate::samplers::uncollapsed::{sweep_block, sweep_block_packed};
 
@@ -226,6 +227,12 @@ pub fn par_sweep_rows(
             for (acc, &dm) in m_total.iter_mut().zip(&task.m_delta) {
                 *acc += dm;
             }
+        }
+        // obs: tally the block substreams' passive draw counters — one
+        // atomic add per sweep, read after the join (pure diagnostics)
+        if obs::counting() {
+            let draws: u64 = tasks.iter().map(|t| t.rng.draw_count()).sum();
+            obs::add(obs::Counter::RngDrawsBlock, draws);
         }
     }
     z.apply_m_delta(&m_total);

@@ -50,6 +50,9 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::obs;
 
 /// A unit of pool work: an erased closure. Jobs handed to the pool are
 /// lifetime-erased to `'static` (see the `SAFETY` note in
@@ -169,12 +172,28 @@ impl ThreadPool {
             return;
         }
         let latch = Arc::new(Latch::new(n - 1));
+        let dispatch = obs::span(obs::Span::PoolDispatch);
         {
             let senders = self.senders.lock().unwrap_or_else(|e| e.into_inner());
             for (w, task) in it.enumerate() {
                 let latch = Arc::clone(&latch);
+                // obs probe: queue wait = enqueue → first instruction.
+                // Captured only at obs level `full` (None otherwise), and
+                // recorded inside the job — pure measurement, no effect on
+                // scheduling, task structure or merge order.
+                let enqueued = if obs::timing() { Some(Instant::now()) } else { None };
                 let job: Task<'_> = Box::new(move || {
-                    if let Err(payload) = catch_unwind(AssertUnwindSafe(task)) {
+                    if let Some(t0) = enqueued {
+                        obs::record_ns(
+                            obs::Span::PoolQueueWait,
+                            t0.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+                        );
+                    }
+                    let run = {
+                        let _busy = obs::span(obs::Span::PoolLaneBusy);
+                        catch_unwind(AssertUnwindSafe(task))
+                    };
+                    if let Err(payload) = run {
                         let mut slot =
                             latch.panic.lock().unwrap_or_else(|e| e.into_inner());
                         slot.get_or_insert(payload);
@@ -196,7 +215,12 @@ impl ThreadPool {
                 }
             }
         }
-        let caller = catch_unwind(AssertUnwindSafe(first));
+        drop(dispatch);
+        // the caller's own chunk is a busy lane too
+        let caller = {
+            let _busy = obs::span(obs::Span::PoolLaneBusy);
+            catch_unwind(AssertUnwindSafe(first))
+        };
         latch.wait();
         // caller-chunk panic wins (its payload is already unwinding this
         // stack); otherwise re-raise the first pooled payload verbatim

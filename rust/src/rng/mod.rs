@@ -50,6 +50,11 @@ pub struct Pcg64 {
     inc: u128, // must be odd
     /// Cached second normal from the polar method.
     spare_normal: Option<f64>,
+    /// Engine advances since construction — a local diagnostic tally read
+    /// by the observability layer (`crate::obs`). Deliberately NOT part of
+    /// [`PcgState`]: the stream a checkpoint restores is identified by
+    /// (state, inc, spare), and the tally restarts per run segment.
+    draws: u64,
 }
 
 /// A complete, inert snapshot of a [`Pcg64`] stream — everything
@@ -72,8 +77,9 @@ impl Pcg64 {
         let mut sm = SplitMix64::new(seed);
         let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
         let inc = (((sm.next_u64() as u128) << 64) | sm.next_u64() as u128) | 1;
-        let mut rng = Self { state, inc, spare_normal: None };
+        let mut rng = Self { state, inc, spare_normal: None, draws: 0 };
         rng.next_u64(); // burn in: mix the seed into the state
+        rng.draws = 0;
         rng
     }
 
@@ -86,8 +92,9 @@ impl Pcg64 {
         );
         let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
         let inc = (((sm.next_u64() as u128) << 64) | sm.next_u64() as u128) | 1;
-        let mut rng = Self { state, inc, spare_normal: None };
+        let mut rng = Self { state, inc, spare_normal: None, draws: 0 };
         rng.next_u64();
+        rng.draws = 0;
         rng
     }
 
@@ -106,11 +113,21 @@ impl Pcg64 {
     /// reject even increments before getting here.
     pub fn from_state(st: PcgState) -> Self {
         debug_assert!(st.inc & 1 == 1, "PCG increment must be odd");
-        Self { state: st.state, inc: st.inc | 1, spare_normal: st.spare_normal }
+        Self { state: st.state, inc: st.inc | 1, spare_normal: st.spare_normal, draws: 0 }
+    }
+
+    /// Engine advances since this stream was constructed / restored — a
+    /// pure diagnostic (one add per draw, no branch). The observability
+    /// layer differences this at aggregation points to tally per-stream
+    /// draw counts; nothing in the sampler ever reads it.
+    #[inline]
+    pub fn draw_count(&self) -> u64 {
+        self.draws
     }
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
+        self.draws = self.draws.wrapping_add(1);
         self.state = self.state.wrapping_mul(PCG_MUL).wrapping_add(self.inc);
         let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
         let rot = (self.state >> 122) as u32;
@@ -239,6 +256,29 @@ mod tests {
         let mut c = Pcg64::from_state(a.export_state());
         assert_eq!(a.normal().to_bits(), c.normal().to_bits());
         assert_eq!(a.normal().to_bits(), c.normal().to_bits());
+    }
+
+    #[test]
+    fn draw_count_tallies_engine_advances_only() {
+        let mut a = Pcg64::new(42);
+        assert_eq!(a.draw_count(), 0, "construction burn-in must not count");
+        for _ in 0..10 {
+            a.next_u64();
+        }
+        assert_eq!(a.draw_count(), 10);
+        // the tally is diagnostic state: it never affects the stream
+        let mut b = Pcg64::new(42);
+        assert_eq!(a.next_u64(), {
+            for _ in 0..10 {
+                b.next_u64();
+            }
+            b.next_u64()
+        });
+        // restore resets the tally without touching the stream
+        let c = Pcg64::from_state(a.export_state());
+        assert_eq!(c.draw_count(), 0);
+        let s = a.split(3);
+        assert_eq!(s.draw_count(), 0, "split streams start a fresh tally");
     }
 
     #[test]

@@ -14,13 +14,14 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{RunConfig, SamplerKind};
-use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::config::{CommModel, ObsLevel, RunConfig, SamplerKind};
+use crate::coordinator::{Coordinator, CoordinatorConfig, IterTiming, VClock};
 use crate::data::cambridge::{self, CambridgeConfig};
 use crate::data::{loader, synth, Dataset};
 use crate::linalg::Mat;
 use crate::metrics::{Trace, TracePoint};
 use crate::model::{GlobalParams, LinGauss};
+use crate::obs::{self, RunReport};
 use crate::rng::Pcg64;
 use crate::samplers::collapsed::{CollapsedGibbs, Mode};
 use crate::samplers::eval::HeldoutEval;
@@ -76,6 +77,32 @@ pub fn checkpoint_file(cfg: &RunConfig) -> PathBuf {
     }
 }
 
+/// Where this config's obs report goes ("" ⇒ `<out_dir>/run_obs.json`).
+pub fn obs_report_file(cfg: &RunConfig) -> PathBuf {
+    if cfg.obs_out.is_empty() {
+        Path::new(&cfg.out_dir).join("run_obs.json")
+    } else {
+        PathBuf::from(&cfg.obs_out)
+    }
+}
+
+/// Flush the live obs registry to this run's report file. Called at the
+/// checkpoint cadence (so resumed runs report consistently) and at run
+/// end. Non-fatal: the report is a diagnostic artifact, never the run's
+/// durable state, so a full disk must not kill the chain.
+fn flush_obs(cfg: &RunConfig) {
+    if cfg.obs == ObsLevel::Off {
+        return;
+    }
+    let path = obs_report_file(cfg);
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Err(e) = RunReport::write(&path) {
+        eprintln!("pibp: warning: obs report write failed: {e:#}");
+    }
+}
+
 /// The outcome of a run: the convergence trace plus final state views.
 #[derive(Debug)]
 pub struct RunOutcome {
@@ -84,7 +111,9 @@ pub struct RunOutcome {
     pub final_params: GlobalParams,
     /// Posterior feature loadings at the end (K × D) — Figure-2 input.
     pub features: Mat,
-    /// Total virtual seconds (hybrid) or wall seconds (serial samplers).
+    /// Total virtual seconds: the coordinator's [`VClock`] for the
+    /// hybrid, accumulated sampler busy time (one worker, no messages —
+    /// the same clock through [`SerialVtime`]) for the serial baselines.
     pub elapsed_s: f64,
     /// Thinned posterior samples accumulated when `keep_samples > 0`
     /// (empty otherwise; always empty for the serial baselines).
@@ -185,6 +214,8 @@ fn run_hybrid(
     resume_from: Option<Checkpoint>,
     mut progress: impl FnMut(usize),
 ) -> Result<RunOutcome> {
+    obs::set_level(cfg.obs);
+    obs::reset();
     let RunSetup { train, lg, mut eval_rng, mut evaluator, mut trace } = setup_run(cfg)?;
     let ccfg = CoordinatorConfig {
         processors: cfg.processors,
@@ -263,6 +294,9 @@ fn run_hybrid(
                 &path,
             )
             .with_context(|| format!("writing checkpoint {}", path.display()))?;
+            // flush obs at the same cadence: a crash loses at most one
+            // checkpoint interval of diagnostics, like everything else
+            flush_obs(cfg);
         }
         if i + 1 == cfg.iters && !scheduled_eval {
             // bonus final evaluation so every returned trace ends fresh.
@@ -286,6 +320,7 @@ fn run_hybrid(
         }
         progress(i);
     }
+    flush_obs(cfg);
     let params = coord.params().clone();
     Ok(RunOutcome {
         final_k: params.k(),
@@ -327,11 +362,50 @@ fn save_checkpoint(
     .save(path)
 }
 
+/// Virtual-time meter for the serial baselines: one "worker", zero
+/// messages, so an iteration's virtual duration is exactly its sampler
+/// busy time — accumulated through the same [`VClock`] accessor
+/// ([`VClock::elapsed_s`]) the hybrid path reports. This fixes the old
+/// bug where the serial trace recorded `wall0.elapsed()` — wall time
+/// including held-out evaluation, trace recording and setup — as
+/// `vtime_s`, inflating the serial curves in any vtime-axis comparison
+/// against the hybrid (whose clock meters sampler work only).
+struct SerialVtime {
+    clock: VClock,
+    comm: CommModel,
+}
+
+impl SerialVtime {
+    fn new(comm: CommModel) -> Self {
+        Self { clock: VClock::new(), comm }
+    }
+
+    /// Run one metered sampler step: only `f`'s execution advances the
+    /// virtual clock (comm byte vectors are empty ⇒ zero comm cost).
+    fn step<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let out = f();
+        let timing = IterTiming {
+            worker_busy_s: vec![t0.elapsed().as_secs_f64()],
+            ..Default::default()
+        };
+        self.clock.advance(&timing, &self.comm);
+        out
+    }
+
+    fn vtime_s(&self) -> f64 {
+        self.clock.elapsed_s()
+    }
+}
+
 /// The serial baselines (collapsed / accelerated / uncollapsed); the
 /// hybrid is dispatched to [`run_hybrid`] before this is reached.
 fn run_serial(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOutcome> {
+    obs::set_level(cfg.obs);
+    obs::reset();
     let RunSetup { train, lg, mut eval_rng, mut evaluator, mut trace } = setup_run(cfg)?;
     let wall0 = Instant::now();
+    let mut vt = SerialVtime::new(cfg.comm);
 
     if cfg.sampler == SamplerKind::Uncollapsed {
         let mut rng = Pcg64::new(cfg.seed).split(3);
@@ -340,12 +414,12 @@ fn run_serial(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOut
             train.x.clone(), k_fixed, lg, cfg.alpha, sampler_options(cfg), &mut rng,
         );
         for i in 0..cfg.iters {
-            let rec = s.step(&mut rng);
+            let rec = vt.step(|| s.step(&mut rng));
             if i % cfg.eval_every == 0 || i + 1 == cfg.iters {
                 let h = evaluator.evaluate(&s.params, &mut eval_rng);
                 trace.push(TracePoint {
                     iter: rec.iter,
-                    vtime_s: wall0.elapsed().as_secs_f64(),
+                    vtime_s: vt.vtime_s(),
                     wall_s: wall0.elapsed().as_secs_f64(),
                     heldout: h,
                     k: rec.k,
@@ -355,10 +429,11 @@ fn run_serial(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOut
             }
             progress(i);
         }
+        flush_obs(cfg);
         return Ok(RunOutcome {
             final_k: s.params.k(),
             features: s.params.a.clone(),
-            elapsed_s: wall0.elapsed().as_secs_f64(),
+            elapsed_s: vt.vtime_s(),
             final_params: s.params.clone(),
             trace,
             reservoir: SampleReservoir::new(0),
@@ -375,7 +450,7 @@ fn run_serial(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOut
         train.x.clone(), lg, cfg.alpha, mode, sampler_options(cfg), &mut rng,
     );
     for i in 0..cfg.iters {
-        let rec = s.step(&mut rng);
+        let rec = vt.step(|| s.step(&mut rng));
         if i % cfg.eval_every == 0 || i + 1 == cfg.iters {
             // draw (A, π) from their conditionals so the held-out
             // metric is the same joint as the hybrid's
@@ -383,7 +458,7 @@ fn run_serial(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOut
             let h = evaluator.evaluate(&params, &mut eval_rng);
             trace.push(TracePoint {
                 iter: rec.iter,
-                vtime_s: wall0.elapsed().as_secs_f64(),
+                vtime_s: vt.vtime_s(),
                 wall_s: wall0.elapsed().as_secs_f64(),
                 heldout: h,
                 k: rec.k,
@@ -394,10 +469,11 @@ fn run_serial(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOut
         progress(i);
     }
     let params = collapsed_params(&s, &mut rng);
+    flush_obs(cfg);
     Ok(RunOutcome {
         final_k: params.k(),
         features: params.a.clone(),
-        elapsed_s: wall0.elapsed().as_secs_f64(),
+        elapsed_s: vt.vtime_s(),
         final_params: params,
         trace,
         reservoir: SampleReservoir::new(0),
@@ -442,8 +518,13 @@ mod tests {
         }
     }
 
+    // Tests that call `run` take the obs test gate: run() sets the
+    // process-global obs level from the config, so concurrent lib tests
+    // flipping it must serialise (crate::obs::test_level_gate).
+
     #[test]
     fn runs_every_sampler_kind() {
+        let _g = crate::obs::test_level_gate();
         for kind in [
             SamplerKind::Hybrid,
             SamplerKind::Collapsed,
@@ -470,6 +551,7 @@ mod tests {
 
     #[test]
     fn hybrid_multi_processor_runs() {
+        let _g = crate::obs::test_level_gate();
         let mut cfg = tiny(SamplerKind::Hybrid);
         cfg.processors = 3;
         let out = run(&cfg, |_| {}).unwrap();
@@ -478,6 +560,7 @@ mod tests {
 
     #[test]
     fn keep_samples_fills_the_reservoir() {
+        let _g = crate::obs::test_level_gate();
         let mut cfg = tiny(SamplerKind::Hybrid);
         cfg.keep_samples = 4;
         let out = run(&cfg, |_| {}).unwrap();
@@ -489,6 +572,63 @@ mod tests {
         assert_eq!(last.z.k(), last.pi.len());
         // train split of n=60 at heldout 0.1 keeps 54 rows
         assert_eq!(last.z.n(), 54);
+    }
+
+    #[test]
+    fn serial_vtime_accumulates_busy_not_wall() {
+        use std::time::Duration;
+        let mut vt = SerialVtime::new(CommModel::default());
+        vt.step(|| std::thread::sleep(Duration::from_millis(10)));
+        // unmetered wall time between steps must NOT count
+        std::thread::sleep(Duration::from_millis(150));
+        vt.step(|| std::thread::sleep(Duration::from_millis(10)));
+        let v = vt.vtime_s();
+        assert!(v >= 0.020, "metered work undercounted: {v}");
+        // generous oversleep margin, but far below the 170ms the old
+        // wall-clock bug would have reported
+        assert!(v < 0.120, "unmetered wall time leaked into vtime: {v}");
+    }
+
+    #[test]
+    fn serial_trace_vtime_is_busy_time_not_wall() {
+        let _g = crate::obs::test_level_gate();
+        for kind in [SamplerKind::Collapsed, SamplerKind::Uncollapsed] {
+            let out = run(&tiny(kind), |_| {}).unwrap();
+            let pts = &out.trace.points;
+            assert!(!pts.is_empty());
+            for w in pts.windows(2) {
+                assert!(w[0].vtime_s <= w[1].vtime_s, "{kind:?}: vtime not monotone");
+            }
+            for p in pts {
+                assert!(p.vtime_s > 0.0, "{kind:?}: a step took zero time?");
+                // vtime counts sampler steps only; wall additionally
+                // includes every held-out evaluation up to this point
+                assert!(
+                    p.vtime_s <= p.wall_s,
+                    "{kind:?}: vtime {} > wall {}",
+                    p.vtime_s,
+                    p.wall_s
+                );
+            }
+            assert!(out.elapsed_s >= pts.last().unwrap().vtime_s);
+        }
+    }
+
+    #[test]
+    fn obs_full_writes_a_parsable_report() {
+        let _g = crate::obs::test_level_gate();
+        let dir = std::env::temp_dir().join("pibp_obs_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut cfg = tiny(SamplerKind::Hybrid);
+        cfg.processors = 2;
+        cfg.obs = ObsLevel::Full;
+        cfg.obs_out = dir.join("run_obs.json").to_string_lossy().into_owned();
+        run(&cfg, |_| {}).unwrap();
+        let text = std::fs::read_to_string(obs_report_file(&cfg)).unwrap();
+        let doc = crate::config::Json::parse(&text).unwrap();
+        // the renderer enforces the schema's required keys
+        let rendered = crate::obs::render_json(&doc).unwrap();
+        assert!(rendered.contains("obs report (level=full)"), "{rendered}");
     }
 
     #[test]

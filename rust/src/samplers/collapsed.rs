@@ -19,6 +19,7 @@
 use crate::linalg::Mat;
 use crate::model::state::FeatureState;
 use crate::model::{ibp, CollapsedCache, LinGauss};
+use crate::obs;
 use crate::rng::Pcg64;
 use crate::samplers::{IterStats, SamplerOptions};
 
@@ -94,8 +95,11 @@ impl CollapsedGibbs {
     /// One full Gibbs iteration over all rows.
     pub fn step(&mut self, rng: &mut Pcg64) -> IterStats {
         let n = self.x.rows();
-        for row in 0..n {
-            self.update_row(row, rng);
+        {
+            let _sweep = obs::span(obs::Span::CollapsedRowSweep);
+            for row in 0..n {
+                self.update_row(row, rng);
+            }
         }
         self.cleanup_empty();
         if self.opts.sample_alpha {
@@ -129,7 +133,14 @@ impl CollapsedGibbs {
         let m_minus: Vec<usize> = (0..k)
             .map(|j| self.z.m()[j] - self.z.get(row, j) as usize)
             .collect();
-        if !self.cache.remove_row(&z_orig, &x_row) {
+        if self.cache.remove_row(&z_orig, &x_row) {
+            obs::inc(obs::Counter::CacheRank1Ops);
+        } else {
+            obs::inc(obs::Counter::CacheSingularFallback);
+            obs::warn_once(
+                obs::Warn::CacheSingular,
+                "collapsed cache rank-1 update went singular; falling back to a full refresh",
+            );
             self.rebuild_cache_excluding(row, &x_row);
         }
         let mut z_cur = z_orig.clone();
@@ -152,6 +163,11 @@ impl CollapsedGibbs {
             if !dll.is_finite() {
                 // drift poisoned a Sherman–Morrison denominator: rebuild
                 // from exact statistics (row excluded) and retry once
+                obs::inc(obs::Counter::CacheNanRetry);
+                obs::warn_once(
+                    obs::Warn::CacheNan,
+                    "collapsed cache produced a non-finite weight; refreshed and retried",
+                );
                 self.rebuild_cache_excluding(row, &x_row);
                 dll = self.pair_dll(&z1, &z0, &x_row);
                 debug_assert!(dll.is_finite(), "fresh cache gave NaN weight");
@@ -220,6 +236,11 @@ impl CollapsedGibbs {
             .candidate_loglik_aug_batch(z_cur, &x_row, kmax, &self.lg);
         if logw.iter().any(|w| w.is_nan()) {
             // poisoned denominator: rebuild (row excluded) and retry once
+            obs::inc(obs::Counter::CacheNanRetry);
+            obs::warn_once(
+                obs::Warn::CacheNan,
+                "collapsed cache produced a non-finite weight; refreshed and retried",
+            );
             self.rebuild_cache_excluding(row, &x_row);
             logw = self
                 .cache
@@ -245,8 +266,15 @@ impl CollapsedGibbs {
         }
         if self.z.k() > 0 {
             let z_row = self.z.row_f64(row);
-            if !self.cache.insert_row(&z_row, &x_row) {
+            if self.cache.insert_row(&z_row, &x_row) {
+                obs::inc(obs::Counter::CacheRank1Ops);
+            } else {
                 // singular rank-1 insert: rebuild from scratch (row included)
+                obs::inc(obs::Counter::CacheSingularFallback);
+                obs::warn_once(
+                    obs::Warn::CacheSingular,
+                    "collapsed cache rank-1 update went singular; falling back to a full refresh",
+                );
                 self.cache.refresh(&self.x, &self.z.to_mat(), self.lg.ratio());
                 self.rows_since_refresh = 0;
             }
@@ -261,6 +289,11 @@ impl CollapsedGibbs {
         let before = self.z.k();
         let keep = self.z.compact();
         if self.z.k() != before && !self.cache.retain_features(&keep) {
+            obs::inc(obs::Counter::CacheSingularFallback);
+            obs::warn_once(
+                obs::Warn::CacheSingular,
+                "collapsed cache rank-1 update went singular; falling back to a full refresh",
+            );
             self.cache.refresh(&self.x, &self.z.to_mat(), self.lg.ratio());
             self.rows_since_refresh = 0;
         }
@@ -285,6 +318,7 @@ impl CollapsedGibbs {
                 prop.sigma_a = (prop.sigma_a.ln() + step).exp();
             }
             self.sigma_proposals += 1;
+            obs::inc(obs::Counter::SigmaMhProposed);
             // the proposal changed the ridge ratio (and possibly σ_X's
             // normalisation): evaluate from the cached ZᵀZ/G — no N work.
             // log-scale proposal is symmetric in log-space; include the
@@ -297,6 +331,7 @@ impl CollapsedGibbs {
                     self.lg = prop;
                     self.cache.adopt(eval);
                     self.sigma_accepts += 1;
+                    obs::inc(obs::Counter::SigmaMhAccepted);
                 }
             }
             // else: M′ failed to factorise (degenerate proposal) — reject

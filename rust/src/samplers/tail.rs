@@ -14,6 +14,7 @@
 use crate::linalg::Mat;
 use crate::model::state::FeatureState;
 use crate::model::{ibp, CollapsedCache, LinGauss};
+use crate::obs;
 use crate::rng::Pcg64;
 
 /// How K_new is drawn (paper §3 pseudocode: "Propose K_new features from
@@ -165,6 +166,11 @@ impl TailProposer {
         let before = self.z_tail.k();
         let keep = self.z_tail.compact();
         if self.z_tail.k() != before && !cache.retain_features(&keep) {
+            obs::inc(obs::Counter::CacheSingularFallback);
+            obs::warn_once(
+                obs::Warn::CacheSingular,
+                "tail cache rank-1 update went singular; falling back to a full refresh",
+            );
             cache.refresh_from_state(resid, &self.z_tail, self.lg.ratio());
         }
         self.cache = Some(cache);
@@ -189,7 +195,14 @@ impl TailProposer {
             let m_minus: Vec<usize> = (0..k)
                 .map(|j| self.z_tail.m()[j] - self.z_tail.get(row, j) as usize)
                 .collect();
-            if !cache.remove_row(&z_cur, &x_row) {
+            if cache.remove_row(&z_cur, &x_row) {
+                obs::inc(obs::Counter::CacheRank1Ops);
+            } else {
+                obs::inc(obs::Counter::CacheSingularFallback);
+                obs::warn_once(
+                    obs::Warn::CacheSingular,
+                    "tail cache rank-1 update went singular; falling back to a full refresh",
+                );
                 self.rebuild_cache_excluding(cache, resid, row, &x_row);
             }
             for j in 0..k {
@@ -208,6 +221,11 @@ impl TailProposer {
                 if !dll.is_finite() {
                     // drift poisoned the SM denominator: rebuild from
                     // exact statistics (row excluded) and retry once
+                    obs::inc(obs::Counter::CacheNanRetry);
+                    obs::warn_once(
+                        obs::Warn::CacheNan,
+                        "tail cache produced a non-finite weight; refreshed and retried",
+                    );
                     self.rebuild_cache_excluding(cache, resid, row, &x_row);
                     dll = cache.candidate_loglik(&z1, &x_row, &self.lg)
                         - cache.candidate_loglik(&z0, &x_row, &self.lg);
@@ -225,6 +243,11 @@ impl TailProposer {
             cache.candidate_loglik_aug_batch(&z_cur, &x_row, kmax, &self.lg);
         if logw.iter().any(|w| w.is_nan()) {
             // poisoned denominator: rebuild (row excluded) and retry once
+            obs::inc(obs::Counter::CacheNanRetry);
+            obs::warn_once(
+                obs::Warn::CacheNan,
+                "tail cache produced a non-finite weight; refreshed and retried",
+            );
             self.rebuild_cache_excluding(cache, resid, row, &x_row);
             logw = cache.candidate_loglik_aug_batch(&z_cur, &x_row, kmax, &self.lg);
         }
@@ -245,10 +268,14 @@ impl TailProposer {
                 let j_prop = (rng.poisson(lambda) as usize).min(kmax);
                 if j_prop == 0 {
                     0
-                } else if (logw[j_prop] - logw[0]) > rng.uniform().ln() {
-                    j_prop
                 } else {
-                    0
+                    obs::inc(obs::Counter::TailMhProposed);
+                    if (logw[j_prop] - logw[0]) > rng.uniform().ln() {
+                        obs::inc(obs::Counter::TailMhAccepted);
+                        j_prop
+                    } else {
+                        0
+                    }
                 }
             }
             Proposal::MetropolisHastings => 0,
@@ -267,7 +294,14 @@ impl TailProposer {
         }
         if self.z_tail.k() > 0 {
             let z_row = self.z_tail.row_f64(row);
-            if !cache.insert_row(&z_row, &x_row) {
+            if cache.insert_row(&z_row, &x_row) {
+                obs::inc(obs::Counter::CacheRank1Ops);
+            } else {
+                obs::inc(obs::Counter::CacheSingularFallback);
+                obs::warn_once(
+                    obs::Warn::CacheSingular,
+                    "tail cache rank-1 update went singular; falling back to a full refresh",
+                );
                 cache.refresh_from_state(resid, &self.z_tail, self.lg.ratio());
             }
         }

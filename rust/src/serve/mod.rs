@@ -31,6 +31,7 @@ use crate::linalg::Mat;
 use crate::model::missing::{masked_sweep, reconstruct_into, Mask};
 use crate::model::state::{FeatureState, Kernel};
 use crate::model::LinGauss;
+use crate::obs;
 use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
 use crate::rng::Pcg64;
 use crate::samplers::uncollapsed::residuals;
@@ -297,6 +298,7 @@ impl<'a> PredictEngine<'a> {
                 slot.0 = start + i;
                 slot.1.as_mut_slice().fill(0.0);
             }
+            obs::record_value(obs::Span::ServeWaveSize, (end - start) as u64);
             self.ctx.run(&mut slots, |slot| {
                 f(slot.0, &self.samples[slot.0], &mut slot.1);
             });
@@ -354,6 +356,8 @@ impl<'a> PredictEngine<'a> {
     /// ([`Self::accumulate_samples`] — O(T) live buffers).
     pub fn reconstruct(&self, x: &Mat, seed: u64) -> Mat {
         assert!(!self.samples.is_empty(), "predict: no posterior samples");
+        let _q = obs::span(obs::Span::ServeQuery);
+        obs::inc(obs::Counter::ServeQueries);
         let (n, d) = (x.rows(), x.cols());
         let mut acc = self.accumulate_samples(n, d, |s, ps, part| {
             let mut rng = Self::sample_rng(seed, s);
@@ -368,6 +372,7 @@ impl<'a> PredictEngine<'a> {
                     }
                 }
             }
+            obs::add(obs::Counter::RngDrawsServe, rng.draw_count());
         });
         acc.scale(1.0 / self.samples.len() as f64);
         acc
@@ -382,11 +387,14 @@ impl<'a> PredictEngine<'a> {
     /// posterior-mean fill.
     pub fn impute(&self, x: &Mat, mask: &Mask, seed: u64) -> Mat {
         assert!(!self.samples.is_empty(), "predict: no posterior samples");
+        let _q = obs::span(obs::Span::ServeQuery);
+        obs::inc(obs::Counter::ServeQueries);
         let (n, d) = (x.rows(), x.cols());
         let mut acc = self.accumulate_samples(n, d, |s, ps, recon| {
             let mut rng = Self::sample_rng(seed, s);
             let z = self.infer_z(ps, x, Some(mask), &mut rng);
             reconstruct_into(recon, x, mask, &z, &ps.a);
+            obs::add(obs::Counter::RngDrawsServe, rng.draw_count());
         });
         acc.scale(1.0 / self.samples.len() as f64);
         acc
@@ -398,6 +406,8 @@ impl<'a> PredictEngine<'a> {
     /// per-row log-mean-exp combining them in sample order.
     pub fn heldout_loglik(&self, x: &Mat, seed: u64) -> HeldoutPredict {
         assert!(!self.samples.is_empty(), "predict: no posterior samples");
+        let _q = obs::span(obs::Span::ServeQuery);
+        obs::inc(obs::Counter::ServeQueries);
         let n = x.rows();
         let per_sample: Vec<Vec<f64>> = self.for_each_sample(|s, ps| {
             let mut rng = Self::sample_rng(seed, s);
@@ -413,6 +423,7 @@ impl<'a> PredictEngine<'a> {
                 }
                 rows.push(ll);
             }
+            obs::add(obs::Counter::RngDrawsServe, rng.draw_count());
             rows
         });
         let mut per_row = Vec::with_capacity(n);

@@ -1,0 +1,148 @@
+//! Observability must be provably non-perturbing: the chain a run
+//! produces is **bit-identical** for every obs level (off / counters /
+//! full), across the (P, T) grid, and across a checkpoint boundary where
+//! the obs level changes between the writing run and the resuming run.
+//!
+//! Why decoded chain state and not raw checkpoint bytes: checkpoints
+//! carry *measured* timing (trace `vtime_s`/`wall_s`, the coordinator's
+//! virtual clock), which legitimately differs between any two runs on a
+//! real machine — with or without obs. The determinism contract is about
+//! the chain (Z, A, π, σ, α, the eval stream, the reservoir), so that is
+//! what these tests compare, at the bit level.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use pibp::config::{ObsLevel, RunConfig, SamplerKind};
+use pibp::runner::{self, RunOutcome};
+
+/// Serialises the tests in this binary: the obs registry (level +
+/// counters) is process-global and `runner::run` sets the level from the
+/// config. Chain bits are immune to level flips by design — that is the
+/// property under test — but serialising keeps each run's report
+/// self-consistent.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pibp_obs_eq_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run_cfg(p: usize, t: usize, dir: &Path) -> RunConfig {
+    RunConfig {
+        n: 120,
+        iters: 8,
+        eval_every: 3,
+        sampler: SamplerKind::Hybrid,
+        processors: p,
+        threads_per_worker: t,
+        seed: 41,
+        keep_samples: 8,
+        out_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+}
+
+/// Bit-level chain equality: global parameters, every reservoir sample,
+/// and the held-out trace (chain columns only — never measured time).
+fn assert_chains_identical(a: &RunOutcome, b: &RunOutcome, tag: &str) {
+    let (fa, fb) = (&a.final_params, &b.final_params);
+    assert_eq!(fa.k(), fb.k(), "{tag}: K diverged");
+    assert_eq!(fa.alpha.to_bits(), fb.alpha.to_bits(), "{tag}: alpha diverged");
+    assert_eq!(
+        fa.lg.sigma_x.to_bits(),
+        fb.lg.sigma_x.to_bits(),
+        "{tag}: sigma_x diverged"
+    );
+    assert_eq!(
+        fa.lg.sigma_a.to_bits(),
+        fb.lg.sigma_a.to_bits(),
+        "{tag}: sigma_a diverged"
+    );
+    let pi_a: Vec<u64> = fa.pi.iter().map(|v| v.to_bits()).collect();
+    let pi_b: Vec<u64> = fb.pi.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(pi_a, pi_b, "{tag}: π diverged");
+    assert!(fa.a.max_abs_diff(&fb.a) == 0.0, "{tag}: loadings A diverged");
+    assert_eq!(
+        a.reservoir.samples(),
+        b.reservoir.samples(),
+        "{tag}: reservoir samples diverged"
+    );
+    assert_eq!(
+        a.trace.points.len(),
+        b.trace.points.len(),
+        "{tag}: trace lengths diverged"
+    );
+    for (pa, pb) in a.trace.points.iter().zip(&b.trace.points) {
+        assert_eq!(pa.iter, pb.iter, "{tag}: trace iters diverged");
+        assert_eq!(pa.k, pb.k, "{tag}: trace K at iter {} diverged", pa.iter);
+        assert_eq!(
+            pa.heldout.to_bits(),
+            pb.heldout.to_bits(),
+            "{tag}: held-out metric at iter {} diverged",
+            pa.iter
+        );
+        assert_eq!(pa.sigma_x.to_bits(), pb.sigma_x.to_bits(), "{tag}: trace σx");
+        assert_eq!(pa.alpha.to_bits(), pb.alpha.to_bits(), "{tag}: trace α");
+    }
+    assert!(a.final_k > 0, "{tag}: chain never grew a feature");
+}
+
+/// The tentpole guarantee: for every (P, T) in the grid, a run at
+/// obs=counters and obs=full is bit-identical to the obs=off reference.
+/// Obs probes draw no RNG and change no merge order, so the chain cannot
+/// tell whether it is being watched.
+#[test]
+fn obs_level_never_perturbs_the_chain_across_p_t_grid() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    for p in [1usize, 4] {
+        for t in [1usize, 4] {
+            let dir = tmp_dir(&format!("grid_{p}_{t}"));
+            let reference = runner::run(&run_cfg(p, t, &dir), |_| {}).unwrap();
+            for level in [ObsLevel::Counters, ObsLevel::Full] {
+                let mut cfg = run_cfg(p, t, &dir);
+                cfg.obs = level;
+                let watched = runner::run(&cfg, |_| {}).unwrap();
+                assert_chains_identical(
+                    &reference,
+                    &watched,
+                    &format!("P={p} T={t} obs={}", level.name()),
+                );
+            }
+        }
+    }
+}
+
+/// Toggling obs at a checkpoint boundary is also invisible to the chain:
+/// a run checkpointed under one obs level and resumed under another must
+/// match the uninterrupted obs=off reference bit-for-bit, in both
+/// directions. (Works because obs keys are excluded from the resume
+/// fingerprint, like `kernel` and `threads_per_worker`.)
+#[test]
+fn resume_with_different_obs_level_is_bit_exact() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let (p, t) = (2usize, 2usize);
+    let dir = tmp_dir("crossover");
+    let reference = runner::run(&run_cfg(p, t, &dir), |_| {}).unwrap();
+
+    for (write_level, resume_level) in
+        [(ObsLevel::Off, "full"), (ObsLevel::Full, "off")]
+    {
+        let tag = format!("obs {}→{resume_level}", write_level.name());
+        let ckpt = dir.join(format!("cross_{}.pibp", write_level.name()));
+        let mut part = run_cfg(p, t, &dir);
+        part.obs = write_level;
+        part.iters = 4;
+        part.checkpoint_every = 4;
+        part.checkpoint_path = ckpt.to_string_lossy().into_owned();
+        runner::run(&part, |_| {}).unwrap();
+
+        let overrides = vec![
+            ("iters".to_string(), "8".to_string()),
+            ("obs".to_string(), resume_level.to_string()),
+        ];
+        let (_, resumed) = runner::resume(&ckpt, &overrides, |_| {}).unwrap();
+        assert_chains_identical(&reference, &resumed, &tag);
+    }
+}
