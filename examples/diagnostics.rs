@@ -1,10 +1,19 @@
-//! Multi-chain convergence diagnostics: run C independent hybrid chains,
-//! report split-R̂ (Gelman–Rubin) on the held-out joint, σ_X and K, plus
-//! per-chain ESS — the workflow a practitioner uses to decide whether the
-//! sampler has converged before trusting Figure-1 style comparisons.
+//! Multi-chain convergence diagnostics: run C replica hybrid chains
+//! through `runner::run_multi` — the engine behind `pibp run --chains C`
+//! — which streams per-chain ESS and cross-chain split-R̂ (Gelman–Rubin)
+//! over the kept trace scalars while the chains run, then re-score the
+//! post-warmup halves offline with the batch estimators (what
+//! `pibp diagnose` does to exported traces).
 //!
 //! ```bash
 //! cargo run --release --example diagnostics -- [chains] [iters] [n]
+//! ```
+//!
+//! The CLI equivalent, including `--until` early stopping:
+//!
+//! ```bash
+//! pibp run --chains 4 --until 'rhat<1.05,ess>100' --trace-out t.json
+//! pibp diagnose --trace t.c0.json --trace t.c1.json --trace t.c2.json --trace t.c3.json
 //! ```
 
 use pibp::config::{RunConfig, SamplerKind};
@@ -18,28 +27,32 @@ fn main() -> anyhow::Result<()> {
     let iters: usize = args.get(1).map_or(120, |s| s.parse().expect("iters"));
     let n: usize = args.get(2).map_or(300, |s| s.parse().expect("n"));
 
-    println!("running {chains} independent hybrid chains (P=3, N={n}, {iters} iters)…");
-    let mut traces = Vec::new();
-    for c in 0..chains {
-        let cfg = RunConfig {
-            n,
-            iters,
-            sampler: SamplerKind::Hybrid,
-            processors: 3,
-            eval_every: 2,
-            seed: 1000 + c as u64,
-            ..Default::default()
-        };
-        let out = runner::run(&cfg, |_| {})?;
+    println!("running {chains} replica hybrid chains (P=3, N={n}, {iters} iters)…");
+    let cfg = RunConfig {
+        n,
+        iters,
+        sampler: SamplerKind::Hybrid,
+        processors: 3,
+        eval_every: 2,
+        chains,
+        ..Default::default()
+    };
+    let out = runner::run_multi(&cfg, |_| {})?;
+    for (c, chain) in out.chains.iter().enumerate() {
         println!(
-            "  chain {c}: plateau {:.1}, final K {}",
-            out.trace.plateau(0.3),
-            out.final_k
+            "  chain {c} (seed {}): plateau {:.1}, final K {}",
+            runner::chain_seed(cfg.seed, c),
+            chain.trace.plateau(0.3),
+            chain.final_k
         );
-        traces.push(out.trace);
     }
 
-    // discard the first half as warm-up, diagnose the second half
+    // the streaming estimators' view of the whole run (no warm-up cut)
+    print!("\n{}", out.diag.render());
+
+    // offline re-score: discard the first half as warm-up, diagnose the
+    // second half with the batch estimators — the pibp diagnose view
+    let traces: Vec<_> = out.chains.into_iter().map(|c| c.trace).collect();
     let series = |f: &dyn Fn(&pibp::metrics::TracePoint) -> f64| -> Vec<Vec<f64>> {
         traces
             .iter()
@@ -53,7 +66,8 @@ fn main() -> anyhow::Result<()> {
     let sigma = series(&|p| p.sigma_x);
     let kfeat = series(&|p| p.k as f64);
 
-    println!("\n| quantity  |   split-R̂ | min ESS (per chain) |");
+    println!("\npost-warmup (second half), batch estimators:");
+    println!("| quantity  |   split-R̂ | min ESS (per chain) |");
     println!("|-----------|-----------|---------------------|");
     for (name, chains_data) in
         [("heldout", &heldout), ("sigma_x", &sigma), ("K", &kfeat)]

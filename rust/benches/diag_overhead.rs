@@ -1,0 +1,86 @@
+//! T-S8 — convergence-diagnostics overhead on a full hybrid run: the
+//! same single-chain workload through `runner::run` (no diagnostics)
+//! and `runner::run_multi` with `chains=1` (streaming ESS/R̂ fed from
+//! every kept trace point, rolling summary published to the obs
+//! registry).
+//!
+//! The diag layer's contract mirrors obs: it only *reads* the kept
+//! trace points (no RNG, no ordering effects — `diag_equivalence.rs`
+//! pins bit-identity), and each point costs O(max_lag) floats per
+//! watched quantity. This bench pins the price: the diagnosed run's
+//! median must stay within 5% of the plain run's, and the process exits
+//! non-zero if not — CI treats that as a failure.
+
+use std::time::Duration;
+
+use pibp::bench::{bench, header};
+use pibp::config::{RunConfig, SamplerKind};
+use pibp::runner;
+
+const THRESHOLD: f64 = 0.05;
+
+fn cfg() -> RunConfig {
+    RunConfig {
+        n: 120,
+        iters: 6,
+        eval_every: 1,
+        sampler: SamplerKind::Hybrid,
+        processors: 2,
+        seed: 11,
+        out_dir: std::env::temp_dir()
+            .join("pibp_diag_overhead")
+            .to_string_lossy()
+            .into_owned(),
+        ..Default::default()
+    }
+}
+
+fn main() {
+    println!("## T-S8 — diag overhead on a hybrid run (n=120, 6 iters, eval every iter)\n");
+    println!("{}", header());
+    let budget = Duration::from_secs(3);
+
+    let plain = bench("run        (no diagnostics)", 1, budget, 4, || {
+        runner::run(&cfg(), |_| {}).unwrap();
+    });
+    println!("{}", plain.row());
+    let diagnosed = bench("run_multi  (chains=1, diag on)", 1, budget, 4, || {
+        runner::run_multi(&cfg(), |_| {}).unwrap();
+    });
+    println!("{}", diagnosed.row());
+
+    let (off, on) = (plain.per_iter.median, diagnosed.per_iter.median);
+    let overhead = on / off - 1.0;
+    println!("\n        diag overhead {:+.2}% vs plain run", 100.0 * overhead);
+
+    let ok = overhead < THRESHOLD;
+    let json = format!(
+        "{{\n  \"bench\": \"diag_overhead\",\n  \"n\": 120,\n  \"iters\": 6,\n  \
+         \"threshold\": {THRESHOLD},\n  \"plain_s\": {off:.6e},\n  \
+         \"diag_s\": {on:.6e},\n  \"overhead\": {overhead:.4},\n  \
+         \"under_threshold\": {ok}\n}}\n"
+    );
+    // cargo runs bench binaries with cwd = the package dir (rust/), so
+    // anchor the output at the workspace root where CI expects it
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_diag.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("diag overhead results → {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    if ok {
+        println!(
+            "PASS: diag overhead {:.2}% < {:.0}%",
+            100.0 * overhead,
+            100.0 * THRESHOLD
+        );
+    } else {
+        eprintln!(
+            "FAIL: diag overhead {:.2}% exceeds the {:.0}% budget",
+            100.0 * overhead,
+            100.0 * THRESHOLD
+        );
+        std::process::exit(1);
+    }
+}

@@ -146,6 +146,22 @@ pub struct RunConfig {
     /// Obs report path ("" = `<out_dir>/run_obs.json` when obs is on).
     /// Flushed at the checkpoint cadence and at run end.
     pub obs_out: String,
+    /// Replica chains for convergence diagnostics (`pibp run --chains`).
+    /// Chain c runs the same config with seed `chain_seed(seed, c)`
+    /// (chain 0 keeps the root seed); streaming ESS / split-R̂ land in
+    /// the `diag` section of the obs report. Like `obs`, excluded from
+    /// the resume fingerprint: diagnostics never perturb any chain
+    /// (`rust/tests/diag_equivalence.rs`). Clamped to ≥ 1.
+    pub chains: usize,
+    /// Deterministic early-stop rule over the streaming diagnostics,
+    /// e.g. `"rhat<1.01,ess>200"` ("" = run the full horizon). The
+    /// trigger iteration is recorded in the report; a standalone run
+    /// with `iters` set to it reproduces the stopped chains exactly.
+    pub until: String,
+    /// Trace export path ("" = off): `.json` keeps full f64 precision,
+    /// anything else writes the rounded CSV. With `chains > 1`, chain c
+    /// writes to the path with `.c<c>` inserted before the extension.
+    pub trace_out: String,
 }
 
 impl Default for RunConfig {
@@ -182,6 +198,9 @@ impl Default for RunConfig {
             trace_thin: 1,
             obs: ObsLevel::Off,
             obs_out: String::new(),
+            chains: 1,
+            until: String::new(),
+            trace_out: String::new(),
         }
     }
 }
@@ -257,6 +276,11 @@ impl RunConfig {
             "trace_thin" => self.trace_thin = uint()?,
             "obs" => self.obs = ObsLevel::parse(value)?,
             "obs_out" => self.obs_out = value.into(),
+            // clamped like threads_per_worker: 0 replica chains is
+            // nonsensical, and a diagnostics knob shouldn't hard-error
+            "chains" => self.chains = uint()?.max(1),
+            "until" => self.until = value.into(),
+            "trace_out" => self.trace_out = value.into(),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -290,6 +314,16 @@ impl RunConfig {
                  (the serial baselines have no durable-state support)"
             );
         }
+        if (self.chains > 1 || !self.until.is_empty())
+            && self.sampler != SamplerKind::Hybrid
+        {
+            bail!(
+                "chains > 1 / until require the hybrid sampler (the \
+                 multi-chain runner replicates the coordinator per chain)"
+            );
+        }
+        // reject a malformed early-stop rule up front, not mid-run
+        crate::metrics::StopRule::parse(&self.until)?;
         Ok(())
     }
 
@@ -308,7 +342,8 @@ impl RunConfig {
              eval_sweeps={}\nkmax_new={}\nk_cap={}\nartifacts_dir={}\n\
              out_dir={}\ncomm_latency_s={}\ncomm_bandwidth_gbps={}\n\
              checkpoint_every={}\ncheckpoint_path={}\nkeep_samples={}\n\
-             trace_thin={}\nobs={}\nobs_out={}\n",
+             trace_thin={}\nobs={}\nobs_out={}\nchains={}\nuntil={}\n\
+             trace_out={}\n",
             self.dataset,
             self.n,
             self.k_true,
@@ -341,6 +376,9 @@ impl RunConfig {
             self.trace_thin,
             self.obs.name(),
             self.obs_out,
+            self.chains,
+            self.until,
+            self.trace_out,
         )
     }
 
@@ -373,7 +411,11 @@ impl RunConfig {
     /// paths, the comm model (virtual-time accounting only), and the
     /// `obs`/`obs_out` observability keys (observation never perturbs the
     /// chain — `rust/tests/obs_equivalence.rs` — so resume may toggle it
-    /// mid-run at any checkpoint boundary). `pibp
+    /// mid-run at any checkpoint boundary), and the
+    /// `chains`/`until`/`trace_out` diagnostics keys (streaming ESS/R̂
+    /// is read-only on kept trace points and draws no RNG —
+    /// `rust/tests/diag_equivalence.rs` — so they are equally free to
+    /// change across a resume). `pibp
     /// resume` refuses a checkpoint whose fingerprint differs from the
     /// resumed configuration's.
     pub fn fingerprint(&self) -> u64 {
@@ -493,10 +535,16 @@ mod tests {
         c.apply("kernel", "packed").unwrap();
         c.apply("obs", "counters").unwrap();
         c.apply("obs_out", "out/run_obs.json").unwrap();
+        c.apply("chains", "3").unwrap();
+        c.apply("until", "rhat<1.01,ess>200").unwrap();
+        c.apply("trace_out", "out/trace.json").unwrap();
         let back = RunConfig::from_canonical(&c.canonical()).unwrap();
         assert_eq!(back.kernel, Kernel::Packed);
         assert_eq!(back.obs, ObsLevel::Counters);
         assert_eq!(back.obs_out, "out/run_obs.json");
+        assert_eq!(back.chains, 3);
+        assert_eq!(back.until, "rhat<1.01,ess>200");
+        assert_eq!(back.trace_out, "out/trace.json");
         assert_eq!(back.processors, 5);
         assert_eq!(back.dataset, "synth");
         assert_eq!(back.seed, 99);
@@ -531,6 +579,11 @@ mod tests {
         // observability never perturbs the chain, so resume may toggle it
         c.obs = ObsLevel::Full;
         c.obs_out = "elsewhere/run_obs.json".into();
+        // diagnostics are equally non-perturbing: a replica checkpoint
+        // resumes as a plain single-chain run
+        c.chains = 3;
+        c.until = "rhat<1.01".into();
+        c.trace_out = "elsewhere/trace.json".into();
         assert_eq!(c.fingerprint(), base.fingerprint());
         // chain-relevant keys MUST change it
         let mut c = base.clone();
@@ -558,6 +611,26 @@ mod tests {
         assert!(c.validate().is_ok());
         c.trace_thin = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn diag_keys_validate() {
+        let mut c = RunConfig::default();
+        c.apply("chains", "0").unwrap();
+        assert_eq!(c.chains, 1, "chains clamps like threads");
+        c.chains = 3;
+        c.until = "rhat<1.05".into();
+        assert!(c.validate().is_ok());
+        c.until = "nonsense".into();
+        assert!(c.validate().is_err(), "malformed stop rule rejected early");
+        c.until.clear();
+        c.sampler = SamplerKind::Collapsed;
+        assert!(c.validate().is_err(), "chains > 1 requires hybrid");
+        c.chains = 1;
+        c.until = "ess>10".into();
+        assert!(c.validate().is_err(), "until requires hybrid");
+        c.sampler = SamplerKind::Hybrid;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

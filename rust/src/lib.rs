@@ -35,6 +35,11 @@
 //!   histograms, sampler-health counters and the per-run `run_obs.json`
 //!   report, runtime-toggled and provably non-perturbing (no RNG, no
 //!   ordering effects — `rust/tests/obs_equivalence.rs`).
+//! * [`metrics::online`] — streaming convergence diagnostics (Welford
+//!   moments, bounded-lag online ESS, cross-chain split-R̂) behind
+//!   `pibp run --chains` / `--until` and the offline `pibp diagnose`
+//!   verdict; replica chains stay bit-identical to standalone runs
+//!   (`rust/tests/diag_equivalence.rs`).
 //! * substrates: [`rng`], [`linalg`], [`data`], [`model`], [`metrics`],
 //!   [`viz`], [`cli`], [`config`], [`propcheck`], [`bench`].
 

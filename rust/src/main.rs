@@ -1,12 +1,14 @@
 //! `pibp` — the launcher.
 //!
 //! ```text
-//! pibp run     [--config c.json] [--set key=value]...   one experiment
-//! pibp resume  [--checkpoint f] [--set iters=N]...      continue a checkpointed run
-//! pibp predict [--checkpoint f] [--missing frac]...     query saved posterior samples
-//! pibp fig1    [--iters N] [--n N] [--out dir]          paper Figure 1
-//! pibp fig2    [--iters N] [--n N] [--out dir]          paper Figure 2
-//! pibp info    [--artifacts dir]                        artifact manifest
+//! pibp run      [--config c.json] [--set key=value]...   one experiment
+//! pibp run      [--chains C] [--until rule]...           C replica chains + convergence diag
+//! pibp resume   [--checkpoint f] [--set iters=N]...      continue a checkpointed run
+//! pibp predict  [--checkpoint f] [--missing frac]...     query saved posterior samples
+//! pibp diagnose [--trace f]... [--rhat-max x]            offline convergence verdict
+//! pibp fig1     [--iters N] [--n N] [--out dir]          paper Figure 1
+//! pibp fig2     [--iters N] [--n N] [--out dir]          paper Figure 2
+//! pibp info     [--artifacts dir]                        artifact manifest
 //! ```
 
 use std::path::Path;
@@ -14,7 +16,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use pibp::cli::{flag, repeated, Cli, CommandSpec, Parsed};
+use pibp::cli::{flag, repeated, switch, Cli, CommandSpec, Parsed};
 use pibp::config::json::Json;
 use pibp::config::{ObsLevel, RunConfig, SamplerKind};
 use pibp::data::cambridge;
@@ -42,6 +44,9 @@ fn spec() -> Cli {
                     flag("threads", "intra-worker sweep threads T ('' = config value)", ""),
                     flag("obs", "observability level: off|counters|full ('' = config value)", ""),
                     flag("obs-out", "obs report path ('' = <out_dir>/run_obs.json)", ""),
+                    flag("chains", "replica chains C for convergence diagnostics ('' = config value)", ""),
+                    flag("until", "early-stop rule over the kept trace, e.g. rhat<1.01,ess>200", ""),
+                    flag("trace-out", "export traces to this path (.csv|.json; chain c gets a .c{c} suffix)", ""),
                     repeated("set", "override, e.g. --set processors=5"),
                 ],
             },
@@ -78,6 +83,18 @@ fn spec() -> Cli {
                 about: "pretty-print a run_obs.json observability report",
                 flags: vec![
                     flag("file", "obs report written by a run with --obs", "run_obs.json"),
+                ],
+            },
+            CommandSpec {
+                name: "diagnose",
+                about: "offline convergence verdict from exported chain traces (see run --trace-out)",
+                flags: vec![
+                    repeated("trace", "a chain's trace file (.csv or .json); pass one per chain, ≥2"),
+                    flag("rhat-max", "split-R̂ pass threshold", "1.1"),
+                    flag("ess-min", "per-chain ESS pass threshold (continuous quantities)", "50"),
+                    flag("warmup-frac", "leading fraction of each trace discarded before scoring", "0.5"),
+                    flag("threshold", "held-out level for time-to-threshold ('' = skip)", ""),
+                    switch("strict", "exit 3 when the overall verdict is FAIL"),
                 ],
             },
             CommandSpec {
@@ -133,6 +150,7 @@ fn dispatch(p: &Parsed) -> Result<()> {
         "resume" => cmd_resume(p),
         "predict" => cmd_predict(p),
         "report" => cmd_report(p),
+        "diagnose" => cmd_diagnose(p),
         "fig1" => cmd_fig1(p),
         "fig2" => cmd_fig2(p),
         "info" => cmd_info(p),
@@ -158,25 +176,49 @@ fn cmd_run(p: &Parsed) -> Result<()> {
         Some("") | None => {}
         Some(v) => cfg.apply("obs_out", v)?,
     }
+    match p.get("chains") {
+        Some("") | None => {}
+        Some(v) => cfg.apply("chains", v)?,
+    }
+    match p.get("until") {
+        Some("") | None => {}
+        Some(v) => cfg.apply("until", v)?,
+    }
+    match p.get("trace-out") {
+        Some("") | None => {}
+        Some(v) => cfg.apply("trace_out", v)?,
+    }
     for kv in p.get_list("set") {
         let (k, v) = kv
             .split_once('=')
             .ok_or_else(|| anyhow::anyhow!("--set wants key=value, got '{kv}'"))?;
         cfg.apply(k, v)?;
     }
-    println!(
-        "pibp run: {} sampler={} P={} T={} iters={} backend={:?} seed={}",
-        cfg.dataset, cfg.sampler.name(), cfg.processors,
-        cfg.threads_per_worker, cfg.iters, cfg.backend, cfg.seed
-    );
     let every = (cfg.iters / 20).max(1);
-    let out = runner::run(&cfg, |i| {
+    let dot = |i: usize| {
         if i % every == 0 {
             print!(".");
             use std::io::Write;
             std::io::stdout().flush().ok();
         }
-    })?;
+    };
+    if cfg.chains > 1 || !cfg.until.is_empty() {
+        println!(
+            "pibp run: {} sampler={} P={} T={} iters={} backend={:?} seed={} chains={}{}",
+            cfg.dataset, cfg.sampler.name(), cfg.processors,
+            cfg.threads_per_worker, cfg.iters, cfg.backend, cfg.seed, cfg.chains,
+            if cfg.until.is_empty() { String::new() } else { format!(" until='{}'", cfg.until) }
+        );
+        let out = runner::run_multi(&cfg, dot)?;
+        println!();
+        return finish_run_multi(&cfg, &out);
+    }
+    println!(
+        "pibp run: {} sampler={} P={} T={} iters={} backend={:?} seed={}",
+        cfg.dataset, cfg.sampler.name(), cfg.processors,
+        cfg.threads_per_worker, cfg.iters, cfg.backend, cfg.seed
+    );
+    let out = runner::run(&cfg, dot)?;
     println!();
     finish_run(&cfg, &out)
 }
@@ -344,6 +386,11 @@ fn finish_run(cfg: &RunConfig, out: &runner::RunOutcome) -> Result<()> {
     let csv = dir.join(format!("{}.csv", out.trace.label));
     out.trace.save_csv(&csv)?;
     println!("trace → {}", csv.display());
+    if !cfg.trace_out.is_empty() {
+        let path = Path::new(&cfg.trace_out);
+        out.trace.save_auto(path)?;
+        println!("trace export → {}", path.display());
+    }
     if cfg.checkpoint_every > 0 {
         println!("checkpoint → {}", runner::checkpoint_file(cfg).display());
     }
@@ -361,6 +408,151 @@ fn finish_run(cfg: &RunConfig, out: &runner::RunOutcome) -> Result<()> {
     if cfg.obs != ObsLevel::Off {
         eprint!("{}", obs::RunReport::capture().render());
         println!("obs report → {}", runner::obs_report_file(cfg).display());
+    }
+    Ok(())
+}
+
+/// Tail of a diagnosed multi-chain run: per-chain traces (+ optional
+/// `--trace-out` exports `pibp diagnose` can reload), the convergence
+/// summary table, and the obs report pointer.
+fn finish_run_multi(cfg: &RunConfig, out: &runner::MultiOutcome) -> Result<()> {
+    let dir = Path::new(&cfg.out_dir);
+    for (c, chain) in out.chains.iter().enumerate() {
+        report(&chain.trace);
+        let csv = dir.join(format!("{}-c{c}.csv", chain.trace.label));
+        chain.trace.save_csv(&csv)?;
+        println!("chain {c} trace → {}", csv.display());
+        if !cfg.trace_out.is_empty() {
+            let base = Path::new(&cfg.trace_out);
+            let path = if out.chains.len() > 1 {
+                runner::chain_file(base, c)
+            } else {
+                base.to_path_buf()
+            };
+            chain.trace.save_auto(&path)?;
+            println!("chain {c} trace export → {}", path.display());
+        }
+    }
+    print!("{}", out.diag.render());
+    if cfg.checkpoint_every > 0 {
+        println!(
+            "checkpoints → {} (chain-suffixed .c{{c}} when chains > 1)",
+            runner::checkpoint_file(cfg).display()
+        );
+    }
+    if cfg.obs != ObsLevel::Off {
+        eprint!("{}", obs::RunReport::capture().render());
+        println!("obs report → {}", runner::obs_report_file(cfg).display());
+    }
+    Ok(())
+}
+
+/// Offline convergence verdict over exported chain traces: batch
+/// split-R̂ + per-chain ESS per watched quantity (post-warmup), plateau
+/// levels, optional time-to-threshold — mirroring the gating the live
+/// `--until` rule applies, with explicit pass thresholds.
+fn cmd_diagnose(p: &Parsed) -> Result<()> {
+    let files = p.get_list("trace");
+    if files.len() < 2 {
+        bail!(
+            "pibp diagnose needs at least two --trace files (one per chain; \
+             export them with pibp run --chains C --trace-out t.json)"
+        );
+    }
+    let rhat_max = p.get_f64("rhat-max")?;
+    let ess_min = p.get_f64("ess-min")?;
+    let warmup = p.get_f64("warmup-frac")?;
+    if !(0.0..1.0).contains(&warmup) {
+        bail!("--warmup-frac must be in [0, 1)");
+    }
+    let traces: Vec<Trace> = files
+        .iter()
+        .map(|f| Trace::load(Path::new(f)))
+        .collect::<Result<_>>()?;
+    let min_pts = traces.iter().map(|t| t.points.len()).min().unwrap_or(0);
+    let kept: Vec<&[pibp::metrics::TracePoint]> = traces
+        .iter()
+        .map(|t| {
+            let start = (t.points.len() as f64 * warmup) as usize;
+            &t.points[start..]
+        })
+        .collect();
+    println!(
+        "pibp diagnose: {} chains, {} points in the shortest trace, warmup {:.0}% discarded",
+        traces.len(),
+        min_pts,
+        100.0 * warmup
+    );
+    for (c, t) in traces.iter().enumerate() {
+        let last = t.last().map_or(f64::NAN, |p| p.heldout);
+        print!(
+            "  chain {c}: {} ({} pts) plateau={:.1} final heldout={:.1}",
+            t.label,
+            t.points.len(),
+            t.plateau(0.25),
+            last
+        );
+        match p.get("threshold") {
+            Some("") | None => println!(),
+            Some(th) => {
+                let th: f64 = th
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--threshold wants a number, got '{th}'"))?;
+                match t.time_to(th) {
+                    Some(s) => println!("  reached {th} at vtime {s:.2}s"),
+                    None => println!("  never reached {th}"),
+                }
+            }
+        }
+    }
+    // the same four scalars the live diagnostics watch; k is integer-
+    // valued and often constant, so like the live `ess>` gate it is
+    // reported but not scored on ESS
+    let quantities: [(&str, fn(&pibp::metrics::TracePoint) -> f64, bool); 4] = [
+        ("heldout", |p| p.heldout, true),
+        ("alpha", |p| p.alpha, true),
+        ("sigma_x", |p| p.sigma_x, true),
+        ("k", |p| p.k as f64, false),
+    ];
+    println!("\n  {:<10} {:>10} {:>10}  verdict", "quantity", "split-Rhat", "min ESS");
+    let mut all_pass = true;
+    for (name, get, ess_gated) in quantities {
+        let series: Vec<Vec<f64>> = kept
+            .iter()
+            .map(|pts| pts.iter().map(|p| get(p)).collect())
+            .collect();
+        let r = pibp::metrics::split_rhat(&series);
+        // constant post-warmup series carry no ESS information (their
+        // batch ESS pins near 1 by construction) — skip them like the
+        // online gate does
+        let min_ess = series
+            .iter()
+            .filter(|s| !s.is_empty() && s.iter().any(|v| *v != s[0]))
+            .map(|s| pibp::metrics::ess(s))
+            .fold(f64::INFINITY, f64::min);
+        let rhat_ok = r.is_finite() && r < rhat_max;
+        let ess_ok = !ess_gated || min_ess.is_infinite() || min_ess > ess_min;
+        let pass = rhat_ok && ess_ok;
+        all_pass &= pass;
+        let ess_str = if min_ess.is_infinite() {
+            "const".to_string()
+        } else {
+            format!("{min_ess:.1}")
+        };
+        println!(
+            "  {:<10} {:>10} {:>10}  {}",
+            name,
+            if r.is_nan() { "-".to_string() } else { format!("{r:.4}") },
+            ess_str,
+            if pass { "PASS" } else { "FAIL" }
+        );
+    }
+    println!(
+        "\noverall: {} (rhat-max {rhat_max}, ess-min {ess_min})",
+        if all_pass { "PASS" } else { "FAIL" }
+    );
+    if !all_pass && p.get_bool("strict") {
+        std::process::exit(3);
     }
     Ok(())
 }

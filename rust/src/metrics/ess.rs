@@ -25,16 +25,44 @@ pub fn autocorrelation(xs: &[f64], max_lag: usize) -> Vec<f64> {
 
 /// Effective sample size via Geyer's initial positive sequence: sum
 /// consecutive autocorrelation pairs until a pair goes non-positive.
+///
+/// Lags are computed one at a time, on demand — Geyer truncation
+/// usually fires within a handful of pairs, so the cost is O(n·τ)
+/// rather than the O(n²) of materialising `autocorrelation(xs, n-2)`
+/// up front. The per-lag arithmetic is identical to
+/// [`autocorrelation`]'s, so the result is bit-for-bit the same as a
+/// Geyer scan over the full ACF
+/// (`tests::incremental_ess_matches_full_scan_reference`).
 pub fn ess(xs: &[f64]) -> f64 {
     let n = xs.len();
     if n < 4 {
         return n as f64;
     }
-    let rho = autocorrelation(xs, n - 2);
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    // The full scan walked rho[1..n-1] (autocorrelation(xs, n-2) has
+    // n-1 entries), i.e. pairs while lag + 1 <= n - 2.
+    let max_lag = n - 2;
     let mut tau = 1.0; // integrated autocorrelation time ×2 accumulator
     let mut lag = 1;
-    while lag + 1 < rho.len() {
-        let pair = rho[lag] + rho[lag + 1];
+    if var == 0.0 {
+        // autocorrelation() reports rho ≡ 1 for a zero-variance series,
+        // so every pair contributes 2·(1+1) without needing the data.
+        while lag + 1 <= max_lag {
+            tau += 4.0;
+            lag += 2;
+        }
+        return (n as f64 / tau).clamp(1.0, n as f64);
+    }
+    let rho = |lag: usize| -> f64 {
+        let mut acc = 0.0;
+        for i in 0..n - lag {
+            acc += (xs[i] - mean) * (xs[i + lag] - mean);
+        }
+        acc / (n as f64 * var)
+    };
+    while lag + 1 <= max_lag {
+        let pair = rho(lag) + rho(lag + 1);
         if pair <= 0.0 {
             break;
         }
@@ -95,6 +123,57 @@ mod tests {
         assert!((rho[0] - 1.0).abs() < 1e-12);
         assert!((rho[1] - 0.25).abs() < 1e-12, "rho1={}", rho[1]);
         assert!((rho[2] - (-0.3)).abs() < 1e-12, "rho2={}", rho[2]);
+    }
+
+    /// The pre-optimisation algorithm: full ACF up front, then the
+    /// Geyer scan. Kept verbatim as the regression reference for the
+    /// incremental rewrite.
+    fn ess_reference(xs: &[f64]) -> f64 {
+        let n = xs.len();
+        if n < 4 {
+            return n as f64;
+        }
+        let rho = autocorrelation(xs, n - 2);
+        let mut tau = 1.0;
+        let mut lag = 1;
+        while lag + 1 < rho.len() {
+            let pair = rho[lag] + rho[lag + 1];
+            if pair <= 0.0 {
+                break;
+            }
+            tau += 2.0 * pair;
+            lag += 2;
+        }
+        (n as f64 / tau).clamp(1.0, n as f64)
+    }
+
+    #[test]
+    fn incremental_ess_matches_full_scan_reference() {
+        let mut rng = Pcg64::new(7);
+        let mut cases: Vec<Vec<f64>> = Vec::new();
+        // iid, two AR(1) strengths, constant, short, alternating, and an
+        // integer-valued K⁺-like series
+        cases.push((0..300).map(|_| rng.normal()).collect());
+        for phi in [0.9, 0.99] {
+            let mut xs = vec![0.0; 500];
+            for i in 1..500 {
+                xs[i] = phi * xs[i - 1] + rng.normal();
+            }
+            cases.push(xs);
+        }
+        cases.push(vec![3.25; 64]);
+        cases.push(vec![1.0, 2.0, 3.0, 4.0]);
+        cases.push(vec![1.0, 2.0, 3.0]);
+        cases.push((0..100).map(|i| (i % 2) as f64).collect());
+        cases.push((0..80).map(|i| ((i * 7) % 5) as f64).collect());
+        for xs in &cases {
+            assert_eq!(
+                ess(xs).to_bits(),
+                ess_reference(xs).to_bits(),
+                "incremental ess diverged from reference on n={}",
+                xs.len()
+            );
+        }
     }
 
     #[test]

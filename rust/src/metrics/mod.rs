@@ -1,13 +1,19 @@
 //! Run metrics: convergence traces (the Figure-1 series), summary
-//! statistics, autocorrelation / effective sample size, and CSV/JSON
-//! export for the bench harness.
+//! statistics, autocorrelation / effective sample size, streaming
+//! convergence estimators (`pibp run --chains` / `pibp diagnose`),
+//! and CSV/JSON export for the bench harness.
 
 pub mod ess;
+pub mod online;
 pub mod rhat;
 pub mod stats;
 pub mod trace;
 
 pub use ess::{autocorrelation, ess};
+pub use online::{
+    DiagEvent, DiagState, DiagSummary, OnlineEss, OnlineRhat, StopRule, Welford,
+    DIAG_QUANTITIES,
+};
 pub use rhat::split_rhat;
 pub use stats::Summary;
 pub use trace::{Trace, TracePoint};

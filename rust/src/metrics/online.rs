@@ -1,0 +1,848 @@
+//! Streaming convergence estimators — the statistical half of the
+//! observability story (the runtime half is [`crate::obs`]).
+//!
+//! `pibp run --chains C` feeds every kept [`TracePoint`] of every
+//! replica chain into this module at trace cadence:
+//!
+//! * [`Welford`] — numerically stable running mean/variance;
+//! * [`OnlineEss`] — bounded-lag online autocovariance giving an
+//!   incremental Geyer ESS, O(lags) per point and O(lags) memory;
+//! * [`OnlineRhat`] — incremental cross-chain split-R̂ from per-chain
+//!   prefix sums, O(1) per point and O(chains) per query;
+//! * [`StopRule`] — the parsed `--until "rhat<1.01,ess>200"` early-stop
+//!   predicate;
+//! * [`DiagState`] — the per-run aggregator (4 scalar quantities ×
+//!   C chains) whose [`DiagSummary`] lands in the `diag` section of
+//!   `run_obs.json`.
+//!
+//! All streamed values are shifted by the first value seen (`y = x −
+//! c`) before accumulation, so the sum-of-products rearrangements the
+//! online forms rely on do not catastrophically cancel when the scale
+//! dwarfs the variance (held-out log-likelihoods sit in the −10³ range
+//! while moving by single digits). The estimators are pinned to agree
+//! with the batch [`ess`](crate::metrics::ess)/
+//! [`split_rhat`](crate::metrics::split_rhat) on identical inputs to
+//! ≤ 1e-12 relative error (unit tests here plus
+//! `rust/tests/diag_equivalence.rs` on real traces). The only possible
+//! divergence is the Geyer truncation decision when an autocorrelation
+//! pair is exactly at zero — a measure-zero tie for continuous series.
+
+use crate::config::json::Json;
+use crate::metrics::trace::TracePoint;
+use anyhow::{bail, Result};
+
+/// Welford's running mean / variance (numerically stable one-pass
+/// update; `m2` carries Σ(x − μ)² exactly in the recurrence).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        let delta2 = x - self.mean;
+        self.m2 += delta * delta2;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population (biased, ÷n) variance — matches the normalisation the
+    /// batch ACF uses.
+    pub fn var_biased(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample (÷(n−1)) variance.
+    pub fn var_sample(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+}
+
+/// Incremental Geyer ESS over a stream, keeping only the first and last
+/// `max_lag` (shifted) values plus one running lagged-product sum per
+/// lag. `push` is O(min(max_lag, n)); `ess()` is O(max_lag).
+///
+/// With `max_lag ≥ n − 2` the estimate replicates the batch
+/// [`ess`](crate::metrics::ess) exactly (same truncation, ≤ 1e-12
+/// relative arithmetic difference); a smaller bound truncates the
+/// Geyer scan at `max_lag`, which only matters for chains whose
+/// autocorrelation survives past it (the estimate then errs high).
+#[derive(Debug, Clone)]
+pub struct OnlineEss {
+    max_lag: usize,
+    shift: f64,
+    n: usize,
+    sum: f64,
+    sumsq: f64,
+    /// first `max_lag` shifted values
+    head: Vec<f64>,
+    /// last `max_lag` shifted values, `ring[i % max_lag]` holding y_i
+    ring: Vec<f64>,
+    /// `lagsum[l-1]` = Σ_i y_i · y_{i+l}
+    lagsum: Vec<f64>,
+}
+
+impl OnlineEss {
+    pub fn new(max_lag: usize) -> Self {
+        let max_lag = max_lag.max(1);
+        OnlineEss {
+            max_lag,
+            shift: 0.0,
+            n: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            head: Vec::with_capacity(max_lag),
+            ring: vec![0.0; max_lag],
+            lagsum: vec![0.0; max_lag],
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let y = if self.n == 0 {
+            self.shift = x;
+            0.0
+        } else {
+            x - self.shift
+        };
+        // update lagged products against the previous min(max_lag, n)
+        // values *before* the ring slot for y_n is overwritten
+        for l in 1..=self.max_lag.min(self.n) {
+            self.lagsum[l - 1] += self.ring[(self.n - l) % self.max_lag] * y;
+        }
+        self.ring[self.n % self.max_lag] = y;
+        if self.head.len() < self.max_lag {
+            self.head.push(y);
+        }
+        self.sum += y;
+        self.sumsq += y * y;
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// True when the stream has no usable variance (fewer than two
+    /// points, or all points equal) — callers skip such series when
+    /// gating on ESS, since the batch estimator pins them to 1.
+    pub fn is_degenerate(&self) -> bool {
+        if self.n < 2 {
+            return true;
+        }
+        let mu = self.sum / self.n as f64;
+        self.sumsq - self.n as f64 * mu * mu <= 0.0
+    }
+
+    pub fn ess(&self) -> f64 {
+        let n = self.n;
+        if n < 4 {
+            return n as f64;
+        }
+        let nf = n as f64;
+        let mu = self.sum / nf;
+        // Σ(y−μ)² = Σy² − nμ², i.e. the batch ACF's n·var normaliser
+        let nvar = self.sumsq - nf * mu * mu;
+        let max_lag = self.max_lag.min(n - 2);
+        let mut tau = 1.0;
+        let mut lag = 1;
+        if nvar <= 0.0 {
+            // constant series: rho ≡ 1, every Geyer pair adds 4
+            while lag + 1 <= max_lag {
+                tau += 4.0;
+                lag += 2;
+            }
+            return (nf / tau).clamp(1.0, nf);
+        }
+        // prefix sums of the first / last max_lag values, so each
+        // autocovariance query below is O(1)
+        let mut headp = vec![0.0; max_lag + 1];
+        for j in 1..=max_lag {
+            headp[j] = headp[j - 1] + self.head[j - 1];
+        }
+        let mut tailp = vec![0.0; max_lag + 1];
+        for j in 1..=max_lag {
+            tailp[j] = tailp[j - 1] + self.ring[(n - j) % self.max_lag];
+        }
+        // Σ_{i<n−l} (y_i − μ)(y_{i+l} − μ)
+        //   = lagsum[l−1] − μ·(pre + post) + (n−l)·μ²
+        // with pre = Σ_{i<n−l} y_i = sum − tailp[l]
+        // and post = Σ_{i≥l}  y_i = sum − headp[l]
+        let acov = |l: usize| -> f64 {
+            let pre = self.sum - tailp[l];
+            let post = self.sum - headp[l];
+            self.lagsum[l - 1] - mu * (pre + post) + (n - l) as f64 * mu * mu
+        };
+        while lag + 1 <= max_lag {
+            let pair = (acov(lag) + acov(lag + 1)) / nvar;
+            if pair <= 0.0 {
+                break;
+            }
+            tau += 2.0 * pair;
+            lag += 2;
+        }
+        (nf / tau).clamp(1.0, nf)
+    }
+}
+
+/// Incremental cross-chain split-R̂: per-chain prefix sums of the
+/// shifted values and their squares make any split mean/variance an
+/// O(1) difference, so `rhat()` costs O(chains) at any point in the
+/// stream. The shift is shared across chains (the first value pushed
+/// overall), keeping between-chain mean differences exact.
+///
+/// Matches the batch [`split_rhat`](crate::metrics::split_rhat)
+/// semantics: chains truncate to the min length, halves are
+/// `[0, half)` and `[len−half, len)`, NaN below 2 chains or 4 points.
+#[derive(Debug, Clone)]
+pub struct OnlineRhat {
+    shift: Option<f64>,
+    /// per chain: prefix sums `ps[i] = Σ_{j<i} y_j` (len n+1), same
+    /// for squares
+    ps: Vec<Vec<f64>>,
+    ps2: Vec<Vec<f64>>,
+}
+
+impl OnlineRhat {
+    pub fn new(chains: usize) -> Self {
+        OnlineRhat {
+            shift: None,
+            ps: vec![vec![0.0]; chains],
+            ps2: vec![vec![0.0]; chains],
+        }
+    }
+
+    pub fn push(&mut self, chain: usize, x: f64) {
+        let shift = *self.shift.get_or_insert(x);
+        let y = x - shift;
+        let last = *self.ps[chain].last().unwrap();
+        self.ps[chain].push(last + y);
+        let last2 = *self.ps2[chain].last().unwrap();
+        self.ps2[chain].push(last2 + y * y);
+    }
+
+    /// Points in the shortest chain.
+    pub fn min_len(&self) -> usize {
+        self.ps.iter().map(|p| p.len() - 1).min().unwrap_or(0)
+    }
+
+    pub fn rhat(&self) -> f64 {
+        if self.ps.len() < 2 {
+            return f64::NAN;
+        }
+        let len = self.min_len();
+        if len < 4 {
+            return f64::NAN;
+        }
+        let half = len / 2;
+        let nf = half as f64;
+        let mut means = Vec::with_capacity(self.ps.len() * 2);
+        let mut vars = Vec::with_capacity(self.ps.len() * 2);
+        for c in 0..self.ps.len() {
+            for (a, b) in [(0usize, half), (len - half, len)] {
+                let s = self.ps[c][b] - self.ps[c][a];
+                let s2 = self.ps2[c][b] - self.ps2[c][a];
+                let mu = s / nf;
+                means.push(mu);
+                vars.push((s2 - nf * mu * mu) / (nf - 1.0));
+            }
+        }
+        let m = means.len() as f64;
+        let grand = means.iter().sum::<f64>() / m;
+        let b = nf / (m - 1.0)
+            * means.iter().map(|mu| (mu - grand) * (mu - grand)).sum::<f64>();
+        let w = vars.iter().sum::<f64>() / m;
+        if w <= 0.0 {
+            return if b <= 0.0 { 1.0 } else { f64::INFINITY };
+        }
+        let var_plus = (nf - 1.0) / nf * w + b / nf;
+        (var_plus / w).sqrt()
+    }
+}
+
+/// Parsed `--until` early-stop rule: comma-separated `rhat<X` / `ess>Y`
+/// conditions, all of which must hold simultaneously.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StopRule {
+    pub rhat_lt: Option<f64>,
+    pub ess_gt: Option<f64>,
+}
+
+impl StopRule {
+    /// Parse `"rhat<1.01,ess>200"`. Empty input means no rule (Ok(None)).
+    pub fn parse(s: &str) -> Result<Option<StopRule>> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Ok(None);
+        }
+        let mut rule = StopRule { rhat_lt: None, ess_gt: None };
+        for part in s.split(',') {
+            let part = part.trim();
+            let (slot, value) = if let Some(v) = part.strip_prefix("rhat<") {
+                (&mut rule.rhat_lt, v)
+            } else if let Some(v) = part.strip_prefix("ess>") {
+                (&mut rule.ess_gt, v)
+            } else {
+                bail!("unrecognised stop condition '{part}' (expected rhat<X or ess>Y)");
+            };
+            let x: f64 = match value.trim().parse() {
+                Ok(x) => x,
+                Err(_) => bail!("bad threshold in stop condition '{part}'"),
+            };
+            if !(x > 0.0) || !x.is_finite() {
+                bail!("stop threshold must be a positive finite number, got '{part}'");
+            }
+            if slot.is_some() {
+                bail!("duplicate stop condition '{part}'");
+            }
+            *slot = Some(x);
+        }
+        Ok(Some(rule))
+    }
+}
+
+/// The four `TracePoint` scalars the diagnostics watch, in report order.
+pub const DIAG_QUANTITIES: [&str; 4] = ["heldout", "alpha", "sigma_x", "k"];
+/// `k` (integer-valued, often constant) is excluded from ESS gating.
+const N_ESS_GATED: usize = 3;
+
+fn quantity_values(p: &TracePoint) -> [f64; 4] {
+    [p.heldout, p.alpha, p.sigma_x, p.k as f64]
+}
+
+/// Kept points a chain must accumulate before the stop rule can fire
+/// (split-R̂ and the Geyer scan both need 4).
+pub const MIN_STOP_POINTS: usize = 4;
+/// Identical consecutive kept points before a chain is called stalled.
+pub const STALL_WINDOW: usize = 8;
+
+/// What `DiagState::observe` noticed about the chain at this point —
+/// the caller turns these into `obs::warn_once` events (this module
+/// stays free of the obs registry so the metrics layer has no
+/// side-channel).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DiagEvent {
+    /// A non-finite scalar appeared (first time for this chain).
+    pub diverged: bool,
+    /// The last [`STALL_WINDOW`] kept points were bit-identical
+    /// (first time for this chain).
+    pub stalled: bool,
+}
+
+/// Per-run aggregator: one [`OnlineEss`] per (chain, quantity), one
+/// [`OnlineRhat`] per quantity, plus stall/divergence trackers.
+pub struct DiagState {
+    chains: usize,
+    ess: Vec<[OnlineEss; 4]>,
+    rhat: Vec<OnlineRhat>,
+    counts: Vec<usize>,
+    recent: Vec<Vec<(u64, usize)>>,
+    stalled: Vec<bool>,
+    diverged: Vec<bool>,
+}
+
+impl DiagState {
+    pub fn new(chains: usize, max_lag: usize) -> Self {
+        DiagState {
+            chains,
+            ess: (0..chains)
+                .map(|_| std::array::from_fn(|_| OnlineEss::new(max_lag)))
+                .collect(),
+            rhat: (0..4).map(|_| OnlineRhat::new(chains)).collect(),
+            counts: vec![0; chains],
+            recent: vec![Vec::new(); chains],
+            stalled: vec![false; chains],
+            diverged: vec![false; chains],
+        }
+    }
+
+    /// Feed one kept trace point of `chain`. Returns newly-crossed
+    /// stall/divergence flags (each fires at most once per chain).
+    pub fn observe(&mut self, chain: usize, p: &TracePoint) -> DiagEvent {
+        let vals = quantity_values(p);
+        for (q, v) in vals.iter().enumerate() {
+            self.ess[chain][q].push(*v);
+            self.rhat[q].push(chain, *v);
+        }
+        self.counts[chain] += 1;
+        let mut ev = DiagEvent::default();
+        if !(p.heldout.is_finite() && p.alpha.is_finite() && p.sigma_x.is_finite())
+            && !self.diverged[chain]
+        {
+            self.diverged[chain] = true;
+            ev.diverged = true;
+        }
+        let rec = &mut self.recent[chain];
+        rec.push((p.heldout.to_bits(), p.k));
+        if rec.len() > STALL_WINDOW {
+            rec.remove(0);
+        }
+        if rec.len() == STALL_WINDOW
+            && rec.iter().all(|e| *e == rec[0])
+            && !self.stalled[chain]
+        {
+            self.stalled[chain] = true;
+            ev.stalled = true;
+        }
+        ev
+    }
+
+    /// Kept points in the shortest chain (all equal under lockstep).
+    pub fn points(&self) -> usize {
+        self.counts.iter().copied().min().unwrap_or(0)
+    }
+
+    /// Deterministic early-stop predicate: every condition of `rule`
+    /// must hold over every watched quantity. `rhat<` requires a
+    /// *finite* split-R̂ below the bound for all four quantities (NaN —
+    /// e.g. a single chain — never satisfies it); `ess>` gates the
+    /// continuous quantities only, skipping chains whose series is
+    /// constant so far (their batch ESS pins to 1 by construction).
+    pub fn satisfied(&self, rule: &StopRule) -> bool {
+        if self.points() < MIN_STOP_POINTS {
+            return false;
+        }
+        if let Some(x) = rule.rhat_lt {
+            for q in 0..DIAG_QUANTITIES.len() {
+                let r = self.rhat[q].rhat();
+                if !(r.is_finite() && r < x) {
+                    return false;
+                }
+            }
+        }
+        if let Some(y) = rule.ess_gt {
+            for q in 0..N_ESS_GATED {
+                for c in 0..self.chains {
+                    let e = &self.ess[c][q];
+                    if e.is_degenerate() {
+                        continue;
+                    }
+                    if !(e.ess() > y) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    pub fn summary(&self, until: &str, stopped_at: Option<usize>) -> DiagSummary {
+        DiagSummary {
+            chains: self.chains,
+            points: self.points(),
+            until: until.to_string(),
+            stopped_at,
+            rhat: (0..DIAG_QUANTITIES.len()).map(|q| self.rhat[q].rhat()).collect(),
+            ess: (0..DIAG_QUANTITIES.len())
+                .map(|q| (0..self.chains).map(|c| self.ess[c][q].ess()).collect())
+                .collect(),
+            stalled: self.stalled.clone(),
+            diverged: self.diverged.clone(),
+        }
+    }
+}
+
+/// Snapshot of the diagnostics at some point in the run — what lands
+/// in the `diag` section of `run_obs.json` and on stdout.
+#[derive(Debug, Clone)]
+pub struct DiagSummary {
+    pub chains: usize,
+    pub points: usize,
+    pub until: String,
+    /// Completed iterations when the stop rule fired — a standalone
+    /// run with `iters` set to this value reproduces the stopped
+    /// chains bit-for-bit.
+    pub stopped_at: Option<usize>,
+    /// Split-R̂ per quantity ([`DIAG_QUANTITIES`] order); NaN when
+    /// unavailable.
+    pub rhat: Vec<f64>,
+    /// ESS per quantity per chain.
+    pub ess: Vec<Vec<f64>>,
+    pub stalled: Vec<bool>,
+    pub diverged: Vec<bool>,
+}
+
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+impl DiagSummary {
+    pub fn to_json(&self) -> Json {
+        let quantities = DIAG_QUANTITIES
+            .iter()
+            .enumerate()
+            .map(|(q, name)| {
+                (
+                    *name,
+                    Json::obj(vec![
+                        ("rhat", num_or_null(self.rhat[q])),
+                        (
+                            "ess",
+                            Json::Arr(
+                                self.ess[q].iter().map(|&e| num_or_null(e)).collect(),
+                            ),
+                        ),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("chains", Json::Num(self.chains as f64)),
+            ("points", Json::Num(self.points as f64)),
+            ("until", Json::Str(self.until.clone())),
+            (
+                "stopped_at",
+                self.stopped_at.map_or(Json::Null, |i| Json::Num(i as f64)),
+            ),
+            ("quantities", Json::obj(quantities)),
+            (
+                "stalled",
+                Json::Arr(self.stalled.iter().map(|&b| Json::Bool(b)).collect()),
+            ),
+            (
+                "diverged",
+                Json::Arr(self.diverged.iter().map(|&b| Json::Bool(b)).collect()),
+            ),
+        ])
+    }
+
+    /// Human-readable verdict block (stdout after a `--chains` run).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "convergence diagnostics: {} chain(s) × {} kept point(s)\n",
+            self.chains, self.points
+        ));
+        out.push_str(&format!(
+            "  {:<10} {:>9}   {}\n",
+            "quantity", "split-R̂", "ESS per chain"
+        ));
+        for (q, name) in DIAG_QUANTITIES.iter().enumerate() {
+            let r = self.rhat[q];
+            let rs = if r.is_finite() { format!("{r:.4}") } else { "n/a".to_string() };
+            let es = self.ess[q]
+                .iter()
+                .map(|e| if e.is_finite() { format!("{e:.1}") } else { "n/a".into() })
+                .collect::<Vec<_>>()
+                .join(" ");
+            out.push_str(&format!("  {name:<10} {rs:>9}   {es}\n"));
+        }
+        for c in 0..self.chains {
+            if self.diverged[c] {
+                out.push_str(&format!("  chain {c}: DIVERGED (non-finite scalar)\n"));
+            } else if self.stalled[c] {
+                out.push_str(&format!(
+                    "  chain {c}: STALLED ({STALL_WINDOW} identical kept points)\n"
+                ));
+            }
+        }
+        if !self.until.is_empty() {
+            match self.stopped_at {
+                Some(i) => out.push_str(&format!(
+                    "  early stop '{}' fired after {} iterations\n",
+                    self.until, i
+                )),
+                None => out.push_str(&format!(
+                    "  early stop '{}' not triggered\n",
+                    self.until
+                )),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{ess, split_rhat};
+    use crate::rng::Pcg64;
+
+    fn rel_err(a: f64, b: f64) -> f64 {
+        (a - b).abs() / b.abs().max(1.0)
+    }
+
+    fn ar1(seed: u64, n: usize, phi: f64, offset: f64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        let mut xs = vec![offset; n];
+        for i in 1..n {
+            xs[i] = offset + phi * (xs[i - 1] - offset) + rng.normal();
+        }
+        xs
+    }
+
+    #[test]
+    fn welford_matches_batch_moments() {
+        let mut rng = Pcg64::new(11);
+        let xs: Vec<f64> = (0..500).map(|_| 1e6 + rng.normal()).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        assert!(rel_err(w.mean(), mean) < 1e-12, "{} vs {mean}", w.mean());
+        assert!(
+            (w.var_biased() - var).abs() / var.abs().max(1e-12) < 1e-9,
+            "{} vs {var}",
+            w.var_biased()
+        );
+        assert_eq!(w.count(), 500);
+    }
+
+    #[test]
+    fn online_ess_matches_batch_on_full_lag() {
+        let mut cases: Vec<Vec<f64>> = Vec::new();
+        let mut rng = Pcg64::new(21);
+        cases.push((0..200).map(|_| rng.normal()).collect());
+        cases.push(ar1(22, 300, 0.9, 0.0));
+        // heldout-scale offsets: large mean, small moves
+        cases.push(ar1(23, 150, 0.8, -12345.6));
+        cases.push((0..120).map(|i| (i % 2) as f64).collect());
+        for xs in &cases {
+            let mut o = OnlineEss::new(xs.len()); // ≥ n−2: full batch parity
+            for &x in xs {
+                o.push(x);
+            }
+            let b = ess(xs);
+            assert!(
+                rel_err(o.ess(), b) < 1e-12,
+                "online {} vs batch {b} (n={})",
+                o.ess(),
+                xs.len()
+            );
+        }
+    }
+
+    #[test]
+    fn online_ess_degenerate_and_short() {
+        let mut o = OnlineEss::new(64);
+        for _ in 0..50 {
+            o.push(7.5);
+        }
+        assert_eq!(o.ess(), ess(&vec![7.5; 50]));
+        assert_eq!(o.ess(), 1.0);
+        assert!(o.is_degenerate());
+        for len in 0..4usize {
+            let mut o = OnlineEss::new(8);
+            for i in 0..len {
+                o.push(i as f64);
+            }
+            assert_eq!(o.ess(), len as f64);
+        }
+    }
+
+    #[test]
+    fn bounded_lag_truncates_but_stays_sane() {
+        let xs = ar1(31, 800, 0.99, 0.0);
+        let mut o = OnlineEss::new(8);
+        for &x in &xs {
+            o.push(x);
+        }
+        let e = o.ess();
+        assert!(e >= 1.0 && e <= xs.len() as f64, "ess {e}");
+        // a series whose Geyer scan stops before the bound is
+        // unaffected by it: alternating data truncates at the first pair
+        let alt: Vec<f64> = (0..200).map(|i| (i % 2) as f64).collect();
+        let mut o = OnlineEss::new(8);
+        for &x in &alt {
+            o.push(x);
+        }
+        assert!(rel_err(o.ess(), ess(&alt)) < 1e-12);
+    }
+
+    #[test]
+    fn online_rhat_matches_batch() {
+        let chains: Vec<Vec<f64>> = (0..3)
+            .map(|c| ar1(40 + c, 100, 0.7, -900.0 + 3.0 * c as f64))
+            .collect();
+        let mut o = OnlineRhat::new(3);
+        for (c, xs) in chains.iter().enumerate() {
+            for &x in xs {
+                o.push(c, x);
+            }
+        }
+        let b = split_rhat(&chains);
+        assert!(rel_err(o.rhat(), b) < 1e-12, "online {} vs batch {b}", o.rhat());
+    }
+
+    #[test]
+    fn online_rhat_unequal_lengths_truncate_like_batch() {
+        let mut chains: Vec<Vec<f64>> = (0..2)
+            .map(|c| ar1(50 + c, 60, 0.5, 10.0 * c as f64))
+            .collect();
+        chains[0].extend(ar1(99, 40, 0.5, 500.0)); // tail past min len
+        let mut o = OnlineRhat::new(2);
+        for (c, xs) in chains.iter().enumerate() {
+            for &x in xs {
+                o.push(c, x);
+            }
+        }
+        assert_eq!(o.min_len(), 60);
+        let b = split_rhat(&chains);
+        assert!(rel_err(o.rhat(), b) < 1e-12, "online {} vs batch {b}", o.rhat());
+    }
+
+    #[test]
+    fn online_rhat_degenerate() {
+        let mut o = OnlineRhat::new(1);
+        for i in 0..10 {
+            o.push(0, i as f64);
+        }
+        assert!(o.rhat().is_nan(), "one chain → NaN");
+        let mut o = OnlineRhat::new(2);
+        o.push(0, 1.0);
+        o.push(1, 2.0);
+        assert!(o.rhat().is_nan(), "short chains → NaN");
+        let mut o = OnlineRhat::new(2);
+        for _ in 0..20 {
+            o.push(0, 5.0);
+            o.push(1, 5.0);
+        }
+        assert_eq!(o.rhat(), 1.0, "constant equal chains → exactly 1");
+    }
+
+    #[test]
+    fn stop_rule_parses() {
+        assert_eq!(StopRule::parse("").unwrap(), None);
+        assert_eq!(StopRule::parse("   ").unwrap(), None);
+        let r = StopRule::parse("rhat<1.01,ess>200").unwrap().unwrap();
+        assert_eq!(r.rhat_lt, Some(1.01));
+        assert_eq!(r.ess_gt, Some(200.0));
+        let r = StopRule::parse(" ess>50 ").unwrap().unwrap();
+        assert_eq!(r.rhat_lt, None);
+        assert_eq!(r.ess_gt, Some(50.0));
+        assert!(StopRule::parse("rhat>1.01").is_err());
+        assert!(StopRule::parse("rhat<abc").is_err());
+        assert!(StopRule::parse("rhat<-1").is_err());
+        assert!(StopRule::parse("rhat<1.1,rhat<1.2").is_err());
+        assert!(StopRule::parse("bogus").is_err());
+    }
+
+    fn tp(heldout: f64, k: usize, alpha: f64, sigma_x: f64) -> TracePoint {
+        TracePoint {
+            iter: 0,
+            vtime_s: 0.0,
+            wall_s: 0.0,
+            heldout,
+            k,
+            sigma_x,
+            alpha,
+        }
+    }
+
+    #[test]
+    fn diag_state_stall_and_divergence_fire_once() {
+        let mut d = DiagState::new(1, 64);
+        let mut stalls = 0;
+        for _ in 0..STALL_WINDOW + 3 {
+            let ev = d.observe(0, &tp(-100.0, 5, 1.0, 0.5));
+            if ev.stalled {
+                stalls += 1;
+            }
+        }
+        assert_eq!(stalls, 1, "stall warning must fire exactly once");
+        let ev = d.observe(0, &tp(f64::NAN, 5, 1.0, 0.5));
+        assert!(ev.diverged);
+        let ev = d.observe(0, &tp(f64::NAN, 5, 1.0, 0.5));
+        assert!(!ev.diverged, "divergence warning must fire exactly once");
+    }
+
+    #[test]
+    fn stop_rule_satisfaction() {
+        // two identical, constant chains: R̂ = 1 exactly, all ESS
+        // streams degenerate → both conditions pass once 4 points exist
+        let rule = StopRule::parse("rhat<1.01,ess>200").unwrap().unwrap();
+        let mut d = DiagState::new(2, 64);
+        for i in 0..4 {
+            for c in 0..2 {
+                let ev = d.observe(c, &tp(-50.0, 3, 1.0, 0.5));
+                let _ = ev;
+            }
+            if i < 3 {
+                assert!(!d.satisfied(&rule), "needs {MIN_STOP_POINTS} points");
+            }
+        }
+        assert!(d.satisfied(&rule));
+        // a single chain can never satisfy an rhat condition
+        let mut d = DiagState::new(1, 64);
+        for _ in 0..10 {
+            d.observe(0, &tp(-50.0, 3, 1.0, 0.5));
+        }
+        assert!(!d.satisfied(&rule));
+        // varying chains gate on real ESS: 6 noisy points can't reach 200
+        let rule = StopRule::parse("ess>200").unwrap().unwrap();
+        let mut d = DiagState::new(2, 64);
+        let mut rng = Pcg64::new(77);
+        for _ in 0..6 {
+            for c in 0..2 {
+                d.observe(c, &tp(-50.0 + rng.normal(), 3, 1.0, 0.5));
+            }
+        }
+        assert!(!d.satisfied(&rule), "ESS ≤ n < 200 must block the rule");
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let mut d = DiagState::new(2, 64);
+        let mut rng = Pcg64::new(78);
+        for _ in 0..8 {
+            for c in 0..2 {
+                d.observe(c, &tp(-50.0 + rng.normal(), 3, 1.0 + 0.1 * rng.normal(), 0.5));
+            }
+        }
+        let s = d.summary("rhat<1.01", Some(42));
+        let j = s.to_json();
+        assert_eq!(j.get("chains").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("points").and_then(Json::as_usize), Some(8));
+        assert_eq!(j.get("stopped_at").and_then(Json::as_usize), Some(42));
+        assert_eq!(j.get("until").and_then(Json::as_str), Some("rhat<1.01"));
+        let q = j.get("quantities").expect("quantities");
+        for name in DIAG_QUANTITIES {
+            let entry = q.get(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(
+                entry.get("ess").and_then(Json::as_arr).map(<[Json]>::len),
+                Some(2)
+            );
+        }
+        // text renders without panicking and mentions each quantity
+        let text = s.render();
+        for name in DIAG_QUANTITIES {
+            assert!(text.contains(name), "render missing {name}: {text}");
+        }
+        // round-trips through the serialiser (NaN-free by construction)
+        let parsed = Json::parse(&j.to_string()).expect("diag json parses");
+        assert_eq!(parsed.get("chains").and_then(Json::as_usize), Some(2));
+    }
+}

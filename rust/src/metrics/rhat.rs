@@ -1,24 +1,32 @@
 //! Gelman–Rubin potential scale reduction factor (R̂) — the multi-chain
-//! convergence diagnostic exposed by `pibp diagnose` / the diagnostics
-//! example. Split-R̂ per BDA3: each chain is halved, so within-chain
-//! non-stationarity also inflates the statistic.
+//! convergence diagnostic behind `pibp run --chains C` (streamed, via
+//! `metrics::online`), the offline `pibp diagnose` verdict, and the
+//! diagnostics example. Split-R̂ per BDA3: each chain is halved, so
+//! within-chain non-stationarity also inflates the statistic.
 
-/// Split-R̂ over ≥ 2 chains of equal length (≥ 4 samples each).
-/// Returns NaN for degenerate input.
+/// Split-R̂ over ≥ 2 chains of ≥ 4 samples each.
+///
+/// Unequal-length chains are truncated to the shortest length `len`
+/// before splitting: every chain contributes its halves
+/// `[0, len/2)` and `[len − len/2, len)`, so samples beyond `len` are
+/// ignored entirely. Returns NaN for degenerate input — fewer than two
+/// chains, or any chain (after truncation) shorter than 4, which
+/// includes an empty chain.
 pub fn split_rhat(chains: &[Vec<f64>]) -> f64 {
     if chains.len() < 2 {
         return f64::NAN;
     }
-    let len = chains.iter().map(Vec::len).min().unwrap_or(0);
-    if len < 4 {
-        return f64::NAN;
-    }
+    let len = match chains.iter().map(Vec::len).min() {
+        Some(l) if l >= 4 => l,
+        _ => return f64::NAN, // an empty or too-short chain can't be split
+    };
     let half = len / 2;
-    // split every chain into two halves of length `half`
+    // split every chain into two halves of length `half`, both taken
+    // from the truncated prefix [0, len)
     let mut splits: Vec<&[f64]> = Vec::with_capacity(chains.len() * 2);
     for c in chains {
         splits.push(&c[..half]);
-        splits.push(&c[len - half..]);
+        splits.push(&c[len - half..len]);
     }
     let m = splits.len() as f64;
     let n = half as f64;
@@ -89,6 +97,30 @@ mod tests {
         assert!(split_rhat(&[vec![1.0], vec![2.0]]).is_nan());
         let r = split_rhat(&[vec![5.0; 100], vec![5.0; 100]]);
         assert_eq!(r, 1.0);
+    }
+
+    #[test]
+    fn empty_chain_gives_nan() {
+        assert!(split_rhat(&[]).is_nan());
+        assert!(split_rhat(&[vec![], vec![1.0, 2.0, 3.0, 4.0]]).is_nan());
+        assert!(split_rhat(&[vec![1.0, 2.0, 3.0, 4.0], vec![]]).is_nan());
+    }
+
+    #[test]
+    fn unequal_lengths_truncate_to_min() {
+        // the longer chain's tail beyond the min length must be ignored:
+        // appending wild values to one chain changes nothing
+        let base = vec![vec![1.0, 2.0, 1.0, 2.0], vec![3.0, 4.0, 3.0, 4.0]];
+        let mut longer = base.clone();
+        longer[0].extend_from_slice(&[900.0, -900.0, 1e6]);
+        let r_base = split_rhat(&base);
+        let r_long = split_rhat(&longer);
+        assert_eq!(
+            r_long.to_bits(),
+            r_base.to_bits(),
+            "truncation must drop the long chain's tail: {r_long} vs {r_base}"
+        );
+        assert!((r_base - (19.0f64 / 6.0).sqrt()).abs() < 1e-12);
     }
 
     #[test]

@@ -58,12 +58,16 @@ impl Trace {
         self.seen = seen;
     }
 
-    pub fn push(&mut self, p: TracePoint) {
+    /// Offer a point to the trace; returns whether the thinning
+    /// schedule kept it (the streaming diagnostics observe exactly the
+    /// kept points, so they follow this return value).
+    pub fn push(&mut self, p: TracePoint) -> bool {
         let keep = self.seen % self.thin_stride.max(1) == 0;
         self.seen += 1;
         if keep {
             self.points.push(p);
         }
+        keep
     }
 
     pub fn last(&self) -> Option<&TracePoint> {
@@ -109,14 +113,146 @@ impl Trace {
             .with_context(|| format!("writing {}", path.display()))
     }
 
+    /// Column-major JSON export. Unlike [`to_csv`](Self::to_csv) (which
+    /// rounds for readability), numbers serialise with Rust's
+    /// shortest-roundtrip formatting, so `.json` trace files preserve
+    /// every f64 bit — `pibp diagnose` prefers them.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("label", Json::Str(self.label.clone())),
             ("iter", Json::Arr(self.points.iter().map(|p| Json::Num(p.iter as f64)).collect())),
             ("vtime_s", Json::arr_f64(&self.points.iter().map(|p| p.vtime_s).collect::<Vec<_>>())),
+            ("wall_s", Json::arr_f64(&self.points.iter().map(|p| p.wall_s).collect::<Vec<_>>())),
             ("heldout", Json::arr_f64(&self.points.iter().map(|p| p.heldout).collect::<Vec<_>>())),
             ("k", Json::Arr(self.points.iter().map(|p| Json::Num(p.k as f64)).collect())),
+            ("sigma_x", Json::arr_f64(&self.points.iter().map(|p| p.sigma_x).collect::<Vec<_>>())),
+            ("alpha", Json::arr_f64(&self.points.iter().map(|p| p.alpha).collect::<Vec<_>>())),
         ])
+    }
+
+    /// Write the trace to `path`, format chosen by extension: `.json`
+    /// gets the full-precision JSON export, anything else the CSV.
+    pub fn save_auto(&self, path: &Path) -> Result<()> {
+        if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            if let Some(dir) = path.parent() {
+                std::fs::create_dir_all(dir).ok();
+            }
+            std::fs::write(path, format!("{}\n", self.to_json()))
+                .with_context(|| format!("writing {}", path.display()))
+        } else {
+            self.save_csv(path)
+        }
+    }
+
+    /// Load a trace exported by `--trace-out` (or [`save_csv`](Self::save_csv)/
+    /// [`save_auto`](Self::save_auto)), dispatching on the `.json`
+    /// extension. The label falls back to the file stem when the file
+    /// doesn't carry one.
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        let mut t = if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            Trace::from_json_text(&text)
+                .with_context(|| format!("parsing trace {}", path.display()))?
+        } else {
+            Trace::from_csv(&text)
+                .with_context(|| format!("parsing trace {}", path.display()))?
+        };
+        if t.label.is_empty() {
+            t.label = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("trace")
+                .to_string();
+        }
+        Ok(t)
+    }
+
+    /// Parse the CSV format [`to_csv`](Self::to_csv) writes (fixed
+    /// 7-column header). CSV values are rounded at export; use the
+    /// JSON format where full precision matters.
+    pub fn from_csv(text: &str) -> Result<Trace> {
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or("").trim();
+        if header != "iter,vtime_s,wall_s,heldout,k,sigma_x,alpha" {
+            anyhow::bail!("unrecognised trace CSV header '{header}'");
+        }
+        let mut t = Trace::new("");
+        for (ln, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split(',').collect();
+            if cols.len() != 7 {
+                anyhow::bail!("trace CSV row {} has {} columns, want 7", ln + 2, cols.len());
+            }
+            let f = |i: usize| -> Result<f64> {
+                cols[i]
+                    .trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("trace CSV row {} col {}", ln + 2, i + 1))
+            };
+            t.push(TracePoint {
+                iter: f(0)? as usize,
+                vtime_s: f(1)?,
+                wall_s: f(2)?,
+                heldout: f(3)?,
+                k: f(4)? as usize,
+                sigma_x: f(5)?,
+                alpha: f(6)?,
+            });
+        }
+        Ok(t)
+    }
+
+    /// Parse the JSON format [`to_json`](Self::to_json) writes.
+    /// `iter` and `heldout` are required; series absent from older
+    /// exports (`wall_s`, `sigma_x`, `alpha`) default to 0.
+    pub fn from_json_text(text: &str) -> Result<Trace> {
+        let doc = Json::parse(text)?;
+        let series = |key: &str| -> Option<Vec<f64>> {
+            doc.get(key)?
+                .as_arr()?
+                .iter()
+                .map(Json::as_f64)
+                .collect::<Option<Vec<f64>>>()
+        };
+        let iters = series("iter")
+            .ok_or_else(|| anyhow::anyhow!("trace JSON missing 'iter' array"))?;
+        let heldout = series("heldout")
+            .ok_or_else(|| anyhow::anyhow!("trace JSON missing 'heldout' array"))?;
+        if heldout.len() != iters.len() {
+            anyhow::bail!("trace JSON series lengths disagree");
+        }
+        let n = iters.len();
+        let opt = |key: &str| -> Result<Vec<f64>> {
+            match series(key) {
+                Some(v) if v.len() == n => Ok(v),
+                Some(_) => anyhow::bail!("trace JSON '{key}' length disagrees"),
+                None => Ok(vec![0.0; n]),
+            }
+        };
+        let vtime = opt("vtime_s")?;
+        let wall = opt("wall_s")?;
+        let k = opt("k")?;
+        let sigma_x = opt("sigma_x")?;
+        let alpha = opt("alpha")?;
+        let mut t = Trace::new(
+            doc.get("label").and_then(Json::as_str).unwrap_or("").to_string(),
+        );
+        for i in 0..n {
+            t.push(TracePoint {
+                iter: iters[i] as usize,
+                vtime_s: vtime[i],
+                wall_s: wall[i],
+                heldout: heldout[i],
+                k: k[i] as usize,
+                sigma_x: sigma_x[i],
+                alpha: alpha[i],
+            });
+        }
+        Ok(t)
     }
 }
 
@@ -186,6 +322,67 @@ mod tests {
         let t = mk(2);
         let j = t.to_json();
         assert_eq!(j.get("heldout").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn json_export_roundtrips_bit_exactly() {
+        let mut t = Trace::new("rt");
+        for i in 0..5 {
+            t.push(TracePoint {
+                iter: i,
+                vtime_s: 0.1 + i as f64 / 3.0,
+                wall_s: 0.2 + i as f64 / 7.0,
+                heldout: -1234.567_890_123 + (i as f64).sin(),
+                k: 3 + i,
+                sigma_x: 0.123_456_789 * (i + 1) as f64,
+                alpha: 1.0 / (i + 1) as f64,
+            });
+        }
+        let text = t.to_json().to_string();
+        let back = Trace::from_json_text(&text).expect("parses");
+        assert_eq!(back.label, "rt");
+        assert_eq!(back.points.len(), t.points.len());
+        for (a, b) in t.points.iter().zip(&back.points) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.k, b.k);
+            for (x, y) in [
+                (a.vtime_s, b.vtime_s),
+                (a.wall_s, b.wall_s),
+                (a.heldout, b.heldout),
+                (a.sigma_x, b.sigma_x),
+                (a.alpha, b.alpha),
+            ] {
+                assert_eq!(x.to_bits(), y.to_bits(), "json must be full-precision");
+            }
+        }
+    }
+
+    #[test]
+    fn csv_export_roundtrips_to_printed_precision() {
+        let t = mk(4);
+        let back = Trace::from_csv(&t.to_csv()).expect("parses");
+        assert_eq!(back.points.len(), 4);
+        for (a, b) in t.points.iter().zip(&back.points) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.k, b.k);
+            assert!((a.heldout - b.heldout).abs() < 1e-3);
+            assert!((a.vtime_s - b.vtime_s).abs() < 1e-5);
+        }
+        assert!(Trace::from_csv("bogus\n1,2").is_err());
+        assert!(Trace::from_csv("iter,vtime_s,wall_s,heldout,k,sigma_x,alpha\n1,2\n").is_err());
+    }
+
+    #[test]
+    fn push_reports_thinning_decision() {
+        let mut t = Trace::new("kept");
+        t.set_thinning(2);
+        let p = TracePoint {
+            iter: 0, vtime_s: 0.0, wall_s: 0.0, heldout: -1.0,
+            k: 0, sigma_x: 0.5, alpha: 1.0,
+        };
+        assert!(t.push(p));
+        assert!(!t.push(p));
+        assert!(t.push(p));
     }
 
     #[test]

@@ -260,15 +260,22 @@ impl Counter {
 pub enum Warn {
     CacheSingular,
     CacheNan,
+    /// A replica chain's kept trace points stopped changing entirely
+    /// (`metrics::online::STALL_WINDOW` bit-identical points in a row).
+    ChainStalled,
+    /// A replica chain produced a non-finite trace scalar.
+    ChainDiverged,
 }
 
-pub const N_WARNS: usize = 2;
+pub const N_WARNS: usize = 4;
 
 impl Warn {
     fn index(self) -> usize {
         match self {
             Warn::CacheSingular => 0,
             Warn::CacheNan => 1,
+            Warn::ChainStalled => 2,
+            Warn::ChainDiverged => 3,
         }
     }
 }
@@ -402,6 +409,11 @@ struct Registry {
     warned: [AtomicBool; N_WARNS],
     /// (iter, K⁺) trajectory; master-thread only, once per global step.
     k_series: Mutex<Series>,
+    /// Convergence-diagnostics snapshot (`metrics::online::DiagSummary`
+    /// as JSON), set by the multi-chain runner at trace cadence so
+    /// checkpoint-cadence report flushes carry the latest numbers.
+    /// `None` outside `--chains` runs — the report key is optional.
+    diag: Mutex<Option<Json>>,
 }
 
 /// Deterministic bounded series: keep every `stride`-th offered point,
@@ -453,6 +465,7 @@ static REG: Registry = Registry {
     hists: [HIST_NEW; N_SPANS],
     warned: [ATOMIC_FALSE; N_WARNS],
     k_series: Mutex::new(Series::new()),
+    diag: Mutex::new(None),
 };
 
 /// Set the process-wide level (runner does this from `RunConfig::obs`).
@@ -495,6 +508,15 @@ pub fn reset() {
     }
     let mut s = REG.k_series.lock().unwrap();
     *s = Series::new();
+    *REG.diag.lock().unwrap() = None;
+}
+
+/// Publish (or clear) the convergence-diagnostics section of the obs
+/// report. The multi-chain runner calls this with the latest
+/// `DiagSummary` JSON after each kept trace point; every subsequent
+/// report capture/flush includes it under the optional `diag` key.
+pub fn set_diag(diag: Option<Json>) {
+    *REG.diag.lock().unwrap() = diag;
 }
 
 #[inline]
@@ -590,6 +612,8 @@ pub struct RunReport {
     pub counters: Vec<(Counter, u64)>,
     /// Thinned (iter, K⁺) trajectory.
     pub k_trajectory: Vec<(u64, u64)>,
+    /// Convergence diagnostics (multi-chain runs only; optional key).
+    pub diag: Option<Json>,
 }
 
 impl RunReport {
@@ -604,7 +628,8 @@ impl RunReport {
             .map(|&c| (c, REG.counters[c.index()].load(Ordering::Relaxed)))
             .collect();
         let k_trajectory = REG.k_series.lock().unwrap().points.clone();
-        Self { level: level(), spans, counters, k_trajectory }
+        let diag = REG.diag.lock().unwrap().clone();
+        Self { level: level(), spans, counters, k_trajectory, diag }
     }
 
     /// `run_obs.json` schema (see docs/ARCHITECTURE.md §Observability):
@@ -653,7 +678,7 @@ impl RunReport {
         );
         let k_iters: Vec<f64> = self.k_trajectory.iter().map(|(i, _)| *i as f64).collect();
         let k_vals: Vec<f64> = self.k_trajectory.iter().map(|(_, k)| *k as f64).collect();
-        Json::obj(vec![
+        let mut doc = vec![
             ("version", Json::Num(REPORT_VERSION as f64)),
             ("level", Json::Str(self.level.name().into())),
             ("spans", spans),
@@ -665,7 +690,11 @@ impl RunReport {
                     ("k", Json::arr_f64(&k_vals)),
                 ]),
             ),
-        ])
+        ];
+        if let Some(d) = &self.diag {
+            doc.push(("diag", d.clone()));
+        }
+        Json::obj(doc)
     }
 
     /// Capture the registry and write `run_obs.json` (atomic-ish: plain
@@ -790,6 +819,53 @@ pub fn render_json(doc: &Json) -> Result<String> {
                 last.as_f64().unwrap_or(0.0) as u64,
                 kmax as u64,
             );
+        }
+    }
+    // optional convergence-diagnostics section (multi-chain runs)
+    if let Some(diag) = doc.get("diag") {
+        let chains = diag.get("chains").and_then(|v| v.as_usize()).unwrap_or(0);
+        let points = diag.get("points").and_then(|v| v.as_usize()).unwrap_or(0);
+        let _ = writeln!(
+            out,
+            "  diag: {chains} chain(s) × {points} kept trace point(s)"
+        );
+        if let Some(Json::Obj(quantities)) = diag.get("quantities") {
+            let _ = writeln!(
+                out,
+                "  {:<24} {:>10} {:>12}",
+                "diag quantity", "split-Rhat", "min ESS"
+            );
+            for (name, q) in quantities {
+                let rhat = q
+                    .get("rhat")
+                    .and_then(|v| v.as_f64())
+                    .map_or("-".to_string(), |r| format!("{r:.4}"));
+                let min_ess = q
+                    .get("ess")
+                    .and_then(|v| v.as_arr())
+                    .map(|es| {
+                        es.iter()
+                            .filter_map(Json::as_f64)
+                            .fold(f64::INFINITY, f64::min)
+                    })
+                    .filter(|m| m.is_finite())
+                    .map_or("-".to_string(), |m| format!("{m:.1}"));
+                let _ = writeln!(out, "  {name:<24} {rhat:>10} {min_ess:>12}");
+            }
+        }
+        let until = diag.get("until").and_then(|v| v.as_str()).unwrap_or("");
+        if !until.is_empty() {
+            match diag.get("stopped_at").and_then(|v| v.as_usize()) {
+                Some(i) => {
+                    let _ = writeln!(
+                        out,
+                        "  early stop '{until}' fired after {i} iterations"
+                    );
+                }
+                None => {
+                    let _ = writeln!(out, "  early stop '{until}' not triggered");
+                }
+            }
         }
     }
     Ok(out)
@@ -917,6 +993,48 @@ mod tests {
         // required-key validation is what the CI smoke relies on
         assert!(render_json(&Json::obj(vec![("version", Json::Num(1.0))])).is_err());
         reset();
+        set_level(prev);
+    }
+
+    #[test]
+    fn diag_section_is_optional_but_renders_when_set() {
+        let _g = test_level_gate();
+        let prev = level();
+        set_level(ObsLevel::Counters);
+        reset();
+        // without set_diag, the report has no diag key and renders fine
+        let r = RunReport::capture();
+        assert!(r.diag.is_none());
+        assert!(r.to_json().get("diag").is_none());
+        assert!(!r.render().contains("diag:"));
+        // with set_diag, the key appears and the renderer shows it
+        set_diag(Some(Json::obj(vec![
+            ("chains", Json::Num(3.0)),
+            ("points", Json::Num(12.0)),
+            ("until", Json::Str("rhat<1.01".into())),
+            ("stopped_at", Json::Null),
+            (
+                "quantities",
+                Json::obj(vec![(
+                    "heldout",
+                    Json::obj(vec![
+                        ("rhat", Json::Num(1.02)),
+                        ("ess", Json::arr_f64(&[8.0, 9.5, 7.25])),
+                    ]),
+                )]),
+            ),
+        ])));
+        let r = RunReport::capture();
+        assert!(r.diag.is_some());
+        let rendered = r.render();
+        assert!(rendered.contains("diag: 3 chain(s)"), "{rendered}");
+        assert!(rendered.contains("heldout"), "{rendered}");
+        assert!(rendered.contains("1.0200"), "{rendered}");
+        assert!(rendered.contains("7.2"), "{rendered}");
+        assert!(rendered.contains("not triggered"), "{rendered}");
+        // reset clears the slot
+        reset();
+        assert!(RunReport::capture().diag.is_none());
         set_level(prev);
     }
 

@@ -15,10 +15,11 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{CommModel, ObsLevel, RunConfig, SamplerKind};
-use crate::coordinator::{Coordinator, CoordinatorConfig, IterTiming, VClock};
+use crate::coordinator::{Coordinator, CoordinatorConfig, IterRecord, IterTiming, VClock};
 use crate::data::cambridge::{self, CambridgeConfig};
 use crate::data::{loader, synth, Dataset};
 use crate::linalg::Mat;
+use crate::metrics::online::{DiagState, DiagSummary, StopRule, STALL_WINDOW};
 use crate::metrics::{Trace, TracePoint};
 use crate::model::{GlobalParams, LinGauss};
 use crate::obs::{self, RunReport};
@@ -123,8 +124,18 @@ pub struct RunOutcome {
 /// Run the configured sampler for `cfg.iters` iterations.
 ///
 /// Progress callback fires after every iteration with the iteration index.
+/// Multi-chain configs (`chains > 1` or a non-empty `until` rule) must go
+/// through [`run_multi`] — this entry point drives exactly one chain.
 pub fn run(cfg: &RunConfig, progress: impl FnMut(usize)) -> Result<RunOutcome> {
     cfg.validate()?;
+    if cfg.chains > 1 || !cfg.until.is_empty() {
+        bail!(
+            "config requests convergence diagnostics (chains={} until='{}'): \
+             call runner::run_multi (the pibp binary routes --chains / --until there)",
+            cfg.chains,
+            cfg.until
+        );
+    }
     match cfg.sampler {
         SamplerKind::Hybrid => run_hybrid(cfg, None, progress),
         _ => run_serial(cfg, progress),
@@ -205,71 +216,143 @@ fn setup_run(cfg: &RunConfig) -> Result<RunSetup> {
     })
 }
 
-/// The hybrid (coordinator) path, optionally continuing from a
-/// checkpoint. Fresh runs and resumed runs share every line of the
-/// iteration loop, so their schedules (evaluation, sampling, checkpoint
-/// cadence) are identical by construction.
-fn run_hybrid(
-    cfg: &RunConfig,
-    resume_from: Option<Checkpoint>,
-    mut progress: impl FnMut(usize),
-) -> Result<RunOutcome> {
-    obs::set_level(cfg.obs);
-    obs::reset();
-    let RunSetup { train, lg, mut eval_rng, mut evaluator, mut trace } = setup_run(cfg)?;
-    let ccfg = CoordinatorConfig {
-        processors: cfg.processors,
-        sub_iters: cfg.sub_iters,
-        threads_per_worker: cfg.threads_per_worker,
-        kernel: cfg.kernel,
-        seed: cfg.seed,
-        lg,
-        alpha: cfg.alpha,
-        opts: sampler_options(cfg),
-        backend: cfg.backend,
-        artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
-        comm: cfg.comm,
-    };
-    let mut coord = Coordinator::new(&train.x, ccfg).context("starting coordinator")?;
-    let mut reservoir = SampleReservoir::new(cfg.keep_samples);
-    let mut start_iter = 0usize;
-    let mut wall_base = 0.0f64;
-    if let Some(ck) = resume_from {
-        coord.restore(&ck.coord).context("restoring coordinator state")?;
-        eval_rng = Pcg64::from_state(ck.eval_rng);
-        evaluator.restore_z_state(ck.z_test)?;
-        trace = ck.trace;
-        trace.set_thinning(cfg.trace_thin);
-        reservoir = ck.reservoir;
-        // like trace_thin above, a --set keep_samples override on resume
-        // takes effect (no-op when unchanged, preserving bit-exactness)
-        reservoir.set_capacity(cfg.keep_samples);
-        start_iter = ck.coord.iter as usize;
-        wall_base = ck.wall_s;
+/// What one [`ChainRun::step`] did, surfaced so a multi-chain driver can
+/// feed convergence diagnostics without touching chain state.
+struct StepInfo {
+    rec: IterRecord,
+    /// Was iteration `i` on the evaluation schedule (`i % eval_every == 0`)?
+    scheduled_eval: bool,
+    /// The trace point the thinned trace actually **kept** this iteration
+    /// (`None` when no eval ran or the thinning counter dropped it). Diag
+    /// observes exactly these, so online estimators see precisely
+    /// `trace.points` — nothing more, nothing less.
+    kept: Option<TracePoint>,
+}
+
+/// One live hybrid chain: the coordinator plus every piece of per-chain
+/// run state (evaluator, eval RNG stream, thinned trace, posterior
+/// reservoir, wall/iteration offsets from a resume). [`run_hybrid`]
+/// drives exactly one of these; [`run_multi`] drives `C` of them in
+/// lockstep. Both paths share every line of the iteration body, so a
+/// replica chain inside a diagnosed run is bit-identical to the same
+/// seed run standalone — the property `tests/diag_equivalence.rs` pins.
+struct ChainRun {
+    cfg: RunConfig,
+    coord: Coordinator,
+    eval_rng: Pcg64,
+    evaluator: HeldoutEval,
+    trace: Trace,
+    reservoir: SampleReservoir,
+    start_iter: usize,
+    wall_base: f64,
+    wall0: Instant,
+}
+
+impl ChainRun {
+    /// Build a chain from its config, optionally continuing from a
+    /// checkpoint. Fresh runs and resumed runs share every line of the
+    /// iteration loop, so their schedules (evaluation, sampling,
+    /// checkpoint cadence) are identical by construction.
+    fn new(cfg: &RunConfig, resume_from: Option<Checkpoint>) -> Result<Self> {
+        let RunSetup { train, lg, mut eval_rng, mut evaluator, mut trace } = setup_run(cfg)?;
+        let ccfg = CoordinatorConfig {
+            processors: cfg.processors,
+            sub_iters: cfg.sub_iters,
+            threads_per_worker: cfg.threads_per_worker,
+            kernel: cfg.kernel,
+            seed: cfg.seed,
+            lg,
+            alpha: cfg.alpha,
+            opts: sampler_options(cfg),
+            backend: cfg.backend,
+            artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
+            comm: cfg.comm,
+        };
+        let mut coord = Coordinator::new(&train.x, ccfg).context("starting coordinator")?;
+        let mut reservoir = SampleReservoir::new(cfg.keep_samples);
+        let mut start_iter = 0usize;
+        let mut wall_base = 0.0f64;
+        if let Some(ck) = resume_from {
+            coord.restore(&ck.coord).context("restoring coordinator state")?;
+            eval_rng = Pcg64::from_state(ck.eval_rng);
+            evaluator.restore_z_state(ck.z_test)?;
+            trace = ck.trace;
+            trace.set_thinning(cfg.trace_thin);
+            reservoir = ck.reservoir;
+            // like trace_thin above, a --set keep_samples override on resume
+            // takes effect (no-op when unchanged, preserving bit-exactness)
+            reservoir.set_capacity(cfg.keep_samples);
+            start_iter = ck.coord.iter as usize;
+            wall_base = ck.wall_s;
+        }
+        Ok(Self {
+            cfg: cfg.clone(),
+            coord,
+            eval_rng,
+            evaluator,
+            trace,
+            reservoir,
+            start_iter,
+            wall_base,
+            wall0: Instant::now(),
+        })
     }
 
-    let wall0 = Instant::now();
-    for i in start_iter..cfg.iters {
-        let rec = coord.step()?;
-        let scheduled_eval = i % cfg.eval_every == 0;
+    fn wall_s(&self) -> f64 {
+        self.wall_base + self.wall0.elapsed().as_secs_f64()
+    }
+
+    /// Evaluate held-out likelihood and push a trace point for `rec`,
+    /// reporting whether the thinned trace kept it.
+    fn eval_and_trace(&mut self, rec: &IterRecord) -> Option<TracePoint> {
+        let h = self.evaluator.evaluate(self.coord.params(), &mut self.eval_rng);
+        let p = TracePoint {
+            iter: rec.iter,
+            vtime_s: rec.vtime_total_s,
+            wall_s: self.wall_s(),
+            heldout: h,
+            k: rec.k,
+            sigma_x: rec.sigma_x,
+            alpha: rec.alpha,
+        };
+        if self.trace.push(p) { Some(p) } else { None }
+    }
+
+    fn write_checkpoint(&mut self) -> Result<()> {
+        let path = checkpoint_file(&self.cfg);
+        let wall_s = self.wall_s();
+        save_checkpoint(
+            &self.cfg,
+            &mut self.coord,
+            &self.eval_rng,
+            &self.evaluator,
+            &self.trace,
+            &self.reservoir,
+            wall_s,
+            &path,
+        )
+        .with_context(|| format!("writing checkpoint {}", path.display()))?;
+        // flush obs at the same cadence: a crash loses at most one
+        // checkpoint interval of diagnostics, like everything else
+        flush_obs(&self.cfg);
+        Ok(())
+    }
+
+    /// Advance the chain one iteration. This is the single shared
+    /// iteration body for fresh, resumed and replica chains.
+    fn step(&mut self, i: usize) -> Result<StepInfo> {
+        let rec = self.coord.step()?;
+        let scheduled_eval = i % self.cfg.eval_every == 0;
+        let mut kept = None;
         if scheduled_eval {
-            let h = evaluator.evaluate(coord.params(), &mut eval_rng);
-            trace.push(TracePoint {
-                iter: rec.iter,
-                vtime_s: rec.vtime_total_s,
-                wall_s: wall_base + wall0.elapsed().as_secs_f64(),
-                heldout: h,
-                k: rec.k,
-                sigma_x: rec.sigma_x,
-                alpha: rec.alpha,
-            });
+            kept = self.eval_and_trace(&rec);
         }
-        if reservoir.wants(rec.iter as u64) {
+        if self.reservoir.wants(rec.iter as u64) {
             // gather_z is a pure read of the workers (no RNG), so sample
             // recording never perturbs the chain
-            let z = coord.gather_z()?;
-            let p = coord.params();
-            reservoir.record(PosteriorSample {
+            let z = self.coord.gather_z()?;
+            let p = self.coord.params();
+            self.reservoir.record(PosteriorSample {
                 iter: rec.iter as u64,
                 z,
                 a: p.a.clone(),
@@ -279,26 +362,12 @@ fn run_hybrid(
                 alpha: p.alpha,
             });
         }
-        if cfg.checkpoint_every > 0
-            && ((i + 1) % cfg.checkpoint_every == 0 || i + 1 == cfg.iters)
+        if self.cfg.checkpoint_every > 0
+            && ((i + 1) % self.cfg.checkpoint_every == 0 || i + 1 == self.cfg.iters)
         {
-            let path = checkpoint_file(cfg);
-            save_checkpoint(
-                cfg,
-                &mut coord,
-                &eval_rng,
-                &evaluator,
-                &trace,
-                &reservoir,
-                wall_base + wall0.elapsed().as_secs_f64(),
-                &path,
-            )
-            .with_context(|| format!("writing checkpoint {}", path.display()))?;
-            // flush obs at the same cadence: a crash loses at most one
-            // checkpoint interval of diagnostics, like everything else
-            flush_obs(cfg);
+            self.write_checkpoint()?;
         }
-        if i + 1 == cfg.iters && !scheduled_eval {
+        if i + 1 == self.cfg.iters && !scheduled_eval {
             // bonus final evaluation so every returned trace ends fresh.
             // Deliberately AFTER the checkpoint write: this eval depends
             // on the target horizon (`iters`), so letting it touch
@@ -307,28 +376,215 @@ fn run_hybrid(
             // diverge from an uninterrupted one on the evaluation stream.
             // Checkpoints therefore always sit at horizon-independent
             // iteration boundaries.
-            let h = evaluator.evaluate(coord.params(), &mut eval_rng);
-            trace.push(TracePoint {
-                iter: rec.iter,
-                vtime_s: rec.vtime_total_s,
-                wall_s: wall_base + wall0.elapsed().as_secs_f64(),
-                heldout: h,
-                k: rec.k,
-                sigma_x: rec.sigma_x,
-                alpha: rec.alpha,
-            });
+            kept = self.eval_and_trace(&rec);
         }
+        Ok(StepInfo { rec, scheduled_eval, kept })
+    }
+
+    /// Finish the chain at iteration `i` as if the configured horizon had
+    /// been `i + 1`: write the final checkpoint if the cadence in `step`
+    /// didn't just produce one, then run the bonus final evaluation if
+    /// iteration `i` wasn't a scheduled one — exactly the tail `step`
+    /// performs when `i + 1 == iters`. An early-stopped chain is
+    /// therefore bit-identical to a standalone run with `iters = i + 1`.
+    fn close_at(&mut self, i: usize, info: &StepInfo) -> Result<()> {
+        let at_horizon = i + 1 == self.cfg.iters;
+        if self.cfg.checkpoint_every > 0
+            && (i + 1) % self.cfg.checkpoint_every != 0
+            && !at_horizon
+        {
+            self.write_checkpoint()?;
+        }
+        if !info.scheduled_eval && !at_horizon {
+            self.eval_and_trace(&info.rec);
+        }
+        Ok(())
+    }
+
+    fn into_outcome(self) -> RunOutcome {
+        let params = self.coord.params().clone();
+        RunOutcome {
+            final_k: params.k(),
+            features: params.a.clone(),
+            elapsed_s: self.coord.clock.elapsed_s(),
+            final_params: params,
+            trace: self.trace,
+            reservoir: self.reservoir,
+        }
+    }
+}
+
+/// The hybrid (coordinator) path, optionally continuing from a
+/// checkpoint: one [`ChainRun`] driven from its start iteration to the
+/// configured horizon.
+fn run_hybrid(
+    cfg: &RunConfig,
+    resume_from: Option<Checkpoint>,
+    mut progress: impl FnMut(usize),
+) -> Result<RunOutcome> {
+    obs::set_level(cfg.obs);
+    obs::reset();
+    let mut chain = ChainRun::new(cfg, resume_from)?;
+    for i in chain.start_iter..cfg.iters {
+        chain.step(i)?;
         progress(i);
     }
     flush_obs(cfg);
-    let params = coord.params().clone();
-    Ok(RunOutcome {
-        final_k: params.k(),
-        features: params.a.clone(),
-        elapsed_s: coord.clock.elapsed_s(),
-        final_params: params,
-        trace,
-        reservoir,
+    Ok(chain.into_outcome())
+}
+
+/// Maximum autocovariance lag the streaming ESS estimators retain during
+/// a diagnosed run. Kept trace points arrive at `eval_every × trace_thin`
+/// cadence, so 256 lags cover every realistic Geyer scan depth while
+/// keeping `observe` O(256) floats per point per quantity.
+pub const DIAG_MAX_LAG: usize = 256;
+
+/// Root seed for replica chain `c` of a multi-chain run: chain 0 keeps
+/// the root seed (so a one-chain diagnosed run IS the plain run), higher
+/// chains derive a decorrelated 64-bit seed from the reserved
+/// `split(8000 + c)` diagnostics stream (see the RNG tag table in
+/// docs/ARCHITECTURE.md).
+pub fn chain_seed(root: u64, c: usize) -> u64 {
+    if c == 0 {
+        root
+    } else {
+        Pcg64::new(root).split(8000 + c as u64).next_u64()
+    }
+}
+
+/// Insert a `.c{c}` suffix before the extension: `trace.json` →
+/// `trace.c2.json` (extensionless paths get a plain `.c2` appended).
+/// Multi-chain runs name every per-chain artifact this way.
+pub fn chain_file(base: &Path, c: usize) -> PathBuf {
+    match (
+        base.file_stem().and_then(|s| s.to_str()),
+        base.extension().and_then(|e| e.to_str()),
+    ) {
+        (Some(stem), Some(ext)) => base.with_file_name(format!("{stem}.c{c}.{ext}")),
+        _ => {
+            let mut p = base.as_os_str().to_owned();
+            p.push(format!(".c{c}"));
+            PathBuf::from(p)
+        }
+    }
+}
+
+/// The config replica chain `c` actually runs: same chain keys, the
+/// chain-derived seed, and the multi-chain controls cleared so the
+/// replica is an ordinary single-chain run (its checkpoints resume as
+/// such). With `chains > 1`, checkpoints move to chain-suffixed paths so
+/// replicas never clobber each other. Note the synthetic datasets are
+/// generated from `seed`, so replicas explore independent draws of the
+/// same generative process — the standard multi-chain R̂ setting applies
+/// per chain, and cross-chain R̂ additionally reflects data variability
+/// (a `.csv` dataset is shared bit-identically across chains).
+pub fn replica_config(cfg: &RunConfig, c: usize) -> RunConfig {
+    let mut r = cfg.clone();
+    r.seed = chain_seed(cfg.seed, c);
+    r.chains = 1;
+    r.until = String::new();
+    r.trace_out = String::new();
+    if cfg.checkpoint_every > 0 && cfg.chains > 1 {
+        r.checkpoint_path = chain_file(&checkpoint_file(cfg), c)
+            .to_string_lossy()
+            .into_owned();
+    }
+    r
+}
+
+/// The outcome of a diagnosed multi-chain run: every replica's
+/// [`RunOutcome`] (chain `c` at index `c`) plus the final convergence
+/// summary (also mirrored into the obs report's `diag` section).
+#[derive(Debug)]
+pub struct MultiOutcome {
+    pub chains: Vec<RunOutcome>,
+    pub diag: DiagSummary,
+}
+
+/// Drive `cfg.chains` replica hybrid chains in lockstep with streaming
+/// convergence diagnostics (per-chain ESS, cross-chain split-R̂ over the
+/// kept trace scalars), and optionally stop every chain early when the
+/// config's `until` rule holds.
+///
+/// Non-perturbation contract: diagnostics only **read** the trace points
+/// each chain keeps and draw no RNG, so replica chain `c` here is
+/// bit-identical to a standalone [`run`] of [`replica_config`]`(cfg, c)`
+/// — enforced by `tests/diag_equivalence.rs`. Early stop at iteration
+/// `stopped_at` leaves every chain bit-identical to a standalone run
+/// with `iters = stopped_at`, because the stop rule is a deterministic
+/// function of the kept trace prefix.
+pub fn run_multi(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<MultiOutcome> {
+    cfg.validate()?;
+    if cfg.sampler != SamplerKind::Hybrid {
+        bail!("multi-chain diagnostics require the hybrid sampler");
+    }
+    let rule = StopRule::parse(&cfg.until)?;
+    obs::set_level(cfg.obs);
+    obs::reset();
+    let c_total = cfg.chains.max(1);
+    let mut chains = Vec::with_capacity(c_total);
+    for c in 0..c_total {
+        chains.push(ChainRun::new(&replica_config(cfg, c), None)?);
+    }
+    let mut diag = DiagState::new(c_total, DIAG_MAX_LAG);
+    let mut stopped_at = None;
+    for i in 0..cfg.iters {
+        let mut infos = Vec::with_capacity(c_total);
+        for chain in chains.iter_mut() {
+            infos.push(chain.step(i)?);
+        }
+        let mut any_kept = false;
+        for (c, info) in infos.iter().enumerate() {
+            if let Some(p) = &info.kept {
+                any_kept = true;
+                let ev = diag.observe(c, p);
+                if ev.diverged {
+                    obs::warn_once(
+                        obs::Warn::ChainDiverged,
+                        &format!(
+                            "chain {c} diverged: non-finite trace scalar at iteration {}",
+                            info.rec.iter
+                        ),
+                    );
+                }
+                if ev.stalled {
+                    obs::warn_once(
+                        obs::Warn::ChainStalled,
+                        &format!(
+                            "chain {c} stalled: {STALL_WINDOW} identical kept trace points \
+                             up to iteration {}",
+                            info.rec.iter
+                        ),
+                    );
+                }
+            }
+        }
+        let mut stop = false;
+        if any_kept {
+            // publish the rolling summary so a crash / mid-run obs flush
+            // reports the latest diagnostics, not just the final ones
+            obs::set_diag(Some(diag.summary(&cfg.until, stopped_at).to_json()));
+            if let Some(rule) = &rule {
+                if diag.satisfied(rule) {
+                    stopped_at = Some(i + 1);
+                    for (chain, info) in chains.iter_mut().zip(&infos) {
+                        chain.close_at(i, info)?;
+                    }
+                    stop = true;
+                }
+            }
+        }
+        progress(i);
+        if stop {
+            break;
+        }
+    }
+    let summary = diag.summary(&cfg.until, stopped_at);
+    obs::set_diag(Some(summary.to_json()));
+    flush_obs(cfg);
+    Ok(MultiOutcome {
+        chains: chains.into_iter().map(ChainRun::into_outcome).collect(),
+        diag: summary,
     })
 }
 
@@ -640,5 +896,106 @@ mod tests {
         );
         cfg.checkpoint_path = "elsewhere/ck.pibp".into();
         assert_eq!(checkpoint_file(&cfg), PathBuf::from("elsewhere/ck.pibp"));
+    }
+
+    #[test]
+    fn chain_seed_layout() {
+        // chain 0 IS the root seed; higher chains are decorrelated and
+        // stable (the derivation is part of the checkpoint/repro contract)
+        assert_eq!(chain_seed(42, 0), 42);
+        let s1 = chain_seed(42, 1);
+        let s2 = chain_seed(42, 2);
+        assert_ne!(s1, 42);
+        assert_ne!(s1, s2);
+        assert_eq!(s1, chain_seed(42, 1), "derivation must be deterministic");
+        assert_ne!(chain_seed(43, 1), s1, "root seed must matter");
+    }
+
+    #[test]
+    fn chain_file_suffixes_before_extension() {
+        assert_eq!(
+            chain_file(Path::new("out/trace.json"), 2),
+            PathBuf::from("out/trace.c2.json")
+        );
+        assert_eq!(
+            chain_file(Path::new("checkpoint.pibp"), 0),
+            PathBuf::from("checkpoint.c0.pibp")
+        );
+        assert_eq!(chain_file(Path::new("noext"), 1), PathBuf::from("noext.c1"));
+    }
+
+    #[test]
+    fn replica_config_clears_multichain_controls() {
+        let mut cfg = tiny(SamplerKind::Hybrid);
+        cfg.chains = 3;
+        cfg.until = "rhat<1.05".into();
+        cfg.trace_out = "t.json".into();
+        cfg.checkpoint_every = 4;
+        let r = replica_config(&cfg, 1);
+        assert_eq!(r.chains, 1);
+        assert!(r.until.is_empty() && r.trace_out.is_empty());
+        assert_eq!(r.seed, chain_seed(cfg.seed, 1));
+        assert_eq!(
+            PathBuf::from(&r.checkpoint_path),
+            Path::new("results").join("checkpoint.c1.pibp")
+        );
+        // replica configs validate and fingerprint as plain runs
+        r.validate().unwrap();
+        // without checkpointing, the path is left alone
+        cfg.checkpoint_every = 0;
+        assert!(replica_config(&cfg, 1).checkpoint_path.is_empty());
+    }
+
+    #[test]
+    fn run_rejects_multichain_configs() {
+        let mut cfg = tiny(SamplerKind::Hybrid);
+        cfg.chains = 2;
+        let err = run(&cfg, |_| {}).unwrap_err().to_string();
+        assert!(err.contains("run_multi"), "{err}");
+        cfg.chains = 1;
+        cfg.until = "rhat<1.01".into();
+        assert!(run(&cfg, |_| {}).is_err());
+    }
+
+    #[test]
+    fn run_multi_smoke_with_diag_summary() {
+        let _g = crate::obs::test_level_gate();
+        let mut cfg = tiny(SamplerKind::Hybrid);
+        cfg.chains = 2;
+        let out = run_multi(&cfg, |_| {}).unwrap();
+        assert_eq!(out.chains.len(), 2);
+        assert_eq!(out.diag.chains, 2);
+        // iters=8, eval_every=2 keeps i ∈ {0,2,4,6} plus the bonus at 7
+        assert_eq!(out.diag.points, 5);
+        assert!(out.diag.stopped_at.is_none());
+        for c in &out.chains {
+            assert_eq!(c.trace.points.len(), 5);
+            assert!(c.trace.last().unwrap().heldout.is_finite());
+        }
+        // chains started from different seeds must not be identical
+        let (a, b) = (&out.chains[0].trace.points, &out.chains[1].trace.points);
+        assert!(
+            a.iter().zip(b).any(|(p, q)| p.heldout != q.heldout),
+            "replica chains produced identical traces"
+        );
+    }
+
+    #[test]
+    fn run_multi_early_stop_records_trigger() {
+        let _g = crate::obs::test_level_gate();
+        let mut cfg = tiny(SamplerKind::Hybrid);
+        cfg.chains = 2;
+        // a rule any pair of healthy chains satisfies as soon as
+        // MIN_STOP_POINTS kept points exist (every non-degenerate series
+        // has ESS ≥ 1; rhat is omitted since 4-point split-R̂ of the
+        // integer K series can legitimately be non-finite)
+        cfg.until = "ess>0.5".into();
+        let out = run_multi(&cfg, |_| {}).unwrap();
+        // 4th kept point lands at i=6 → stop after completing iteration 7
+        let stopped = out.diag.stopped_at.expect("rule should have triggered");
+        assert_eq!(stopped, 7);
+        for c in &out.chains {
+            assert_eq!(c.trace.points.len(), 4);
+        }
     }
 }
