@@ -23,7 +23,7 @@ use crate::model::state::{FeatureState, Kernel};
 use crate::model::{ibp, GlobalParams, LinGauss};
 use crate::obs;
 use crate::parallel::ParallelCtx;
-use crate::rng::Pcg64;
+use crate::rng::{tags, Pcg64};
 use crate::runtime::{Engine, Ops};
 use crate::samplers::hybrid::make_shards;
 use crate::samplers::SamplerOptions;
@@ -174,6 +174,7 @@ impl Coordinator {
                 Mat::from_fn(shard.len(), d, |i, j| x[(shard.start + i, j)]);
             let tx_m = tx_master.clone();
             handles.push(
+                // detlint:allow(stray-thread): the coordinator is the sanctioned spawn site for worker threads — each is channel-driven and joined in shutdown()
                 std::thread::Builder::new()
                     .name(format!("pibp-worker-{id}"))
                     .spawn(move || run_worker(wcfg, x_shard, rx, tx_m))
@@ -188,7 +189,7 @@ impl Coordinator {
             ),
             Backend::Native => None,
         };
-        let mut rng = Pcg64::new(cfg.seed).split(1);
+        let mut rng = Pcg64::new(cfg.seed).split(tags::MASTER);
         let p_prime = rng.below(cfg.processors as u64) as u32;
         Ok(Self {
             to_workers,
@@ -283,6 +284,7 @@ impl Coordinator {
 
     /// One global iteration.
     pub fn step(&mut self) -> Result<IterRecord> {
+        // detlint:allow(wall-clock-in-chain): wall_iter_s is reported in IterRecord only; the chain never branches on it
         let wall_start = Instant::now();
         let draws0 = self.rng.draw_count();
         let mut timing = IterTiming {
@@ -322,6 +324,7 @@ impl Coordinator {
             })?;
 
         // ---- master global step ----
+        // detlint:allow(wall-clock-in-chain): master_busy_s feeds the virtual comm-model clock and the obs report, not the chain
         let mstart = Instant::now();
         self.global_step(&summaries)?;
         timing.master_busy_s = mstart.elapsed().as_secs_f64();

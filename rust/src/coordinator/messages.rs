@@ -184,11 +184,15 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
+    #[allow(clippy::unwrap_used)] // infallible: take(4) yields exactly 4 bytes
     pub fn u32(&mut self) -> Result<u32> {
+        // detlint:allow(no-panic-coordinator): take(4) returned exactly 4 bytes, so the array conversion cannot fail
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    #[allow(clippy::unwrap_used)] // infallible: take(8) yields exactly 8 bytes
     pub fn u64(&mut self) -> Result<u64> {
+        // detlint:allow(no-panic-coordinator): take(8) returned exactly 8 bytes, so the array conversion cannot fail
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
@@ -198,7 +202,9 @@ impl<'a> Reader<'a> {
         Ok(lo | (hi << 64))
     }
 
+    #[allow(clippy::unwrap_used)] // infallible: take(8) yields exactly 8 bytes
     pub fn f64(&mut self) -> Result<f64> {
+        // detlint:allow(no-panic-coordinator): take(8) returned exactly 8 bytes, so the array conversion cannot fail
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 

@@ -13,6 +13,12 @@
 //! The serial semantics oracle lives in `samplers::hybrid`; integration
 //! tests pin this parallel implementation against it.
 
+// Compiler-enforced twin of detlint rule R4 (no-panic-coordinator): deny
+// `unwrap()` outside test builds. Proven-infallible sites carry a scoped
+// `#[allow]` plus a detlint waiver with the proof. CI runs clippy with
+// this lint promoted to blocking.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 pub mod master;
 pub mod messages;
 pub mod vtime;

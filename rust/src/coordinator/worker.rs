@@ -19,7 +19,7 @@ use crate::model::state::{FeatureState, Kernel};
 use crate::model::LinGauss;
 use crate::obs;
 use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
-use crate::rng::Pcg64;
+use crate::rng::{tags, Pcg64};
 use crate::runtime::{Engine, Ops};
 use crate::samplers::tail::TailProposer;
 use crate::samplers::uncollapsed::residuals;
@@ -78,7 +78,7 @@ fn worker_loop(
     tx: Sender<(usize, Vec<u8>)>,
 ) -> Result<()> {
     let b_rows = x.rows();
-    let mut rng = Pcg64::new(cfg.seed).split(1000 + cfg.id as u64);
+    let mut rng = Pcg64::new(cfg.seed).split(tags::worker(cfg.id));
     let mut z = FeatureState::empty_with(b_rows, cfg.kernel);
     // tail bits discovered last iteration, kept until the master's
     // promotion instruction arrives in the next broadcast
@@ -164,6 +164,7 @@ fn run_iteration(
     //      demotion of shard-local junk back into p′'s tail ----
     let tail_init = apply_structure(z, b, me, last_tail.take())?;
 
+    // detlint:allow(wall-clock-in-chain): busy_s meters worker busy time for the virtual clock and obs report — no sampling decision reads it
     let start = Instant::now();
     let k_plus = z.k();
     debug_assert_eq!(k_plus, b.pi.len());

@@ -16,7 +16,7 @@
 
 use super::Dataset;
 use crate::linalg::Mat;
-use crate::rng::Pcg64;
+use crate::rng::{tags, Pcg64};
 
 pub const GLYPH_SIDE: usize = 6;
 pub const DIM: usize = GLYPH_SIDE * GLYPH_SIDE;
@@ -126,7 +126,7 @@ pub fn true_features(k_true: usize) -> Mat {
 
 /// Generate the data set; returns (dataset, true Z (n × k_true)).
 pub fn generate(cfg: &CambridgeConfig) -> (Dataset, Mat) {
-    let mut rng = Pcg64::new(cfg.seed).split(0xCA4B);
+    let mut rng = Pcg64::new(cfg.seed).split(tags::CAMBRIDGE_DATA);
     let a = true_features(cfg.k_true);
     let mut z = Mat::zeros(cfg.n, cfg.k_true);
     for i in 0..cfg.n {

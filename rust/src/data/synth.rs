@@ -7,7 +7,7 @@
 
 use super::Dataset;
 use crate::linalg::Mat;
-use crate::rng::Pcg64;
+use crate::rng::{tags, Pcg64};
 
 #[derive(Clone, Debug)]
 pub struct SynthConfig {
@@ -57,7 +57,7 @@ pub fn sample_ibp(n: usize, alpha: f64, rng: &mut Pcg64) -> (Vec<Vec<u8>>, Vec<u
 
 /// Generate (dataset, Z_true, A_true).
 pub fn generate(cfg: &SynthConfig) -> (Dataset, Mat, Mat) {
-    let mut rng = Pcg64::new(cfg.seed).split(0x5D17);
+    let mut rng = Pcg64::new(cfg.seed).split(tags::SYNTH_DATA);
     let (zrows, _) = sample_ibp(cfg.n, cfg.alpha, &mut rng);
     let k = zrows.first().map_or(0, |r| r.len()).max(1);
     let z = Mat::from_fn(cfg.n, k, |i, j| {

@@ -24,7 +24,7 @@ use pibp::linalg::Mat;
 use pibp::metrics::Trace;
 use pibp::model::missing::{missing_mse, Mask};
 use pibp::obs;
-use pibp::rng::Pcg64;
+use pibp::rng::{tags, Pcg64};
 use pibp::runner;
 use pibp::runtime::Manifest;
 use pibp::serve::PredictEngine;
@@ -318,7 +318,7 @@ fn cmd_predict(p: &Parsed) -> Result<()> {
     let engine = PredictEngine::new(samples, sweeps, threads).with_kernel(cfg.kernel);
 
     // ---- imputation: hide a fraction of entries, fill, score vs truth ----
-    let mask = Mask::random(q, d, missing, &mut Pcg64::new(seed).split(4242));
+    let mask = Mask::random(q, d, missing, &mut Pcg64::new(seed).split(tags::PREDICT_MASK));
     let hidden = q * d - mask.observed_count();
     let t0 = Instant::now();
     let recon = engine.impute(&queries, &mask, seed);

@@ -539,10 +539,14 @@ impl FeatureState {
     }
 
     /// Histogram of identical columns (for the lof-prior K_h! term),
-    /// keyed by the column bit-pattern.
+    /// keyed by the column bit-pattern. A `BTreeMap` (not `HashMap`) so
+    /// the bucket order — and hence the float accumulation order of the
+    /// `Σ ln K_h!` consumer in `ibp::log_prior` — is a pure function of
+    /// the bit patterns, not of the process's random hasher seed
+    /// (detlint rule R3 hash-order).
     pub fn column_histogram(&self) -> Vec<usize> {
-        use std::collections::HashMap;
-        let mut counts: HashMap<Vec<u8>, usize> = HashMap::new();
+        use std::collections::BTreeMap;
+        let mut counts: BTreeMap<Vec<u8>, usize> = BTreeMap::new();
         for j in 0..self.k {
             let col: Vec<u8> = (0..self.n).map(|i| self.get(i, j)).collect();
             *counts.entry(col).or_insert(0) += 1;

@@ -14,11 +14,11 @@ use std::ops::Range;
 /// and join overheads are noise next to the O(block · K⁺ · D) sweep work.
 pub const DEFAULT_BLOCK_ROWS: usize = 32;
 
-/// RNG tag base for per-block substreams, continuing the repo-wide split
-/// layout (master = `split(1)`, worker p = `split(1000 + p)`, held-out
-/// evaluator = `split(7777)`): block b of a sweep draws from
-/// `worker_rng.split(BLOCK_TAG_BASE + b)`.
-pub const BLOCK_TAG_BASE: u64 = 2000;
+/// RNG tag base for per-block substreams — an alias of the central
+/// registry entry (`rng::tags::BLOCK_BASE`; the repo-wide layout lives
+/// in `rng/tags.rs`): block b of a sweep draws from
+/// `worker_rng.split(tags::block(b))`.
+pub const BLOCK_TAG_BASE: u64 = crate::rng::tags::BLOCK_BASE;
 
 /// A row range cut into consecutive blocks of `block_rows` rows (the
 /// last block may be ragged).
@@ -71,9 +71,9 @@ impl BlockPlan {
         (0..self.len()).map(|b| self.block(b))
     }
 
-    /// RNG split tag for block `b`.
+    /// RNG split tag for block `b` (delegates to the central registry).
     pub fn tag(b: usize) -> u64 {
-        BLOCK_TAG_BASE + b as u64
+        crate::rng::tags::block(b)
     }
 }
 

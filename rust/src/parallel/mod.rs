@@ -9,8 +9,9 @@
 //!    ([`BlockPlan`], [`DEFAULT_BLOCK_ROWS`] rows each — the layout
 //!    depends only on the range, never on the thread count);
 //! 2. derive one RNG substream per block with the repo's split
-//!    discipline (`worker_rng.split(BLOCK_TAG_BASE + b)`, mirroring the
-//!    coordinator's `root.split(1000 + p)` worker layout);
+//!    discipline (`worker_rng.split(tags::block(b))`, mirroring the
+//!    coordinator's `root.split(tags::worker(p))` layout; both families
+//!    live in the central `rng::tags` registry);
 //! 3. run [`sweep_block`] kernels against disjoint `&mut` row slices of
 //!    Z and the residual matrix, scheduled by a [`ParallelCtx`]: inline,
 //!    on a **persistent thread pool** ([`ThreadPool`], the production
@@ -36,6 +37,12 @@
 //! amount keeps everything after the sweep (e.g. the p′ tail proposal on
 //! the same worker stream) aligned across thread counts.
 
+// Compiler-enforced twin of detlint rule R4 (no-panic-coordinator): deny
+// `unwrap()` outside test builds. Proven-infallible sites carry a scoped
+// `#[allow]` plus a detlint waiver with the proof. CI runs clippy with
+// this lint promoted to blocking.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 mod blocks;
 mod pool;
 
@@ -47,7 +54,7 @@ use std::ops::Range;
 use crate::linalg::Mat;
 use crate::model::state::{FeatureState, Kernel};
 use crate::obs;
-use crate::rng::Pcg64;
+use crate::rng::{tags, Pcg64};
 use crate::samplers::uncollapsed::{sweep_block, sweep_block_packed};
 
 /// Executor knobs. `ctx` is a *scheduling* choice only — it never affects
@@ -144,7 +151,7 @@ impl BlockTask<'_> {
 ///
 /// Semantics match [`crate::samplers::uncollapsed::sweep_rows`] except
 /// for the RNG discipline: draws come from per-block substreams
-/// (`rng.split(BLOCK_TAG_BASE + b)` after advancing `rng` once) instead
+/// (`rng.split(tags::block(b))` after advancing `rng` once) instead
 /// of the caller's stream directly, so the result is a pure function of
 /// the inputs — independent of the context's lane count and mode.
 #[allow(clippy::too_many_arguments)]
@@ -193,7 +200,7 @@ pub fn par_sweep_rows(
                 tasks.push(BlockTask {
                     z: ZChunk::Words(zw),
                     resid: rb,
-                    rng: rng.split(BlockPlan::tag(b)),
+                    rng: rng.split(tags::block(b)),
                     m_delta: vec![0i64; k_limit],
                     flips: 0,
                 });
@@ -206,7 +213,7 @@ pub fn par_sweep_rows(
                 tasks.push(BlockTask {
                     z: ZChunk::Bytes(zb),
                     resid: rb,
-                    rng: rng.split(BlockPlan::tag(b)),
+                    rng: rng.split(tags::block(b)),
                     m_delta: vec![0i64; k_limit],
                     flips: 0,
                 });

@@ -163,7 +163,8 @@ impl ThreadPool {
             return;
         }
         let mut it = tasks.into_iter();
-        let first = it.next().expect("n >= 1");
+        // n >= 1 was checked above; let-else keeps this path panic-free
+        let Some(first) = it.next() else { return };
         if n == 1 || self.threads <= 1 {
             first();
             for task in it {
@@ -181,6 +182,7 @@ impl ThreadPool {
                 // Captured only at obs level `full` (None otherwise), and
                 // recorded inside the job — pure measurement, no effect on
                 // scheduling, task structure or merge order.
+                // detlint:allow(wall-clock-in-chain): obs-only queue-wait probe — the timestamp feeds a histogram, never the chain
                 let enqueued = if obs::timing() { Some(Instant::now()) } else { None };
                 let job: Task<'_> = Box::new(move || {
                     if let Some(t0) = enqueued {
@@ -340,8 +342,7 @@ impl ParallelCtx {
         }
         let per = items.len().div_ceil(t);
         match &self.0 {
-            // Inline reports threads() == 1, so it always took the
-            // sequential early return above
+            // detlint:allow(no-panic-coordinator): structurally unreachable — Inline reports threads() == 1, so the t <= 1 early return above always fired
             CtxInner::Inline => unreachable!("inline context has one lane"),
             CtxInner::Pool(pool) => {
                 let f = &f;

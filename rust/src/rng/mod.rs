@@ -17,6 +17,7 @@
 //! here and shipped into the HLO executables as inputs).
 
 pub mod distributions;
+pub mod tags;
 
 pub use distributions::Categorical;
 
@@ -85,7 +86,10 @@ impl Pcg64 {
 
     /// Derive an independent stream (distinct increment ⇒ disjoint
     /// sequence). `tag` makes the derivation deterministic and collision-
-    /// free per call site: worker p uses `root.split(p as u64)`.
+    /// free per call site; production tags come from the central
+    /// [`tags`](crate::rng::tags) registry (e.g. worker `p` uses
+    /// `root.split(tags::worker(p))`), which is what keeps the families
+    /// provably non-overlapping.
     pub fn split(&self, tag: u64) -> Self {
         let mut sm = SplitMix64::new(
             (self.state as u64) ^ (self.state >> 64) as u64 ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15),

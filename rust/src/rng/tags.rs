@@ -1,0 +1,225 @@
+//! Central registry of RNG stream tags.
+//!
+//! Every [`Pcg64::split`](super::Pcg64::split) call site in the tree must
+//! take its tag from this module — `tools/detlint` rule **R1
+//! (rng-tag-literal)** rejects raw numeric tags at build-review time. The
+//! registry exists so that stream families claimed by different subsystems
+//! provably cannot collide: the ranges below are pairwise disjoint *within
+//! each parent namespace*, checked both at compile time (const asserts)
+//! and by the unit tests at the bottom of this file.
+//!
+//! ## Namespaces
+//!
+//! A tag only has to be unique among tags split from the *same parent
+//! stream* — `root.split(a)` and `worker_stream.split(a)` are independent
+//! even for equal `a`, because [`Pcg64::split`] folds the parent state
+//! into the derivation. Two namespaces are in use:
+//!
+//! * **Root** — streams split directly from `Pcg64::new(seed)` (or, for
+//!   data synthesis / serving, from the relevant root seed). All scalar
+//!   tags and the `WORKER`/`CHAIN`/`SERVE` families live here.
+//! * **Worker** — streams split from a worker's own stream. Only the
+//!   per-block substreams of `parallel::par_sweep_rows` live here, so the
+//!   `BLOCK` family is unbounded upward.
+//!
+//! ## Flat map (root namespace)
+//!
+//! | constant            | value            | width | purpose                               |
+//! |---------------------|------------------|-------|---------------------------------------|
+//! | `MASTER`            | 1                | 1     | master chain stream (hybrid sampler)  |
+//! | `SERIAL_COLLAPSED`  | 2                | 1     | serial collapsed runner stream        |
+//! | `SERIAL_UNCOLLAPSED`| 3                | 1     | serial uncollapsed runner stream      |
+//! | `WORKER_BASE`       | 1000             | 1000  | worker `p` stream = `worker(p)`       |
+//! | `PREDICT_MASK`      | 4242             | 1     | held-out mask sampling (`predict`)    |
+//! | `EVAL`              | 7777             | 1     | held-out evaluator stream             |
+//! | `CHAIN_BASE`        | 8000             | 1000  | replica chain `c` seed = `chain(c)`   |
+//! | `SERVE_BASE`        | 9000             | 14831 | per-sample query stream (`serve`)     |
+//! | `SYNTH_DATA`        | 0x5D17 (23831)   | 1     | synthetic data generation             |
+//! | `CAMBRIDGE_DATA`    | 0xCA4B (51787)   | 1     | cambridge-figure data generation      |
+//!
+//! The numeric values are frozen: they reproduce the pre-registry literals
+//! bit-for-bit, so the migration to named tags is invisible to every
+//! differential grid and pinned seed test.
+
+/// Master chain stream: `Pcg64::new(seed).split(MASTER)`.
+pub const MASTER: u64 = 1;
+/// Serial collapsed-runner stream.
+pub const SERIAL_COLLAPSED: u64 = 2;
+/// Serial uncollapsed-runner stream.
+pub const SERIAL_UNCOLLAPSED: u64 = 3;
+
+/// Worker stream family: worker `p` splits `WORKER_BASE + p` off the root.
+pub const WORKER_BASE: u64 = 1000;
+/// Claimed width of the worker family (worker ids 0..WORKER_SPAN).
+pub const WORKER_SPAN: u64 = 1000;
+
+/// Per-block substream family for deterministic row sweeps. Parent is the
+/// **worker/owner stream**, not the root, so the family is unbounded
+/// upward (block counts scale with N); the base stays clear of small
+/// scalar tags for readability in traces.
+pub const BLOCK_BASE: u64 = 2000;
+
+/// Held-out mask stream for `pibp predict --missing` (root = predict seed).
+pub const PREDICT_MASK: u64 = 4242;
+/// Held-out evaluator stream.
+pub const EVAL: u64 = 7777;
+
+/// Replica-chain family: chain `c > 0` derives its seed from
+/// `root.split(CHAIN_BASE + c)`; chain 0 keeps the root seed itself.
+pub const CHAIN_BASE: u64 = 8000;
+/// Claimed width of the chain family.
+pub const CHAIN_SPAN: u64 = 1000;
+
+/// Serving family: posterior sample `s` answers queries from
+/// `Pcg64::new(query_seed).split(SERVE_BASE + s)`.
+pub const SERVE_BASE: u64 = 9000;
+/// Claimed width of the serve family — everything up to the next root tag
+/// (`SYNTH_DATA`), so reservoirs of any realistic size fit.
+pub const SERVE_SPAN: u64 = SYNTH_DATA - SERVE_BASE;
+
+/// Synthetic linear-Gaussian data generation stream.
+pub const SYNTH_DATA: u64 = 0x5D17;
+/// Cambridge-figure data generation stream.
+pub const CAMBRIDGE_DATA: u64 = 0xCA4B;
+
+/// Stream tag for worker `p`.
+#[inline]
+pub fn worker(p: usize) -> u64 {
+    debug_assert!((p as u64) < WORKER_SPAN, "worker id {p} outside claimed tag range");
+    WORKER_BASE + p as u64
+}
+
+/// Stream tag for row-sweep block `b` (worker-stream namespace).
+#[inline]
+pub fn block(b: usize) -> u64 {
+    BLOCK_BASE + b as u64
+}
+
+/// Seed-derivation tag for replica chain `c` (`c >= 1`; chain 0 is the root).
+#[inline]
+pub fn chain(c: usize) -> u64 {
+    debug_assert!((c as u64) < CHAIN_SPAN, "chain id {c} outside claimed tag range");
+    CHAIN_BASE + c as u64
+}
+
+/// Stream tag for posterior sample `s` in the serving engine.
+#[inline]
+pub fn serve_sample(s: usize) -> u64 {
+    debug_assert!((s as u64) < SERVE_SPAN, "sample slot {s} outside claimed tag range");
+    SERVE_BASE + s as u64
+}
+
+/// Which parent stream a tag family is split from (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parent {
+    /// Split directly from a root `Pcg64::new(seed)` stream.
+    Root,
+    /// Split from a worker/owner stream inside `parallel`.
+    Worker,
+}
+
+/// One registered tag family: a half-open range `[base, base + span)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Family {
+    pub name: &'static str,
+    pub parent: Parent,
+    pub base: u64,
+    pub span: u64,
+}
+
+/// Every tag family in the tree. New stream families MUST be added here;
+/// the non-overlap tests below then prove they cannot collide with any
+/// existing family in the same namespace.
+pub const FAMILIES: &[Family] = &[
+    Family { name: "MASTER", parent: Parent::Root, base: MASTER, span: 1 },
+    Family { name: "SERIAL_COLLAPSED", parent: Parent::Root, base: SERIAL_COLLAPSED, span: 1 },
+    Family { name: "SERIAL_UNCOLLAPSED", parent: Parent::Root, base: SERIAL_UNCOLLAPSED, span: 1 },
+    Family { name: "WORKER", parent: Parent::Root, base: WORKER_BASE, span: WORKER_SPAN },
+    Family { name: "BLOCK", parent: Parent::Worker, base: BLOCK_BASE, span: u64::MAX - BLOCK_BASE },
+    Family { name: "PREDICT_MASK", parent: Parent::Root, base: PREDICT_MASK, span: 1 },
+    Family { name: "EVAL", parent: Parent::Root, base: EVAL, span: 1 },
+    Family { name: "CHAIN", parent: Parent::Root, base: CHAIN_BASE, span: CHAIN_SPAN },
+    Family { name: "SERVE", parent: Parent::Root, base: SERVE_BASE, span: SERVE_SPAN },
+    Family { name: "SYNTH_DATA", parent: Parent::Root, base: SYNTH_DATA, span: 1 },
+    Family { name: "CAMBRIDGE_DATA", parent: Parent::Root, base: CAMBRIDGE_DATA, span: 1 },
+];
+
+// Compile-time non-overlap proof for the root namespace: each family's
+// end must not reach the next family's base (families listed in ascending
+// base order). Editing a base or span into a collision is a build error.
+const _: () = {
+    assert!(MASTER + 1 <= SERIAL_COLLAPSED);
+    assert!(SERIAL_COLLAPSED + 1 <= SERIAL_UNCOLLAPSED);
+    assert!(SERIAL_UNCOLLAPSED + 1 <= WORKER_BASE);
+    assert!(WORKER_BASE + WORKER_SPAN <= PREDICT_MASK);
+    assert!(PREDICT_MASK + 1 <= EVAL);
+    assert!(EVAL + 1 <= CHAIN_BASE);
+    assert!(CHAIN_BASE + CHAIN_SPAN <= SERVE_BASE);
+    assert!(SERVE_BASE + SERVE_SPAN <= SYNTH_DATA);
+    assert!(SYNTH_DATA + 1 <= CAMBRIDGE_DATA);
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// General pairwise-disjointness check, per namespace. The const
+    /// asserts above already pin the root chain; this test additionally
+    /// covers any future family added out of ascending order, and the
+    /// worker namespace.
+    #[test]
+    fn families_are_pairwise_disjoint_per_namespace() {
+        for (i, a) in FAMILIES.iter().enumerate() {
+            for b in FAMILIES.iter().skip(i + 1) {
+                if a.parent != b.parent {
+                    continue;
+                }
+                let disjoint =
+                    a.base.saturating_add(a.span) <= b.base || b.base.saturating_add(b.span) <= a.base;
+                assert!(
+                    disjoint,
+                    "tag families {} [{}, +{}) and {} [{}, +{}) overlap",
+                    a.name, a.base, a.span, b.name, b.base, b.span
+                );
+            }
+        }
+    }
+
+    /// The registry reproduces the historical literal tags bit-for-bit:
+    /// this is what makes the call-site migration invisible to the
+    /// differential grids and every pinned-seed test.
+    #[test]
+    fn values_match_the_pre_registry_literals() {
+        assert_eq!(MASTER, 1);
+        assert_eq!(SERIAL_COLLAPSED, 2);
+        assert_eq!(SERIAL_UNCOLLAPSED, 3);
+        assert_eq!(worker(0), 1000);
+        assert_eq!(worker(7), 1007);
+        assert_eq!(block(0), 2000);
+        assert_eq!(block(31), 2031);
+        assert_eq!(PREDICT_MASK, 4242);
+        assert_eq!(EVAL, 7777);
+        assert_eq!(chain(1), 8001);
+        assert_eq!(chain(2), 8002);
+        assert_eq!(serve_sample(0), 9000);
+        assert_eq!(serve_sample(5), 9005);
+        assert_eq!(SYNTH_DATA, 0x5D17);
+        assert_eq!(CAMBRIDGE_DATA, 0xCA4B);
+    }
+
+    #[test]
+    fn every_constant_appears_in_the_families_table() {
+        let find = |n: &str| {
+            FAMILIES
+                .iter()
+                .find(|f| f.name == n)
+                .unwrap_or_else(|| panic!("family {n} missing from FAMILIES"))
+        };
+        assert_eq!(find("WORKER").base, WORKER_BASE);
+        assert_eq!(find("BLOCK").base, BLOCK_BASE);
+        assert_eq!(find("CHAIN").base, CHAIN_BASE);
+        assert_eq!(find("SERVE").base, SERVE_BASE);
+        assert_eq!(find("BLOCK").parent, Parent::Worker);
+        assert_eq!(find("SERVE").parent, Parent::Root);
+    }
+}

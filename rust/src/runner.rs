@@ -23,7 +23,7 @@ use crate::metrics::online::{DiagState, DiagSummary, StopRule, STALL_WINDOW};
 use crate::metrics::{Trace, TracePoint};
 use crate::model::{GlobalParams, LinGauss};
 use crate::obs::{self, RunReport};
-use crate::rng::Pcg64;
+use crate::rng::{tags, Pcg64};
 use crate::samplers::collapsed::{CollapsedGibbs, Mode};
 use crate::samplers::eval::HeldoutEval;
 use crate::samplers::uncollapsed::UncollapsedGibbs;
@@ -205,7 +205,7 @@ fn setup_run(cfg: &RunConfig) -> Result<RunSetup> {
     Ok(RunSetup {
         train,
         lg: LinGauss::new(cfg.sigma_x, cfg.sigma_a),
-        eval_rng: Pcg64::new(cfg.seed).split(7777),
+        eval_rng: Pcg64::new(cfg.seed).split(tags::EVAL),
         // the evaluator owns its persistent sweep pool for the whole run
         // (spawned here once, reused by every scheduled evaluation); the
         // coordinator workers each spawn their own at Coordinator::new
@@ -442,13 +442,13 @@ pub const DIAG_MAX_LAG: usize = 256;
 /// Root seed for replica chain `c` of a multi-chain run: chain 0 keeps
 /// the root seed (so a one-chain diagnosed run IS the plain run), higher
 /// chains derive a decorrelated 64-bit seed from the reserved
-/// `split(8000 + c)` diagnostics stream (see the RNG tag table in
+/// `split(tags::chain(c))` diagnostics stream (see the RNG tag table in
 /// docs/ARCHITECTURE.md).
 pub fn chain_seed(root: u64, c: usize) -> u64 {
     if c == 0 {
         root
     } else {
-        Pcg64::new(root).split(8000 + c as u64).next_u64()
+        Pcg64::new(root).split(tags::chain(c)).next_u64()
     }
 }
 
@@ -664,7 +664,7 @@ fn run_serial(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOut
     let mut vt = SerialVtime::new(cfg.comm);
 
     if cfg.sampler == SamplerKind::Uncollapsed {
-        let mut rng = Pcg64::new(cfg.seed).split(3);
+        let mut rng = Pcg64::new(cfg.seed).split(tags::SERIAL_UNCOLLAPSED);
         let k_fixed = cfg.k_cap.min(16);
         let mut s = UncollapsedGibbs::new(
             train.x.clone(), k_fixed, lg, cfg.alpha, sampler_options(cfg), &mut rng,
@@ -701,7 +701,7 @@ fn run_serial(cfg: &RunConfig, mut progress: impl FnMut(usize)) -> Result<RunOut
     } else {
         Mode::Predictive
     };
-    let mut rng = Pcg64::new(cfg.seed).split(2);
+    let mut rng = Pcg64::new(cfg.seed).split(tags::SERIAL_COLLAPSED);
     let mut s = CollapsedGibbs::new(
         train.x.clone(), lg, cfg.alpha, mode, sampler_options(cfg), &mut rng,
     );

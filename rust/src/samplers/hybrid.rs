@@ -20,11 +20,12 @@
 //! contract exactly:
 //!
 //! * **RNG streams** — from a root `seed`, the master draws from
-//!   `Pcg64::new(seed).split(1)` and simulated worker `p` draws from
-//!   `Pcg64::new(seed).split(1000 + p)`, the same derivation used by
+//!   `Pcg64::new(seed).split(tags::MASTER)` and simulated worker `p`
+//!   draws from `Pcg64::new(seed).split(tags::worker(p))`, the same
+//!   derivation used by
 //!   `coordinator::master` / `coordinator::worker`; each uncollapsed
 //!   sweep follows the [`crate::parallel`] per-row-block discipline (one
-//!   parent draw, then `split(2000 + b)` per block), so the chain is also
+//!   parent draw, then `split(tags::block(b))` per block), so the chain is
 //!   identical to a coordinator running any `threads_per_worker`;
 //! * **draw order** — the master step picks the *next* p′ before sampling
 //!   globals (the coordinator needs p′ early for its demotion decision),
@@ -51,7 +52,7 @@ use crate::linalg::Mat;
 use crate::model::state::{FeatureState, Kernel};
 use crate::model::{ibp, GlobalParams, LinGauss};
 use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
-use crate::rng::Pcg64;
+use crate::rng::{tags, Pcg64};
 use crate::samplers::tail::TailProposer;
 use crate::samplers::uncollapsed::residuals;
 use crate::samplers::{IterStats, SamplerOptions};
@@ -135,9 +136,9 @@ pub struct HybridSampler {
     tail_state: Option<FeatureState>,
     /// Per-shard copies of X (fixed): suff-stat accumulation input.
     x_shards: Vec<Mat>,
-    /// Master RNG stream: `Pcg64::new(seed).split(1)` (coordinator layout).
+    /// Master RNG stream: `Pcg64::new(seed).split(tags::MASTER)`.
     master_rng: Pcg64,
-    /// Per-processor streams: `Pcg64::new(seed).split(1000 + p)`.
+    /// Per-processor streams: `Pcg64::new(seed).split(tags::worker(p))`.
     worker_rngs: Vec<Pcg64>,
     /// ‖X‖², fixed for the run (the σ_X conditional's tr XᵀX term).
     tr_xx: f64,
@@ -154,9 +155,9 @@ impl HybridSampler {
     pub fn new(x: Mat, lg: LinGauss, alpha: f64, cfg: HybridConfig, seed: u64) -> Self {
         let n = x.rows();
         let shards = make_shards(n, cfg.processors);
-        let mut master_rng = Pcg64::new(seed).split(1);
+        let mut master_rng = Pcg64::new(seed).split(tags::MASTER);
         let worker_rngs: Vec<Pcg64> = (0..cfg.processors)
-            .map(|p| Pcg64::new(seed).split(1000 + p as u64))
+            .map(|p| Pcg64::new(seed).split(tags::worker(p)))
             .collect();
         let p_prime = master_rng.below(cfg.processors as u64) as usize;
         // start from the empty feature set: the tail sampler on p′

@@ -17,7 +17,7 @@
 //!   samples). Posterior samples are embarrassingly parallel, so the
 //!   engine fans the **samples** out across a persistent
 //!   [`crate::parallel::ThreadPool`]: sample `s` infers its latents on
-//!   its own derived stream (`Pcg64::new(seed).split(9000 + s)`) into a
+//!   its own derived stream (`Pcg64::new(seed).split(tags::serve_sample(s))`) into a
 //!   private per-sample buffer, and the buffers are merged in sample
 //!   order — so every query result is byte-identical for every thread
 //!   count and every task completion ("arrival") order.
@@ -27,19 +27,26 @@
 //! one-shot experiments but as posterior artifacts answering held-out
 //! prediction and imputation queries.
 
+// Compiler-enforced twin of detlint rule R4 (no-panic-coordinator): deny
+// `unwrap()` outside test builds. Proven-infallible sites carry a scoped
+// `#[allow]` plus a detlint waiver with the proof. CI runs clippy with
+// this lint promoted to blocking.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 use crate::linalg::Mat;
 use crate::model::missing::{masked_sweep, reconstruct_into, Mask};
 use crate::model::state::{FeatureState, Kernel};
 use crate::model::LinGauss;
 use crate::obs;
 use crate::parallel::{par_sweep_rows, ExecConfig, ParallelCtx};
-use crate::rng::Pcg64;
+use crate::rng::{tags, Pcg64};
 use crate::samplers::uncollapsed::residuals;
 
-/// RNG tag base for per-sample query streams (see the repo-wide tag table
+/// RNG tag base for per-sample query streams — an alias of the central
+/// registry entry (`rng::tags::SERVE_BASE`; see the repo-wide tag table
 /// in docs/ARCHITECTURE.md): sample s draws from
-/// `Pcg64::new(query_seed).split(QUERY_TAG_BASE + s)`.
-pub const QUERY_TAG_BASE: u64 = 9000;
+/// `Pcg64::new(query_seed).split(tags::serve_sample(s))`.
+pub const QUERY_TAG_BASE: u64 = tags::SERVE_BASE;
 
 /// One thinned posterior draw: the global feature assignment at that
 /// iteration plus every global parameter needed to answer queries.
@@ -248,7 +255,7 @@ impl<'a> PredictEngine<'a> {
     }
 
     fn sample_rng(seed: u64, s: usize) -> Pcg64 {
-        Pcg64::new(seed).split(QUERY_TAG_BASE + s as u64)
+        Pcg64::new(seed).split(tags::serve_sample(s))
     }
 
     /// Run `f(s, sample)` for every posterior sample — possibly in
@@ -267,6 +274,7 @@ impl<'a> PredictEngine<'a> {
         });
         slots
             .into_iter()
+            // detlint:allow(no-panic-coordinator): ctx.run applies f to every slice element exactly once (executor contract), so every slot is Some
             .map(|(_, r)| r.expect("ctx.run visits every sample slot"))
             .collect()
     }

@@ -1,0 +1,30 @@
+// Fixture: everything here is comment / string / char-literal content —
+// a correct lexer reports ZERO findings for this file on any path.
+// rng.split(1000 + p) in a line comment must not fire.
+
+/* block comment with Instant::now() and rng.split(7777)
+   /* nested block comment: unsafe { HashMap::new() } */
+   still inside the outer comment: x.unwrap() panic!("no")
+*/
+
+/// Doc comment: the master uses `root.split(1)` and workers
+/// `root.split(1000 + p)`; never write `thread::spawn` by hand.
+fn strings() {
+    let _plain = "rng.split(2000) Instant::now() unsafe thread::spawn";
+    let _raw = r#"x.unwrap() with "quotes" and rng.split(8000 + c)"#;
+    let _rawhash = r##"one "#" deep: SystemTime::now() HashMap"##;
+    let _bytes = b".split(9000) panic!";
+    let _rawbytes = br#"thread::scope(|s| s.spawn)"#;
+    let _multi = "line one
+        line two with rng.split(4242) still a string";
+    let _ch = '"'; // a quote char, then a comment: rng.split(1)
+    let _esc = '\''; // escaped quote char
+    let _nl = '\n';
+    let _lifetime: &'static str = "lifetime, not a char literal";
+    let _amb = 'r'; // char 'r', not a raw-string prefix
+}
+
+struct G<'a> {
+    // generic lifetimes must not eat the closing angle bracket
+    x: &'a str,
+}

@@ -1,0 +1,10 @@
+// Fixture: R1 rng-tag-literal must fire on every raw-tag split below.
+// (Fixtures are lexed, never compiled — paths are supplied by the test.)
+
+fn bad(rng: &Pcg64, p: usize, c: usize) {
+    let _a = rng.split(1); // literal scalar tag
+    let _b = rng.split(1000 + p as u64); // literal family base
+    let _c = rng.split(0x5D17); // hex literal tag
+    let _d = Pcg64::new(7).split(8000 + c as u64).next_u64();
+    let _e = rng.split(QUERY_TAG_BASE + 3); // constant, but not from the registry
+}

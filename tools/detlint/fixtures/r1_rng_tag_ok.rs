@@ -1,0 +1,11 @@
+// Fixture: R1-clean split call sites — registry names, helper fns, and
+// str::split with literal separators.
+
+fn good(rng: &Pcg64, s: &str, p: usize) {
+    let _a = rng.split(tags::MASTER);
+    let _b = rng.split(tags::worker(p));
+    let _c = Pcg64::new(7).split(MASTER);
+    let _d = rng.split(worker(p));
+    let _e: Vec<&str> = s.split(',').collect();
+    let _f: Vec<&str> = s.split("PIBP_PROP_SEED=").collect();
+}

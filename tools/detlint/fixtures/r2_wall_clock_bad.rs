@@ -1,0 +1,7 @@
+// Fixture: R2 wall-clock-in-chain must fire on both sites below when the
+// file is placed outside the obs/bench/main/runner allowlist.
+
+fn bad() {
+    let _t0 = Instant::now();
+    let _wall = std::time::SystemTime::now();
+}

@@ -1,0 +1,13 @@
+// Fixture: R3 hash-order must fire in chain-affecting modules — HashMap
+// iteration order is seeded per process, so any fold over it can change
+// float accumulation order run-to-run.
+
+use std::collections::HashMap;
+
+fn bad(keys: &[Vec<u8>]) -> f64 {
+    let mut counts: HashMap<Vec<u8>, usize> = HashMap::new();
+    for k in keys {
+        *counts.entry(k.clone()).or_insert(0) += 1;
+    }
+    counts.values().map(|&c| c as f64).sum()
+}

@@ -1,0 +1,14 @@
+// Fixture: R4 no-panic-coordinator must fire on all four panic paths
+// when the file is placed in coordinator/, parallel/pool.rs, or serve/.
+
+fn bad(x: Option<u32>, y: Result<u32, ()>) -> u32 {
+    let a = x.unwrap();
+    let b = y.expect("coordinator must not panic");
+    if a > b {
+        panic!("boom");
+    }
+    match a {
+        0 => unreachable!(),
+        n => n,
+    }
+}

@@ -1,0 +1,6 @@
+// Fixture: R5 undocumented-unsafe must fire — no SAFETY comment on the
+// block below.
+
+fn bad(job: Task<'_>) -> Job {
+    unsafe { std::mem::transmute::<Task<'_>, Task<'static>>(job) }
+}

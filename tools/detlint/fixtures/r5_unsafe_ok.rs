@@ -1,0 +1,9 @@
+// Fixture: R5-clean — the SAFETY comment directly above the block
+// documents the soundness argument.
+
+fn good(job: Task<'_>) -> Job {
+    // SAFETY: the latch below blocks until the job has run to
+    // completion, so no borrow escapes this stack frame.
+    let widened = unsafe { std::mem::transmute::<Task<'_>, Task<'static>>(job) };
+    widened
+}

@@ -1,0 +1,11 @@
+// Fixture: R6 stray-thread must fire on all three spawn forms when the
+// file is placed outside parallel/.
+
+fn bad() {
+    let h = std::thread::spawn(|| 1 + 1);
+    std::thread::scope(|s| {
+        s.spawn(|| ());
+    });
+    let _b = std::thread::Builder::new().name("rogue".into());
+    h.join().ok();
+}

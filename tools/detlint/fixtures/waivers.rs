@@ -1,0 +1,19 @@
+// Fixture: waiver handling. One properly waived finding, one finding
+// whose waiver names the wrong rule (stays unwaived), one reasonless
+// waiver (a waiver-syntax finding), and one unused waiver.
+
+fn waived(x: Option<u32>) -> u32 {
+    // detlint:allow(no-panic-coordinator): x was checked non-None by the caller two lines up
+    x.unwrap()
+}
+
+fn wrong_rule(y: Option<u32>) -> u32 {
+    // detlint:allow(hash-order): this names the wrong rule entirely
+    y.unwrap()
+}
+
+// detlint:allow(no-panic-coordinator):
+fn reasonless() {}
+
+// detlint:allow(stray-thread): nothing below ever spawns — stale pragma
+fn unused_waiver() {}

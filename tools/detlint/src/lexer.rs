@@ -1,0 +1,436 @@
+//! A minimal hand-rolled Rust lexer — just enough token structure for the
+//! determinism rules, with the parts that matter for *not lying* done
+//! carefully: comments (line, doc, nested block), string / raw-string /
+//! byte-string / char literals, and the `'x'`-char vs `'a`-lifetime
+//! ambiguity. Everything the rules match (`.split(`, `Instant::now`,
+//! `unsafe`, …) is matched against real code tokens, never against text
+//! inside comments or string literals.
+//!
+//! No `syn`, no dependencies: the repo's vendoring policy is offline, and
+//! the subset of Rust lexical structure needed here is small and stable.
+
+/// Token kind. Literal *content* is irrelevant to every rule except
+/// comments (waivers, `// SAFETY:`), so only comments carry their text.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword (`split`, `unsafe`, `pub`, `r#async`, …).
+    Ident(String),
+    /// `'a` — lifetime or loop label.
+    Lifetime,
+    /// Numeric literal (`1000`, `0x5D17`, `2.0`, `1_000`).
+    Num,
+    /// String literal of any flavour: `"…"`, `r"…"`, `r#"…"#`, `b"…"`.
+    Str,
+    /// Char or byte literal: `'x'`, `'\n'`, `b'x'`.
+    Char,
+    /// Any single punctuation / operator character.
+    Punct(char),
+    /// Comment of any flavour (`//`, `///`, `//!`, `/* … */`, nested),
+    /// carrying its raw text including delimiters.
+    Comment(String),
+}
+
+/// One token with its 1-based source line span (block comments can span
+/// many lines; everything else starts and ends on `line`).
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+    pub end_line: u32,
+}
+
+impl Token {
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.tok == Tok::Punct(c)
+    }
+
+    pub fn is_comment(&self) -> bool {
+        matches!(self.tok, Tok::Comment(_))
+    }
+}
+
+/// Lex `src` into tokens. Unterminated constructs (string/comment at EOF)
+/// terminate at end of input rather than erroring: the linter must never
+/// crash on the tree it guards, and rustc will reject such files anyway.
+pub fn lex(src: &str) -> Vec<Token> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < n {
+        let c = cs[i];
+
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // ---- comments ------------------------------------------------
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            out.push(Token {
+                tok: Tok::Comment(cs[start..i].iter().collect()),
+                line,
+                end_line: line,
+            });
+            continue;
+        }
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.push(Token {
+                tok: Tok::Comment(cs[start..i].iter().collect()),
+                line: start_line,
+                end_line: line,
+            });
+            continue;
+        }
+
+        // ---- raw / byte string prefixes ------------------------------
+        // r"…", r#"…"#, br"…", b"…", b'…' — checked before plain ident
+        // lexing so the prefix letters don't come out as an Ident.
+        if c == 'r' || c == 'b' {
+            if let Some((next_i, next_line, tok)) = lex_prefixed_literal(&cs, i, line) {
+                out.push(Token { tok, line, end_line: next_line });
+                line = next_line;
+                i = next_i;
+                continue;
+            }
+        }
+
+        // ---- plain string --------------------------------------------
+        if c == '"' {
+            let start_line = line;
+            i += 1;
+            while i < n && cs[i] != '"' {
+                if cs[i] == '\\' {
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            i += 1; // closing quote (or EOF)
+            out.push(Token { tok: Tok::Str, line: start_line, end_line: line });
+            continue;
+        }
+
+        // ---- char literal vs lifetime --------------------------------
+        if c == '\'' {
+            // 'x' / '\n' are chars; 'a / 'static are lifetimes. After the
+            // quote: a backslash means char; <single char>' means char;
+            // anything else is a lifetime (including '' which rustc
+            // rejects — treated as a zero-length lifetime here).
+            if i + 1 < n && cs[i + 1] == '\\' {
+                i += 2; // quote + backslash
+                while i < n && cs[i] != '\'' {
+                    if cs[i] == '\\' {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                i += 1;
+                out.push(Token { tok: Tok::Char, line, end_line: line });
+                continue;
+            }
+            if i + 2 < n && cs[i + 2] == '\'' && cs[i + 1] != '\'' {
+                i += 3;
+                out.push(Token { tok: Tok::Char, line, end_line: line });
+                continue;
+            }
+            i += 1;
+            while i < n && (cs[i] == '_' || cs[i].is_alphanumeric()) {
+                i += 1;
+            }
+            out.push(Token { tok: Tok::Lifetime, line, end_line: line });
+            continue;
+        }
+
+        // ---- identifiers / keywords ----------------------------------
+        if c == '_' || c.is_alphabetic() {
+            let start = i;
+            while i < n && (cs[i] == '_' || cs[i].is_alphanumeric()) {
+                i += 1;
+            }
+            out.push(Token {
+                tok: Tok::Ident(cs[start..i].iter().collect()),
+                line,
+                end_line: line,
+            });
+            continue;
+        }
+
+        // ---- numbers -------------------------------------------------
+        if c.is_ascii_digit() {
+            i += 1;
+            while i < n && (cs[i] == '_' || cs[i].is_alphanumeric()) {
+                i += 1;
+            }
+            // fractional part: `.` followed by a digit (leaves `1..k`
+            // ranges and method calls like `1.max(x)` alone)
+            if i + 1 < n && cs[i] == '.' && cs[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && (cs[i] == '_' || cs[i].is_alphanumeric()) {
+                    i += 1;
+                }
+            }
+            out.push(Token { tok: Tok::Num, line, end_line: line });
+            continue;
+        }
+
+        out.push(Token { tok: Tok::Punct(c), line, end_line: line });
+        i += 1;
+    }
+    out
+}
+
+/// Try to lex `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, `b'…'` at `i` (which
+/// points at `r` or `b`). Returns `(index after, line after, token)`, or
+/// `None` if this is an ordinary identifier starting with r/b.
+fn lex_prefixed_literal(cs: &[char], i: usize, line: u32) -> Option<(usize, u32, Tok)> {
+    let n = cs.len();
+    let mut j = i;
+    let mut raw = false;
+    if cs[j] == 'b' {
+        j += 1;
+        if j < n && cs[j] == '\'' {
+            // byte char literal b'x' / b'\n'
+            j += 1;
+            if j < n && cs[j] == '\\' {
+                j += 1;
+                while j < n && cs[j] != '\'' {
+                    if cs[j] == '\\' {
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                j += 1;
+            } else {
+                // b'x'
+                j += 1;
+                if j < n && cs[j] == '\'' {
+                    j += 1;
+                } else {
+                    return None; // b'a — not a literal rustc accepts
+                }
+            }
+            return Some((j, line, Tok::Char));
+        }
+        if j < n && cs[j] == 'r' {
+            raw = true;
+            j += 1;
+        }
+    } else {
+        // cs[j] == 'r'
+        raw = true;
+        j += 1;
+    }
+
+    if raw {
+        let mut hashes = 0usize;
+        while j < n && cs[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j >= n || cs[j] != '"' {
+            return None; // r#foo raw identifier, or plain ident r…/br…
+        }
+        j += 1;
+        let mut ln = line;
+        // scan for `"` followed by `hashes` hash chars
+        'outer: while j < n {
+            if cs[j] == '\n' {
+                ln += 1;
+                j += 1;
+                continue;
+            }
+            if cs[j] == '"' {
+                let mut k = 0usize;
+                while k < hashes {
+                    if j + 1 + k >= n || cs[j + 1 + k] != '#' {
+                        j += 1;
+                        continue 'outer;
+                    }
+                    k += 1;
+                }
+                j += 1 + hashes;
+                return Some((j, ln, Tok::Str));
+            }
+            j += 1;
+        }
+        return Some((j, ln, Tok::Str)); // unterminated: swallow to EOF
+    }
+
+    // b"…" plain byte string
+    if j < n && cs[j] == '"' {
+        j += 1;
+        let mut ln = line;
+        while j < n && cs[j] != '"' {
+            if cs[j] == '\\' {
+                j += 2;
+            } else {
+                if cs[j] == '\n' {
+                    ln += 1;
+                }
+                j += 1;
+            }
+        }
+        j += 1;
+        return Some((j, ln, Tok::Str));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let toks = kinds("let x = rng.split(1000 + p);");
+        assert!(toks.contains(&Tok::Ident("split".into())));
+        assert!(toks.contains(&Tok::Num));
+        assert!(toks.contains(&Tok::Punct('.')));
+        assert_eq!(toks.iter().filter(|t| matches!(t, Tok::Num)).count(), 1);
+    }
+
+    #[test]
+    fn hex_and_underscored_numbers_are_single_tokens() {
+        assert_eq!(kinds("0x5D17"), vec![Tok::Num]);
+        assert_eq!(kinds("1_000_000u64"), vec![Tok::Num]);
+        assert_eq!(kinds("2.5e3"), vec![Tok::Num]);
+    }
+
+    #[test]
+    fn line_and_doc_comments() {
+        let toks = lex("// plain\n/// doc\n//! inner\ncode");
+        assert_eq!(toks.len(), 4);
+        assert!(toks[0].is_comment() && toks[1].is_comment() && toks[2].is_comment());
+        assert_eq!(toks[3].ident(), Some("code"));
+        assert_eq!(toks[3].line, 4);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = lex("/* outer /* inner */ still comment */ after");
+        assert_eq!(toks.len(), 2);
+        assert!(toks[0].is_comment());
+        assert_eq!(toks[1].ident(), Some("after"));
+    }
+
+    #[test]
+    fn block_comment_line_spans() {
+        let toks = lex("/* a\nb\nc */ x");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[0].end_line, 3);
+        assert_eq!(toks[1].line, 3);
+    }
+
+    #[test]
+    fn code_inside_strings_is_not_tokenised() {
+        let toks = kinds(r#"let s = ".split(1000) Instant::now() unsafe";"#);
+        assert!(!toks.contains(&Tok::Ident("Instant".into())));
+        assert!(!toks.contains(&Tok::Ident("unsafe".into())));
+        assert_eq!(toks.iter().filter(|t| matches!(t, Tok::Str)).count(), 1);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_and_embedded_quotes() {
+        let toks = kinds(r##"let s = r#"quote " and .split(7777)"# ; x"##);
+        assert_eq!(toks.iter().filter(|t| matches!(t, Tok::Str)).count(), 1);
+        assert!(!toks.contains(&Tok::Ident("split".into())));
+        assert!(toks.contains(&Tok::Ident("x".into())));
+    }
+
+    #[test]
+    fn multiline_raw_string_tracks_lines() {
+        let toks = lex("r\"a\nb\" x");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[0].end_line, 2);
+        assert_eq!(toks[1].line, 2);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        assert_eq!(kinds(r#"b"bytes""#), vec![Tok::Str]);
+        assert_eq!(kinds("b'x'"), vec![Tok::Char]);
+        assert_eq!(kinds(r"b'\n'"), vec![Tok::Char]);
+        assert_eq!(kinds(r#"br"raw bytes""#), vec![Tok::Str]);
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        assert_eq!(kinds("'x'"), vec![Tok::Char]);
+        assert_eq!(kinds(r"'\n'"), vec![Tok::Char]);
+        assert_eq!(kinds(r"'\''"), vec![Tok::Char]);
+        // lifetime then ident
+        let toks = kinds("&'static str");
+        assert_eq!(
+            toks,
+            vec![Tok::Punct('&'), Tok::Lifetime, Tok::Ident("str".into())]
+        );
+        // lifetime in generics: the `'a` must not eat the `>`
+        let toks = kinds("Foo<'a>");
+        assert!(toks.contains(&Tok::Lifetime));
+        assert!(toks.contains(&Tok::Punct('>')));
+        // char containing a quote-adjacent letter: 'r' is a char, not a
+        // raw-string prefix
+        assert_eq!(kinds("'r'"), vec![Tok::Char]);
+    }
+
+    #[test]
+    fn idents_starting_with_r_or_b_are_plain_idents() {
+        assert_eq!(kinds("rng"), vec![Tok::Ident("rng".into())]);
+        assert_eq!(kinds("b_rows"), vec![Tok::Ident("b_rows".into())]);
+        assert_eq!(kinds("break"), vec![Tok::Ident("break".into())]);
+        assert_eq!(kinds("raw"), vec![Tok::Ident("raw".into())]);
+    }
+
+    #[test]
+    fn split_in_comment_is_a_comment() {
+        let toks = lex("// rng.split(1000 + p) explanation\ncode");
+        assert!(toks[0].is_comment());
+        assert_eq!(toks[1].ident(), Some("code"));
+    }
+}

@@ -1,0 +1,90 @@
+//! # detlint — the pibp determinism linter
+//!
+//! Statically enforces the source-level invariants that the differential
+//! test grids (`parallel_equivalence`, `thread_equivalence`,
+//! `packed_equivalence`, `obs_equivalence`, `diag_equivalence`) can only
+//! probe at runtime: a centrally partitioned RNG stream-tag space, no
+//! wall clock or hash-iteration order in chain-affecting code, no panic
+//! paths in the coordinator, documented `unsafe`, and no threads outside
+//! the sanctioned spawn sites.
+//!
+//! Zero dependencies by design (see `Cargo.toml`); the Rust lexer is
+//! hand-rolled in [`lexer`] and handles exactly the constructs that could
+//! make a text-level linter lie: comments (including nested block
+//! comments), string / raw-string / byte / char literals, and the
+//! char-vs-lifetime ambiguity. Rules and the waiver pragma live in
+//! [`rules`]; the machine-readable JSON report in [`report`].
+//!
+//! Run as `cargo run -p detlint -- rust/src` (exit 1 on any unwaived
+//! finding; `--json <path>` writes the report).
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use rules::{FileReport, TagRegistry};
+
+/// Recursively collect `.rs` files under `root` in sorted (deterministic)
+/// order. A `root` that is itself a file is returned as-is.
+pub fn collect_rs_files(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut out = Vec::new();
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(out);
+    }
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+        let rd = fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+        let mut entries: Vec<PathBuf> = rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(&p, out)?;
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+        Ok(())
+    }
+    walk(root, &mut out)?;
+    Ok(out)
+}
+
+/// Load the `.split` tag allowlist: `<root>/rng/tags.rs` under each root
+/// (merged if several roots carry one). Missing registries are fine —
+/// rule R1 then flags every non-literal `.split` call, which is exactly
+/// right for a tree that hasn't adopted the registry.
+pub fn load_registry(roots: &[PathBuf]) -> TagRegistry {
+    let mut merged = TagRegistry::default();
+    for root in roots {
+        let candidate = root.join("rng").join("tags.rs");
+        if let Ok(src) = fs::read_to_string(&candidate) {
+            let r = TagRegistry::parse(&src);
+            merged.names.extend(r.names);
+        }
+    }
+    merged
+}
+
+/// Lint every `.rs` file under `roots`. Returns the per-file reports
+/// (keyed by the path as constructed from the root argument) and the
+/// number of files checked.
+pub fn run_roots(roots: &[PathBuf]) -> Result<(Vec<FileReport>, usize), String> {
+    let registry = load_registry(roots);
+    let mut reports = Vec::new();
+    let mut files = 0usize;
+    for root in roots {
+        for path in collect_rs_files(root)? {
+            let src = fs::read_to_string(&path)
+                .map_err(|e| format!("reading {}: {e}", path.display()))?;
+            let rel = path.to_string_lossy().replace('\\', "/");
+            reports.push(rules::check_file(&rel, &src, &registry));
+            files += 1;
+        }
+    }
+    Ok((reports, files))
+}

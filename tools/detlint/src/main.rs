@@ -1,0 +1,94 @@
+//! CLI driver. Usage:
+//!
+//! ```text
+//! detlint [--json <path>] [--quiet] <root>...
+//! ```
+//!
+//! Exit codes: 0 = clean (unwaived findings: none), 1 = at least one
+//! unwaived finding, 2 = usage / IO error. Waived findings and unused
+//! waivers are reported but never fail the run; the JSON report (written
+//! before exiting, so CI can upload it on failure) carries everything.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use detlint::rules::{Finding, Waiver};
+use detlint::{report, run_roots};
+
+fn main() -> ExitCode {
+    match run(std::env::args().skip(1).collect()) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            eprintln!("usage: detlint [--json <path>] [--quiet] <root>...");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> Result<ExitCode, String> {
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut json_out: Option<PathBuf> = None;
+    let mut quiet = false;
+    let mut it = args.into_iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => {
+                let p = it.next().ok_or("--json needs a path")?;
+                json_out = Some(PathBuf::from(p));
+            }
+            "--quiet" => quiet = true,
+            "--help" | "-h" => {
+                println!("usage: detlint [--json <path>] [--quiet] <root>...");
+                return Ok(ExitCode::SUCCESS);
+            }
+            _ if a.starts_with('-') => return Err(format!("unknown flag {a}")),
+            _ => roots.push(PathBuf::from(a)),
+        }
+    }
+    if roots.is_empty() {
+        return Err("no roots given".into());
+    }
+
+    let (reports, files) = run_roots(&roots)?;
+    let findings: Vec<Finding> = reports.iter().flat_map(|r| r.findings.clone()).collect();
+    let waivers: Vec<Waiver> = reports.iter().flat_map(|r| r.waivers.clone()).collect();
+
+    let unwaived: Vec<&Finding> = findings.iter().filter(|f| !f.waived).collect();
+    let waived = findings.len() - unwaived.len();
+    let unused: Vec<&Waiver> = waivers.iter().filter(|w| !w.used).collect();
+
+    if let Some(path) = &json_out {
+        let root_strs: Vec<String> =
+            roots.iter().map(|r| r.to_string_lossy().into_owned()).collect();
+        let doc = report::build(&root_strs, files, &findings, &waivers);
+        std::fs::write(path, format!("{doc}\n"))
+            .map_err(|e| format!("writing {}: {e}", path.display()))?;
+    }
+
+    if !quiet {
+        for f in &unwaived {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+        }
+        for w in &unused {
+            println!(
+                "{}:{}: warning: unused waiver for `{}` ({})",
+                w.file, w.line, w.rule, w.reason
+            );
+        }
+        println!(
+            "detlint: {} files, {} unwaived finding(s), {} waived, {} waiver(s) ({} unused)",
+            files,
+            unwaived.len(),
+            waived,
+            waivers.len(),
+            unused.len()
+        );
+    }
+
+    if unwaived.is_empty() {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        Ok(ExitCode::from(1))
+    }
+}

@@ -1,0 +1,195 @@
+//! Machine-readable report, in the same hand-rolled zero-dependency JSON
+//! idiom as the main crate's `config/json.rs`: a tiny value enum with a
+//! `Display`-based serialiser and full string escaping. Key order is
+//! insertion order, so reports are byte-deterministic.
+
+use std::fmt;
+
+use crate::rules::{Finding, Waiver};
+
+/// Minimal JSON value.
+pub enum Json {
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn num(n: impl Into<f64>) -> Json {
+        Json::Num(n.into())
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(xs) => {
+                f.write_str("[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(kvs) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn finding_json(x: &Finding) -> Json {
+    let mut kvs = vec![
+        ("rule".to_string(), Json::str(x.rule)),
+        ("file".to_string(), Json::str(&x.file)),
+        ("line".to_string(), Json::num(x.line)),
+        ("msg".to_string(), Json::str(&x.msg)),
+        ("waived".to_string(), Json::Bool(x.waived)),
+    ];
+    if let Some(r) = &x.waiver_reason {
+        kvs.push(("reason".to_string(), Json::str(r)));
+    }
+    Json::Obj(kvs)
+}
+
+fn waiver_json(w: &Waiver) -> Json {
+    Json::Obj(vec![
+        ("rule".to_string(), Json::str(&w.rule)),
+        ("file".to_string(), Json::str(&w.file)),
+        ("line".to_string(), Json::num(w.line)),
+        ("reason".to_string(), Json::str(&w.reason)),
+        ("used".to_string(), Json::Bool(w.used)),
+    ])
+}
+
+/// Build the full report document.
+pub fn build(
+    roots: &[String],
+    files_checked: usize,
+    findings: &[Finding],
+    waivers: &[Waiver],
+) -> Json {
+    let unwaived = findings.iter().filter(|f| !f.waived).count();
+    let waived = findings.iter().filter(|f| f.waived).count();
+    let unused = waivers.iter().filter(|w| !w.used).count();
+    Json::Obj(vec![
+        ("tool".to_string(), Json::str("detlint")),
+        ("version".to_string(), Json::str(env!("CARGO_PKG_VERSION"))),
+        (
+            "roots".to_string(),
+            Json::Arr(roots.iter().map(Json::str).collect()),
+        ),
+        (
+            "rules".to_string(),
+            Json::Arr(crate::rules::RULE_IDS.iter().map(|r| Json::str(*r)).collect()),
+        ),
+        ("files_checked".to_string(), Json::num(files_checked as u32)),
+        (
+            "summary".to_string(),
+            Json::Obj(vec![
+                ("unwaived".to_string(), Json::num(unwaived as u32)),
+                ("waived".to_string(), Json::num(waived as u32)),
+                ("unused_waivers".to_string(), Json::num(unused as u32)),
+            ]),
+        ),
+        (
+            "findings".to_string(),
+            Json::Arr(findings.iter().map(finding_json).collect()),
+        ),
+        (
+            "waivers".to_string(),
+            Json::Arr(waivers.iter().map(waiver_json).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escaping_and_shape() {
+        let j = Json::Obj(vec![
+            ("k\"ey".to_string(), Json::str("va\\l\nue")),
+            ("n".to_string(), Json::num(3u32)),
+            ("b".to_string(), Json::Bool(true)),
+            ("a".to_string(), Json::Arr(vec![Json::num(1u32), Json::num(2u32)])),
+        ]);
+        assert_eq!(
+            j.to_string(),
+            r#"{"k\"ey":"va\\l\nue","n":3,"b":true,"a":[1,2]}"#
+        );
+    }
+
+    #[test]
+    fn report_schema_has_all_top_level_keys() {
+        let f = Finding {
+            rule: crate::rules::RULE_RNG_TAG,
+            file: "a.rs".into(),
+            line: 3,
+            msg: "m".into(),
+            waived: true,
+            waiver_reason: Some("because".into()),
+        };
+        let w = Waiver {
+            rule: "rng-tag-literal".into(),
+            file: "a.rs".into(),
+            line: 2,
+            target_line: 3,
+            reason: "because".into(),
+            used: true,
+        };
+        let doc = build(&["rust/src".into()], 1, &[f], &[w]).to_string();
+        for key in [
+            "\"tool\"", "\"version\"", "\"roots\"", "\"rules\"", "\"files_checked\"",
+            "\"summary\"", "\"unwaived\"", "\"waived\"", "\"unused_waivers\"",
+            "\"findings\"", "\"waivers\"", "\"reason\"",
+        ] {
+            assert!(doc.contains(key), "missing {key} in {doc}");
+        }
+        assert!(doc.contains("\"unwaived\":0"));
+        assert!(doc.contains("\"waived\":1"));
+    }
+}

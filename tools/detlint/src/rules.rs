@@ -1,0 +1,794 @@
+//! The determinism rules, the `#[cfg(test)]` skip, and waiver handling.
+//!
+//! Rules are named and individually waivable with an inline pragma on the
+//! line above (or the same line as) the finding:
+//!
+//! ```text
+//! // detlint:allow(rule-id): one-line justification
+//! offending_code();
+//! ```
+//!
+//! A waiver with no justification is itself a finding (`waiver-syntax`):
+//! the whole point is that every exception carries its proof in-tree.
+//! Unused waivers are reported as warnings (not failures) so stale
+//! pragmas get cleaned up.
+//!
+//! | id                    | scope                                        | invariant |
+//! |-----------------------|----------------------------------------------|-----------|
+//! | `rng-tag-literal`     | everywhere                                   | `.split(tag)` must use the `rng/tags.rs` registry, not a numeric literal |
+//! | `wall-clock-in-chain` | all but `obs/`, `bench/`, `main.rs`, `runner.rs` | no `Instant::now` / `SystemTime` where the chain could see it |
+//! | `hash-order`          | `coordinator/ samplers/ model/ parallel/ serve/` | no `HashMap`/`HashSet` (iteration order is hasher-seeded) |
+//! | `no-panic-coordinator`| `coordinator/`, `parallel/pool.rs`, `serve/` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` |
+//! | `undocumented-unsafe` | everywhere                                   | every `unsafe` block carries a `// SAFETY:` comment |
+//! | `stray-thread`        | all but `parallel/`                          | no `thread::spawn` / `thread::scope` / `thread::Builder` |
+//!
+//! Code under `#[cfg(test)]` (and `#[test]` functions) is exempt from all
+//! rules: tests may panic, time themselves, and spawn threads freely.
+
+use std::collections::BTreeSet;
+
+use crate::lexer::{lex, Tok, Token};
+
+pub const RULE_RNG_TAG: &str = "rng-tag-literal";
+pub const RULE_WALL_CLOCK: &str = "wall-clock-in-chain";
+pub const RULE_HASH_ORDER: &str = "hash-order";
+pub const RULE_NO_PANIC: &str = "no-panic-coordinator";
+pub const RULE_UNSAFE: &str = "undocumented-unsafe";
+pub const RULE_STRAY_THREAD: &str = "stray-thread";
+pub const RULE_WAIVER_SYNTAX: &str = "waiver-syntax";
+
+/// All enforceable rule ids (what `detlint:allow(...)` may name).
+pub const RULE_IDS: &[&str] = &[
+    RULE_RNG_TAG,
+    RULE_WALL_CLOCK,
+    RULE_HASH_ORDER,
+    RULE_NO_PANIC,
+    RULE_UNSAFE,
+    RULE_STRAY_THREAD,
+];
+
+/// One rule violation (possibly waived).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+    pub waived: bool,
+    pub waiver_reason: Option<String>,
+}
+
+/// One parsed `detlint:allow` pragma.
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    pub rule: String,
+    pub file: String,
+    /// Line of the pragma comment itself.
+    pub line: u32,
+    /// Line of the first code token after the pragma — what it covers.
+    pub target_line: u32,
+    pub reason: String,
+    /// Set when a finding matched this waiver.
+    pub used: bool,
+}
+
+/// Everything the linter learned about one file.
+#[derive(Clone, Debug, Default)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub waivers: Vec<Waiver>,
+}
+
+/// The `.split(…)` allowlist parsed from `rng/tags.rs`: names of
+/// `pub const NAME: u64` items and `pub fn name(…)` helpers.
+#[derive(Clone, Debug, Default)]
+pub struct TagRegistry {
+    pub names: BTreeSet<String>,
+}
+
+impl TagRegistry {
+    /// Parse the registry source. Only u64 consts count (the `FAMILIES`
+    /// table itself must not legitimise a raw tag expression).
+    pub fn parse(src: &str) -> Self {
+        let toks = lex(src);
+        let code: Vec<&Token> = toks.iter().filter(|t| !t.is_comment()).collect();
+        let mut names = BTreeSet::new();
+        let mut i = 0;
+        while i < code.len() {
+            if code[i].ident() == Some("pub") {
+                match code.get(i + 1).and_then(|t| t.ident()) {
+                    Some("const") => {
+                        // pub const NAME : u64 =
+                        if let (Some(name), true, Some("u64")) = (
+                            code.get(i + 2).and_then(|t| t.ident()),
+                            code.get(i + 3).is_some_and(|t| t.is_punct(':')),
+                            code.get(i + 4).and_then(|t| t.ident()),
+                        ) {
+                            names.insert(name.to_string());
+                        }
+                    }
+                    Some("fn") => {
+                        if let Some(name) = code.get(i + 2).and_then(|t| t.ident()) {
+                            names.insert(name.to_string());
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+        Self { names }
+    }
+}
+
+/// Path scoping, on `/`-normalised relative paths.
+struct Scope<'a> {
+    path: &'a str,
+    file_name: &'a str,
+}
+
+impl<'a> Scope<'a> {
+    fn new(path: &'a str) -> Self {
+        let file_name = path.rsplit('/').next().unwrap_or(path);
+        Self { path, file_name }
+    }
+
+    fn in_dir(&self, dir: &str) -> bool {
+        // matches "…/<dir>/…" and a leading "<dir>/…"
+        self.path.contains(&format!("/{dir}/")) || self.path.starts_with(&format!("{dir}/"))
+    }
+
+    fn wall_clock_allowed(&self) -> bool {
+        self.in_dir("obs")
+            || self.in_dir("bench")
+            || self.file_name == "main.rs"
+            || self.file_name == "runner.rs"
+    }
+
+    fn hash_order_scoped(&self) -> bool {
+        ["coordinator", "samplers", "model", "parallel", "serve"]
+            .iter()
+            .any(|d| self.in_dir(d))
+    }
+
+    fn no_panic_scoped(&self) -> bool {
+        self.in_dir("coordinator")
+            || self.in_dir("serve")
+            || (self.in_dir("parallel") && self.file_name == "pool.rs")
+    }
+
+    fn thread_allowed(&self) -> bool {
+        self.in_dir("parallel")
+    }
+}
+
+/// Lint one file. `path` is the repo-relative path (used for scoping and
+/// reporting); `src` its contents; `tags` the `.split` allowlist.
+pub fn check_file(path: &str, src: &str, tags: &TagRegistry) -> FileReport {
+    let path = path.replace('\\', "/");
+    let scope = Scope::new(&path);
+    let toks = lex(src);
+    let skip = test_regions(&toks);
+    let mut report = FileReport::default();
+
+    parse_waivers(&toks, &path, &mut report);
+
+    // Code-token view (comments out), remembering raw indices so the
+    // test-region skip mask (built over raw tokens) still applies.
+    let code: Vec<(usize, &Token)> = toks
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| !t.is_comment())
+        .collect();
+
+    let mut push = |rule: &'static str, line: u32, msg: String| {
+        report.findings.push(Finding {
+            rule,
+            file: path.clone(),
+            line,
+            msg,
+            waived: false,
+            waiver_reason: None,
+        });
+    };
+
+    for (ci, &(ri, tok)) in code.iter().enumerate() {
+        if skip[ri] {
+            continue;
+        }
+        let at = |off: isize| -> Option<&Token> {
+            let idx = ci as isize + off;
+            if idx < 0 {
+                None
+            } else {
+                code.get(idx as usize).map(|&(_, t)| t)
+            }
+        };
+
+        match &tok.tok {
+            // ---- R1: .split(<expr>) must reference the tag registry --
+            Tok::Ident(id) if id == "split" => {
+                if at(-1).is_some_and(|t| t.is_punct('.'))
+                    && at(1).is_some_and(|t| t.is_punct('('))
+                {
+                    check_split_args(&code, ci + 2, tags, tok.line, &mut push);
+                }
+            }
+
+            // ---- R2: wall clock -------------------------------------
+            Tok::Ident(id) if id == "Instant" && !scope.wall_clock_allowed() => {
+                if at(1).is_some_and(|t| t.is_punct(':'))
+                    && at(2).is_some_and(|t| t.is_punct(':'))
+                    && at(3).and_then(|t| t.ident()) == Some("now")
+                {
+                    push(
+                        RULE_WALL_CLOCK,
+                        tok.line,
+                        "Instant::now() outside the obs/bench/main/runner timing allowlist"
+                            .into(),
+                    );
+                }
+            }
+            Tok::Ident(id) if id == "SystemTime" && !scope.wall_clock_allowed() => {
+                push(
+                    RULE_WALL_CLOCK,
+                    tok.line,
+                    "SystemTime outside the obs/bench/main/runner timing allowlist".into(),
+                );
+            }
+
+            // ---- R3: hash-ordered collections -----------------------
+            Tok::Ident(id)
+                if (id == "HashMap" || id == "HashSet") && scope.hash_order_scoped() =>
+            {
+                push(
+                    RULE_HASH_ORDER,
+                    tok.line,
+                    format!(
+                        "{id} in a chain-affecting module: iteration order is \
+                         hasher-seeded; use BTreeMap/BTreeSet or a Vec"
+                    ),
+                );
+            }
+
+            // ---- R4: panic paths ------------------------------------
+            Tok::Ident(id)
+                if scope.no_panic_scoped()
+                    && (id == "unwrap" || id == "expect")
+                    && at(-1).is_some_and(|t| t.is_punct('.'))
+                    && at(1).is_some_and(|t| t.is_punct('(')) =>
+            {
+                push(
+                    RULE_NO_PANIC,
+                    tok.line,
+                    format!(".{id}() in a no-panic zone: convert to a contextual Err"),
+                );
+            }
+            Tok::Ident(id)
+                if scope.no_panic_scoped()
+                    && (id == "panic" || id == "unreachable" || id == "todo"
+                        || id == "unimplemented")
+                    && at(1).is_some_and(|t| t.is_punct('!')) =>
+            {
+                push(
+                    RULE_NO_PANIC,
+                    tok.line,
+                    format!("{id}! in a no-panic zone: convert to a contextual Err"),
+                );
+            }
+
+            // ---- R5: undocumented unsafe ----------------------------
+            Tok::Ident(id) if id == "unsafe" => {
+                if !preceded_by_safety_comment(&toks, ri) {
+                    push(
+                        RULE_UNSAFE,
+                        tok.line,
+                        "unsafe without a `// SAFETY:` comment immediately above".into(),
+                    );
+                }
+            }
+
+            // ---- R6: stray threads ----------------------------------
+            Tok::Ident(id) if id == "thread" && !scope.thread_allowed() => {
+                if at(1).is_some_and(|t| t.is_punct(':'))
+                    && at(2).is_some_and(|t| t.is_punct(':'))
+                {
+                    if let Some(what) = at(3).and_then(|t| t.ident()) {
+                        if what == "spawn" || what == "scope" || what == "Builder" {
+                            push(
+                                RULE_STRAY_THREAD,
+                                tok.line,
+                                format!(
+                                    "thread::{what} outside parallel/: all threads \
+                                     belong to the pool or the coordinator"
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    apply_waivers(&mut report);
+    report
+}
+
+/// R1 argument check, starting at the code index just past `.split(`.
+/// A first-argument string/char literal means `str::split` — skipped.
+/// Otherwise the argument tokens must reference at least one registry
+/// name; a purely literal/operator expression (e.g. `1000 + p` has `p`…
+/// so: any *numeric literal* present without a registry identifier) is a
+/// finding.
+fn check_split_args<F: FnMut(&'static str, u32, String)>(
+    code: &[(usize, &Token)],
+    start: usize,
+    tags: &TagRegistry,
+    line: u32,
+    push: &mut F,
+) {
+    // collect argument tokens to the matching close paren
+    let mut depth = 1i32;
+    let mut i = start;
+    let mut arg: Vec<&Token> = Vec::new();
+    while i < code.len() && depth > 0 {
+        let t = code[i].1;
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        arg.push(t);
+        i += 1;
+    }
+    match arg.first().map(|t| &t.tok) {
+        // str::split / split(',') / split("sep") — not an RNG split
+        Some(Tok::Str) | Some(Tok::Char) => return,
+        None => return, // `.split()` — not ours either
+        _ => {}
+    }
+    let has_registry_name = arg
+        .iter()
+        .any(|t| t.ident().is_some_and(|id| id == "tags" || tags.names.contains(id)));
+    if has_registry_name {
+        return;
+    }
+    let has_num = arg.iter().any(|t| matches!(t.tok, Tok::Num));
+    if has_num {
+        push(
+            RULE_RNG_TAG,
+            line,
+            "raw numeric RNG stream tag: use a named constant from rng/tags.rs".into(),
+        );
+    } else {
+        push(
+            RULE_RNG_TAG,
+            line,
+            "RNG stream tag not derived from the rng/tags.rs registry".into(),
+        );
+    }
+}
+
+/// True if the contiguous comment block directly above raw token `ri`
+/// (only comments between it and the `unsafe` token) contains `SAFETY:`.
+fn preceded_by_safety_comment(toks: &[Token], ri: usize) -> bool {
+    let mut j = ri;
+    while j > 0 {
+        j -= 1;
+        match &toks[j].tok {
+            Tok::Comment(text) => {
+                if text.contains("SAFETY:") {
+                    return true;
+                }
+            }
+            // allow the pattern `let x = unsafe { … }`: look past the
+            // few tokens of the binding on the same line
+            _ => {
+                if toks[j].end_line + 1 >= toks[ri].line {
+                    continue;
+                }
+                return false;
+            }
+        }
+    }
+    false
+}
+
+/// Mark every raw-token index inside a `#[cfg(test)]` / `#[test]` item.
+///
+/// Matches exactly `# [ cfg ( test ) ]` and `# [ test ]` — *not*
+/// `#[cfg(feature = "…")]` or `#[cfg_attr(…)]` — then consumes any
+/// further attributes and the following item to its matching `}` (or a
+/// terminating `;` for itemless forms like `#[cfg(test)] use …;`).
+fn test_regions(toks: &[Token]) -> Vec<bool> {
+    let mut skip = vec![false; toks.len()];
+    // code-token indices
+    let code: Vec<usize> = (0..toks.len()).filter(|&i| !toks[i].is_comment()).collect();
+    let tok_at = |k: usize| -> Option<&Token> { code.get(k).map(|&i| &toks[i]) };
+
+    let mut k = 0usize;
+    while k < code.len() {
+        let is_test_attr = tok_at(k).is_some_and(|t| t.is_punct('#'))
+            && tok_at(k + 1).is_some_and(|t| t.is_punct('['))
+            && (
+                // #[test]
+                (tok_at(k + 2).and_then(|t| t.ident()) == Some("test")
+                    && tok_at(k + 3).is_some_and(|t| t.is_punct(']')))
+                // #[cfg(test)]
+                || (tok_at(k + 2).and_then(|t| t.ident()) == Some("cfg")
+                    && tok_at(k + 3).is_some_and(|t| t.is_punct('('))
+                    && tok_at(k + 4).and_then(|t| t.ident()) == Some("test")
+                    && tok_at(k + 5).is_some_and(|t| t.is_punct(')'))
+                    && tok_at(k + 6).is_some_and(|t| t.is_punct(']')))
+            );
+        if !is_test_attr {
+            k += 1;
+            continue;
+        }
+        let start = k;
+        // past this attribute
+        k = skip_attr(&code, toks, k);
+        // past any further attributes (#[allow(…)], #[ignore], …)
+        while tok_at(k).is_some_and(|t| t.is_punct('#'))
+            && tok_at(k + 1).is_some_and(|t| t.is_punct('['))
+        {
+            k = skip_attr(&code, toks, k);
+        }
+        // consume the item: to the close of the first brace group, or a
+        // `;` seen before any `{` (e.g. `#[cfg(test)] use foo;`)
+        let mut depth = 0i32;
+        let mut entered = false;
+        while k < code.len() {
+            let t = &toks[code[k]];
+            if t.is_punct('{') {
+                depth += 1;
+                entered = true;
+            } else if t.is_punct('}') {
+                depth -= 1;
+                if entered && depth == 0 {
+                    k += 1;
+                    break;
+                }
+            } else if t.is_punct(';') && !entered {
+                k += 1;
+                break;
+            }
+            k += 1;
+        }
+        // mark the raw-token span (comments inside included)
+        let lo = code[start];
+        let hi = if k < code.len() { code[k] } else { toks.len() };
+        for s in skip.iter_mut().take(hi).skip(lo) {
+            *s = true;
+        }
+    }
+    skip
+}
+
+/// Advance past one `# [ … ]` attribute starting at code index `k`.
+fn skip_attr(code: &[usize], toks: &[Token], mut k: usize) -> usize {
+    // at '#'; move to '['
+    k += 1;
+    let mut depth = 0i32;
+    while k < code.len() {
+        let t = &toks[code[k]];
+        if t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                return k + 1;
+            }
+        }
+        k += 1;
+    }
+    k
+}
+
+/// Extract `detlint:allow(rule): reason` pragmas from comment tokens.
+/// The waiver covers findings on its own line and on the line of the
+/// next code token after it (comments in between are skipped).
+fn parse_waivers(toks: &[Token], path: &str, report: &mut FileReport) {
+    for (i, t) in toks.iter().enumerate() {
+        let text = match &t.tok {
+            Tok::Comment(c) => c,
+            _ => continue,
+        };
+        let Some(pos) = text.find("detlint:allow") else { continue };
+        let rest = &text[pos + "detlint:allow".len()..];
+        // expect (rule-id): reason
+        let parsed = (|| {
+            let rest = rest.trim_start();
+            let rest = rest.strip_prefix('(')?;
+            let close = rest.find(')')?;
+            let rule = rest[..close].trim().to_string();
+            let after = rest[close + 1..].trim_start();
+            let reason = after.strip_prefix(':')?.trim().to_string();
+            Some((rule, reason))
+        })();
+        let Some((rule, reason)) = parsed else {
+            report.findings.push(Finding {
+                rule: RULE_WAIVER_SYNTAX,
+                file: path.to_string(),
+                line: t.line,
+                msg: "malformed waiver: expected `detlint:allow(<rule>): <reason>`".into(),
+                waived: false,
+                waiver_reason: None,
+            });
+            continue;
+        };
+        if !RULE_IDS.contains(&rule.as_str()) {
+            report.findings.push(Finding {
+                rule: RULE_WAIVER_SYNTAX,
+                file: path.to_string(),
+                line: t.line,
+                msg: format!("waiver names unknown rule `{rule}`"),
+                waived: false,
+                waiver_reason: None,
+            });
+            continue;
+        }
+        if reason.is_empty() {
+            report.findings.push(Finding {
+                rule: RULE_WAIVER_SYNTAX,
+                file: path.to_string(),
+                line: t.line,
+                msg: format!("waiver for `{rule}` has no justification"),
+                waived: false,
+                waiver_reason: None,
+            });
+            continue;
+        }
+        let target_line = toks[i + 1..]
+            .iter()
+            .find(|n| !n.is_comment())
+            .map(|n| n.line)
+            .unwrap_or(u32::MAX);
+        report.waivers.push(Waiver {
+            rule,
+            file: path.to_string(),
+            line: t.line,
+            target_line,
+            reason,
+            used: false,
+        });
+    }
+}
+
+/// Match findings against waivers (same rule, finding on the waiver's
+/// own line or its target line).
+fn apply_waivers(report: &mut FileReport) {
+    for f in report.findings.iter_mut() {
+        if f.rule == RULE_WAIVER_SYNTAX {
+            continue; // the waiver mechanism cannot waive itself
+        }
+        for w in report.waivers.iter_mut() {
+            if w.rule == f.rule && (f.line == w.line || f.line == w.target_line) {
+                f.waived = true;
+                f.waiver_reason = Some(w.reason.clone());
+                w.used = true;
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> TagRegistry {
+        TagRegistry::parse(
+            "pub const MASTER: u64 = 1;\n\
+             pub const WORKER_BASE: u64 = 1000;\n\
+             pub fn worker(p: usize) -> u64 { WORKER_BASE + p as u64 }\n\
+             pub const FAMILIES: &[Family] = &[];\n",
+        )
+    }
+
+    #[test]
+    fn registry_parses_u64_consts_and_fns_only() {
+        let r = registry();
+        assert!(r.names.contains("MASTER"));
+        assert!(r.names.contains("WORKER_BASE"));
+        assert!(r.names.contains("worker"));
+        assert!(!r.names.contains("FAMILIES"), "non-u64 consts must not count");
+    }
+
+    #[test]
+    fn r1_flags_literal_tags_and_accepts_registry_names() {
+        let r = registry();
+        let bad = check_file("x/a.rs", "fn f(rng: R) { rng.split(1000 + p); }", &r);
+        assert_eq!(bad.findings.len(), 1);
+        assert_eq!(bad.findings[0].rule, RULE_RNG_TAG);
+
+        let good = check_file(
+            "x/a.rs",
+            "fn f(rng: R) { rng.split(tags::worker(p)); rng.split(MASTER); }",
+            &r,
+        );
+        assert!(good.findings.is_empty(), "{:?}", good.findings);
+    }
+
+    #[test]
+    fn r1_ignores_str_split() {
+        let r = registry();
+        let rep = check_file(
+            "x/a.rs",
+            "fn f(s: &str) { s.split(','); s.split(\"sep\"); line.split('\\t'); }",
+            &r,
+        );
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn r2_is_path_scoped() {
+        let r = registry();
+        let bad = check_file("rust/src/model/a.rs", "fn f() { let t = Instant::now(); }", &r);
+        assert_eq!(bad.findings.len(), 1);
+        assert_eq!(bad.findings[0].rule, RULE_WALL_CLOCK);
+        for ok_path in ["rust/src/obs/mod.rs", "rust/src/bench/x.rs", "rust/src/main.rs", "rust/src/runner.rs"] {
+            let ok = check_file(ok_path, "fn f() { let t = Instant::now(); }", &r);
+            assert!(ok.findings.is_empty(), "{ok_path}: {:?}", ok.findings);
+        }
+    }
+
+    #[test]
+    fn r3_flags_hash_collections_in_chain_modules_only() {
+        let r = registry();
+        let bad = check_file(
+            "rust/src/model/state.rs",
+            "use std::collections::HashMap;\nfn f() { let m: HashMap<u8, u8> = HashMap::new(); }",
+            &r,
+        );
+        assert_eq!(bad.findings.len(), 3); // use + type + ctor mentions
+        assert!(bad.findings.iter().all(|f| f.rule == RULE_HASH_ORDER));
+        let ok = check_file("rust/src/runtime/pjrt.rs", "use std::collections::HashMap;", &r);
+        assert!(ok.findings.is_empty());
+    }
+
+    #[test]
+    fn r4_flags_panic_paths_in_scope() {
+        let r = registry();
+        let src = "fn f() { x.unwrap(); y.expect(\"m\"); panic!(\"b\"); unreachable!(); }";
+        let bad = check_file("rust/src/coordinator/master.rs", src, &r);
+        assert_eq!(bad.findings.len(), 4);
+        assert!(bad.findings.iter().all(|f| f.rule == RULE_NO_PANIC));
+        // pool.rs is in scope; blocks.rs is not
+        assert!(!check_file("rust/src/parallel/pool.rs", src, &r).findings.is_empty());
+        assert!(check_file("rust/src/parallel/blocks.rs", src, &r).findings.is_empty());
+        assert!(check_file("rust/src/samplers/gibbs.rs", src, &r).findings.is_empty());
+    }
+
+    #[test]
+    fn r5_requires_safety_comment() {
+        let r = registry();
+        let bad = check_file("x/a.rs", "fn f() { unsafe { g(); } }", &r);
+        assert_eq!(bad.findings.len(), 1);
+        assert_eq!(bad.findings[0].rule, RULE_UNSAFE);
+        let ok = check_file(
+            "x/a.rs",
+            "fn f() {\n    // SAFETY: g is sound here because reasons\n    unsafe { g(); }\n}",
+            &r,
+        );
+        assert!(ok.findings.is_empty(), "{:?}", ok.findings);
+        // binding form: let x = unsafe { … } with the comment above the let
+        let ok2 = check_file(
+            "x/a.rs",
+            "fn f() {\n    // SAFETY: sound\n    let x = unsafe { g() };\n}",
+            &r,
+        );
+        assert!(ok2.findings.is_empty(), "{:?}", ok2.findings);
+    }
+
+    #[test]
+    fn r6_flags_threads_outside_parallel() {
+        let r = registry();
+        let src = "fn f() { std::thread::spawn(|| {}); }";
+        let bad = check_file("rust/src/serve/mod.rs", src, &r);
+        assert_eq!(bad.findings.len(), 1);
+        assert_eq!(bad.findings[0].rule, RULE_STRAY_THREAD);
+        assert!(check_file("rust/src/parallel/pool.rs", src, &r).findings.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let r = registry();
+        let src = "\
+fn prod() {}\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    use std::collections::HashMap;\n\
+    #[test]\n\
+    fn t() { x.unwrap(); let i = Instant::now(); rng.split(1003); }\n\
+}\n";
+        let rep = check_file("rust/src/coordinator/messages.rs", src, &r);
+        assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn cfg_feature_attrs_are_not_test_regions() {
+        let r = registry();
+        let src = "\
+#[cfg(feature = \"pjrt\")]\n\
+fn prod() { x.unwrap(); }\n\
+#[cfg(not(feature = \"pjrt\"))]\n\
+fn prod2() { y.unwrap(); }\n";
+        let rep = check_file("rust/src/coordinator/master.rs", src, &r);
+        assert_eq!(rep.findings.len(), 2, "feature-gated code is still production");
+    }
+
+    #[test]
+    fn test_attr_with_following_attrs_and_use_items() {
+        let r = registry();
+        let src = "\
+#[cfg(test)]\n\
+use std::collections::HashMap;\n\
+#[cfg(test)]\n\
+#[allow(dead_code)]\n\
+fn helper() { x.unwrap() }\n\
+fn prod() { y.unwrap(); }\n";
+        let rep = check_file("rust/src/coordinator/master.rs", src, &r);
+        assert_eq!(rep.findings.len(), 1, "{:?}", rep.findings);
+        assert_eq!(rep.findings[0].line, 6);
+    }
+
+    #[test]
+    fn waiver_covers_next_code_line_and_is_counted() {
+        let r = registry();
+        let src = "\
+fn f() {\n\
+    // detlint:allow(no-panic-coordinator): provably infallible because reasons\n\
+    x.unwrap();\n\
+    y.unwrap();\n\
+}\n";
+        let rep = check_file("rust/src/coordinator/master.rs", src, &r);
+        let unwaived: Vec<_> = rep.findings.iter().filter(|f| !f.waived).collect();
+        assert_eq!(unwaived.len(), 1, "only the second unwrap stays flagged");
+        assert_eq!(unwaived[0].line, 4);
+        assert_eq!(rep.waivers.len(), 1);
+        assert!(rep.waivers[0].used);
+        assert_eq!(rep.waivers[0].rule, RULE_NO_PANIC);
+    }
+
+    #[test]
+    fn waiver_must_name_the_right_rule() {
+        let r = registry();
+        let src = "\
+fn f() {\n\
+    // detlint:allow(wall-clock-in-chain): wrong rule for this finding\n\
+    x.unwrap();\n\
+}\n";
+        let rep = check_file("rust/src/coordinator/master.rs", src, &r);
+        assert_eq!(rep.findings.iter().filter(|f| !f.waived).count(), 1);
+        assert!(!rep.waivers[0].used, "mismatched waiver stays unused");
+    }
+
+    #[test]
+    fn malformed_or_reasonless_waivers_are_findings() {
+        let r = registry();
+        let src = "\
+// detlint:allow(no-panic-coordinator):\n\
+// detlint:allow no parens\n\
+// detlint:allow(not-a-rule): reason\n\
+fn f() {}\n";
+        let rep = check_file("rust/src/coordinator/master.rs", src, &r);
+        assert_eq!(rep.findings.len(), 3);
+        assert!(rep.findings.iter().all(|f| f.rule == RULE_WAIVER_SYNTAX));
+        assert!(rep.waivers.is_empty());
+    }
+
+    #[test]
+    fn unused_waiver_is_reported_not_fatal() {
+        let r = registry();
+        let src = "// detlint:allow(hash-order): stale pragma\nfn f() {}\n";
+        let rep = check_file("rust/src/model/a.rs", src, &r);
+        assert!(rep.findings.is_empty());
+        assert_eq!(rep.waivers.len(), 1);
+        assert!(!rep.waivers[0].used);
+    }
+}

@@ -1,0 +1,183 @@
+//! Per-rule fixture tests: every file under `fixtures/` is lexed and
+//! linted through the real pipeline at a pseudo-path chosen to put it in
+//! (or out of) each rule's scope. Fixture files are never compiled — they
+//! only need to lex.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use detlint::rules::{self, check_file, FileReport, TagRegistry};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// The live registry from `rust/src/rng/tags.rs`, exactly as the binary
+/// loads it — so these tests also pin the registry parser against the
+/// real file.
+fn live_registry() -> TagRegistry {
+    let root: PathBuf = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    let reg = detlint::load_registry(&[root]);
+    for expected in ["MASTER", "WORKER_BASE", "worker", "block", "chain", "serve_sample"] {
+        assert!(
+            reg.names.contains(expected),
+            "live rng/tags.rs registry is missing `{expected}`; parsed: {:?}",
+            reg.names
+        );
+    }
+    assert!(
+        !reg.names.contains("FAMILIES"),
+        "the FAMILIES table (non-u64 const) must not legitimise raw tags"
+    );
+    reg
+}
+
+fn lint(name: &str, pseudo_path: &str) -> FileReport {
+    check_file(pseudo_path, &fixture(name), &live_registry())
+}
+
+fn rules_of(rep: &FileReport) -> Vec<&'static str> {
+    rep.findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn r1_bad_fixture_flags_every_raw_tag() {
+    let rep = lint("r1_rng_tag_bad.rs", "rust/src/samplers/hybrid.rs");
+    assert_eq!(rep.findings.len(), 5, "{:?}", rep.findings);
+    assert!(rep.findings.iter().all(|f| f.rule == rules::RULE_RNG_TAG));
+    assert!(rep.findings.iter().all(|f| !f.waived));
+}
+
+#[test]
+fn r1_ok_fixture_is_clean() {
+    let rep = lint("r1_rng_tag_ok.rs", "rust/src/samplers/hybrid.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn r2_bad_fixture_flags_both_clocks_outside_allowlist() {
+    let rep = lint("r2_wall_clock_bad.rs", "rust/src/samplers/uncollapsed.rs");
+    assert_eq!(rules_of(&rep), vec![rules::RULE_WALL_CLOCK, rules::RULE_WALL_CLOCK]);
+}
+
+#[test]
+fn r2_bad_fixture_is_fine_inside_obs() {
+    let rep = lint("r2_wall_clock_bad.rs", "rust/src/obs/mod.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn r3_bad_fixture_flags_hashmap_in_chain_scope() {
+    let rep = lint("r3_hash_order_bad.rs", "rust/src/model/state.rs");
+    // `use`, the type annotation, and `HashMap::new()` each mention it
+    assert_eq!(rep.findings.len(), 3, "{:?}", rep.findings);
+    assert!(rep.findings.iter().all(|f| f.rule == rules::RULE_HASH_ORDER));
+}
+
+#[test]
+fn r3_bad_fixture_is_fine_outside_chain_scope() {
+    let rep = lint("r3_hash_order_bad.rs", "rust/src/runtime/pjrt.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn r4_bad_fixture_flags_all_four_panic_paths() {
+    for scoped in [
+        "rust/src/coordinator/master.rs",
+        "rust/src/parallel/pool.rs",
+        "rust/src/serve/mod.rs",
+    ] {
+        let rep = lint("r4_no_panic_bad.rs", scoped);
+        assert_eq!(rep.findings.len(), 4, "{scoped}: {:?}", rep.findings);
+        assert!(rep.findings.iter().all(|f| f.rule == rules::RULE_NO_PANIC));
+    }
+}
+
+#[test]
+fn r4_bad_fixture_is_fine_outside_no_panic_zone() {
+    for unscoped in ["rust/src/parallel/blocks.rs", "rust/src/samplers/gibbs.rs"] {
+        let rep = lint("r4_no_panic_bad.rs", unscoped);
+        assert!(rep.findings.is_empty(), "{unscoped}: {:?}", rep.findings);
+    }
+}
+
+#[test]
+fn r5_fixtures_require_safety_comment() {
+    let bad = lint("r5_unsafe_bad.rs", "rust/src/parallel/pool.rs");
+    assert_eq!(rules_of(&bad), vec![rules::RULE_UNSAFE]);
+
+    let ok = lint("r5_unsafe_ok.rs", "rust/src/parallel/pool.rs");
+    assert!(ok.findings.is_empty(), "{:?}", ok.findings);
+}
+
+#[test]
+fn r6_bad_fixture_flags_all_three_spawn_forms() {
+    let rep = lint("r6_stray_thread_bad.rs", "rust/src/coordinator/master.rs");
+    assert_eq!(rep.findings.len(), 3, "{:?}", rep.findings);
+    assert!(rep.findings.iter().all(|f| f.rule == rules::RULE_STRAY_THREAD));
+}
+
+#[test]
+fn r6_bad_fixture_is_fine_inside_parallel() {
+    let rep = lint("r6_stray_thread_bad.rs", "rust/src/parallel/pool.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+}
+
+#[test]
+fn waiver_fixture_exercises_every_waiver_path() {
+    let rep = lint("waivers.rs", "rust/src/coordinator/w.rs");
+
+    // Three findings: the waived unwrap, the unwrap whose waiver names
+    // the wrong rule, and the reasonless pragma (waiver-syntax).
+    assert_eq!(rep.findings.len(), 3, "{:?}", rep.findings);
+    let waived: Vec<_> = rep.findings.iter().filter(|f| f.waived).collect();
+    assert_eq!(waived.len(), 1);
+    assert_eq!(waived[0].rule, rules::RULE_NO_PANIC);
+    assert!(waived[0].waiver_reason.as_deref().unwrap().contains("checked non-None"));
+
+    let unwaived: Vec<_> = rep.findings.iter().filter(|f| !f.waived).collect();
+    assert_eq!(unwaived.len(), 2);
+    assert!(unwaived.iter().any(|f| f.rule == rules::RULE_NO_PANIC));
+    assert!(unwaived.iter().any(|f| f.rule == rules::RULE_WAIVER_SYNTAX));
+
+    // Three well-formed waivers parsed; only the first was consumed.
+    assert_eq!(rep.waivers.len(), 3, "{:?}", rep.waivers);
+    assert_eq!(rep.waivers.iter().filter(|w| w.used).count(), 1);
+    assert_eq!(rep.waivers.iter().filter(|w| !w.used).count(), 2);
+}
+
+#[test]
+fn lexer_torture_fixture_yields_zero_findings_everywhere() {
+    // Placed at the strictest possible path: every rule in scope. All the
+    // violation-shaped text lives in comments / strings / char literals,
+    // so a lexer that mis-tracks any delimiter will produce findings.
+    let rep = lint("lexer_torture.rs", "rust/src/coordinator/torture.rs");
+    assert!(rep.findings.is_empty(), "{:?}", rep.findings);
+    assert!(rep.waivers.is_empty());
+}
+
+#[test]
+fn every_fixture_is_covered_by_a_test() {
+    // Guards against someone adding a fixture without wiring it up.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures");
+    let mut names: Vec<String> = fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    let expected = [
+        "lexer_torture.rs",
+        "r1_rng_tag_bad.rs",
+        "r1_rng_tag_ok.rs",
+        "r2_wall_clock_bad.rs",
+        "r3_hash_order_bad.rs",
+        "r4_no_panic_bad.rs",
+        "r5_unsafe_bad.rs",
+        "r5_unsafe_ok.rs",
+        "r6_stray_thread_bad.rs",
+        "waivers.rs",
+    ];
+    assert_eq!(names, expected, "fixture set drifted: update tests/fixtures.rs");
+}

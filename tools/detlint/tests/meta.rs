@@ -1,0 +1,125 @@
+//! The meta-test: the live `rust/src` tree must lint clean, with exactly
+//! the waivers the repo has argued for (each carrying a justification),
+//! and injecting a violation into a real file must produce an unwaived
+//! finding. This is what makes detlint load-bearing: the tree cannot
+//! drift without either fixing the drift or writing down a proof.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use detlint::rules::{self, check_file, Finding, Waiver};
+
+fn live_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src")
+}
+
+fn lint_live_tree() -> (Vec<Finding>, Vec<Waiver>, usize) {
+    let (reports, files) = detlint::run_roots(&[live_root()]).expect("linting rust/src");
+    let mut findings = Vec::new();
+    let mut waivers = Vec::new();
+    for r in reports {
+        findings.extend(r.findings);
+        waivers.extend(r.waivers);
+    }
+    (findings, waivers, files)
+}
+
+#[test]
+fn live_tree_lints_clean() {
+    let (findings, _, files) = lint_live_tree();
+    assert!(files > 30, "expected the full tree, only saw {files} files");
+    let unwaived: Vec<_> = findings.iter().filter(|f| !f.waived).collect();
+    assert!(
+        unwaived.is_empty(),
+        "unwaived determinism findings in the live tree:\n{}",
+        unwaived
+            .iter()
+            .map(|f| format!("  {}:{}: [{}] {}", f.file, f.line, f.rule, f.msg))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn live_tree_has_exactly_the_argued_waivers() {
+    let (_, waivers, _) = lint_live_tree();
+
+    // Every waiver must be consumed (no stale pragmas) and justified.
+    for w in &waivers {
+        assert!(w.used, "stale waiver {}:{} ({})", w.file, w.line, w.rule);
+        assert!(
+            w.reason.split_whitespace().count() >= 4,
+            "waiver {}:{} needs a real justification, got {:?}",
+            w.file,
+            w.line,
+            w.reason
+        );
+    }
+
+    // The pinned census. If you add or remove a waiver on purpose,
+    // update these counts — that is the point of this test.
+    let count = |rule: &str| waivers.iter().filter(|w| w.rule == rule).count();
+    assert_eq!(count(rules::RULE_WALL_CLOCK), 4, "{waivers:?}");
+    assert_eq!(count(rules::RULE_NO_PANIC), 5, "{waivers:?}");
+    assert_eq!(count(rules::RULE_STRAY_THREAD), 1, "{waivers:?}");
+    assert_eq!(waivers.len(), 10, "{waivers:?}");
+}
+
+#[test]
+fn live_registry_migration_left_no_raw_tags() {
+    let (findings, _, _) = lint_live_tree();
+    assert!(
+        !findings.iter().any(|f| f.rule == rules::RULE_RNG_TAG),
+        "rng-tag-literal must be clean with zero waivers after the \
+         tags.rs migration"
+    );
+}
+
+#[test]
+fn injected_violations_fail_the_live_tree() {
+    let root = live_root();
+    let registry = detlint::load_registry(&[root.clone()]);
+    let master = root.join("coordinator/master.rs");
+    let src = fs::read_to_string(&master).expect("reading master.rs");
+
+    // The pristine file is covered entirely by its waivers…
+    let before = check_file("rust/src/coordinator/master.rs", &src, &registry);
+    assert_eq!(before.findings.iter().filter(|f| !f.waived).count(), 0);
+
+    // …but appending panic- and raw-tag-shaped code (outside any
+    // #[cfg(test)] region) must each produce an unwaived finding.
+    let cases: &[(&str, &str)] = &[
+        (
+            "\nfn detlint_injected(x: Option<u32>) -> u32 { x.unwrap() }\n",
+            rules::RULE_NO_PANIC,
+        ),
+        (
+            "\nfn detlint_injected2(rng: &Pcg64) -> Pcg64 { rng.split(31337) }\n",
+            rules::RULE_RNG_TAG,
+        ),
+        (
+            "\nfn detlint_injected3() { let _h = std::thread::spawn(|| ()); }\n",
+            rules::RULE_STRAY_THREAD,
+        ),
+    ];
+    for (snippet, rule) in cases {
+        let mutated = format!("{src}{snippet}");
+        let rep = check_file("rust/src/coordinator/master.rs", &mutated, &registry);
+        let new_unwaived: Vec<_> = rep.findings.iter().filter(|f| !f.waived).collect();
+        assert_eq!(new_unwaived.len(), 1, "injection for {rule}: {new_unwaived:?}");
+        assert_eq!(new_unwaived[0].rule, *rule);
+    }
+}
+
+#[test]
+fn report_over_live_tree_is_well_formed() {
+    let (findings, waivers, files) = lint_live_tree();
+    let doc = detlint::report::build(&["rust/src".into()], files, &findings, &waivers)
+        .to_string();
+    assert!(doc.contains("\"unwaived\":0"), "{doc}");
+    assert!(doc.contains(&format!("\"files_checked\":{files}")));
+    // Byte-determinism: building the same report twice is identical.
+    let doc2 = detlint::report::build(&["rust/src".into()], files, &findings, &waivers)
+        .to_string();
+    assert_eq!(doc, doc2);
+}
