@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
             backend: Backend::Native,
             artifacts_dir: "artifacts".into(),
             comm: CommModel::default(),
+            ..Default::default()
         };
         let mut coord = Coordinator::new(&ds.x, cfg)?;
         let (mut vt, mut wb, mut mb, mut cb) = (0.0, 0.0, 0.0, 0usize);

@@ -91,6 +91,7 @@ fn main() {
             backend: Backend::Native,
             artifacts_dir: "artifacts".into(),
             comm,
+            ..Default::default()
         };
         let mut coord = Coordinator::new(&ds.x, cfg).expect("coord");
         let (mut vt, mut compute) = (0.0, 0.0);

@@ -1,0 +1,189 @@
+//! T-S10 — transport throughput: the same hybrid workload driven over
+//! the three message planes (in-process channels, Unix domain socket,
+//! TCP loopback) at P ∈ {2, 4}, reporting iterations/sec and
+//! bytes/iteration.
+//!
+//! Socket rows launch real `pibp worker --connect` child processes, so
+//! the measured gap is the honest end-to-end price of process isolation:
+//! frame encode → kernel socket → decode, twice per gather. The chain
+//! itself is transport-invariant (`process_equivalence.rs` pins
+//! bit-identity), which this bench re-checks cheaply via final K⁺ —
+//! bytes/iteration is identical across rows *by construction*.
+//!
+//! Writes `BENCH_dist.json` at the repo root; `PIBP_BENCH_FULL=1` for a
+//! paper-scale workload.
+
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::time::Instant;
+
+use pibp::config::{Backend, CommModel};
+use pibp::coordinator::{Coordinator, CoordinatorConfig, TransportConfig};
+use pibp::data::cambridge::{generate, CambridgeConfig};
+use pibp::linalg::Mat;
+use pibp::model::state::Kernel;
+use pibp::model::LinGauss;
+use pibp::samplers::SamplerOptions;
+
+fn coord_cfg(p: usize, transport: TransportConfig) -> CoordinatorConfig {
+    CoordinatorConfig {
+        processors: p,
+        sub_iters: 5,
+        threads_per_worker: 1,
+        kernel: Kernel::Scalar,
+        seed: 42,
+        lg: LinGauss::new(0.5, 1.0),
+        alpha: 1.0,
+        opts: SamplerOptions::default(),
+        backend: Backend::Native,
+        artifacts_dir: Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        comm: CommModel::default(),
+        transport,
+    }
+}
+
+fn spawn_workers(addr: &str, n: usize) -> Vec<Child> {
+    (0..n)
+        .map(|_| {
+            Command::new(env!("CARGO_BIN_EXE_pibp"))
+                .args(["worker", "--connect", addr])
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .expect("spawning pibp worker")
+        })
+        .collect()
+}
+
+fn reap(children: Vec<Child>) {
+    for mut c in children {
+        let mut done = false;
+        for _ in 0..400 {
+            if c.try_wait().expect("try_wait").is_some() {
+                done = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        if !done {
+            c.kill().ok();
+            eprintln!("warning: worker did not exit after Shutdown; killed");
+        }
+    }
+}
+
+/// A free loopback port: bind :0, read the assignment, release it. The
+/// tiny race (someone else grabbing it before the master rebinds) only
+/// costs a bench re-run.
+fn free_tcp_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0")
+        .expect("probe bind")
+        .local_addr()
+        .expect("probe addr")
+        .port()
+}
+
+struct Row {
+    transport: &'static str,
+    p: usize,
+    iters_per_s: f64,
+    bytes_per_iter: f64,
+    k: usize,
+}
+
+fn run_one(x: &Mat, transport: &'static str, p: usize, iters: usize) -> Row {
+    let (tcfg, children, sock) = match transport {
+        "channel" => (TransportConfig::Channel, Vec::new(), String::new()),
+        "uds" => {
+            let sock = std::env::temp_dir()
+                .join(format!("pibp_bench_{}_{p}.sock", std::process::id()))
+                .to_string_lossy()
+                .into_owned();
+            let _ = std::fs::remove_file(&sock);
+            let children = spawn_workers(&sock, p);
+            (TransportConfig::Uds { listen: sock.clone() }, children, sock)
+        }
+        "tcp" => {
+            let addr = format!("127.0.0.1:{}", free_tcp_port());
+            let children = spawn_workers(&addr, p);
+            (TransportConfig::Tcp { listen: addr }, children, String::new())
+        }
+        other => unreachable!("transport {other}"),
+    };
+    let mut coord = Coordinator::new(x, coord_cfg(p, tcfg)).expect("coordinator");
+    // K grows from 0 — warm up so the steady-state frame sizes are measured
+    for _ in 0..3 {
+        coord.step().expect("warmup");
+    }
+    let mut bytes = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        bytes += coord.step().expect("step").comm_bytes;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let k = coord.k();
+    drop(coord);
+    reap(children);
+    let _ = sock; // unlinked by the transport's shutdown
+    Row {
+        transport,
+        p,
+        iters_per_s: iters as f64 / dt.max(1e-9),
+        bytes_per_iter: bytes as f64 / iters as f64,
+        k,
+    }
+}
+
+fn main() {
+    let full = std::env::var("PIBP_BENCH_FULL").is_ok();
+    let (n, iters) = if full { (2000, 40) } else { (400, 10) };
+    let (ds, _) = generate(&CambridgeConfig { n, seed: 1, ..Default::default() });
+
+    println!("## T-S10 — transport throughput (hybrid, cambridge {n}×36, {iters} iters, L=5)\n");
+    println!(
+        "| {:>9} | {:>3} | {:>10} | {:>12} | {:>4} |",
+        "transport", "P", "iters/s", "bytes/iter", "K⁺"
+    );
+    println!("|{}|{}|{}|{}|{}|", "-".repeat(11), "-".repeat(5), "-".repeat(12),
+             "-".repeat(14), "-".repeat(6));
+
+    let mut rows: Vec<Row> = Vec::new();
+    for p in [2usize, 4] {
+        for transport in ["channel", "uds", "tcp"] {
+            let row = run_one(&ds.x, transport, p, iters);
+            println!(
+                "| {:>9} | {:>3} | {:>10.2} | {:>12.0} | {:>4} |",
+                row.transport, row.p, row.iters_per_s, row.bytes_per_iter, row.k
+            );
+            rows.push(row);
+        }
+        // the cheap cross-check: same seed + same config ⇒ same chain,
+        // whatever moved the frames
+        let ks: Vec<usize> = rows.iter().filter(|r| r.p == p).map(|r| r.k).collect();
+        assert!(
+            ks.windows(2).all(|w| w[0] == w[1]),
+            "final K⁺ diverged across transports at P={p}: {ks:?}"
+        );
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"dist_throughput\",\n");
+    json.push_str(&format!("  \"n\": {n},\n  \"iters\": {iters},\n  \"rows\": [\n"));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"transport\": \"{}\", \"p\": {}, \"iters_per_s\": {:.4}, \
+             \"bytes_per_iter\": {:.1}, \"k\": {}}}{}\n",
+            r.transport,
+            r.p,
+            r.iters_per_s,
+            r.bytes_per_iter,
+            r.k,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_dist.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\ntransport throughput results → {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

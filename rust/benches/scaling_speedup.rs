@@ -39,6 +39,7 @@ fn main() {
             backend: Backend::Native,
             artifacts_dir: "artifacts".into(),
             comm: CommModel::default(),
+            ..Default::default()
         };
         let mut coord = Coordinator::new(&ds.x, cfg).expect("coordinator");
         // skip 3 warm-up iterations (K grows from 0)

@@ -162,6 +162,15 @@ pub struct RunConfig {
     /// anything else writes the rounded CSV. With `chains > 1`, chain c
     /// writes to the path with `.c<c>` inserted before the extension.
     pub trace_out: String,
+    /// Master↔worker message plane: `channel` (in-process worker threads,
+    /// the default), `uds` or `tcp` (real `pibp worker --connect`
+    /// processes). Bit-invariant — the chain bytes must not depend on how
+    /// bytes move (`rust/tests/process_equivalence.rs`) — so, like
+    /// `kernel` and `obs`, it is excluded from the resume fingerprint.
+    pub transport: String,
+    /// Listen address for `transport=uds` (socket path) / `tcp`
+    /// (`host:port`). Must be empty for `transport=channel`.
+    pub listen: String,
 }
 
 impl Default for RunConfig {
@@ -201,6 +210,8 @@ impl Default for RunConfig {
             chains: 1,
             until: String::new(),
             trace_out: String::new(),
+            transport: "channel".into(),
+            listen: String::new(),
         }
     }
 }
@@ -281,6 +292,8 @@ impl RunConfig {
             "chains" => self.chains = uint()?.max(1),
             "until" => self.until = value.into(),
             "trace_out" => self.trace_out = value.into(),
+            "transport" => self.transport = value.into(),
+            "listen" => self.listen = value.into(),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -324,6 +337,30 @@ impl RunConfig {
         }
         // reject a malformed early-stop rule up front, not mid-run
         crate::metrics::StopRule::parse(&self.until)?;
+        // transport must parse (channel|uds|tcp; uds/tcp require listen)
+        let transport =
+            crate::coordinator::TransportConfig::parse(&self.transport, &self.listen)?;
+        if transport == crate::coordinator::TransportConfig::Channel
+            && !self.listen.is_empty()
+        {
+            bail!("listen is set but transport=channel ignores it — \
+                   set transport=uds or transport=tcp");
+        }
+        if transport != crate::coordinator::TransportConfig::Channel {
+            if self.sampler != SamplerKind::Hybrid {
+                bail!(
+                    "transport={} requires the hybrid sampler (only the \
+                     coordinator has workers to distribute)",
+                    self.transport
+                );
+            }
+            if self.chains > 1 {
+                bail!(
+                    "chains > 1 requires transport=channel (each replica \
+                     chain would need its own listen address)"
+                );
+            }
+        }
         Ok(())
     }
 
@@ -343,7 +380,7 @@ impl RunConfig {
              out_dir={}\ncomm_latency_s={}\ncomm_bandwidth_gbps={}\n\
              checkpoint_every={}\ncheckpoint_path={}\nkeep_samples={}\n\
              trace_thin={}\nobs={}\nobs_out={}\nchains={}\nuntil={}\n\
-             trace_out={}\n",
+             trace_out={}\ntransport={}\nlisten={}\n",
             self.dataset,
             self.n,
             self.k_true,
@@ -379,6 +416,8 @@ impl RunConfig {
             self.chains,
             self.until,
             self.trace_out,
+            self.transport,
+            self.listen,
         )
     }
 
@@ -415,7 +454,11 @@ impl RunConfig {
     /// `chains`/`until`/`trace_out` diagnostics keys (streaming ESS/R̂
     /// is read-only on kept trace points and draws no RNG —
     /// `rust/tests/diag_equivalence.rs` — so they are equally free to
-    /// change across a resume). `pibp
+    /// change across a resume), and the `transport`/`listen` keys (the
+    /// chain bytes must not depend on how bytes move — a P-worker run
+    /// over sockets is bit-identical to the same run in-process,
+    /// `rust/tests/process_equivalence.rs` — so a checkpoint written
+    /// in-process may resume over UDS/TCP and vice versa). `pibp
     /// resume` refuses a checkpoint whose fingerprint differs from the
     /// resumed configuration's.
     pub fn fingerprint(&self) -> u64 {
@@ -538,7 +581,11 @@ mod tests {
         c.apply("chains", "3").unwrap();
         c.apply("until", "rhat<1.01,ess>200").unwrap();
         c.apply("trace_out", "out/trace.json").unwrap();
+        c.apply("transport", "uds").unwrap();
+        c.apply("listen", "/tmp/pibp.sock").unwrap();
         let back = RunConfig::from_canonical(&c.canonical()).unwrap();
+        assert_eq!(back.transport, "uds");
+        assert_eq!(back.listen, "/tmp/pibp.sock");
         assert_eq!(back.kernel, Kernel::Packed);
         assert_eq!(back.obs, ObsLevel::Counters);
         assert_eq!(back.obs_out, "out/run_obs.json");
@@ -584,6 +631,10 @@ mod tests {
         c.chains = 3;
         c.until = "rhat<1.01".into();
         c.trace_out = "elsewhere/trace.json".into();
+        // the transport moves bytes, never bits: a checkpoint written
+        // in-process must resume over sockets (and vice versa)
+        c.transport = "uds".into();
+        c.listen = "/tmp/pibp.sock".into();
         assert_eq!(c.fingerprint(), base.fingerprint());
         // chain-relevant keys MUST change it
         let mut c = base.clone();
@@ -630,6 +681,36 @@ mod tests {
         c.until = "ess>10".into();
         assert!(c.validate().is_err(), "until requires hybrid");
         c.sampler = SamplerKind::Hybrid;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn transport_keys_validate() {
+        let mut c = RunConfig::default();
+        assert!(c.validate().is_ok(), "channel default validates");
+        c.apply("transport", "uds").unwrap();
+        assert!(c.validate().is_err(), "uds without listen rejected");
+        c.apply("listen", "/tmp/pibp_validate.sock").unwrap();
+        assert!(c.validate().is_ok());
+        c.apply("transport", "tcp").unwrap();
+        c.apply("listen", "127.0.0.1:9001").unwrap();
+        assert!(c.validate().is_ok());
+        c.apply("transport", "mpi").unwrap();
+        assert!(c.validate().is_err(), "unknown transport rejected");
+        // a listen address with transport=channel is a likely typo
+        c.apply("transport", "channel").unwrap();
+        assert!(c.validate().is_err(), "channel + listen rejected");
+        c.apply("listen", "").unwrap();
+        assert!(c.validate().is_ok());
+        // sockets require the hybrid sampler and a single chain
+        c.apply("transport", "tcp").unwrap();
+        c.apply("listen", "127.0.0.1:9001").unwrap();
+        c.sampler = SamplerKind::Collapsed;
+        assert!(c.validate().is_err(), "sockets require hybrid");
+        c.sampler = SamplerKind::Hybrid;
+        c.chains = 3;
+        assert!(c.validate().is_err(), "sockets require chains=1");
+        c.chains = 1;
         assert!(c.validate().is_ok());
     }
 

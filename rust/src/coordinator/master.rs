@@ -7,12 +7,13 @@
 //! 3. merge; promote the K* tail features into K⁺; drop globally-empty
 //!    features; sample A, σ_X, σ_A, π, α; pick the next p′.
 //!
-//! All cross-thread traffic is byte-encoded (`messages.rs`) and charged to
-//! the virtual clock (`vtime.rs`).
+//! All master↔worker traffic is byte-encoded (`messages.rs`), moved by a
+//! pluggable [`Transport`] (in-process channels by default; UDS/TCP for
+//! real worker processes — see `transport/`), and charged to the virtual
+//! clock (`vtime.rs`).
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
+use std::sync::mpsc::channel;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -30,6 +31,9 @@ use crate::samplers::SamplerOptions;
 use crate::snapshot::{CoordinatorSnapshot, MasterSnapshot, WorkerSnapshot};
 
 use super::messages::{Broadcast, Summary, ToWorker, ZReport};
+use super::transport::{
+    ChannelTransport, SocketTransport, Transport, TransportConfig, WorkerSetup,
+};
 use super::vtime::{IterTiming, VClock};
 use super::worker::{run_worker, WorkerConfig};
 
@@ -52,6 +56,11 @@ pub struct CoordinatorConfig {
     /// `threads_per_worker`, bit-invariant: the chain is identical for
     /// either value (see `rust/tests/packed_equivalence.rs`).
     pub kernel: Kernel,
+    /// How master↔worker frames move: in-process channels (default), or
+    /// a UDS/TCP socket serving real `pibp worker --connect` processes.
+    /// Bit-invariant — the chain bytes must not depend on how bytes move
+    /// (see `rust/tests/process_equivalence.rs`).
+    pub transport: TransportConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -68,6 +77,7 @@ impl Default for CoordinatorConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             comm: CommModel::default(),
             kernel: Kernel::Scalar,
+            transport: TransportConfig::Channel,
         }
     }
 }
@@ -108,9 +118,9 @@ pub struct IterRecord {
 }
 
 pub struct Coordinator {
-    to_workers: Vec<Sender<Vec<u8>>>,
-    from_workers: Receiver<(usize, Vec<u8>)>,
-    handles: Vec<JoinHandle<()>>,
+    /// The message plane to the P workers — in-process channels or a
+    /// socket. Everything above this field is transport-agnostic.
+    transport: Box<dyn Transport>,
     engine: Option<Engine>,
     rng: Pcg64,
     params: GlobalParams,
@@ -145,43 +155,79 @@ impl Coordinator {
         let n = x.rows();
         let d = x.cols();
         let shards = make_shards(n, cfg.processors);
-        let (tx_master, from_workers) = channel::<(usize, Vec<u8>)>();
-        let mut to_workers = Vec::with_capacity(cfg.processors);
-        let mut handles = Vec::with_capacity(cfg.processors);
-        for (id, shard) in shards.iter().enumerate() {
-            let (tx, rx) = channel::<Vec<u8>>();
-            let wcfg = WorkerConfig {
-                id,
-                n_global: n,
-                sub_iters: cfg.sub_iters,
-                // each native worker owns a persistent pool for its shard
-                // sweeps, spawned here once and reused for the whole run
-                // (T ≤ 1, including a pathological 0, degrades to inline).
-                // PJRT workers sweep inside the kernel and never touch the
-                // native executor — don't spawn idle pool threads for them.
-                ctx: match cfg.backend {
-                    Backend::Native => ParallelCtx::pooled(cfg.threads_per_worker),
-                    Backend::Pjrt => ParallelCtx::inline(),
-                },
-                kernel: cfg.kernel,
-                kmax_new: cfg.opts.kmax_new,
-                k_cap: cfg.opts.k_cap,
-                seed: cfg.seed,
-                backend: cfg.backend,
-                artifacts_dir: cfg.artifacts_dir.clone(),
-            };
-            let x_shard =
-                Mat::from_fn(shard.len(), d, |i, j| x[(shard.start + i, j)]);
-            let tx_m = tx_master.clone();
-            handles.push(
-                // detlint:allow(stray-thread): the coordinator is the sanctioned spawn site for worker threads — each is channel-driven and joined in shutdown()
-                std::thread::Builder::new()
-                    .name(format!("pibp-worker-{id}"))
-                    .spawn(move || run_worker(wcfg, x_shard, rx, tx_m))
-                    .context("spawning worker")?,
-            );
-            to_workers.push(tx);
-        }
+        // Shard extraction is identical for every transport; worker `id`
+        // always gets shard `id` and RNG stream `id`, so where the worker
+        // runs (thread here, process over a socket) cannot move bits.
+        let shard_of = |shard: &std::ops::Range<usize>| {
+            Mat::from_fn(shard.len(), d, |i, j| x[(shard.start + i, j)])
+        };
+        let transport: Box<dyn Transport> = match &cfg.transport {
+            TransportConfig::Channel => {
+                let (tx_master, from_workers) = channel::<(usize, Vec<u8>)>();
+                let mut to_workers = Vec::with_capacity(cfg.processors);
+                let mut handles = Vec::with_capacity(cfg.processors);
+                for (id, shard) in shards.iter().enumerate() {
+                    let (tx, rx) = channel::<Vec<u8>>();
+                    let wcfg = WorkerConfig {
+                        id,
+                        n_global: n,
+                        sub_iters: cfg.sub_iters,
+                        // each native worker owns a persistent pool for its
+                        // shard sweeps, spawned here once and reused for the
+                        // whole run (T ≤ 1, including a pathological 0,
+                        // degrades to inline). PJRT workers sweep inside the
+                        // kernel and never touch the native executor — don't
+                        // spawn idle pool threads for them.
+                        ctx: match cfg.backend {
+                            Backend::Native => {
+                                ParallelCtx::pooled(cfg.threads_per_worker)
+                            }
+                            Backend::Pjrt => ParallelCtx::inline(),
+                        },
+                        kernel: cfg.kernel,
+                        kmax_new: cfg.opts.kmax_new,
+                        k_cap: cfg.opts.k_cap,
+                        seed: cfg.seed,
+                        backend: cfg.backend,
+                        artifacts_dir: cfg.artifacts_dir.clone(),
+                    };
+                    let x_shard = shard_of(shard);
+                    let tx_m = tx_master.clone();
+                    handles.push(
+                        // detlint:allow(stray-thread): the coordinator is the sanctioned spawn site for worker threads — each is channel-driven and joined in shutdown()
+                        std::thread::Builder::new()
+                            .name(format!("pibp-worker-{id}"))
+                            .spawn(move || run_worker(wcfg, x_shard, rx, tx_m))
+                            .context("spawning worker")?,
+                    );
+                    to_workers.push(tx);
+                }
+                Box::new(ChannelTransport::new(to_workers, from_workers, handles))
+            }
+            t @ (TransportConfig::Uds { .. } | TransportConfig::Tcp { .. }) => {
+                let setups = shards
+                    .iter()
+                    .enumerate()
+                    .map(|(id, shard)| WorkerSetup {
+                        id,
+                        n_global: n,
+                        sub_iters: cfg.sub_iters,
+                        threads: cfg.threads_per_worker,
+                        kernel: cfg.kernel,
+                        kmax_new: cfg.opts.kmax_new,
+                        k_cap: cfg.opts.k_cap,
+                        seed: cfg.seed,
+                        backend: cfg.backend,
+                        artifacts_dir: cfg.artifacts_dir.clone(),
+                        x_shard: shard_of(shard),
+                    })
+                    .collect();
+                Box::new(
+                    SocketTransport::start(t, setups)
+                        .context("starting socket transport")?,
+                )
+            }
+        };
         let engine = match cfg.backend {
             Backend::Pjrt => Some(
                 Engine::load(&cfg.artifacts_dir)
@@ -192,9 +238,7 @@ impl Coordinator {
         let mut rng = Pcg64::new(cfg.seed).split(tags::MASTER);
         let p_prime = rng.below(cfg.processors as u64) as u32;
         Ok(Self {
-            to_workers,
-            from_workers,
-            handles,
+            transport,
             engine,
             rng,
             params: GlobalParams {
@@ -246,7 +290,7 @@ impl Coordinator {
     /// abort sentinel — a failing worker ships it precisely so this loop
     /// errors instead of blocking forever at P > 1), and a decode error.
     fn recv_from_all<T>(
-        &self,
+        &mut self,
         what: &str,
         mut decode: impl FnMut(usize, &[u8]) -> Result<T>,
     ) -> Result<Vec<T>> {
@@ -257,10 +301,11 @@ impl Coordinator {
             // message — per worker, so stragglers show up in the p99
             let recv = {
                 let _wait = obs::span(obs::Span::MasterGatherWait);
-                self.from_workers.recv()
+                self.transport.recv()
             };
             let (id, buf) =
                 recv.with_context(|| format!("worker died during {what}"))?;
+            obs::add(obs::Counter::NetBytesReceived, buf.len() as u64);
             if id >= out.len() {
                 bail!("{what}: message from unknown worker id {id} (P={})",
                       out.len());
@@ -282,6 +327,18 @@ impl Coordinator {
             .collect()
     }
 
+    /// Send the same encoded frame to every worker (broadcast pattern of
+    /// `step`/`gather_z`/`snapshot`), counting outbound bytes.
+    fn send_all(&mut self, what: &str, msg: &[u8]) -> Result<()> {
+        for p in 0..self.cfg.processors {
+            self.transport
+                .send(p, msg)
+                .with_context(|| format!("{what}: sending to worker {p}"))?;
+            obs::add(obs::Counter::NetBytesSent, msg.len() as u64);
+        }
+        Ok(())
+    }
+
     /// One global iteration.
     pub fn step(&mut self) -> Result<IterRecord> {
         // detlint:allow(wall-clock-in-chain): wall_iter_s is reported in IterRecord only; the chain never branches on it
@@ -293,6 +350,12 @@ impl Coordinator {
             bcast_bytes: Vec::with_capacity(self.cfg.processors),
             gather_bytes: Vec::with_capacity(self.cfg.processors),
         };
+        // Measured broadcast→all-summaries round-trip of this iteration
+        // (wall clock, obs-only). The VClock's simulated comm model stays
+        // the vtime source — vtime is derived from frame *sizes* and
+        // worker busy time, never from this measurement, which is what
+        // keeps the chain and its vtime trace transport-invariant.
+        let rtt_span = obs::span(obs::Span::MasterGatherRtt);
         // ---- broadcast ----
         let bcast_span = obs::span(obs::Span::MasterBroadcast);
         let bcast = Broadcast {
@@ -309,10 +372,8 @@ impl Coordinator {
             demote: std::mem::take(&mut self.next_demote),
         };
         let msg = ToWorker::Run(bcast).encode();
-        for tx in &self.to_workers {
-            timing.bcast_bytes.push(msg.len());
-            tx.send(msg.clone()).context("worker channel closed")?;
-        }
+        timing.bcast_bytes.extend((0..self.cfg.processors).map(|_| msg.len()));
+        self.send_all("iteration broadcast", &msg)?;
         drop(bcast_span);
         // ---- gather ----
         let summaries: Vec<Summary> =
@@ -322,6 +383,7 @@ impl Coordinator {
                 timing.worker_busy_s[id] = s.busy_s;
                 Ok(s)
             })?;
+        drop(rtt_span);
 
         // ---- master global step ----
         // detlint:allow(wall-clock-in-chain): master_busy_s feeds the virtual comm-model clock and the obs report, not the chain
@@ -528,9 +590,7 @@ impl Coordinator {
     /// fail cleanly instead of aborting the process.
     pub fn gather_z(&mut self) -> Result<FeatureState> {
         let msg = ToWorker::SendZ.encode();
-        for tx in &self.to_workers {
-            tx.send(msg.clone()).context("worker channel closed")?;
-        }
+        self.send_all("Z gather", &msg)?;
         let reports: Vec<Option<ZReport>> = self
             .recv_from_all("Z gather", |_, buf| ZReport::decode(buf))?
             .into_iter()
@@ -557,9 +617,7 @@ impl Coordinator {
     /// is re-populated by the next `step` and feeds no sampling decision.
     pub fn snapshot(&mut self) -> Result<CoordinatorSnapshot> {
         let msg = ToWorker::GetState.encode();
-        for tx in &self.to_workers {
-            tx.send(msg.clone()).context("worker channel closed")?;
-        }
+        self.send_all("state snapshot", &msg)?;
         let workers: Vec<WorkerSnapshot> =
             self.recv_from_all("state snapshot", |_, buf| {
                 WorkerSnapshot::decode(buf)
@@ -617,13 +675,15 @@ impl Coordinator {
         }
         for (p, ws) in snap.workers.iter().enumerate() {
             let msg = ToWorker::SetState(ws.clone()).encode();
-            self.to_workers[p].send(msg).context("worker channel closed")?;
+            self.transport
+                .send(p, &msg)
+                .with_context(|| format!("restore: sending to worker {p}"))?;
+            obs::add(obs::Counter::NetBytesSent, msg.len() as u64);
         }
-        for _ in 0..self.cfg.processors {
-            self.from_workers
-                .recv()
-                .context("worker died during restore")?;
-        }
+        // collect the one-byte acks through the shared gather protocol,
+        // so a worker that died mid-restore (or shipped the abort
+        // sentinel) is a contextual error, not a hang or a silent skip
+        self.recv_from_all("restore", |_, _| Ok(()))?;
         let m = &snap.master;
         if m.a.rows() != m.pi.len() {
             bail!("checkpoint master state inconsistent: |A|={} rows, |π|={}",
@@ -654,13 +714,13 @@ impl Coordinator {
     }
 
     pub fn shutdown(&mut self) {
+        // best-effort: a worker that already died must not block the rest
+        // from being released
         let msg = ToWorker::Shutdown.encode();
-        for tx in &self.to_workers {
-            let _ = tx.send(msg.clone());
+        for p in 0..self.cfg.processors {
+            let _ = self.transport.send(p, &msg);
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.transport.shutdown();
     }
 }
 

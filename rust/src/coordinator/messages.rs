@@ -8,16 +8,30 @@
 //! sizes are real and feed the virtual-time communication model — the
 //! overhead the paper's §5 worries about stays measurable.
 //!
-//! Wire format: little-endian, `u32` tags/lengths, `f64` payloads. No
-//! versioning — both ends are the same binary. (The on-disk checkpoint
-//! format in `crate::snapshot` reuses these `Writer`/`Reader` primitives
-//! but adds magic/version/checksum, because files outlive binaries.)
+//! Wire format: little-endian, `u32` tags/lengths, `f64` payloads. The
+//! in-process default needs no versioning (both ends are the same
+//! binary); the socket transports (`super::transport`) carry these same
+//! frames between *processes*, length-prefixed and opened by a versioned
+//! hello/handshake, so a mismatched worker binary is a contextual error
+//! at connect time rather than a garbage decode here. (The on-disk
+//! checkpoint format in `crate::snapshot` reuses these `Writer`/`Reader`
+//! primitives but adds magic/version/checksum, because files outlive
+//! binaries.)
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::linalg::Mat;
 use crate::model::state::FeatureState;
 use crate::snapshot::WorkerSnapshot;
+
+/// Upper bound on any single wire frame (64 MiB — two orders of
+/// magnitude above the largest message a big run produces). The socket
+/// framing layer (`super::transport::frame`) validates every length
+/// prefix against this *before* allocating, and the [`Reader`] validates
+/// claimed element counts against the bytes actually present, so a
+/// malformed, truncated, or adversarial frame off a socket yields a
+/// contextual `Err` — never a huge allocation or a decode panic.
+pub const MAX_FRAME: usize = 64 << 20;
 
 /// Master → worker.
 #[derive(Clone, Debug, PartialEq)]
@@ -184,6 +198,12 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
+    /// Bytes left in the frame — length headers are validated against
+    /// this before any allocation sized from them.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
     #[allow(clippy::unwrap_used)] // infallible: take(4) yields exactly 4 bytes
     pub fn u32(&mut self) -> Result<u32> {
         // detlint:allow(no-panic-coordinator): take(4) returned exactly 4 bytes, so the array conversion cannot fail
@@ -217,8 +237,21 @@ impl<'a> Reader<'a> {
     pub fn mat(&mut self) -> Result<Mat> {
         let rows = self.u32()? as usize;
         let cols = self.u32()? as usize;
-        let mut data = Vec::with_capacity(rows * cols);
-        for _ in 0..rows * cols {
+        // validate the claimed element count against the bytes actually
+        // present BEFORE allocating: a garbage header off a socket can
+        // claim rows×cols near usize::MAX
+        let elems = rows
+            .checked_mul(cols)
+            .filter(|&e| e.checked_mul(8).is_some_and(|b| b <= self.remaining()))
+            .with_context(|| {
+                format!(
+                    "mat header claims {rows}×{cols} f64s but only {} bytes \
+                     remain",
+                    self.remaining()
+                )
+            })?;
+        let mut data = Vec::with_capacity(elems);
+        for _ in 0..elems {
             data.push(self.f64()?);
         }
         Ok(Mat::from_vec(rows, cols, data))
@@ -227,7 +260,19 @@ impl<'a> Reader<'a> {
     pub fn bits(&mut self) -> Result<FeatureState> {
         let n = self.u32()? as usize;
         let k = self.u32()? as usize;
-        let total = n * k;
+        // overflow- and bounds-check the claimed bit count before the
+        // n×k state allocation below
+        let total = n.checked_mul(k).with_context(|| {
+            format!("bits header claims {n}×{k} entries (overflows)")
+        })?;
+        if total.div_ceil(8) > self.remaining() {
+            bail!(
+                "bits header claims {n}×{k} entries ({} bytes) but only {} \
+                 bytes remain",
+                total.div_ceil(8),
+                self.remaining()
+            );
+        }
         let bytes = self.take(total.div_ceil(8))?;
         let mut st = FeatureState::empty(n);
         st.add_features(k);
@@ -525,6 +570,56 @@ mod tests {
         let mut extended = enc.clone();
         extended.push(0);
         assert!(Summary::decode(&extended).is_err());
+    }
+
+    #[test]
+    fn garbage_mat_header_rejected_before_allocation() {
+        // rows×cols×8 overflows usize → Err, no allocation attempted
+        let mut w = Writer::new();
+        w.u32(u32::MAX);
+        w.u32(u32::MAX);
+        assert!(Reader::new(&w.buf).mat().is_err());
+        // claimed size merely exceeding the payload is also rejected
+        let mut w = Writer::new();
+        w.u32(1000);
+        w.u32(1000);
+        w.f64(0.5);
+        let err = format!("{:#}", Reader::new(&w.buf).mat().unwrap_err());
+        assert!(err.contains("bytes remain"), "{err}");
+    }
+
+    #[test]
+    fn garbage_bits_header_rejected_before_allocation() {
+        // n×k overflows usize
+        let mut w = Writer::new();
+        w.u32(u32::MAX);
+        w.u32(u32::MAX);
+        let err = format!("{:#}", Reader::new(&w.buf).bits().unwrap_err());
+        assert!(err.contains("overflows"), "{err}");
+        // header claims 64×64 bits, zero payload bytes follow
+        let mut w = Writer::new();
+        w.u32(64);
+        w.u32(64);
+        let err = format!("{:#}", Reader::new(&w.buf).bits().unwrap_err());
+        assert!(err.contains("bytes remain"), "{err}");
+    }
+
+    #[test]
+    fn real_messages_fit_far_under_max_frame() {
+        // sanity-pin the bound: a generously sized Summary is still two
+        // orders of magnitude below MAX_FRAME
+        let msg = Summary {
+            worker: 0,
+            iter: 0,
+            m_local: vec![3; 256],
+            ztz: Mat::zeros(256, 256),
+            ztx: Mat::zeros(256, 64),
+            tr_xx: 1.0,
+            tail: Some(state(512, 16, 9)),
+            busy_s: 0.1,
+        };
+        let len = msg.encode().len();
+        assert!(len < MAX_FRAME / 64, "{len} vs {MAX_FRAME}");
     }
 
     #[test]

@@ -1,14 +1,17 @@
 //! The parallel hybrid MCMC coordinator — the paper's system contribution.
 //!
-//! A star topology of P worker threads and one master, communicating via
-//! byte-encoded messages over channels (standing in for the paper's MPI,
-//! with per-message sizes feeding a virtual-time model — see DESIGN.md
-//! §Substitutions):
+//! A star topology of P workers and one master, communicating via
+//! byte-encoded messages over a pluggable transport (standing in for the
+//! paper's MPI, with per-message sizes feeding a virtual-time model —
+//! see DESIGN.md §Substitutions):
 //!
 //! * [`worker`] — shard-local uncollapsed sweeps over K⁺ (native or PJRT
 //!   zsweep artifact) + the collapsed tail when elected p′;
 //! * [`master`] — merge / promote / compact / resample / broadcast;
-//! * [`messages`] — the wire format; [`vtime`] — the virtual clock.
+//! * [`messages`] — the wire format; [`vtime`] — the virtual clock;
+//! * [`transport`] — how frames move: in-process channels (default,
+//!   worker threads) or UDS/TCP sockets (real `pibp worker --connect`
+//!   processes), bit-identical chains either way.
 //!
 //! The serial semantics oracle lives in `samplers::hybrid`; integration
 //! tests pin this parallel implementation against it.
@@ -21,8 +24,10 @@
 
 pub mod master;
 pub mod messages;
+pub mod transport;
 pub mod vtime;
 pub mod worker;
 
 pub use master::{Coordinator, CoordinatorConfig, IterRecord, MergedStats};
+pub use transport::{run_remote_worker, Transport, TransportConfig};
 pub use vtime::{IterTiming, VClock};

@@ -1,0 +1,56 @@
+//! The in-process transport: `std::sync::mpsc` channels to worker
+//! threads, exactly the message plane the coordinator used before the
+//! `Transport` abstraction existed. Zero-cost default — frames are moved,
+//! not copied onto a wire.
+//!
+//! The coordinator itself spawns the worker threads (it is the
+//! sanctioned `stray-thread` spawn site) and hands this transport the
+//! channel ends plus the join handles; `shutdown()` joins them.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::Transport;
+
+pub struct ChannelTransport {
+    to_workers: Vec<Sender<Vec<u8>>>,
+    from_workers: Receiver<(usize, Vec<u8>)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ChannelTransport {
+    pub fn new(
+        to_workers: Vec<Sender<Vec<u8>>>,
+        from_workers: Receiver<(usize, Vec<u8>)>,
+        handles: Vec<JoinHandle<()>>,
+    ) -> Self {
+        Self { to_workers, from_workers, handles }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, worker: usize, frame: &[u8]) -> Result<()> {
+        self.to_workers
+            .get(worker)
+            .with_context(|| format!("no worker {worker}"))?
+            .send(frame.to_vec())
+            .context("worker channel closed")
+    }
+
+    fn recv(&mut self) -> Result<(usize, Vec<u8>)> {
+        // A dead worker drops its sender; once all are gone recv() errs,
+        // which the master reports as "worker died during <phase>".
+        self.from_workers.recv().context("all worker channels closed")
+    }
+
+    fn shutdown(&mut self) {
+        // Drop the senders first so any worker still blocked on recv()
+        // sees a closed channel and exits its loop, then join.
+        self.to_workers.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Length-prefixed framing for socket transports.
+//!
+//! Wire layout of one frame: `u32 LE payload length` followed by that
+//! many payload bytes. A zero-length frame is legal — it is the abort
+//! sentinel the in-process channels already use. The length prefix is
+//! validated against [`messages::MAX_FRAME`] *before* any allocation, so
+//! a garbage or adversarial header yields a contextual `Err`, not a
+//! multi-gigabyte `Vec` (satellite: frame hardening).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::messages::MAX_FRAME;
+
+/// Write one length-prefixed frame and flush it.
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
+    if frame.len() > MAX_FRAME {
+        bail!(
+            "refusing to send a {} byte frame (max {} bytes)",
+            frame.len(),
+            MAX_FRAME
+        );
+    }
+    let len = frame.len() as u32;
+    w.write_all(&len.to_le_bytes()).context("writing frame length")?;
+    w.write_all(frame).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. EOF before the header is an `Err`
+/// (callers translate it into the abort sentinel); a length above
+/// `MAX_FRAME` is rejected before allocating.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr).context("reading frame length (peer closed?)")?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > MAX_FRAME {
+        bail!(
+            "frame length {len} exceeds the {MAX_FRAME} byte bound — \
+             corrupt stream or mismatched peer"
+        );
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)
+        .with_context(|| format!("reading {len} byte frame payload (peer closed?)"))?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_roundtrip_including_the_empty_sentinel() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        write_frame(&mut wire, &[]).unwrap();
+        write_frame(&mut wire, &[0xA5]).unwrap();
+        let mut r = Cursor::new(wire);
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap(), Vec::<u8>::new());
+        assert_eq!(read_frame(&mut r).unwrap(), vec![0xA5]);
+        // Stream exhausted: the next read errors instead of spinning.
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        // Header claims u32::MAX bytes; nothing follows. Must error on
+        // the bound check, not attempt a 4 GiB allocation.
+        let wire = u32::MAX.to_le_bytes().to_vec();
+        let err = read_frame(&mut Cursor::new(wire)).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_is_a_contextual_error() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        wire.truncate(wire.len() - 3);
+        let err = format!("{:#}", read_frame(&mut Cursor::new(wire)).unwrap_err());
+        assert!(err.contains("frame payload"), "{err}");
+    }
+
+    #[test]
+    fn oversized_send_is_refused() {
+        struct NullSink;
+        impl std::io::Write for NullSink {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let big = vec![0u8; MAX_FRAME + 1];
+        assert!(write_frame(&mut NullSink, &big).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! The coordinator's message plane, abstracted: how bytes move between
+//! the master and its P workers.
+//!
+//! The paper's hybrid sampler is an MPI algorithm — X and Z live on P
+//! processors and only summary statistics travel each global iteration
+//! (§3, §5). Everything above this module already speaks byte-encoded
+//! frames (`super::messages`), so the *only* thing a transport decides is
+//! delivery:
+//!
+//! | impl                        | medium                         | workers are…          |
+//! |-----------------------------|--------------------------------|-----------------------|
+//! | [`ChannelTransport`]        | in-process `std::sync::mpsc`   | threads (default)     |
+//! | [`SocketTransport`] (`uds`) | Unix domain socket             | separate processes    |
+//! | [`SocketTransport`] (`tcp`) | TCP loopback/network           | separate processes    |
+//!
+//! **The chain bytes must not depend on how bytes move.** Every frame is
+//! produced and consumed by the same codecs regardless of transport, the
+//! master assigns worker ids (and therefore RNG streams and shards) in
+//! its own deterministic order, and virtual time is charged from frame
+//! *sizes* via the `CommModel`, never from measured socket timing — so a
+//! P-worker run over sockets is bit-identical to the same run in-process
+//! (`rust/tests/process_equivalence.rs` pins this).
+//!
+//! Socket framing is length-prefixed (`frame`), opened by a versioned
+//! hello/handshake (`socket`) so a mismatched peer is a contextual error,
+//! not a garbage decode. A worker process that dies mid-run surfaces as
+//! the zero-length abort sentinel (EOF ⇒ sentinel), which the master's
+//! gather loop turns into a contextual error instead of hanging.
+
+use anyhow::{bail, Result};
+
+pub mod channel;
+pub mod frame;
+pub mod socket;
+
+pub use channel::ChannelTransport;
+pub use socket::{run_remote_worker, SocketTransport, WorkerSetup};
+
+/// Which message plane a coordinator run uses. Parsed from the
+/// `transport`/`listen` config keys; excluded from the resume
+/// fingerprint (like `kernel` and `obs`) because it is bit-invariant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TransportConfig {
+    /// In-process channels; the coordinator spawns its workers as
+    /// threads. Zero-cost default — the pre-transport behaviour.
+    Channel,
+    /// Unix domain socket at this path; workers are separate
+    /// `pibp worker --connect <path>` processes.
+    Uds { listen: String },
+    /// TCP socket at this `host:port`; workers are separate
+    /// `pibp worker --connect <host:port>` processes.
+    Tcp { listen: String },
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self::Channel
+    }
+}
+
+impl TransportConfig {
+    /// Build from the `transport` / `listen` config keys.
+    pub fn parse(kind: &str, listen: &str) -> Result<Self> {
+        Ok(match kind {
+            "channel" => Self::Channel,
+            "uds" => {
+                if listen.is_empty() {
+                    bail!("transport=uds requires listen=<socket path>");
+                }
+                Self::Uds { listen: listen.to_string() }
+            }
+            "tcp" => {
+                if listen.is_empty() {
+                    bail!("transport=tcp requires listen=<host:port>");
+                }
+                Self::Tcp { listen: listen.to_string() }
+            }
+            other => bail!("unknown transport '{other}' (channel|uds|tcp)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Channel => "channel",
+            Self::Uds { .. } => "uds",
+            Self::Tcp { .. } => "tcp",
+        }
+    }
+}
+
+/// The master side of the message plane: P framed, ordered, reliable
+/// duplex links, one per worker.
+///
+/// Contract shared by every implementation (what `master.rs` relies on):
+/// * `send(p, frame)` delivers `frame` to worker `p` intact and in order,
+///   or returns a contextual `Err` — never blocks forever;
+/// * `recv()` yields the next `(worker id, frame)` from any worker; a
+///   zero-length frame is the worker-abort sentinel. A worker whose link
+///   dies (process killed, socket EOF, channel dropped) is surfaced as
+///   that same sentinel or a contextual `Err` — never a silent hang;
+/// * `shutdown()` is idempotent and best-effort: it releases threads,
+///   sockets and any filesystem artifacts (UDS paths) without panicking.
+pub trait Transport: Send {
+    fn send(&mut self, worker: usize, frame: &[u8]) -> Result<()>;
+    fn recv(&mut self) -> Result<(usize, Vec<u8>)>;
+    fn shutdown(&mut self);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_three_kinds() {
+        assert_eq!(TransportConfig::parse("channel", "").unwrap(), TransportConfig::Channel);
+        assert_eq!(
+            TransportConfig::parse("uds", "/tmp/x.sock").unwrap(),
+            TransportConfig::Uds { listen: "/tmp/x.sock".into() }
+        );
+        assert_eq!(
+            TransportConfig::parse("tcp", "127.0.0.1:7777").unwrap(),
+            TransportConfig::Tcp { listen: "127.0.0.1:7777".into() }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_missing_listen_and_unknown_kinds() {
+        assert!(TransportConfig::parse("uds", "").is_err());
+        assert!(TransportConfig::parse("tcp", "").is_err());
+        let err = TransportConfig::parse("mpi", "").unwrap_err().to_string();
+        assert!(err.contains("channel|uds|tcp"), "{err}");
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for (kind, listen) in [("channel", ""), ("uds", "/s"), ("tcp", "h:1")] {
+            let t = TransportConfig::parse(kind, listen).unwrap();
+            assert_eq!(t.name(), kind);
+        }
+    }
+}

@@ -1,0 +1,704 @@
+//! Socket transports: real multi-process workers over a Unix domain
+//! socket or TCP, plus the `pibp worker --connect` peer that runs the
+//! worker loop against such a socket.
+//!
+//! ## Handshake (one per worker connection)
+//!
+//! ```text
+//! worker → master   HELLO  frame: [magic u32][proto_version u32]
+//! master → worker   SETUP  frame: [magic][proto][worker id][full worker
+//!                   config][X shard][fnv1a over all preceding bytes]
+//! ```
+//!
+//! A peer that is not a pibp worker (bad magic) or a mismatched binary
+//! (different protocol version) is a contextual error at connection time,
+//! not a garbage decode mid-run; the trailing checksum catches a
+//! corrupted setup before a worker starts sampling from it. Worker ids
+//! are assigned by the master in accept order — and since every
+//! freshly-connected worker process is identical (it has no state until
+//! SETUP arrives), the OS's accept order cannot affect the chain: shard
+//! `i` and RNG stream `i` always go to whichever peer the master calls
+//! worker `i`.
+//!
+//! ## Failure semantics
+//!
+//! Accept and connect poll with bounded retries (≈10 s) and then fail
+//! with instructions, never hang. After the handshake the master's
+//! per-connection reader thread converts EOF or any socket error into
+//! the zero-length abort sentinel, so a worker process that dies mid-run
+//! surfaces through `recv_from_all`'s existing taxonomy ("worker N
+//! aborted…") within one gather, instead of blocking it forever.
+//!
+//! Deadlines here are *retry budgets* (attempt counts × a fixed poll
+//! interval) and socket read timeouts — no wall-clock reads, so the
+//! determinism linter's wall-clock census is untouched.
+
+use std::io::{BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Backend;
+use crate::coordinator::messages::{Reader as WireReader, Writer as WireWriter};
+use crate::coordinator::worker::{run_worker_on, WorkerConfig, WorkerEndpoint};
+use crate::linalg::Mat;
+use crate::model::state::Kernel;
+use crate::parallel::ParallelCtx;
+use crate::snapshot::fnv1a;
+
+use super::frame::{read_frame, write_frame};
+use super::{Transport, TransportConfig};
+
+/// First word of every handshake frame ("PIBP").
+pub const HELLO_MAGIC: u32 = 0x5049_4250;
+/// Bumped whenever the wire format of any frame changes, so a stale
+/// worker binary is told "mismatched pibp binaries" instead of
+/// mis-decoding broadcasts.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Fixed poll interval for bounded accept/connect retry loops.
+const POLL: Duration = Duration::from_millis(25);
+/// ≈10 s of accept polling before giving up on a missing worker.
+const ACCEPT_ATTEMPTS: usize = 400;
+/// ≈10 s of connect polling (workers usually start before the master
+/// binds, so the first attempts legitimately fail).
+const CONNECT_ATTEMPTS: usize = 400;
+/// Read timeout while a handshake frame is outstanding.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+// ---------------------------------------------------------------------
+// streams + listeners (the only file that touches std::net / unix::net
+// besides main.rs — detlint's net-outside-transport rule pins this)
+// ---------------------------------------------------------------------
+
+/// A connected duplex byte stream, UDS or TCP.
+pub(crate) enum Stream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> Result<Self> {
+        Ok(match self {
+            Self::Tcp(s) => Self::Tcp(s.try_clone().context("cloning tcp stream")?),
+            Self::Uds(s) => Self::Uds(s.try_clone().context("cloning unix stream")?),
+        })
+    }
+
+    /// Shut down both directions of the *underlying socket* (shared with
+    /// every clone), so a reader blocked in `read_exact` wakes with EOF.
+    fn shutdown_both(&self) {
+        match self {
+            Self::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            Self::Uds(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        match self {
+            Self::Tcp(s) => s.set_read_timeout(d).context("tcp read timeout"),
+            Self::Uds(s) => s.set_read_timeout(d).context("uds read timeout"),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            Self::Tcp(s) => s.set_nonblocking(nb).context("tcp nonblocking"),
+            Self::Uds(s) => s.set_nonblocking(nb).context("uds nonblocking"),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.read(buf),
+            Self::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.write(buf),
+            Self::Uds(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Self::Tcp(s) => s.flush(),
+            Self::Uds(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    /// Keeps the bound path so `shutdown` can unlink it.
+    Uds(UnixListener, PathBuf),
+}
+
+impl Listener {
+    fn bind(cfg: &TransportConfig) -> Result<Self> {
+        match cfg {
+            TransportConfig::Channel => {
+                bail!("the channel transport has no listener")
+            }
+            TransportConfig::Uds { listen } => {
+                let path = PathBuf::from(listen);
+                // a stale socket file from a crashed previous run would
+                // make bind fail; it is dead (nothing accepts on it)
+                let _ = std::fs::remove_file(&path);
+                let l = UnixListener::bind(&path)
+                    .with_context(|| format!("binding unix socket {listen}"))?;
+                l.set_nonblocking(true).context("uds listener nonblocking")?;
+                Ok(Self::Uds(l, path))
+            }
+            TransportConfig::Tcp { listen } => {
+                let l = TcpListener::bind(listen)
+                    .with_context(|| format!("binding tcp listener {listen}"))?;
+                l.set_nonblocking(true).context("tcp listener nonblocking")?;
+                Ok(Self::Tcp(l))
+            }
+        }
+    }
+
+    /// Accept one connection, polling for up to `ACCEPT_ATTEMPTS × POLL`.
+    fn accept(&self, waiting_for: usize, total: usize) -> Result<Stream> {
+        for _ in 0..ACCEPT_ATTEMPTS {
+            let got = match self {
+                Self::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+                Self::Uds(l, _) => l.accept().map(|(s, _)| Stream::Uds(s)),
+            };
+            match got {
+                Ok(s) => {
+                    // accepted sockets do not inherit the listener's
+                    // nonblocking flag on Linux, but make it explicit —
+                    // the reader threads rely on blocking reads
+                    s.set_nonblocking(false)?;
+                    return Ok(s);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(POLL);
+                }
+                Err(e) => return Err(e).context("accepting worker connection"),
+            }
+        }
+        bail!(
+            "timed out waiting for worker {}/{total} to connect — start \
+             {total} `pibp worker --connect <addr>` processes pointed at \
+             this run's listen address",
+            waiting_for + 1,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// handshake frames
+// ---------------------------------------------------------------------
+
+fn hello_frame() -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.u32(HELLO_MAGIC);
+    w.u32(PROTO_VERSION);
+    w.buf
+}
+
+fn check_hello(frame: &[u8]) -> Result<()> {
+    let mut r = WireReader::new(frame);
+    let magic = r.u32().context("hello frame too short")?;
+    if magic != HELLO_MAGIC {
+        bail!(
+            "handshake failed: bad magic {magic:#010x} — is the peer a \
+             pibp worker?"
+        );
+    }
+    let proto = r.u32().context("hello frame too short")?;
+    if proto != PROTO_VERSION {
+        bail!(
+            "handshake failed: peer speaks protocol v{proto}, this binary \
+             speaks v{PROTO_VERSION} — mismatched pibp binaries"
+        );
+    }
+    Ok(())
+}
+
+/// Everything a remote worker process needs to become worker `id` of a
+/// run: the full static worker config plus its X shard. Sent once, right
+/// after the hello, with a trailing fnv1a checksum so a corrupted setup
+/// is rejected before any sampling happens.
+pub struct WorkerSetup {
+    pub id: usize,
+    pub n_global: usize,
+    pub sub_iters: usize,
+    /// Intra-worker sweep threads T (the remote process builds its own
+    /// pool; bit-invariant like every T).
+    pub threads: usize,
+    pub kernel: Kernel,
+    pub kmax_new: usize,
+    pub k_cap: usize,
+    pub seed: u64,
+    pub backend: Backend,
+    pub artifacts_dir: PathBuf,
+    pub x_shard: Mat,
+}
+
+impl WorkerSetup {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        w.u32(HELLO_MAGIC);
+        w.u32(PROTO_VERSION);
+        w.u32(self.id as u32);
+        w.u64(self.n_global as u64);
+        w.u64(self.sub_iters as u64);
+        w.u64(self.threads as u64);
+        w.str(self.kernel.name());
+        w.u64(self.kmax_new as u64);
+        w.u64(self.k_cap as u64);
+        w.u64(self.seed);
+        w.str(self.backend.name());
+        w.str(&self.artifacts_dir.to_string_lossy());
+        w.mat(&self.x_shard);
+        let sum = fnv1a(&w.buf);
+        w.u64(sum);
+        w.buf
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<Self> {
+        if frame.len() < 8 {
+            bail!("setup frame too short ({} bytes)", frame.len());
+        }
+        let (body, tail) = frame.split_at(frame.len() - 8);
+        let mut r = WireReader::new(tail);
+        let want = r.u64().context("setup checksum")?;
+        let got = fnv1a(body);
+        if want != got {
+            bail!(
+                "setup frame checksum mismatch (want {want:#018x}, got \
+                 {got:#018x}) — corrupted handshake"
+            );
+        }
+        let mut r = WireReader::new(body);
+        check_hello(body)?;
+        let _magic = r.u32()?;
+        let _proto = r.u32()?;
+        let id = r.u32()? as usize;
+        let n_global = r.u64()? as usize;
+        let sub_iters = r.u64()? as usize;
+        let threads = r.u64()? as usize;
+        let kernel = Kernel::parse(&r.str()?)?;
+        let kmax_new = r.u64()? as usize;
+        let k_cap = r.u64()? as usize;
+        let seed = r.u64()?;
+        let backend = Backend::parse(&r.str()?)?;
+        let artifacts_dir = PathBuf::from(r.str()?);
+        let x_shard = r.mat()?;
+        if !r.done() {
+            bail!("trailing bytes in setup frame");
+        }
+        Ok(Self {
+            id, n_global, sub_iters, threads, kernel, kmax_new, k_cap,
+            seed, backend, artifacts_dir, x_shard,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// master side
+// ---------------------------------------------------------------------
+
+/// Master side of a socket transport: one framed writer per worker plus
+/// one reader thread per connection funnelling `(id, frame)` into a
+/// single queue — the same shape the channel transport has natively.
+pub struct SocketTransport {
+    writers: Vec<Stream>,
+    inbound: Receiver<(usize, Vec<u8>)>,
+    readers: Vec<JoinHandle<()>>,
+    uds_path: Option<PathBuf>,
+}
+
+impl SocketTransport {
+    /// Bind, accept one connection per setup, run the handshake on each,
+    /// and ship the i-th accepted peer its `WorkerSetup` (= its identity).
+    pub fn start(cfg: &TransportConfig, setups: Vec<WorkerSetup>) -> Result<Self> {
+        let listener = Listener::bind(cfg)?;
+        let total = setups.len();
+        let (tx, inbound) = channel::<(usize, Vec<u8>)>();
+        let mut writers = Vec::with_capacity(total);
+        let mut readers = Vec::with_capacity(total);
+        for (id, setup) in setups.into_iter().enumerate() {
+            let mut stream = listener.accept(id, total)?;
+            stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+            let hello = read_frame(&mut stream)
+                .with_context(|| format!("reading hello from worker {id}"))?;
+            check_hello(&hello)
+                .with_context(|| format!("worker {id} handshake"))?;
+            write_frame(&mut stream, &setup.encode())
+                .with_context(|| format!("sending setup to worker {id}"))?;
+            stream.set_read_timeout(None)?;
+            let reader_stream = stream.try_clone()?;
+            let tx_r = tx.clone();
+            readers.push(
+                // detlint:allow(stray-thread): one reader per accepted worker socket — it only forwards frames into the master's inbound queue and exits on EOF, unblocked by shutdown()'s socket shutdown
+                std::thread::Builder::new()
+                    .name(format!("pibp-sock-reader-{id}"))
+                    .spawn(move || reader_loop(id, reader_stream, tx_r))
+                    .context("spawning socket reader")?,
+            );
+            writers.push(stream);
+        }
+        let uds_path = match cfg {
+            TransportConfig::Uds { listen } => Some(PathBuf::from(listen)),
+            _ => None,
+        };
+        Ok(Self { writers, inbound, readers, uds_path })
+    }
+}
+
+/// Forward every frame from one worker socket into the shared inbound
+/// queue. EOF or any socket error becomes the zero-length abort sentinel:
+/// a killed worker process fails the master's gather with "worker N
+/// aborted" context instead of hanging it.
+fn reader_loop(id: usize, stream: Stream, tx: Sender<(usize, Vec<u8>)>) {
+    let mut r = BufReader::new(stream);
+    loop {
+        match read_frame(&mut r) {
+            Ok(frame) => {
+                let aborted = frame.is_empty();
+                if tx.send((id, frame)).is_err() || aborted {
+                    // master gone, or the worker shipped its own abort
+                    // sentinel (its next event is EOF anyway)
+                    return;
+                }
+            }
+            Err(_) => {
+                tx.send((id, Vec::new())).ok();
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send(&mut self, worker: usize, frame: &[u8]) -> Result<()> {
+        let stream = self
+            .writers
+            .get_mut(worker)
+            .with_context(|| format!("no worker {worker}"))?;
+        write_frame(stream, frame)
+            .with_context(|| format!("sending frame to worker {worker} (died?)"))
+    }
+
+    fn recv(&mut self) -> Result<(usize, Vec<u8>)> {
+        self.inbound.recv().context("all worker sockets closed")
+    }
+
+    fn shutdown(&mut self) {
+        // closing the shared underlying sockets wakes every reader thread
+        // with EOF (any queued Shutdown frame has already been written)
+        for w in &self.writers {
+            w.shutdown_both();
+        }
+        self.writers.clear();
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(p) = self.uds_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// worker side (`pibp worker --connect`)
+// ---------------------------------------------------------------------
+
+/// Interpret a `--connect` address: an explicit `uds:`/`tcp:` prefix
+/// wins; otherwise anything containing `/` (or no `:`) is a socket path.
+fn parse_addr(addr: &str) -> Result<TransportConfig> {
+    if let Some(path) = addr.strip_prefix("uds:") {
+        return TransportConfig::parse("uds", path);
+    }
+    if let Some(hostport) = addr.strip_prefix("tcp:") {
+        return TransportConfig::parse("tcp", hostport);
+    }
+    if addr.contains('/') || !addr.contains(':') {
+        TransportConfig::parse("uds", addr)
+    } else {
+        TransportConfig::parse("tcp", addr)
+    }
+}
+
+/// Connect with bounded retry — workers are typically launched *before*
+/// the master binds, so early refusals are expected.
+fn connect(cfg: &TransportConfig, addr: &str) -> Result<Stream> {
+    let mut last_err = None;
+    for _ in 0..CONNECT_ATTEMPTS {
+        let got = match cfg {
+            TransportConfig::Uds { listen } => {
+                UnixStream::connect(listen).map(Stream::Uds)
+            }
+            TransportConfig::Tcp { listen } => {
+                TcpStream::connect(listen).map(Stream::Tcp)
+            }
+            TransportConfig::Channel => bail!("channel transport has no address"),
+        };
+        match got {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+    Err(last_err
+        .map(anyhow::Error::from)
+        .unwrap_or_else(|| anyhow::anyhow!("no connect attempt made")))
+    .with_context(|| {
+        format!("could not connect to a pibp master at {addr} (is it running?)")
+    })
+}
+
+/// The `pibp worker --connect <addr>` entry point: handshake, receive
+/// this process's identity + shard, then run the standard worker loop
+/// over the socket until the master sends Shutdown or the link drops.
+pub fn run_remote_worker(addr: &str) -> Result<()> {
+    let cfg = parse_addr(addr)?;
+    let mut stream = connect(&cfg, addr)?;
+    write_frame(&mut stream, &hello_frame()).context("sending hello")?;
+    stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let setup_frame = read_frame(&mut stream).context(
+        "reading setup frame (master gone, or all worker slots taken?)",
+    )?;
+    let setup = WorkerSetup::decode(&setup_frame)?;
+    stream.set_read_timeout(None)?;
+    let wcfg = WorkerConfig {
+        id: setup.id,
+        n_global: setup.n_global,
+        sub_iters: setup.sub_iters,
+        // same pool policy as in-process workers: a native worker owns a
+        // persistent pool, a PJRT worker sweeps inside the kernel
+        ctx: match setup.backend {
+            Backend::Native => ParallelCtx::pooled(setup.threads),
+            Backend::Pjrt => ParallelCtx::inline(),
+        },
+        kernel: setup.kernel,
+        kmax_new: setup.kmax_new,
+        k_cap: setup.k_cap,
+        seed: setup.seed,
+        backend: setup.backend,
+        artifacts_dir: setup.artifacts_dir,
+    };
+    let writer = stream.try_clone()?;
+    let mut ep = SocketEndpoint::new(BufReader::new(stream), writer);
+    eprintln!(
+        "[pibp worker {}] connected to {addr} ({} rows, kernel={})",
+        setup.id,
+        setup.x_shard.rows(),
+        wcfg.kernel.name(),
+    );
+    run_worker_on(wcfg, setup.x_shard, &mut ep);
+    Ok(())
+}
+
+/// The worker half of a socket link: framed reads, best-effort writes —
+/// the same contract `ChannelEndpoint` gives the in-process worker loop.
+/// Lives here rather than in `worker.rs` so every socket syscall stays
+/// inside `coordinator/transport/` (detlint's net-outside-transport).
+pub(crate) struct SocketEndpoint {
+    reader: BufReader<Stream>,
+    writer: Stream,
+}
+
+impl SocketEndpoint {
+    fn new(reader: BufReader<Stream>, writer: Stream) -> Self {
+        Self { reader, writer }
+    }
+}
+
+impl WorkerEndpoint for SocketEndpoint {
+    /// `None` on EOF / socket error — the worker loop exits exactly as it
+    /// does when an in-process channel closes.
+    fn recv(&mut self) -> Option<Vec<u8>> {
+        read_frame(&mut self.reader).ok()
+    }
+
+    /// Best-effort, like the channel `.send(..).ok()`: if the master is
+    /// gone the next `recv` ends the loop.
+    fn send(&mut self, frame: Vec<u8>) {
+        let _ = write_frame(&mut self.writer, &frame);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup_fixture() -> WorkerSetup {
+        WorkerSetup {
+            id: 2,
+            n_global: 100,
+            sub_iters: 5,
+            threads: 4,
+            kernel: Kernel::Packed,
+            kmax_new: 3,
+            k_cap: 64,
+            seed: 42,
+            backend: Backend::Native,
+            artifacts_dir: PathBuf::from("artifacts"),
+            x_shard: Mat::from_fn(25, 4, |i, j| i as f64 - 0.25 * j as f64),
+        }
+    }
+
+    #[test]
+    fn setup_roundtrips_bit_exactly() {
+        let s = setup_fixture();
+        let back = WorkerSetup::decode(&s.encode()).unwrap();
+        assert_eq!(back.id, s.id);
+        assert_eq!(back.n_global, s.n_global);
+        assert_eq!(back.sub_iters, s.sub_iters);
+        assert_eq!(back.threads, s.threads);
+        assert_eq!(back.kernel, s.kernel);
+        assert_eq!(back.kmax_new, s.kmax_new);
+        assert_eq!(back.k_cap, s.k_cap);
+        assert_eq!(back.seed, s.seed);
+        assert_eq!(back.backend, s.backend);
+        assert_eq!(back.artifacts_dir, s.artifacts_dir);
+        assert_eq!(back.x_shard.max_abs_diff(&s.x_shard), 0.0);
+    }
+
+    #[test]
+    fn corrupted_setup_is_rejected_by_the_checksum() {
+        let mut enc = setup_fixture().encode();
+        let mid = enc.len() / 2;
+        enc[mid] ^= 0x40;
+        let err = WorkerSetup::decode(&enc).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn hello_is_validated_magic_then_version() {
+        check_hello(&hello_frame()).unwrap();
+
+        let mut w = WireWriter::new();
+        w.u32(0xdead_beef);
+        w.u32(PROTO_VERSION);
+        let err = check_hello(&w.buf).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+
+        let mut w = WireWriter::new();
+        w.u32(HELLO_MAGIC);
+        w.u32(PROTO_VERSION + 9);
+        let err = check_hello(&w.buf).unwrap_err().to_string();
+        assert!(err.contains("mismatched pibp binaries"), "{err}");
+    }
+
+    #[test]
+    fn addresses_parse_with_and_without_scheme_prefixes() {
+        let uds = |s| TransportConfig::Uds { listen: String::from(s) };
+        let tcp = |s| TransportConfig::Tcp { listen: String::from(s) };
+        assert_eq!(parse_addr("uds:/tmp/w.sock").unwrap(), uds("/tmp/w.sock"));
+        assert_eq!(parse_addr("tcp:127.0.0.1:4242").unwrap(), tcp("127.0.0.1:4242"));
+        assert_eq!(parse_addr("/tmp/w.sock").unwrap(), uds("/tmp/w.sock"));
+        assert_eq!(parse_addr("relative.sock").unwrap(), uds("relative.sock"));
+        assert_eq!(parse_addr("localhost:9000").unwrap(), tcp("localhost:9000"));
+    }
+
+    #[test]
+    fn uds_handshake_and_frames_end_to_end() {
+        // One master ↔ one remote endpoint over a real unix socketpair.
+        let path = std::env::temp_dir()
+            .join(format!("pibp_sock_test_{}.sock", std::process::id()));
+        let cfg = TransportConfig::Uds {
+            listen: path.to_string_lossy().into_owned(),
+        };
+        let cfg2 = cfg.clone();
+        let worker = std::thread::spawn(move || -> Result<Vec<u8>> {
+            let addr = match &cfg2 {
+                TransportConfig::Uds { listen } => listen.clone(),
+                _ => unreachable!(),
+            };
+            let mut s = connect(&cfg2, &addr)?;
+            write_frame(&mut s, &hello_frame())?;
+            let setup = WorkerSetup::decode(&read_frame(&mut s)?)?;
+            assert_eq!(setup.id, 0);
+            // echo one frame back, then send the abort sentinel
+            let got = read_frame(&mut s)?;
+            write_frame(&mut s, &got)?;
+            write_frame(&mut s, &[])?;
+            Ok(got)
+        });
+        let mut t = SocketTransport::start(&cfg, vec![WorkerSetup {
+            id: 0,
+            ..setup_fixture()
+        }])
+        .unwrap();
+        t.send(0, b"ping-frame").unwrap();
+        assert_eq!(t.recv().unwrap(), (0, b"ping-frame".to_vec()));
+        // the worker's explicit abort sentinel arrives as an empty frame
+        assert_eq!(t.recv().unwrap(), (0, Vec::new()));
+        t.shutdown();
+        assert_eq!(worker.join().unwrap().unwrap(), b"ping-frame");
+        assert!(!path.exists(), "shutdown must unlink the uds path");
+    }
+
+    #[test]
+    fn tcp_dead_peer_surfaces_as_the_abort_sentinel() {
+        // Bind an ephemeral port, connect a raw peer, handshake, then
+        // drop the peer without a sentinel: the reader must synthesise
+        // one from EOF instead of leaving recv() blocked forever.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let cfg = TransportConfig::Tcp { listen: addr.clone() };
+        let cfg2 = cfg.clone();
+        let peer = std::thread::spawn(move || -> Result<()> {
+            let mut s = connect(&cfg2, &addr)?;
+            write_frame(&mut s, &hello_frame())?;
+            let _setup = read_frame(&mut s)?;
+            Ok(()) // stream drops here — simulated worker death
+        });
+        let mut t =
+            SocketTransport::start(&cfg, vec![setup_fixture()]).unwrap();
+        peer.join().unwrap().unwrap();
+        assert_eq!(t.recv().unwrap(), (0, Vec::new()));
+        t.shutdown();
+    }
+
+    #[test]
+    fn non_worker_peer_fails_the_handshake_contextually() {
+        let path = std::env::temp_dir()
+            .join(format!("pibp_sock_badpeer_{}.sock", std::process::id()));
+        let cfg = TransportConfig::Uds {
+            listen: path.to_string_lossy().into_owned(),
+        };
+        let cfg2 = cfg.clone();
+        let peer = std::thread::spawn(move || {
+            let addr = match &cfg2 {
+                TransportConfig::Uds { listen } => listen.clone(),
+                _ => unreachable!(),
+            };
+            let mut s = connect(&cfg2, &addr).unwrap();
+            // a length-prefixed frame that is not a hello
+            write_frame(&mut s, &[9, 9, 9, 9, 9, 9, 9, 9]).unwrap();
+            // hold the stream open until the master rejects us
+            let _ = read_frame(&mut s);
+        });
+        let err = SocketTransport::start(&cfg, vec![setup_fixture()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("handshake"), "{err}");
+        peer.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

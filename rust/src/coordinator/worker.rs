@@ -50,32 +50,71 @@ pub struct WorkerConfig {
     pub artifacts_dir: PathBuf,
 }
 
-/// Thread body. `rx` carries encoded `ToWorker`s; every outbound message
-/// is sent as (worker id, encoded bytes).
+/// How a worker talks to its master: blocking framed receive +
+/// best-effort send. Implemented by the in-process channel pair below
+/// (default) and by a socket link in `super::transport::socket` — the
+/// worker loop is byte-identical over either, which is half of the
+/// transport-invariance argument (the other half is the master assigning
+/// ids/shards in its own deterministic order).
+pub(crate) trait WorkerEndpoint {
+    /// Next inbound frame; `None` once the link is closed (master gone).
+    fn recv(&mut self) -> Option<Vec<u8>>;
+    /// Best-effort outbound send: a dead master surfaces at the next
+    /// `recv`, matching the old channel `.send(..).ok()` semantics.
+    fn send(&mut self, frame: Vec<u8>);
+}
+
+/// The in-process endpoint over the channel pair `Coordinator::new`
+/// wires up. Frames are moved, never copied — the zero-cost default.
+pub(crate) struct ChannelEndpoint {
+    id: usize,
+    rx: Receiver<Vec<u8>>,
+    tx: Sender<(usize, Vec<u8>)>,
+}
+
+impl WorkerEndpoint for ChannelEndpoint {
+    fn recv(&mut self) -> Option<Vec<u8>> {
+        self.rx.recv().ok()
+    }
+
+    fn send(&mut self, frame: Vec<u8>) {
+        self.tx.send((self.id, frame)).ok();
+    }
+}
+
+/// Thread body for in-process workers. `rx` carries encoded `ToWorker`s;
+/// every outbound message is sent as (worker id, encoded bytes).
 pub fn run_worker(
     cfg: WorkerConfig,
     x: Mat,
     rx: Receiver<Vec<u8>>,
     tx: Sender<(usize, Vec<u8>)>,
 ) {
-    let abort_tx = tx.clone();
-    if let Err(e) = worker_loop(&cfg, x, rx, tx) {
+    let mut ep = ChannelEndpoint { id: cfg.id, rx, tx };
+    run_worker_on(cfg, x, &mut ep);
+}
+
+/// Run the worker loop over any endpoint (thread + channels, or a remote
+/// process + socket), with the abort-sentinel discipline on failure.
+pub(crate) fn run_worker_on(cfg: WorkerConfig, x: Mat, ep: &mut dyn WorkerEndpoint) {
+    if let Err(e) = worker_loop(&cfg, x, ep) {
         // A worker failing is fatal for the run; surface loudly AND tell
-        // the master. At P > 1 the other workers keep the channel open,
+        // the master. At P > 1 the other workers keep their links open,
         // so merely dying would leave the master's gather recv blocked
         // forever — the empty frame below is the abort sentinel every
         // master recv loop turns into a contextual error (no valid
-        // Summary / ZReport / snapshot encoding is zero-length).
+        // Summary / ZReport / snapshot encoding is zero-length; over a
+        // socket, EOF is translated into the same sentinel by the
+        // master's reader).
         eprintln!("[pibp worker {}] fatal: {e:#}", cfg.id);
-        abort_tx.send((cfg.id, Vec::new())).ok();
+        ep.send(Vec::new());
     }
 }
 
 fn worker_loop(
     cfg: &WorkerConfig,
     x: Mat,
-    rx: Receiver<Vec<u8>>,
-    tx: Sender<(usize, Vec<u8>)>,
+    ep: &mut dyn WorkerEndpoint,
 ) -> Result<()> {
     let b_rows = x.rows();
     let mut rng = Pcg64::new(cfg.seed).split(tags::worker(cfg.id));
@@ -95,12 +134,12 @@ fn worker_loop(
     // spawned once (at coordinator construction) and serves every sweep
     let exec = ExecConfig::with_ctx(cfg.ctx.clone()).with_kernel(cfg.kernel);
 
-    while let Ok(buf) = rx.recv() {
+    while let Some(buf) = ep.recv() {
         match ToWorker::decode(&buf)? {
             ToWorker::Shutdown => break,
             ToWorker::SendZ => {
                 let msg = ZReport { worker: cfg.id as u32, z: z.clone() };
-                tx.send((cfg.id, msg.encode())).ok();
+                ep.send(msg.encode());
             }
             ToWorker::GetState => {
                 // checkpoint capture: a pure read — touches no RNG, so a
@@ -112,7 +151,7 @@ fn worker_loop(
                     z: z.clone(),
                     last_tail: last_tail.clone(),
                 };
-                tx.send((cfg.id, snap.encode())).ok();
+                ep.send(snap.encode());
             }
             ToWorker::SetState(snap) => {
                 // resume: the master validated shard shape before sending
@@ -131,13 +170,13 @@ fn worker_loop(
                 // one-byte ack keeps the master's recv loop lockstep
                 // (deliberately non-empty: a zero-length frame is the
                 // worker-abort sentinel)
-                tx.send((cfg.id, vec![0xA5])).ok();
+                ep.send(vec![0xA5]);
             }
             ToWorker::Run(b) => {
                 let summary =
                     run_iteration(cfg, &x, &mut z, &mut last_tail, &b, tr_xx,
                                   engine.as_ref(), &exec, &mut rng)?;
-                tx.send((cfg.id, summary.encode())).ok();
+                ep.send(summary.encode());
             }
         }
     }

@@ -6,6 +6,7 @@
 //! pibp resume   [--checkpoint f] [--set iters=N]...      continue a checkpointed run
 //! pibp predict  [--checkpoint f] [--missing frac]...     query saved posterior samples
 //! pibp diagnose [--trace f]... [--rhat-max x]            offline convergence verdict
+//! pibp worker   [--connect addr]                         join a socket-transport run
 //! pibp fig1     [--iters N] [--n N] [--out dir]          paper Figure 1
 //! pibp fig2     [--iters N] [--n N] [--out dir]          paper Figure 2
 //! pibp info     [--artifacts dir]                        artifact manifest
@@ -98,6 +99,13 @@ fn spec() -> Cli {
                 ],
             },
             CommandSpec {
+                name: "worker",
+                about: "connect to a master running with transport=uds|tcp and serve one shard",
+                flags: vec![
+                    flag("connect", "master address: a UDS socket path or host:port (tcp)", ""),
+                ],
+            },
+            CommandSpec {
                 name: "fig1",
                 about: "reproduce Figure 1: held-out log P(X,Z) vs log time",
                 flags: vec![
@@ -151,6 +159,7 @@ fn dispatch(p: &Parsed) -> Result<()> {
         "predict" => cmd_predict(p),
         "report" => cmd_report(p),
         "diagnose" => cmd_diagnose(p),
+        "worker" => cmd_worker(p),
         "fig1" => cmd_fig1(p),
         "fig2" => cmd_fig2(p),
         "info" => cmd_info(p),
@@ -555,6 +564,24 @@ fn cmd_diagnose(p: &Parsed) -> Result<()> {
         std::process::exit(3);
     }
     Ok(())
+}
+
+/// `pibp worker --connect <addr>` — the process side of the socket
+/// transports. Dials the master, completes the versioned handshake,
+/// receives its full worker config + X shard in the SETUP frame, then
+/// runs the standard worker loop until Shutdown (or the master goes
+/// away, which surfaces as a contextual error). All sampling state
+/// comes from the master, so any `pibp` binary of the same protocol
+/// version can serve any run.
+fn cmd_worker(p: &Parsed) -> Result<()> {
+    let addr = match p.get("connect") {
+        Some(a) if !a.is_empty() => a,
+        _ => bail!(
+            "pibp worker needs --connect <addr> — the master's listen address \
+             (a UDS socket path, or host:port for tcp)"
+        ),
+    };
+    pibp::coordinator::run_remote_worker(addr)
 }
 
 fn fig_cfg(p: &Parsed) -> Result<RunConfig> {

@@ -94,6 +94,11 @@ pub enum Span {
     MasterApost,
     /// Master: encoding + sending one iteration's P broadcasts.
     MasterBroadcast,
+    /// Master: measured broadcast→all-summaries round-trip of one
+    /// iteration's gather. Wall clock, observability only — the VClock's
+    /// simulated comm model stays the vtime source, so chain bytes never
+    /// depend on this measurement.
+    MasterGatherRtt,
     /// Pool: caller-side dispatch of one fork-join (send all chunks).
     PoolDispatch,
     /// Pool: a job's wait between enqueue and first instruction.
@@ -119,7 +124,7 @@ pub enum Unit {
     Count,
 }
 
-pub const N_SPANS: usize = 14;
+pub const N_SPANS: usize = 15;
 
 impl Span {
     pub const ALL: [Span; N_SPANS] = [
@@ -131,6 +136,7 @@ impl Span {
         Span::MasterPromote,
         Span::MasterApost,
         Span::MasterBroadcast,
+        Span::MasterGatherRtt,
         Span::PoolDispatch,
         Span::PoolQueueWait,
         Span::PoolLaneBusy,
@@ -149,6 +155,7 @@ impl Span {
             Span::MasterPromote => "master.promote_compact",
             Span::MasterApost => "master.apost_solve",
             Span::MasterBroadcast => "master.broadcast",
+            Span::MasterGatherRtt => "master.gather_rtt",
             Span::PoolDispatch => "pool.dispatch",
             Span::PoolQueueWait => "pool.queue_wait",
             Span::PoolLaneBusy => "pool.lane_busy",
@@ -205,9 +212,15 @@ pub enum Counter {
     RngDrawsServe,
     /// `PredictEngine` queries answered.
     ServeQueries,
+    /// Transport bytes the master sent to workers (frame payloads; all
+    /// transports, so `channel` runs report the same number a socket run
+    /// moves over the wire).
+    NetBytesSent,
+    /// Transport bytes the master received from workers.
+    NetBytesReceived,
 }
 
-pub const N_COUNTERS: usize = 15;
+pub const N_COUNTERS: usize = 17;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -226,6 +239,8 @@ impl Counter {
         Counter::RngDrawsBlock,
         Counter::RngDrawsServe,
         Counter::ServeQueries,
+        Counter::NetBytesSent,
+        Counter::NetBytesReceived,
     ];
 
     pub fn name(self) -> &'static str {
@@ -245,6 +260,8 @@ impl Counter {
             Counter::RngDrawsBlock => "rng_draws.block",
             Counter::RngDrawsServe => "rng_draws.serve",
             Counter::ServeQueries => "serve.queries",
+            Counter::NetBytesSent => "net.bytes_sent",
+            Counter::NetBytesReceived => "net.bytes_received",
         }
     }
 

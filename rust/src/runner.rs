@@ -267,6 +267,12 @@ impl ChainRun {
             backend: cfg.backend,
             artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
             comm: cfg.comm,
+            // validated by RunConfig::validate, but parse() re-checks so
+            // hand-built configs fail here with the same message
+            transport: crate::coordinator::TransportConfig::parse(
+                &cfg.transport,
+                &cfg.listen,
+            )?,
         };
         let mut coord = Coordinator::new(&train.x, ccfg).context("starting coordinator")?;
         let mut reservoir = SampleReservoir::new(cfg.keep_samples);

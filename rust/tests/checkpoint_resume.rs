@@ -39,6 +39,7 @@ fn coord_cfg(p: usize, t: usize, seed: u64) -> CoordinatorConfig {
         backend: Backend::Native,
         artifacts_dir: Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
         comm: CommModel::default(),
+        ..Default::default()
     }
 }
 

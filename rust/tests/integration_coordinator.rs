@@ -31,6 +31,7 @@ fn cfg(p: usize, seed: u64) -> CoordinatorConfig {
         backend: Backend::Native,
         artifacts_dir: Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
         comm: CommModel::default(),
+        ..Default::default()
     }
 }
 

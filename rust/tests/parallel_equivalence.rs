@@ -38,6 +38,7 @@ fn coord_cfg(p: usize, kernel: Kernel, seed: u64, opts: SamplerOptions) -> Coord
         backend: Backend::Native,
         artifacts_dir: Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
         comm: CommModel::default(),
+        ..Default::default()
     }
 }
 

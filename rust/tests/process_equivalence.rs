@@ -1,0 +1,301 @@
+//! Transport invariance, the headline guarantee of the socket transports:
+//! a P-worker run whose workers are **separate `pibp worker --connect`
+//! processes over a Unix domain socket** is bit-identical to the same run
+//! with in-process channel workers — global parameters (α, σ, π, A), the
+//! gathered Z, and the held-out trace, on both Z kernels.
+//!
+//! Workers are real child processes of the test binary (the `pibp` CLI
+//! itself, via `CARGO_BIN_EXE_pibp`), so the whole path is exercised:
+//! CLI parse → connect retry → versioned handshake → SETUP decode →
+//! worker loop over framed sockets.
+//!
+//! Also pinned here: a worker process killed mid-run surfaces as a
+//! contextual error within the transport's bounded timeouts — never a
+//! hung gather.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+
+use pibp::config::{Backend, CommModel, RunConfig, SamplerKind};
+use pibp::coordinator::{Coordinator, CoordinatorConfig, TransportConfig};
+use pibp::data::cambridge::{generate, CambridgeConfig};
+use pibp::linalg::Mat;
+use pibp::model::state::Kernel;
+use pibp::model::LinGauss;
+use pibp::runner::{self, RunOutcome};
+use pibp::samplers::SamplerOptions;
+
+/// Serialises the runner-level test against the others: `runner::run`
+/// sets the process-global obs level/registry.
+static GATE: Mutex<()> = Mutex::new(());
+
+/// A per-test UDS path that is short (sockaddr_un limit), unique across
+/// concurrent test processes, and stale-free.
+fn sock_path(tag: &str) -> String {
+    let p = std::env::temp_dir().join(format!("pibp_pe_{}_{tag}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p.to_string_lossy().into_owned()
+}
+
+/// Launch `n` real `pibp worker --connect` child processes. They retry
+/// the connect with the transport's bounded backoff, so spawning before
+/// the master binds is fine (and is exactly the CI `dist-smoke` order).
+fn spawn_workers(addr: &str, n: usize) -> Vec<Child> {
+    (0..n)
+        .map(|i| {
+            Command::new(env!("CARGO_BIN_EXE_pibp"))
+                .args(["worker", "--connect", addr])
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .unwrap_or_else(|e| panic!("spawning pibp worker {i}: {e}"))
+        })
+        .collect()
+}
+
+/// Reap children without risking a hung test: poll for ~10s, then kill.
+/// A healthy run has already sent Shutdown by the time this is called, so
+/// the kill branch firing would itself be a protocol bug.
+fn reap(children: Vec<Child>) {
+    for mut c in children {
+        let mut done = false;
+        for _ in 0..400 {
+            if c.try_wait().expect("try_wait").is_some() {
+                done = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        if !done {
+            c.kill().ok();
+            panic!("worker process did not exit after Shutdown");
+        }
+    }
+}
+
+fn coord_cfg(p: usize, kernel: Kernel, seed: u64, transport: TransportConfig) -> CoordinatorConfig {
+    CoordinatorConfig {
+        processors: p,
+        sub_iters: 5,
+        threads_per_worker: 1,
+        kernel,
+        seed,
+        lg: LinGauss::new(0.5, 1.0),
+        alpha: 1.0,
+        opts: SamplerOptions::default(),
+        backend: Backend::Native,
+        artifacts_dir: Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        comm: CommModel::default(),
+        transport,
+    }
+}
+
+/// Everything the master samples, bit-level, after one global iteration.
+#[derive(PartialEq, Debug)]
+struct IterPin {
+    k: usize,
+    alpha: u64,
+    sigma_x: u64,
+    sigma_a: u64,
+    pi: Vec<u64>,
+    a: Vec<u64>,
+}
+
+fn run_pinned(x: &Mat, cfg: CoordinatorConfig, iters: usize) -> (Vec<IterPin>, pibp::model::state::FeatureState) {
+    let mut coord = Coordinator::new(x, cfg).expect("coordinator");
+    let mut pins = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let rec = coord.step().expect("step");
+        let gp = coord.params();
+        pins.push(IterPin {
+            k: rec.k,
+            alpha: rec.alpha.to_bits(),
+            sigma_x: rec.sigma_x.to_bits(),
+            sigma_a: rec.sigma_a.to_bits(),
+            pi: gp.pi.iter().map(|v| v.to_bits()).collect(),
+            a: (0..gp.a.rows())
+                .flat_map(|i| (0..gp.a.cols()).map(move |j| (i, j)))
+                .map(|(i, j)| gp.a[(i, j)].to_bits())
+                .collect(),
+        });
+    }
+    let z = coord.gather_z().expect("gather_z");
+    (pins, z)
+}
+
+/// The tentpole acceptance pin: P=4 over UDS (worker processes) is
+/// bit-identical to P=4 in-process, on both Z kernels — α, σx, σa, π, A
+/// every iteration, and the gathered Z at the end.
+#[test]
+fn p4_uds_worker_processes_match_in_process_channels_on_both_kernels() {
+    let (ds, _) = generate(&CambridgeConfig { n: 96, seed: 2, ..Default::default() });
+    for kernel in [Kernel::Scalar, Kernel::Packed] {
+        let tag = format!("p4_{}", if kernel == Kernel::Packed { "pk" } else { "sc" });
+        let (chan_pins, chan_z) =
+            run_pinned(&ds.x, coord_cfg(4, kernel, 42, TransportConfig::Channel), 12);
+        assert!(chan_pins.last().is_some_and(|p| p.k > 0), "{tag}: chain never grew a feature");
+
+        let sock = sock_path(&tag);
+        let workers = spawn_workers(&sock, 4);
+        let (uds_pins, uds_z) = run_pinned(
+            &ds.x,
+            coord_cfg(4, kernel, 42, TransportConfig::Uds { listen: sock.clone() }),
+            12,
+        );
+        reap(workers);
+
+        assert_eq!(chan_pins.len(), uds_pins.len());
+        for (it, (c, u)) in chan_pins.iter().zip(&uds_pins).enumerate() {
+            assert_eq!(c, u, "{tag}: iteration {it} diverged across transports");
+        }
+        assert_eq!(chan_z, uds_z, "{tag}: gathered Z diverged across transports");
+        assert!(!Path::new(&sock).exists(), "{tag}: shutdown left the UDS path behind");
+    }
+}
+
+/// P=1 is the degenerate star — one worker process holding the whole
+/// dataset. Same pins as the threaded run.
+#[test]
+fn p1_uds_worker_process_matches_in_process_channel() {
+    let (ds, _) = generate(&CambridgeConfig { n: 60, seed: 3, ..Default::default() });
+    let (chan_pins, chan_z) =
+        run_pinned(&ds.x, coord_cfg(1, Kernel::Scalar, 7, TransportConfig::Channel), 10);
+
+    let sock = sock_path("p1");
+    let workers = spawn_workers(&sock, 1);
+    let (uds_pins, uds_z) = run_pinned(
+        &ds.x,
+        coord_cfg(1, Kernel::Scalar, 7, TransportConfig::Uds { listen: sock }),
+        10,
+    );
+    reap(workers);
+
+    assert_eq!(chan_pins, uds_pins, "P=1 chain diverged across transports");
+    assert_eq!(chan_z, uds_z, "P=1 gathered Z diverged across transports");
+}
+
+fn run_cfg(dir: &Path) -> RunConfig {
+    RunConfig {
+        n: 120,
+        iters: 8,
+        eval_every: 2,
+        sampler: SamplerKind::Hybrid,
+        processors: 4,
+        seed: 37,
+        out_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+}
+
+fn assert_outcomes_identical(a: &RunOutcome, b: &RunOutcome, tag: &str) {
+    let (fa, fb) = (&a.final_params, &b.final_params);
+    assert_eq!(fa.k(), fb.k(), "{tag}: K diverged");
+    assert_eq!(fa.alpha.to_bits(), fb.alpha.to_bits(), "{tag}: alpha diverged");
+    assert_eq!(fa.lg.sigma_x.to_bits(), fb.lg.sigma_x.to_bits(), "{tag}: sigma_x diverged");
+    let pi_a: Vec<u64> = fa.pi.iter().map(|v| v.to_bits()).collect();
+    let pi_b: Vec<u64> = fb.pi.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(pi_a, pi_b, "{tag}: π diverged");
+    assert!(fa.a.max_abs_diff(&fb.a) == 0.0, "{tag}: loadings A diverged");
+    assert_eq!(a.trace.points.len(), b.trace.points.len(), "{tag}: trace lengths diverged");
+    for (pa, pb) in a.trace.points.iter().zip(&b.trace.points) {
+        assert_eq!(pa.iter, pb.iter, "{tag}: trace iters diverged");
+        assert_eq!(pa.k, pb.k, "{tag}: trace K at iter {} diverged", pa.iter);
+        assert_eq!(
+            pa.heldout.to_bits(),
+            pb.heldout.to_bits(),
+            "{tag}: held-out metric at iter {} diverged",
+            pa.iter
+        );
+        assert_eq!(pa.vtime_s.to_bits(), pb.vtime_s.to_bits(), "{tag}: vtime diverged");
+    }
+    assert!(a.final_k > 0, "{tag}: chain never grew a feature");
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pibp_proc_eq_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Full-stack pin through `runner::run` — config keys (`transport=uds`,
+/// `listen=…`) down to the held-out trace and virtual time. Virtual time
+/// matching bit-for-bit is the "VClock stays the vtime source" claim:
+/// measured socket timing never leaks into the chain or its clock.
+#[test]
+fn runner_heldout_trace_is_transport_invariant() {
+    let _g = GATE.lock().unwrap();
+    let base = run_cfg(&tmp_dir("chan"));
+    let chan = runner::run(&base, |_| {}).expect("channel run");
+
+    let sock = sock_path("runner");
+    let workers = spawn_workers(&sock, 4);
+    let mut dist = run_cfg(&tmp_dir("uds"));
+    dist.transport = "uds".into();
+    dist.listen = sock;
+    dist.validate().expect("distributed config validates");
+    let uds = runner::run(&dist, |_| {}).expect("uds run");
+    reap(workers);
+
+    assert_outcomes_identical(&chan, &uds, "runner channel-vs-uds");
+}
+
+/// Failure semantics: a worker process killed mid-run must fail the
+/// coordinator with a contextual error — within the transport's bounded
+/// retries, not a hung gather. (The EOF on the dead worker's socket is
+/// folded into the abort sentinel; the master's gather taxonomy names
+/// the worker.)
+#[test]
+fn killed_worker_process_is_a_contextual_error_not_a_hang() {
+    let (ds, _) = generate(&CambridgeConfig { n: 64, seed: 4, ..Default::default() });
+    let sock = sock_path("kill");
+    let mut workers = spawn_workers(&sock, 4);
+    let mut coord = Coordinator::new(
+        &ds.x,
+        coord_cfg(4, Kernel::Scalar, 11, TransportConfig::Uds { listen: sock }),
+    )
+    .expect("coordinator");
+    for _ in 0..3 {
+        coord.step().expect("healthy step");
+    }
+    workers[2].kill().expect("kill worker 2");
+    workers[2].wait().expect("reap killed worker");
+
+    // The kill can land mid-iteration, so the *next* step may still
+    // complete from buffered frames — but the error must arrive within a
+    // couple of bounded steps, never a hang (the test harness itself is
+    // the timeout of last resort).
+    let mut err = None;
+    for _ in 0..10 {
+        match coord.step() {
+            Ok(_) => continue,
+            Err(e) => {
+                err = Some(format!("{e:#}"));
+                break;
+            }
+        }
+    }
+    let msg = err.expect("coordinator kept iterating with a dead worker process");
+    assert!(
+        msg.contains("worker"),
+        "error should name the worker; got: {msg}"
+    );
+    drop(coord);
+    workers.remove(2);
+    for mut c in workers {
+        // the master's shutdown already ran in drop(); survivors got the
+        // Shutdown frame or a closed socket and must exit promptly
+        let mut done = false;
+        for _ in 0..400 {
+            if c.try_wait().expect("try_wait").is_some() {
+                done = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        if !done {
+            c.kill().ok();
+            panic!("surviving worker hung after master shutdown");
+        }
+    }
+}

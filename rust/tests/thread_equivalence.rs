@@ -48,6 +48,7 @@ fn coord_cfg(
         backend: Backend::Native,
         artifacts_dir: Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
         comm: CommModel::default(),
+        ..Default::default()
     }
 }
 

@@ -1,0 +1,13 @@
+// Fixture: R7 net-outside-transport must fire on every std::net /
+// unix-socket type named outside coordinator/transport/ (and main.rs).
+
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::UnixStream;
+
+fn bad() {
+    let l = TcpListener::bind("127.0.0.1:0");
+    let _s: Option<TcpStream> = None;
+    let _u: Option<UnixStream> = None;
+    let _d = std::net::UdpSocket::bind("127.0.0.1:0");
+    drop(l);
+}

@@ -21,6 +21,7 @@
 //! | `no-panic-coordinator`| `coordinator/`, `parallel/pool.rs`, `serve/` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` |
 //! | `undocumented-unsafe` | everywhere                                   | every `unsafe` block carries a `// SAFETY:` comment |
 //! | `stray-thread`        | all but `parallel/`                          | no `thread::spawn` / `thread::scope` / `thread::Builder` |
+//! | `net-outside-transport` | all but `coordinator/transport/`, `main.rs` | no `std::net`/UDS socket types: every byte crosses the `Transport` trait |
 //!
 //! Code under `#[cfg(test)]` (and `#[test]` functions) is exempt from all
 //! rules: tests may panic, time themselves, and spawn threads freely.
@@ -35,6 +36,7 @@ pub const RULE_HASH_ORDER: &str = "hash-order";
 pub const RULE_NO_PANIC: &str = "no-panic-coordinator";
 pub const RULE_UNSAFE: &str = "undocumented-unsafe";
 pub const RULE_STRAY_THREAD: &str = "stray-thread";
+pub const RULE_NET: &str = "net-outside-transport";
 pub const RULE_WAIVER_SYNTAX: &str = "waiver-syntax";
 
 /// All enforceable rule ids (what `detlint:allow(...)` may name).
@@ -45,6 +47,7 @@ pub const RULE_IDS: &[&str] = &[
     RULE_NO_PANIC,
     RULE_UNSAFE,
     RULE_STRAY_THREAD,
+    RULE_NET,
 ];
 
 /// One rule violation (possibly waived).
@@ -160,7 +163,28 @@ impl<'a> Scope<'a> {
     fn thread_allowed(&self) -> bool {
         self.in_dir("parallel")
     }
+
+    fn net_allowed(&self) -> bool {
+        // the transport module owns every socket; main.rs only *names*
+        // the worker CLI entry point (run_remote_worker lives in
+        // transport/ too, so main.rs rarely needs this allowance)
+        self.path.contains("coordinator/transport/") || self.file_name == "main.rs"
+    }
 }
+
+/// R7 target set: the socket/datagram types of `std::net` and
+/// `std::os::unix::net`. Naming one outside the transport module means
+/// bytes are moving around the `Transport` trait — and around the frame
+/// bounds, handshake, and abort-sentinel discipline that keep socket
+/// runs bit-identical and hang-free.
+const NET_TYPES: &[&str] = &[
+    "TcpListener",
+    "TcpStream",
+    "UdpSocket",
+    "UnixListener",
+    "UnixStream",
+    "UnixDatagram",
+];
 
 /// Lint one file. `path` is the repo-relative path (used for scoping and
 /// reporting); `src` its contents; `tags` the `.split` allowlist.
@@ -306,6 +330,19 @@ pub fn check_file(path: &str, src: &str, tags: &TagRegistry) -> FileReport {
                         }
                     }
                 }
+            }
+            // ---- R7: sockets outside the transport module -----------
+            Tok::Ident(id)
+                if NET_TYPES.contains(&id.as_str()) && !scope.net_allowed() =>
+            {
+                push(
+                    RULE_NET,
+                    tok.line,
+                    format!(
+                        "{id} outside coordinator/transport/: all master↔worker \
+                         bytes must cross the Transport trait"
+                    ),
+                );
             }
             _ => {}
         }
@@ -693,6 +730,23 @@ mod tests {
         assert_eq!(bad.findings.len(), 1);
         assert_eq!(bad.findings[0].rule, RULE_STRAY_THREAD);
         assert!(check_file("rust/src/parallel/pool.rs", src, &r).findings.is_empty());
+    }
+
+    #[test]
+    fn r7_flags_socket_types_outside_the_transport_module() {
+        let r = registry();
+        let src = "use std::net::TcpStream;\nfn f(s: UnixListener) {}\n";
+        let bad = check_file("rust/src/coordinator/master.rs", src, &r);
+        assert_eq!(bad.findings.len(), 2, "{:?}", bad.findings);
+        assert!(bad.findings.iter().all(|f| f.rule == RULE_NET));
+        for ok_path in [
+            "rust/src/coordinator/transport/socket.rs",
+            "rust/src/coordinator/transport/mod.rs",
+            "rust/src/main.rs",
+        ] {
+            let ok = check_file(ok_path, src, &r);
+            assert!(ok.findings.is_empty(), "{ok_path}: {:?}", ok.findings);
+        }
     }
 
     #[test]

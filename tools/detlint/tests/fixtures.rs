@@ -125,6 +125,22 @@ fn r6_bad_fixture_is_fine_inside_parallel() {
 }
 
 #[test]
+fn r7_bad_fixture_flags_every_socket_type_mention() {
+    let rep = lint("r7_net_bad.rs", "rust/src/coordinator/master.rs");
+    // 2 use-mentions + TcpListener/TcpStream/UnixStream/UdpSocket uses
+    assert_eq!(rep.findings.len(), 7, "{:?}", rep.findings);
+    assert!(rep.findings.iter().all(|f| f.rule == rules::RULE_NET));
+}
+
+#[test]
+fn r7_bad_fixture_is_fine_inside_transport_and_main() {
+    for allowed in ["rust/src/coordinator/transport/socket.rs", "rust/src/main.rs"] {
+        let rep = lint("r7_net_bad.rs", allowed);
+        assert!(rep.findings.is_empty(), "{allowed}: {:?}", rep.findings);
+    }
+}
+
+#[test]
 fn waiver_fixture_exercises_every_waiver_path() {
     let rep = lint("waivers.rs", "rust/src/coordinator/w.rs");
 
@@ -177,6 +193,7 @@ fn every_fixture_is_covered_by_a_test() {
         "r5_unsafe_bad.rs",
         "r5_unsafe_ok.rs",
         "r6_stray_thread_bad.rs",
+        "r7_net_bad.rs",
         "waivers.rs",
     ];
     assert_eq!(names, expected, "fixture set drifted: update tests/fixtures.rs");
